@@ -1,0 +1,233 @@
+"""AOT pipeline: lower every Layer-2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 rust crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (invoked by ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--catalog full]
+
+Outputs ``<artifact>.hlo.txt`` per entry point plus ``manifest.json``
+describing every artifact's inputs/outputs so the Rust runtime can load
+and invoke them without any knowledge of the python side.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+@dataclass
+class Entry:
+    """One lowerable entry point: fn + example input specs."""
+
+    name: str
+    fn: Callable
+    inputs: List[Tuple[str, Tuple[int, ...]]]   # (name, shape), all f32
+    outputs: List[Tuple[str, Tuple[int, ...]]]
+    kind: str                                   # grad|loss|step|round|...
+    model: str
+    meta: Dict
+
+    def specs(self):
+        return [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in self.inputs]
+
+
+def _y_shape(spec: M.ModelSpec, b: int) -> Tuple[int, ...]:
+    return (b,) if spec.kind == "linreg" else (b, spec.classes)
+
+
+def entries_for_model(
+    spec: M.ModelSpec, b: int, tau: int, use_pallas: bool = True
+) -> List[Entry]:
+    """The full artifact set for one model variant (DESIGN.md §2 table)."""
+    p = spec.param_count
+    d = spec.d
+    ys = _y_shape(spec, b)
+    name = spec.name
+    meta = {"batch": b, "tau": tau, "pallas": use_pallas, **spec.to_json()}
+    suffix = "" if use_pallas else "_jnp"
+
+    def wrap1(f):
+        # Return single-output entry points as 1-tuples for a uniform ABI.
+        return lambda *a: (f(*a),)
+
+    ents = [
+        Entry(
+            f"{name}_loss{suffix}",
+            wrap1(lambda w, x, y: M.loss(spec, w, x, y, use_pallas=use_pallas)),
+            [("params", (p,)), ("x", (b, d)), ("y", ys)],
+            [("loss", ())],
+            "loss", name, meta,
+        ),
+        Entry(
+            f"{name}_grad{suffix}",
+            lambda w, x, y: M.loss_and_grad(spec, w, x, y, use_pallas=use_pallas),
+            [("params", (p,)), ("x", (b, d)), ("y", ys)],
+            [("loss", ()), ("grad", (p,))],
+            "grad", name, meta,
+        ),
+        Entry(
+            f"{name}_step{suffix}",
+            wrap1(lambda w, dl, x, y, eta: M.gate_step(
+                spec, w, dl, x, y, eta, use_pallas=use_pallas)),
+            [("params", (p,)), ("delta", (p,)), ("x", (b, d)), ("y", ys),
+             ("eta", ())],
+            [("params", (p,))],
+            "step", name, meta,
+        ),
+        Entry(
+            f"{name}_round_t{tau}{suffix}",
+            wrap1(lambda w, dl, xs, ys_, eta: M.gate_round(
+                spec, w, dl, xs, ys_, eta, use_pallas=use_pallas)),
+            [("params", (p,)), ("delta", (p,)), ("xs", (tau, b, d)),
+             ("ys", (tau,) + ys), ("eta", ())],
+            [("params", (p,))],
+            "round", name, meta,
+        ),
+        Entry(
+            f"{name}_proxround_t{tau}{suffix}",
+            wrap1(lambda w, anchor, xs, ys_, eta, pm: M.prox_round(
+                spec, w, anchor, xs, ys_, eta, pm, use_pallas=use_pallas)),
+            [("params", (p,)), ("anchor", (p,)), ("xs", (tau, b, d)),
+             ("ys", (tau,) + ys), ("eta", ()), ("prox_mu", ())],
+            [("params", (p,))],
+            "proxround", name, meta,
+        ),
+    ]
+    if spec.kind != "linreg":
+        ents.append(
+            Entry(
+                f"{name}_acc{suffix}",
+                wrap1(lambda w, x, y: M.accuracy(
+                    spec, w, x, y, use_pallas=use_pallas)),
+                [("params", (p,)), ("x", (b, d)), ("y", ys)],
+                [("acc", ())],
+                "acc", name, meta,
+            )
+        )
+    return ents
+
+
+# ---------------------------------------------------------------------------
+# catalogs — which model variants ship as artifacts
+# ---------------------------------------------------------------------------
+
+# (spec, batch, tau). Batch is static per artifact; a client's s samples
+# are chunked/sampled by the Rust coordinator. tau is the fused-round
+# length (Theorem 1's tau is O(s); the experiments use modest tau).
+CATALOGS: Dict[str, List[Tuple[M.ModelSpec, int, int]]] = {
+    # quick: small shapes for fast artifact builds in CI / unit tests.
+    "quick": [
+        (M.linreg(8), 5, 4),
+        (M.logreg(16, 4, l2=0.01), 8, 4),
+    ],
+    # full: everything the paper's figures need (DESIGN.md §5).
+    "full": [
+        (M.linreg(25), 10, 10),                       # Fig 2, 7, 8; Tab 1-2
+        (M.logreg(784, 10, l2=0.01), 50, 10),          # Fig 1
+        (M.mlp(784, 10, (128, 64), l2=0.01), 50, 10),  # Fig 3, 5, 6, 9
+        (M.mlp(512, 10, (128, 64), l2=0.01), 50, 10),  # Fig 4 (cifar-like)
+    ],
+}
+
+
+def build_entries(catalog: str, jnp_variants: bool = False) -> List[Entry]:
+    ents: List[Entry] = []
+    for spec, b, tau in CATALOGS[catalog]:
+        ents.extend(entries_for_model(spec, b, tau, use_pallas=True))
+        if jnp_variants:
+            ents.extend(entries_for_model(spec, b, tau, use_pallas=False))
+    return ents
+
+
+def lower_entry(ent: Entry) -> str:
+    lowered = jax.jit(ent.fn).lower(*ent.specs())
+    return to_hlo_text(lowered)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--catalog", default="full", choices=sorted(CATALOGS))
+    ap.add_argument(
+        "--jnp-variants", action="store_true",
+        help="also emit pure-jnp (no-pallas) artifact variants "
+             "(perf-pass ablation)",
+    )
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name filter")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    ents = build_entries(args.catalog, args.jnp_variants)
+    if args.only:
+        keep = set(args.only.split(","))
+        ents = [e for e in ents if e.name in keep]
+
+    manifest = {"version": 1, "catalog": args.catalog, "artifacts": [],
+                "models": []}
+    seen_models = {}
+    t_all = time.time()
+    for ent in ents:
+        t0 = time.time()
+        text = lower_entry(ent)
+        fname = f"{ent.name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"].append(
+            {
+                "name": ent.name,
+                "file": fname,
+                "kind": ent.kind,
+                "model": ent.model,
+                "inputs": [{"name": n, "shape": list(s)} for n, s in ent.inputs],
+                "outputs": [{"name": n, "shape": list(s)} for n, s in ent.outputs],
+                "meta": ent.meta,
+                "sha256_16": digest,
+            }
+        )
+        if ent.model not in seen_models:
+            seen_models[ent.model] = {**ent.meta}
+        print(
+            f"  lowered {ent.name:<42} {len(text):>9} chars "
+            f"in {time.time() - t0:5.1f}s",
+            flush=True,
+        )
+    manifest["models"] = [
+        {"name": k, **v} for k, v in sorted(seen_models.items())
+    ]
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(ents)} artifacts + manifest.json "
+          f"to {args.out_dir} in {time.time() - t_all:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

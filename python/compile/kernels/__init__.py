@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels (interpret=True) + pure-jnp reference oracles.
+
+The compute hot-spots of the FLANP/FedGATE stack:
+
+- ``matmul``      — tiled, MXU-shaped block matmul (custom_vjp so the L2
+                    model can be differentiated through it; the backward
+                    pass reuses the same kernel).
+- ``gate_update`` — fused FedGATE local update  w <- w - eta * (g - delta).
+- ``axpy``        — fused generic  out <- a*x + y  used by server updates.
+- ``bias_relu``   — fused bias-add + ReLU epilogue for the MLP.
+
+All kernels run under ``interpret=True`` so their lowering is plain HLO
+that the CPU PJRT client can execute (real-TPU Mosaic custom-calls cannot
+run on CPU). See DESIGN.md §4 for the TPU adaptation rationale.
+"""
+
+from .matmul import matmul, matmul_pallas_raw  # noqa: F401
+from .fused import gate_update, axpy, bias_relu  # noqa: F401
+from . import ref  # noqa: F401

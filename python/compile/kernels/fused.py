@@ -1,0 +1,145 @@
+"""Fused elementwise Pallas kernels for the FedGATE hot loop.
+
+These kernels fuse the memory-bound elementwise tails of the local update
+so each parameter vector makes exactly one HBM round-trip per step:
+
+- ``gate_update``:  w_new = w - eta * (g - delta)   (Algorithm 2, line
+  "set d_i = grad - delta_i; update w_i = w_i - eta * d_i")
+- ``axpy``:         out = a * x + y                 (server model update
+  w <- w - eta*gamma*Delta is axpy with a = -eta*gamma)
+- ``bias_relu``:    out = max(x + b, 0)             (MLP epilogue; fused
+  bias-add + activation so the matmul output tile is consumed in VMEM)
+
+All are 1-D/2-D blocked over 128-lane tiles and run interpret=True (see
+matmul.py for the rationale).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+# Elementwise block: (8, 128) f32 VMEM tile times 8 sublanes of headroom.
+BLOCK = 8 * LANES
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+def _pad1(a, n):
+    return a if a.shape[0] == n else jnp.pad(a, (0, n - a.shape[0]))
+
+
+def _gate_kernel(w_ref, g_ref, d_ref, eta_ref, o_ref):
+    # eta arrives as a (1,)-shaped operand so the same artifact serves all
+    # stage stepsizes (FLANP re-tunes eta_n per stage, Theorem 1).
+    o_ref[...] = w_ref[...] - eta_ref[0] * (g_ref[...] - d_ref[...])
+
+
+def gate_update(w, g, delta, eta, *, block: int = BLOCK):
+    """Fused FedGATE local update ``w - eta * (g - delta)`` (flat f32[P]).
+
+    ``eta`` may be a python float or a scalar/1-element array.
+    """
+    if w.shape != g.shape or w.shape != delta.shape or w.ndim != 1:
+        raise ValueError(
+            f"gate_update wants flat equal shapes, got {w.shape} {g.shape} "
+            f"{delta.shape}"
+        )
+    (p,) = w.shape
+    eta = jnp.asarray(eta, dtype=w.dtype).reshape((1,))
+    block = min(block, _ceil_to(p, LANES))
+    pp = _ceil_to(p, block)
+    wp, gp, dp = _pad1(w, pp), _pad1(g, pp), _pad1(delta, pp)
+
+    out = pl.pallas_call(
+        _gate_kernel,
+        grid=(pp // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            # eta is broadcast to every grid step (block index 0).
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), w.dtype),
+        interpret=True,
+    )(wp, gp, dp, eta)
+    return out[:p] if pp != p else out
+
+
+def _axpy_kernel(x_ref, y_ref, a_ref, o_ref):
+    o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+
+def axpy(a, x, y, *, block: int = BLOCK):
+    """Fused ``a * x + y`` over flat vectors (server-side model update)."""
+    if x.shape != y.shape or x.ndim != 1:
+        raise ValueError(f"axpy wants flat equal shapes, got {x.shape} {y.shape}")
+    (p,) = x.shape
+    a = jnp.asarray(a, dtype=x.dtype).reshape((1,))
+    block = min(block, _ceil_to(p, LANES))
+    pp = _ceil_to(p, block)
+    xp, yp = _pad1(x, pp), _pad1(y, pp)
+    out = pl.pallas_call(
+        _axpy_kernel,
+        grid=(pp // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), x.dtype),
+        interpret=True,
+    )(xp, yp, a)
+    return out[:p] if pp != p else out
+
+
+def _bias_relu_kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...] + b_ref[...], 0.0)
+
+
+def _bias_relu_fwd_impl(x, b, *, bm: int = 8, bn: int = LANES):
+    m, n = x.shape
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, LANES if n >= LANES else 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    xp = x if (m, n) == (mp, np_) else jnp.pad(x, ((0, mp - m), (0, np_ - n)))
+    bp = _pad1(b, np_)
+    out = pl.pallas_call(
+        _bias_relu_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, bp)
+    return out[:m, :n] if (mp, np_) != (m, n) else out
+
+
+@jax.custom_vjp
+def bias_relu(x, b):
+    """Fused ``relu(x + b)`` for (batch, features) activations."""
+    return _bias_relu_fwd_impl(x, b)
+
+
+def _bias_relu_fwd(x, b):
+    y = _bias_relu_fwd_impl(x, b)
+    return y, y  # relu mask recoverable from the output sign
+
+
+def _bias_relu_bwd(y, gy):
+    mask = (y > 0).astype(gy.dtype)
+    gx = gy * mask
+    return gx, jnp.sum(gx, axis=0)
+
+
+bias_relu.defvjp(_bias_relu_fwd, _bias_relu_bwd)

@@ -1,0 +1,152 @@
+"""Tiled Pallas matmul — the MXU-shaped compute hot-spot of the stack.
+
+Design (DESIGN.md §4, "Hardware adaptation"):
+
+* the grid iterates ``(M/bm, N/bn, K/bk)`` with the K axis innermost so a
+  VMEM-resident ``(bm, bn)`` f32 accumulator tile is revisited across the
+  K loop — the Pallas/TPU analogue of a CUDA threadblock tile loop;
+* block sizes default to 128, matching the 128x128 MXU systolic array and
+  the (8, 128) f32 VMEM tiling;
+* ``jnp.dot(..., preferred_element_type=float32)`` keeps accumulation in
+  f32 even for bf16 inputs (MXU-native mixed precision);
+* ragged shapes are zero-padded up to block multiples in the wrapper and
+  sliced back afterwards, keeping the kernel body branch-free;
+* ``interpret=True`` so the lowering is plain HLO executable by the CPU
+  PJRT client (a real-TPU build would drop the flag and emit Mosaic).
+
+``matmul`` wraps the kernel in ``jax.custom_vjp`` so Layer-2 models can be
+differentiated through it; both backward matmuls reuse the same kernel:
+    dX = dY @ W^T       dW = X^T @ dY
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default MXU-aligned block sizes. f32 VMEM tiles are (8, 128); the MXU is
+# a 128x128 systolic array, so 128-cubed blocks give full lane occupancy.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk), K innermost.
+
+    ``acc_ref`` is a VMEM f32 scratch accumulator that lives across the K
+    iterations of a fixed (i, j) tile; it is flushed to ``o_ref`` on the
+    last K step (possibly downcasting to the output dtype).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(a, rows, cols):
+    r, c = a.shape
+    if r == rows and c == cols:
+        return a
+    return jnp.pad(a, ((0, rows - r), (0, cols - c)))
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+def _shrink(block: int, dim: int, lane: int) -> int:
+    """Never use blocks larger than the padded problem dimension."""
+    return min(block, _ceil_to(dim, lane))
+
+
+def matmul_pallas_raw(
+    x,
+    w,
+    *,
+    bm: int = BLOCK_M,
+    bn: int = BLOCK_N,
+    bk: int = BLOCK_K,
+    out_dtype=None,
+):
+    """Raw (non-differentiable) tiled Pallas matmul: ``x @ w``.
+
+    x: (M, K), w: (K, N) -> (M, N). Shapes may be ragged; they are padded
+    to block multiples and the result is sliced back.
+    """
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+    out_dtype = out_dtype or jnp.result_type(x.dtype, w.dtype)
+
+    # Sublane axis pads to 8, lane axis to 128 (f32 VMEM tiling); small
+    # problems shrink the blocks so the grid never over-pads.
+    bm = _shrink(bm, m, 8)
+    bk = _shrink(bk, k, 128 if k >= 128 else 8)
+    bn = _shrink(bn, n, 128 if n >= 128 else 8)
+
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w, kp, np_)
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp)
+
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable tiled Pallas matmul ``x @ w`` (see module docs)."""
+    return matmul_pallas_raw(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_pallas_raw(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    # Backward matmuls run through the same Pallas kernel (MXU path).
+    dx = matmul_pallas_raw(g, w.T)
+    dw = matmul_pallas_raw(x.T, g)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K,
+               in_bytes: int = 4) -> int:
+    """Estimated per-core VMEM working set of one grid step.
+
+    x tile (bm, bk) + w tile (bk, bn) at the input width, plus the f32
+    accumulator (bm, bn) and the output tile (bm, bn). Used by the §Perf
+    notes to check the schedule fits the ~16 MiB/core VMEM budget.
+    """
+    return in_bytes * (bm * bk + bk * bn) + 4 * (bm * bn) * 2

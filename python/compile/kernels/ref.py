@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+pytest compares each kernel against these under shape/dtype sweeps
+(hypothesis); the Rust NativeEngine mirrors the same math a third time so
+the whole stack is differentially tested: pallas == jnp == rust.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, w, out_dtype=None):
+    out_dtype = out_dtype or jnp.result_type(x.dtype, w.dtype)
+    return jnp.matmul(
+        x, w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def gate_update(w, g, delta, eta):
+    eta = jnp.asarray(eta, dtype=w.dtype)
+    return w - eta * (g - delta)
+
+
+def axpy(a, x, y):
+    a = jnp.asarray(a, dtype=x.dtype)
+    return a * x + y
+
+
+def bias_relu(x, b):
+    return jnp.maximum(x + b, 0.0)

@@ -1,0 +1,254 @@
+"""Layer-2: the paper's models as JAX fwd/bwd over FLAT parameter vectors.
+
+Every function here operates on a single flat ``f32[P]`` parameter vector
+so the Rust coordinator (Layer 3) can treat all models uniformly — it
+never needs to know the parameter structure; (un)flattening is owned here
+and baked into the lowered HLO.
+
+Models (Section 5 of the paper):
+- ``linreg``  — linear regression,   loss = 0.5*mean((Xw + b - y)^2) + 0.5*l2*|w|^2
+- ``logreg``  — multiclass logistic regression (softmax xent + L2; the L2
+                term supplies the strong convexity mu = l2 the FLANP
+                stopping rule needs)
+- ``mlp``     — fully connected net with two hidden layers (128, 64) and
+                ReLU, exactly the architecture of Figures 3-5.
+
+Entry points lowered to HLO artifacts (aot.py):
+- ``loss(params, X, Y) -> loss``
+- ``grad(params, X, Y) -> (loss, grad)``          [stopping rule, FedAvg]
+- ``gate_step(params, delta, X, Y, eta) -> params``     [one local update]
+- ``gate_round(params, delta, Xs, Ys, eta) -> params``  [tau fused updates
+  via lax.scan — the hot-path artifact]
+
+The dense matmuls route through the Layer-1 Pallas kernel
+(``kernels.matmul``); the FedGATE update through ``kernels.gate_update``.
+Set ``use_pallas=False`` to emit a pure-jnp variant (used by tests as an
+oracle and by the perf pass as an ablation).
+"""
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as _pallas_matmul
+from .kernels import gate_update as _pallas_gate_update
+from .kernels import ref as _ref
+
+
+# ---------------------------------------------------------------------------
+# model specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one model variant (shapes + regularization)."""
+
+    kind: str                 # "linreg" | "logreg" | "mlp"
+    d: int                    # input features
+    classes: int = 1          # output classes (1 for regression)
+    hidden: Tuple[int, ...] = ()   # hidden layer widths (mlp only)
+    l2: float = 0.0           # L2 regularization coefficient (= mu)
+
+    @property
+    def name(self) -> str:
+        h = "".join(f"_h{w}" for w in self.hidden)
+        c = f"_c{self.classes}" if self.kind != "linreg" else ""
+        return f"{self.kind}_d{self.d}{c}{h}"
+
+    @property
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        """(in, out) of each dense layer, in order."""
+        if self.kind == "linreg":
+            return [(self.d, 1)]
+        if self.kind == "logreg":
+            return [(self.d, self.classes)]
+        dims = []
+        prev = self.d
+        for h in self.hidden:
+            dims.append((prev, h))
+            prev = h
+        dims.append((prev, self.classes))
+        return dims
+
+    @property
+    def param_count(self) -> int:
+        return sum(i * o + o for i, o in self.layer_dims)
+
+    def to_json(self) -> Dict:
+        return {
+            "kind": self.kind,
+            "d": self.d,
+            "classes": self.classes,
+            "hidden": list(self.hidden),
+            "l2": self.l2,
+            "name": self.name,
+            "param_count": self.param_count,
+        }
+
+
+def linreg(d: int, l2: float = 0.0) -> ModelSpec:
+    return ModelSpec("linreg", d=d, classes=1, l2=l2)
+
+
+def logreg(d: int, classes: int, l2: float = 0.0) -> ModelSpec:
+    return ModelSpec("logreg", d=d, classes=classes, l2=l2)
+
+
+def mlp(d: int, classes: int, hidden=(128, 64), l2: float = 0.0) -> ModelSpec:
+    return ModelSpec("mlp", d=d, classes=classes, hidden=tuple(hidden), l2=l2)
+
+
+# ---------------------------------------------------------------------------
+# flat <-> structured parameters
+# ---------------------------------------------------------------------------
+
+
+def unflatten(spec: ModelSpec, flat):
+    """Split flat f32[P] into [(W_l, b_l)] per layer_dims."""
+    params = []
+    off = 0
+    for i, o in spec.layer_dims:
+        w = flat[off : off + i * o].reshape(i, o)
+        off += i * o
+        b = flat[off : off + o]
+        off += o
+        params.append((w, b))
+    return params
+
+
+def flatten(spec: ModelSpec, params) -> jnp.ndarray:
+    pieces = []
+    for w, b in params:
+        pieces.append(w.reshape(-1))
+        pieces.append(b.reshape(-1))
+    return jnp.concatenate(pieces)
+
+
+def init_params(spec: ModelSpec, key) -> jnp.ndarray:
+    """He-init flat parameter vector (matches rust util::init_he)."""
+    chunks = []
+    for i, o in spec.layer_dims:
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / i)
+        chunks.append((jax.random.normal(sub, (i, o)) * scale).reshape(-1))
+        chunks.append(jnp.zeros((o,)))
+    return jnp.concatenate(chunks).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _mm(use_pallas: bool):
+    return _pallas_matmul if use_pallas else _ref.matmul
+
+
+def forward(spec: ModelSpec, flat, x, *, use_pallas: bool = True):
+    """Model forward pass: logits f32[b, C] (or predictions f32[b, 1])."""
+    mm = _mm(use_pallas)
+    layers = unflatten(spec, flat)
+    h = x
+    for li, (w, b) in enumerate(layers):
+        h = mm(h, w) + b
+        if li + 1 < len(layers):  # hidden layers: ReLU
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def _l2_term(spec: ModelSpec, flat):
+    # Regularize weights only (not biases) — matches the Rust NativeEngine.
+    sq = 0.0
+    for w, _ in unflatten(spec, flat):
+        sq = sq + jnp.sum(w * w)
+    return 0.5 * spec.l2 * sq
+
+
+def loss(spec: ModelSpec, flat, x, y, *, use_pallas: bool = True):
+    """Mean loss over the batch + L2. y: f32[b] (linreg) or one-hot f32[b,C]."""
+    out = forward(spec, flat, x, use_pallas=use_pallas)
+    if spec.kind == "linreg":
+        resid = out[:, 0] - y
+        data = 0.5 * jnp.mean(resid * resid)
+    else:
+        logp = jax.nn.log_softmax(out, axis=-1)
+        data = -jnp.mean(jnp.sum(y * logp, axis=-1))
+    return data + _l2_term(spec, flat)
+
+
+def loss_and_grad(spec: ModelSpec, flat, x, y, *, use_pallas: bool = True):
+    """(loss, grad) with grad flat f32[P]."""
+    return jax.value_and_grad(
+        lambda p: loss(spec, p, x, y, use_pallas=use_pallas)
+    )(flat)
+
+
+def accuracy(spec: ModelSpec, flat, x, y, *, use_pallas: bool = True):
+    """Classification accuracy (y one-hot). Lowered for eval artifacts."""
+    out = forward(spec, flat, x, use_pallas=use_pallas)
+    pred = jnp.argmax(out, axis=-1)
+    lab = jnp.argmax(y, axis=-1)
+    return jnp.mean((pred == lab).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# FedGATE local updates (Algorithm 2 inner loop)
+# ---------------------------------------------------------------------------
+
+
+def gate_step(spec: ModelSpec, flat, delta, x, y, eta, *, use_pallas: bool = True):
+    """One corrected local step:  w <- w - eta * (grad(w; x, y) - delta)."""
+    _, g = loss_and_grad(spec, flat, x, y, use_pallas=use_pallas)
+    if use_pallas:
+        return _pallas_gate_update(flat, g, delta, eta)
+    return _ref.gate_update(flat, g, delta, eta)
+
+
+def gate_round(spec: ModelSpec, flat, delta, xs, ys, eta, *, use_pallas: bool = True):
+    """tau fused local steps via lax.scan — the hot-path artifact.
+
+    xs: f32[tau, b, d]; ys: f32[tau, b] or f32[tau, b, C]. The scan keeps
+    the whole round in one executable so the Rust hot loop pays a single
+    PJRT dispatch per (client, round) instead of tau.
+    """
+
+    def body(w, batch):
+        xb, yb = batch
+        return gate_step(spec, w, delta, xb, yb, eta, use_pallas=use_pallas), None
+
+    out, _ = jax.lax.scan(body, flat, (xs, ys))
+    return out
+
+
+def sgd_round(spec: ModelSpec, flat, xs, ys, eta, *, use_pallas: bool = True):
+    """tau plain SGD steps (FedAvg / FedNova local work; delta == 0)."""
+    zero = jnp.zeros_like(flat)
+    return gate_round(spec, flat, zero, xs, ys, eta, use_pallas=use_pallas)
+
+
+def prox_step(spec: ModelSpec, flat, anchor, x, y, eta, prox_mu,
+              *, use_pallas: bool = True):
+    """FedProx local step: grad of loss + (prox_mu/2)*|w - anchor|^2."""
+    _, g = loss_and_grad(spec, flat, x, y, use_pallas=use_pallas)
+    g = g + prox_mu * (flat - anchor)
+    if use_pallas:
+        return _pallas_gate_update(flat, g, jnp.zeros_like(flat), eta)
+    return _ref.gate_update(flat, g, jnp.zeros_like(flat), eta)
+
+
+def prox_round(spec: ModelSpec, flat, anchor, xs, ys, eta, prox_mu,
+               *, use_pallas: bool = True):
+    def body(w, batch):
+        xb, yb = batch
+        return (
+            prox_step(spec, w, anchor, xb, yb, eta, prox_mu,
+                      use_pallas=use_pallas),
+            None,
+        )
+
+    out, _ = jax.lax.scan(body, flat, (xs, ys))
+    return out

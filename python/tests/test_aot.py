@@ -1,0 +1,76 @@
+"""AOT pipeline tests: entry catalogs, HLO text emission, manifest shape."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+
+def test_catalogs_are_well_formed():
+    for name, cat in aot.CATALOGS.items():
+        assert len(cat) >= 1
+        for spec, b, tau in cat:
+            assert b >= 1 and tau >= 1
+            assert spec.param_count > 0
+
+
+def test_entries_cover_design_artifact_kinds():
+    ents = aot.entries_for_model(M.logreg(6, 3, l2=0.01), b=4, tau=3)
+    kinds = {e.kind for e in ents}
+    assert kinds == {"loss", "grad", "step", "round", "proxround", "acc"}
+    # linreg has no accuracy artifact
+    ents = aot.entries_for_model(M.linreg(5), b=4, tau=3)
+    assert {e.kind for e in ents} == {"loss", "grad", "step", "round",
+                                      "proxround"}
+
+
+def test_entry_shapes_match_spec():
+    spec = M.logreg(6, 3, l2=0.01)
+    ents = {e.kind: e for e in aot.entries_for_model(spec, b=4, tau=3)}
+    p = spec.param_count
+    grad = ents["grad"]
+    assert dict(grad.inputs)["params"] == (p,)
+    assert dict(grad.inputs)["x"] == (4, 6)
+    assert dict(grad.inputs)["y"] == (4, 3)
+    assert dict(grad.outputs)["grad"] == (p,)
+    rnd = ents["round"]
+    assert dict(rnd.inputs)["xs"] == (3, 4, 6)
+    assert dict(rnd.inputs)["ys"] == (3, 4, 3)
+    assert dict(rnd.inputs)["eta"] == ()
+
+
+def test_lower_entry_produces_hlo_text():
+    spec = M.linreg(4)
+    ents = aot.entries_for_model(spec, b=3, tau=2)
+    text = aot.lower_entry(ents[0])  # loss
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # entry layout must list the flat param vector first
+    assert f"f32[{spec.param_count}]" in text
+
+
+def test_jnp_variant_entries_have_suffix():
+    ents = aot.build_entries("quick", jnp_variants=True)
+    names = {e.name for e in ents}
+    assert "linreg_d8_grad" in names
+    assert "linreg_d8_grad_jnp" in names
+
+
+def test_main_writes_artifacts_and_manifest(tmp_path):
+    out = tmp_path / "arts"
+    rc = aot.main(["--out-dir", str(out), "--catalog", "quick",
+                   "--only", "linreg_d8_grad,linreg_d8_loss"])
+    assert rc == 0
+    man = json.loads((out / "manifest.json").read_text())
+    assert man["version"] == 1
+    names = {a["name"] for a in man["artifacts"]}
+    assert names == {"linreg_d8_grad", "linreg_d8_loss"}
+    for a in man["artifacts"]:
+        f = out / a["file"]
+        assert f.exists() and f.stat().st_size > 100
+        assert a["sha256_16"]
+        assert a["meta"]["param_count"] == 9
+    assert man["models"][0]["name"] == "linreg_d8"

@@ -1,0 +1,99 @@
+"""L1 correctness: fused elementwise kernels vs ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gate_update, axpy, bias_relu, ref
+
+
+def rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=st.integers(1, 5000), seed=st.integers(0, 2**31 - 1),
+       eta=st.floats(0.0, 1.0))
+def test_gate_update_hypothesis(p, seed, eta):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w, g, d = rand(k1, (p,)), rand(k2, (p,)), rand(k3, (p,))
+    np.testing.assert_allclose(
+        gate_update(w, g, d, eta), ref.gate_update(w, g, d, eta),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("p", [1, 127, 128, 129, 1024, 109386])
+def test_gate_update_sizes(p):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(p), 3)
+    w, g, d = rand(k1, (p,)), rand(k2, (p,)), rand(k3, (p,))
+    np.testing.assert_allclose(
+        gate_update(w, g, d, 0.05), ref.gate_update(w, g, d, 0.05),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_gate_update_zero_delta_is_sgd():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    w, g = rand(k1, (513,)), rand(k2, (513,))
+    z = jnp.zeros_like(w)
+    np.testing.assert_allclose(
+        gate_update(w, g, z, 0.1), w - 0.1 * g, rtol=1e-6, atol=1e-6
+    )
+
+
+def test_gate_update_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        gate_update(jnp.zeros((4,)), jnp.zeros((5,)), jnp.zeros((4,)), 0.1)
+    with pytest.raises(ValueError):
+        gate_update(jnp.zeros((4, 1)), jnp.zeros((4, 1)), jnp.zeros((4, 1)), 0.1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(p=st.integers(1, 4000), seed=st.integers(0, 2**31 - 1),
+       a=st.floats(-2.0, 2.0))
+def test_axpy_hypothesis(p, seed, a):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x, y = rand(k1, (p,)), rand(k2, (p,))
+    np.testing.assert_allclose(
+        axpy(a, x, y), ref.axpy(a, x, y), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_axpy_is_server_update():
+    # server update w <- w - eta*gamma*Delta == axpy(-eta*gamma, Delta, w)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    w, delta = rand(k1, (777,)), rand(k2, (777,))
+    eta, gamma = 0.05, 1.3
+    np.testing.assert_allclose(
+        axpy(-eta * gamma, delta, w), w - eta * gamma * delta,
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 64), n=st.integers(1, 200),
+       seed=st.integers(0, 2**31 - 1))
+def test_bias_relu_hypothesis(m, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x, b = rand(k1, (m, n)), rand(k2, (n,))
+    np.testing.assert_allclose(
+        bias_relu(x, b), ref.bias_relu(x, b), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_bias_relu_grad():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    x, b = rand(k1, (9, 33)), rand(k2, (33,))
+    got = jax.grad(lambda a, c: jnp.sum(bias_relu(a, c) ** 2), (0, 1))(x, b)
+    want = jax.grad(lambda a, c: jnp.sum(ref.bias_relu(a, c) ** 2), (0, 1))(x, b)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-5, atol=1e-5)
+
+
+def test_bias_relu_nonnegative():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(6))
+    x, b = rand(k1, (31, 130)), rand(k2, (130,))
+    assert float(jnp.min(bias_relu(x, b))) >= 0.0

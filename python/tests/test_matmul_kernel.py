@@ -1,0 +1,122 @@
+"""L1 correctness: Pallas tiled matmul vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; explicit cases pin the MXU-aligned
+and ragged-tail paths. This is the CORE correctness signal for Layer 1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, matmul_pallas_raw, ref
+from compile.kernels.matmul import vmem_bytes
+
+# f32 matmul over K-length dot products: tolerance scales with K.
+def tol(k):
+    return dict(rtol=5e-4, atol=1e-4 * max(1.0, k / 128))
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+EXPLICIT_SHAPES = [
+    (1, 1, 1),            # degenerate
+    (8, 128, 128),        # exactly one VMEM tile
+    (128, 128, 128),      # exactly one MXU block
+    (256, 384, 128),      # multi-block, divisible
+    (130, 257, 65),       # ragged in all three dims
+    (50, 784, 128),       # the logreg/mlp layer-1 shape
+    (5, 25, 1),           # linreg shape
+]
+
+
+@pytest.mark.parametrize("m,k,n", EXPLICIT_SHAPES)
+def test_matmul_explicit(m, k, n):
+    kx, kw = jax.random.split(jax.random.PRNGKey(m * 1000 + k + n))
+    x, w = rand(kx, (m, k)), rand(kw, (k, n))
+    np.testing.assert_allclose(matmul(x, w), ref.matmul(x, w), **tol(k))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 200),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_f32(m, k, n, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x, w = rand(kx, (m, k)), rand(kw, (k, n))
+    np.testing.assert_allclose(matmul(x, w), ref.matmul(x, w), **tol(k))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 80),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_bf16_accumulates_f32(m, k, n, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x, w = rand(kx, (m, k), jnp.bfloat16), rand(kw, (k, n), jnp.bfloat16)
+    got = matmul_pallas_raw(x, w, out_dtype=jnp.float32)
+    want = ref.matmul(x, w, out_dtype=jnp.float32)
+    # bf16 inputs: tolerance driven by the 8-bit mantissa of the inputs,
+    # accumulation itself is f32 on both sides.
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 128, 128), (16, 64, 32), (128, 128, 256)])
+def test_matmul_block_shape_invariance(bm, bn, bk):
+    kx, kw = jax.random.split(jax.random.PRNGKey(7))
+    x, w = rand(kx, (70, 300)), rand(kw, (300, 90))
+    got = matmul_pallas_raw(x, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul(x, w), **tol(300))
+
+
+def test_matmul_vjp_matches_jnp():
+    kx, kw = jax.random.split(jax.random.PRNGKey(3))
+    x, w = rand(kx, (17, 33)), rand(kw, (33, 9))
+
+    def f(x, w):
+        return jnp.sum(jnp.sin(matmul(x, w)))
+
+    def fr(x, w):
+        return jnp.sum(jnp.sin(ref.matmul(x, w)))
+
+    gx, gw = jax.grad(f, (0, 1))(x, w)
+    rx, rw = jax.grad(fr, (0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gw, rw, rtol=1e-3, atol=1e-4)
+
+
+def test_matmul_jittable_and_stable_under_jit():
+    kx, kw = jax.random.split(jax.random.PRNGKey(11))
+    x, w = rand(kx, (33, 65)), rand(kw, (65, 17))
+    eager = matmul(x, w)
+    jitted = jax.jit(matmul)(x, w)
+    np.testing.assert_allclose(eager, jitted, rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_shape_mismatch_raises():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 3))
+    with pytest.raises(ValueError):
+        matmul_pallas_raw(x, w)
+
+
+def test_default_blockspec_fits_vmem_budget():
+    # DESIGN.md §4: default schedule must fit well under 16 MiB/core VMEM.
+    assert vmem_bytes() <= 4 * 1024 * 1024
+
+
+def test_zero_and_identity():
+    x = jnp.eye(64, dtype=jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    np.testing.assert_allclose(matmul(x, w), w, rtol=1e-6, atol=1e-6)
+    z = jnp.zeros((16, 64))
+    np.testing.assert_allclose(matmul(z, w), jnp.zeros((16, 32)), atol=0)

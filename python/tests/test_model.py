@@ -1,0 +1,203 @@
+"""L2 correctness: models over flat params — pallas path vs jnp oracle,
+gradients vs jax.grad, FedGATE local-update semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+SPECS = [
+    M.linreg(8),
+    M.linreg(25),
+    M.logreg(16, 4, l2=0.01),
+    M.mlp(12, 3, (8, 5), l2=0.01),
+]
+
+
+def data_for(spec, b, seed=0):
+    kx, ky, kp = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (b, spec.d))
+    if spec.kind == "linreg":
+        y = jax.random.normal(ky, (b,))
+    else:
+        lab = jax.random.randint(ky, (b,), 0, spec.classes)
+        y = jax.nn.one_hot(lab, spec.classes)
+    p = M.init_params(spec, kp)
+    return p, x, y
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_param_count_matches_flatten(spec):
+    p, _, _ = data_for(spec, 4)
+    assert p.shape == (spec.param_count,)
+    layers = M.unflatten(spec, p)
+    assert len(layers) == len(spec.layer_dims)
+    for (w, b), (i, o) in zip(layers, spec.layer_dims):
+        assert w.shape == (i, o) and b.shape == (o,)
+    np.testing.assert_allclose(M.flatten(spec, layers), p, atol=0)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_pallas_loss_matches_jnp(spec):
+    p, x, y = data_for(spec, 7)
+    lp = M.loss(spec, p, x, y, use_pallas=True)
+    lj = M.loss(spec, p, x, y, use_pallas=False)
+    np.testing.assert_allclose(lp, lj, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_pallas_grad_matches_jnp(spec):
+    p, x, y = data_for(spec, 7, seed=1)
+    lp, gp = M.loss_and_grad(spec, p, x, y, use_pallas=True)
+    lj, gj = M.loss_and_grad(spec, p, x, y, use_pallas=False)
+    np.testing.assert_allclose(lp, lj, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gp, gj, rtol=5e-3, atol=5e-4)
+
+
+def test_linreg_grad_matches_closed_form():
+    spec = M.linreg(6)
+    p, x, y = data_for(spec, 32, seed=2)
+    w, b = p[:6], p[6]
+    resid = x @ w + b - y
+    gw = x.T @ resid / 32
+    gb = jnp.mean(resid)
+    _, g = M.loss_and_grad(spec, p, x, y, use_pallas=False)
+    np.testing.assert_allclose(g[:6], gw, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(g[6], gb, rtol=1e-5, atol=1e-5)
+
+
+def test_logreg_l2_adds_mu_convexity():
+    # grad of the L2 term alone must be l2 * w (weights, not biases)
+    spec = M.logreg(5, 3, l2=0.5)
+    spec0 = M.logreg(5, 3, l2=0.0)
+    p, x, y = data_for(spec, 9, seed=3)
+    _, g = M.loss_and_grad(spec, p, x, y, use_pallas=False)
+    _, g0 = M.loss_and_grad(spec0, p, x, y, use_pallas=False)
+    diff = g - g0
+    nw = 5 * 3
+    np.testing.assert_allclose(diff[:nw], 0.5 * p[:nw], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(diff[nw:], jnp.zeros(3), atol=1e-6)
+
+
+@pytest.mark.parametrize("spec", SPECS[:3], ids=lambda s: s.name)
+def test_gate_step_semantics(spec):
+    p, x, y = data_for(spec, 5, seed=4)
+    delta = 0.01 * jnp.ones_like(p)
+    eta = 0.07
+    stepped = M.gate_step(spec, p, delta, x, y, eta, use_pallas=False)
+    _, g = M.loss_and_grad(spec, p, x, y, use_pallas=False)
+    np.testing.assert_allclose(stepped, p - eta * (g - delta),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_gate_round_equals_sequential_steps():
+    spec = M.logreg(6, 3, l2=0.01)
+    p, _, _ = data_for(spec, 4, seed=5)
+    tau, b = 5, 4
+    kx, ky = jax.random.split(jax.random.PRNGKey(6))
+    xs = jax.random.normal(kx, (tau, b, spec.d))
+    lab = jax.random.randint(ky, (tau, b), 0, spec.classes)
+    ys = jax.nn.one_hot(lab, spec.classes)
+    delta = 0.02 * jnp.ones_like(p)
+    eta = 0.05
+    fused = M.gate_round(spec, p, delta, xs, ys, eta, use_pallas=False)
+    w = p
+    for t in range(tau):
+        w = M.gate_step(spec, w, delta, xs[t], ys[t], eta, use_pallas=False)
+    np.testing.assert_allclose(fused, w, rtol=1e-5, atol=1e-6)
+
+
+def test_gate_round_pallas_matches_jnp():
+    spec = M.logreg(6, 3, l2=0.01)
+    p, _, _ = data_for(spec, 4, seed=7)
+    tau, b = 3, 4
+    kx, ky = jax.random.split(jax.random.PRNGKey(8))
+    xs = jax.random.normal(kx, (tau, b, spec.d))
+    ys = jax.nn.one_hot(jax.random.randint(ky, (tau, b), 0, 3), 3)
+    delta = jnp.zeros_like(p)
+    fp = M.gate_round(spec, p, delta, xs, ys, 0.05, use_pallas=True)
+    fj = M.gate_round(spec, p, delta, xs, ys, 0.05, use_pallas=False)
+    np.testing.assert_allclose(fp, fj, rtol=5e-3, atol=5e-4)
+
+
+def test_sgd_round_is_gate_round_with_zero_delta():
+    spec = M.linreg(5)
+    p, _, _ = data_for(spec, 4, seed=9)
+    tau, b = 4, 4
+    kx, ky = jax.random.split(jax.random.PRNGKey(10))
+    xs = jax.random.normal(kx, (tau, b, 5))
+    ys = jax.random.normal(ky, (tau, b))
+    np.testing.assert_allclose(
+        M.sgd_round(spec, p, xs, ys, 0.03, use_pallas=False),
+        M.gate_round(spec, p, jnp.zeros_like(p), xs, ys, 0.03,
+                     use_pallas=False),
+        atol=0,
+    )
+
+
+def test_prox_round_zero_mu_is_sgd():
+    spec = M.logreg(5, 3)
+    p, _, _ = data_for(spec, 4, seed=11)
+    tau, b = 3, 4
+    kx, ky = jax.random.split(jax.random.PRNGKey(12))
+    xs = jax.random.normal(kx, (tau, b, 5))
+    ys = jax.nn.one_hot(jax.random.randint(ky, (tau, b), 0, 3), 3)
+    anchor = p + 1.0
+    np.testing.assert_allclose(
+        M.prox_round(spec, p, anchor, xs, ys, 0.05, 0.0, use_pallas=False),
+        M.sgd_round(spec, p, xs, ys, 0.05, use_pallas=False),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_prox_pulls_towards_anchor():
+    spec = M.linreg(4)
+    p, x, y = data_for(spec, 8, seed=13)
+    anchor = p + 10.0
+    xs, ys = x[None], y[None]
+    no_prox = M.prox_round(spec, p, anchor, xs, ys, 0.05, 0.0,
+                           use_pallas=False)
+    with_prox = M.prox_round(spec, p, anchor, xs, ys, 0.05, 5.0,
+                             use_pallas=False)
+    # proximal term pulls the iterate towards the (larger) anchor
+    assert float(jnp.sum(with_prox - no_prox)) > 0
+
+
+def test_accuracy_perfect_and_zero():
+    spec = M.logreg(4, 2)
+    # weights that trivially classify x by sign of feature 0
+    w = jnp.zeros((4, 2)).at[0, 1].set(10.0).at[0, 0].set(-10.0)
+    p = M.flatten(spec, [(w, jnp.zeros(2))])
+    x = jnp.array([[1.0, 0, 0, 0], [-1.0, 0, 0, 0]])
+    y_right = jax.nn.one_hot(jnp.array([1, 0]), 2)
+    y_wrong = jax.nn.one_hot(jnp.array([0, 1]), 2)
+    assert float(M.accuracy(spec, p, x, y_right, use_pallas=False)) == 1.0
+    assert float(M.accuracy(spec, p, x, y_wrong, use_pallas=False)) == 0.0
+
+
+def test_mlp_forward_shapes_and_nonlinearity():
+    spec = M.mlp(10, 4, (8, 6))
+    p, x, _ = data_for(spec, 9, seed=14)
+    # He-init biases are zero, which makes a ReLU net positively
+    # homogeneous; perturb them so the nonlinearity is observable.
+    p = p + 0.1
+    out = M.forward(spec, p, x, use_pallas=False)
+    assert out.shape == (9, 4)
+    # nonlinearity: f(2x) != 2 f(x) for an MLP with ReLU + nonzero biases
+    out2 = M.forward(spec, p, 2 * x, use_pallas=False)
+    assert not np.allclose(out2, 2 * out)
+
+
+def test_sgd_descends_on_full_batch():
+    spec = M.linreg(6)
+    p, x, y = data_for(spec, 64, seed=15)
+    l0 = float(M.loss(spec, p, x, y, use_pallas=False))
+    w = p
+    for _ in range(20):
+        w = M.gate_step(spec, w, jnp.zeros_like(w), x, y, 0.1,
+                        use_pallas=False)
+    l1 = float(M.loss(spec, w, x, y, use_pallas=False))
+    assert l1 < l0 * 0.5

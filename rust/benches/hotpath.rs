@@ -1,0 +1,183 @@
+//! Hot-path microbenchmarks (custom harness — criterion is unavailable
+//! offline). Run with `cargo bench`. Results feed EXPERIMENTS.md §Perf.
+//!
+//! Covered paths:
+//!   * engine primitives: loss / grad / gate_step / fused gate_round,
+//!     native vs HLO (PJRT), per model of the full catalog;
+//!   * the fused-round vs per-step dispatch tradeoff (the L3 perf lever);
+//!   * a full FedGATE communication round (the end-to-end unit of work);
+//!   * server-side aggregation at N=1000 clients.
+
+use flanp::coordinator::gate::{fedgate_round, GateState, RoundBuffers};
+use flanp::coordinator::{ExperimentConfig, SolverKind};
+use flanp::engine::Engine;
+use flanp::fed::ClientFleet;
+use flanp::setup;
+use flanp::util::{linalg, Rng};
+use std::time::Instant;
+
+/// Time `f` adaptively: warm up, then run enough iterations for ~0.3 s.
+fn bench<F: FnMut()>(name: &str, mut f: F) {
+    f(); // warmup + correctness
+    let t0 = Instant::now();
+    let mut iters = 0u32;
+    while t0.elapsed().as_secs_f64() < 0.05 {
+        f();
+        iters += 1;
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let target_iters = ((0.3 / per) as u32).clamp(3, 10_000);
+    let t1 = Instant::now();
+    for _ in 0..target_iters {
+        f();
+    }
+    let per = t1.elapsed().as_secs_f64() / target_iters as f64;
+    let (val, unit) = if per >= 1.0 {
+        (per, "s ")
+    } else if per >= 1e-3 {
+        (per * 1e3, "ms")
+    } else {
+        (per * 1e6, "us")
+    };
+    println!("{name:<58} {val:>9.3} {unit}/iter  ({target_iters} iters)");
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 0.3);
+    v
+}
+
+fn engine_suite(engine: &dyn Engine, label: &str) {
+    let meta = engine.meta().clone();
+    let mut rng = Rng::new(9);
+    let params = rand_vec(&mut rng, meta.param_count);
+    let delta = rand_vec(&mut rng, meta.param_count);
+    let x = rand_vec(&mut rng, meta.batch * meta.d);
+    let y = onehot_or_real(&mut rng, &meta, 1);
+    let xs = rand_vec(&mut rng, meta.tau * meta.batch * meta.d);
+    let ys = onehot_or_real(&mut rng, &meta, meta.tau);
+
+    bench(&format!("{label}/loss"), || {
+        engine.loss(&params, &x, &y).unwrap();
+    });
+    bench(&format!("{label}/loss_grad"), || {
+        engine.loss_grad(&params, &x, &y).unwrap();
+    });
+    bench(&format!("{label}/gate_step"), || {
+        engine.gate_step(&params, &delta, &x, &y, 0.05).unwrap();
+    });
+    bench(&format!("{label}/gate_round[fused tau={}]", meta.tau), || {
+        engine.gate_round(&params, &delta, &xs, &ys, 0.05).unwrap();
+    });
+    // per-step equivalent of the fused round: the dispatch-overhead probe
+    bench(&format!("{label}/gate_round[{} x gate_step]", meta.tau), || {
+        let mut w = params.clone();
+        for t in 0..meta.tau {
+            let xi = &xs[t * meta.batch * meta.d..(t + 1) * meta.batch * meta.d];
+            let yw = meta.y_width();
+            let yi = &ys[t * meta.batch * yw..(t + 1) * meta.batch * yw];
+            w = engine.gate_step(&w, &delta, xi, yi, 0.05).unwrap();
+        }
+    });
+}
+
+fn onehot_or_real(rng: &mut Rng, meta: &flanp::engine::ModelMeta, tau: usize) -> Vec<f32> {
+    let rows = tau * meta.batch;
+    if meta.y_width() == 1 {
+        rand_vec(rng, rows)
+    } else {
+        let mut y = vec![0.0f32; rows * meta.classes];
+        for r in 0..rows {
+            y[r * meta.classes + rng.below(meta.classes)] = 1.0;
+        }
+        y
+    }
+}
+
+fn fedgate_round_bench(engine: &dyn Engine, label: &str, n_clients: usize, s: usize) {
+    let cfg = ExperimentConfig::new(
+        SolverKind::FedGate,
+        &engine.meta().name,
+        n_clients,
+        s,
+    );
+    let mut fleet: ClientFleet =
+        setup::build_fleet(engine.meta(), &cfg, 0.1, 0.0).unwrap();
+    let active: Vec<usize> = (0..n_clients).collect();
+    let mut state = GateState::new(
+        vec![0.01; engine.meta().param_count],
+        n_clients,
+    );
+    let mut bufs = RoundBuffers::new(engine, engine.meta().tau);
+    bench(
+        &format!("{label}/fedgate_round[N={n_clients}, tau={}]", engine.meta().tau),
+        || {
+            fedgate_round(
+                engine, &mut fleet, &mut state, &active,
+                engine.meta().tau, 0.05, 1.0, &mut bufs,
+            )
+            .unwrap();
+        },
+    );
+}
+
+fn aggregation_bench() {
+    let mut rng = Rng::new(4);
+    let p = 109_386; // the MLP parameter count
+    let n = 1000;
+    let updates: Vec<Vec<f32>> = (0..8).map(|_| rand_vec(&mut rng, p)).collect();
+    bench(&format!("server/aggregate[P={p}, N={n}]"), || {
+        let mut acc = vec![0.0f64; p];
+        for _ in 0..(n / updates.len()) {
+            for u in &updates {
+                linalg::accumulate(&mut acc, u);
+            }
+        }
+        let _ = linalg::mean_of(&acc, n);
+    });
+}
+
+fn main() {
+    println!("flanp hot-path benchmarks (lower is better)");
+    println!("{}", "-".repeat(90));
+
+    let artifacts = setup::default_artifacts_dir();
+    let models = ["linreg_d25", "logreg_d784_c10", "mlp_d784_c10_h128_h64"];
+
+    for model in models {
+        let native = setup::build_engine("native", model, &artifacts).unwrap();
+        engine_suite(native.as_ref(), &format!("native/{model}"));
+    }
+    aggregation_bench();
+
+    match setup::build_engine("hlo", models[0], &artifacts) {
+        Ok(_) => {
+            let manifest =
+                flanp::engine::Manifest::load(&artifacts).unwrap();
+            for model in models {
+                let hlo = setup::build_engine("hlo", model, &artifacts).unwrap();
+                engine_suite(hlo.as_ref(), &format!("hlo/{model}"));
+                // ablation: same entry points lowered WITHOUT the pallas
+                // kernels (plain jnp) — quantifies the CPU-side cost of
+                // interpret-mode pallas lowering (EXPERIMENTS.md §Perf;
+                // on real TPU the pallas path lowers to Mosaic instead)
+                if let Ok(jnp) =
+                    flanp::engine::HloEngine::load_variant(&manifest, model, true)
+                {
+                    engine_suite(&jnp, &format!("hlo-jnp/{model}"));
+                }
+            }
+            // end-to-end round cost on both engines
+            for model in ["linreg_d25", "mlp_d784_c10_h128_h64"] {
+                let native = setup::build_engine("native", model, &artifacts).unwrap();
+                fedgate_round_bench(native.as_ref(), &format!("native/{model}"), 8, 100);
+                let hlo = setup::build_engine("hlo", model, &artifacts).unwrap();
+                fedgate_round_bench(hlo.as_ref(), &format!("hlo/{model}"), 8, 100);
+            }
+        }
+        Err(e) => println!("(hlo benches skipped: {e:#} — run `make artifacts`)"),
+    }
+    println!("{}", "-".repeat(90));
+    println!("done");
+}

@@ -1,0 +1,284 @@
+//! Experiment configuration: every knob of every figure in one struct.
+
+use crate::fed::SpeedModel;
+
+/// Which algorithm drives the run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SolverKind {
+    /// FLANP (Algorithm 2) with the oracle statistical-accuracy rule.
+    Flanp,
+    /// FLANP with the Figure-9 heuristic threshold-halving rule
+    /// (no knowledge of mu / c).
+    FlanpHeuristic,
+    /// Non-adaptive FedGATE with all N nodes (the paper's main benchmark).
+    FedGate,
+    /// FedAvg (McMahan et al. 2017): tau local SGD steps + model average.
+    FedAvg,
+    /// FedNova (Wang et al. 2020): heterogeneous tau_i, normalized avg.
+    FedNova,
+    /// FedProx (Li et al. 2018): proximal local objective + model average.
+    FedProx,
+    /// FedGATE with k uniformly random participants per round (Fig. 6a).
+    FedGatePartialRandom { k: usize },
+    /// FedGATE with the k fastest participants every round (Fig. 6b).
+    FedGatePartialFastest { k: usize },
+}
+
+impl SolverKind {
+    pub fn name(&self) -> String {
+        match self {
+            SolverKind::Flanp => "flanp".into(),
+            SolverKind::FlanpHeuristic => "flanp-heuristic".into(),
+            SolverKind::FedGate => "fedgate".into(),
+            SolverKind::FedAvg => "fedavg".into(),
+            SolverKind::FedNova => "fednova".into(),
+            SolverKind::FedProx => "fedprox".into(),
+            SolverKind::FedGatePartialRandom { k } => format!("fedgate-rand{k}"),
+            SolverKind::FedGatePartialFastest { k } => format!("fedgate-fast{k}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if let Some(k) = s.strip_prefix("fedgate-rand") {
+            return Ok(SolverKind::FedGatePartialRandom {
+                k: k.parse().map_err(|_| "bad k")?,
+            });
+        }
+        if let Some(k) = s.strip_prefix("fedgate-fast") {
+            return Ok(SolverKind::FedGatePartialFastest {
+                k: k.parse().map_err(|_| "bad k")?,
+            });
+        }
+        match s {
+            "flanp" => Ok(SolverKind::Flanp),
+            "flanp-heuristic" => Ok(SolverKind::FlanpHeuristic),
+            "fedgate" => Ok(SolverKind::FedGate),
+            "fedavg" => Ok(SolverKind::FedAvg),
+            "fednova" => Ok(SolverKind::FedNova),
+            "fedprox" => Ok(SolverKind::FedProx),
+            _ => Err(format!("unknown solver '{s}'")),
+        }
+    }
+}
+
+/// How FLANP picks (eta_n, gamma_n) per stage.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepsizeSchedule {
+    /// eta, gamma fixed across stages (the paper's experiments:
+    /// eta = 0.05 MNIST / 0.02 CIFAR, gamma = 1).
+    Fixed,
+    /// Theorem 1: eta_n = alpha / (tau * sqrt(n)),
+    ///            gamma_n = sqrt(n) / (2 * alpha * L).
+    Theory { alpha: f64, lipschitz: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub solver: SolverKind,
+    /// manifest model name, e.g. "linreg_d25"
+    pub model: String,
+    pub num_clients: usize,
+    /// samples per client (must be a multiple of the artifact batch)
+    pub s: usize,
+    pub eta: f32,
+    pub gamma: f32,
+    /// local updates per round (defaults to the artifact's fused tau)
+    pub tau: usize,
+    /// FLANP initial participant count n0
+    pub n0: usize,
+    pub stepsizes: StepsizeSchedule,
+    /// strong-convexity constant mu for the statistical-accuracy rule
+    pub mu: f64,
+    /// V_ns = c_stat / (n*s)
+    pub c_stat: f64,
+    /// FedProx proximal coefficient
+    pub prox_mu: f32,
+    pub speed: SpeedModel,
+    pub seed: u64,
+    pub max_rounds: usize,
+    /// virtual-time budget (0 = unlimited)
+    pub max_time: f64,
+    /// evaluate the full objective every k rounds (1 = every round)
+    pub eval_every: usize,
+    /// cap on rows used for the full-objective evaluation (0 = all)
+    pub eval_rows: usize,
+    /// per-round communication overhead added to the virtual clock
+    pub comm_overhead: f64,
+    /// terminate the run once loss_full <= target (0 = disabled);
+    /// lets benchmark curves share a common stopping point
+    pub target_loss: f64,
+    /// terminate once dist_to_opt <= target (0 = disabled; linreg only)
+    pub target_dist: f64,
+    /// FLANP ablations (DESIGN.md §5a): warm-start stages from the
+    /// previous model (paper behaviour) or re-initialize
+    pub warm_start: bool,
+    /// FLANP participant growth factor alpha (paper: 2.0 = doubling)
+    pub growth: f64,
+    /// FLANP inner solver (Remark 1: the meta-algorithm is
+    /// subroutine-agnostic)
+    pub subroutine: Subroutine,
+}
+
+/// Inner federated solver driven by the FLANP stage machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Subroutine {
+    /// FedGATE (Algorithm 2 — the paper's instantiation)
+    Gate,
+    /// plain FedAvg (tau local SGD steps + model averaging)
+    Avg,
+}
+
+impl ExperimentConfig {
+    /// Sensible defaults matching Section 5.1.
+    pub fn new(solver: SolverKind, model: &str, num_clients: usize, s: usize) -> Self {
+        ExperimentConfig {
+            solver,
+            model: model.to_string(),
+            num_clients,
+            s,
+            eta: 0.05,
+            gamma: 1.0,
+            tau: 10,
+            n0: 2,
+            stepsizes: StepsizeSchedule::Fixed,
+            mu: 0.01,
+            c_stat: 1.0,
+            prox_mu: 0.1,
+            speed: SpeedModel::paper_uniform(),
+            seed: 1,
+            max_rounds: 400,
+            max_time: 0.0,
+            eval_every: 1,
+            eval_rows: 2000,
+            comm_overhead: 0.0,
+            target_loss: 0.0,
+            target_dist: 0.0,
+            warm_start: true,
+            growth: 2.0,
+            subroutine: Subroutine::Gate,
+        }
+    }
+
+    /// Statistical accuracy of the ERM over n participating clients:
+    /// V_ns = c / (n*s).
+    pub fn v_ns(&self, n: usize) -> f64 {
+        self.c_stat / (n as f64 * self.s as f64)
+    }
+
+    /// The sufficient stopping threshold ||grad||^2 <= 2 mu V_ns.
+    pub fn grad_threshold(&self, n: usize) -> f64 {
+        2.0 * self.mu * self.v_ns(n)
+    }
+
+    /// Per-stage stepsizes for n participants.
+    pub fn stage_stepsizes(&self, n: usize) -> (f32, f32) {
+        match &self.stepsizes {
+            StepsizeSchedule::Fixed => (self.eta, self.gamma),
+            StepsizeSchedule::Theory { alpha, lipschitz } => {
+                let eta = alpha / (self.tau as f64 * (n as f64).sqrt());
+                let gamma = (n as f64).sqrt() / (2.0 * alpha * lipschitz);
+                (eta as f32, gamma as f32)
+            }
+        }
+    }
+
+    pub fn validate(&self, batch: usize) -> Result<(), String> {
+        if self.num_clients == 0 {
+            return Err("num_clients must be positive".into());
+        }
+        if self.s % batch != 0 {
+            return Err(format!(
+                "s = {} must be a multiple of the artifact batch {batch}",
+                self.s
+            ));
+        }
+        if self.s < batch {
+            return Err("s smaller than artifact batch".into());
+        }
+        if self.n0 == 0 || self.n0 > self.num_clients {
+            return Err(format!(
+                "n0 = {} out of range 1..={}",
+                self.n0, self.num_clients
+            ));
+        }
+        if self.tau == 0 {
+            return Err("tau must be positive".into());
+        }
+        if self.growth <= 1.0 {
+            return Err("growth factor must exceed 1".into());
+        }
+        if self.eta <= 0.0 || self.gamma <= 0.0 {
+            return Err("stepsizes must be positive".into());
+        }
+        if matches!(
+            self.solver,
+            SolverKind::FedGatePartialRandom { k: 0 }
+                | SolverKind::FedGatePartialFastest { k: 0 }
+        ) {
+            return Err("partial participation k must be positive".into());
+        }
+        if let SolverKind::FedGatePartialRandom { k }
+        | SolverKind::FedGatePartialFastest { k } = self.solver
+        {
+            if k > self.num_clients {
+                return Err("k exceeds num_clients".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds_shrink_with_n() {
+        let cfg = ExperimentConfig::new(SolverKind::Flanp, "m", 16, 100);
+        assert!(cfg.grad_threshold(2) > cfg.grad_threshold(4));
+        assert!((cfg.v_ns(4) - cfg.c_stat / 400.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theory_stepsizes_scale_with_n() {
+        let mut cfg = ExperimentConfig::new(SolverKind::Flanp, "m", 16, 100);
+        cfg.stepsizes = StepsizeSchedule::Theory { alpha: 0.5, lipschitz: 2.0 };
+        let (e1, g1) = cfg.stage_stepsizes(4);
+        let (e2, g2) = cfg.stage_stepsizes(16);
+        // eta shrinks ~1/sqrt(n), gamma grows ~sqrt(n); product constant
+        assert!(e2 < e1);
+        assert!(g2 > g1);
+        assert!((e1 * g1 - e2 * g2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut cfg = ExperimentConfig::new(SolverKind::Flanp, "m", 10, 100);
+        assert!(cfg.validate(10).is_ok());
+        assert!(cfg.validate(7).is_err()); // 100 % 7 != 0
+        cfg.n0 = 0;
+        assert!(cfg.validate(10).is_err());
+        cfg.n0 = 11;
+        assert!(cfg.validate(10).is_err());
+        cfg.n0 = 2;
+        cfg.solver = SolverKind::FedGatePartialRandom { k: 20 };
+        assert!(cfg.validate(10).is_err());
+    }
+
+    #[test]
+    fn solver_names_roundtrip() {
+        for s in [
+            "flanp",
+            "flanp-heuristic",
+            "fedgate",
+            "fedavg",
+            "fednova",
+            "fedprox",
+            "fedgate-rand5",
+            "fedgate-fast8",
+        ] {
+            assert_eq!(SolverKind::parse(s).unwrap().name(), s);
+        }
+        assert!(SolverKind::parse("sgd").is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Shared full-objective evaluator: everything the figures plot.
+//!
+//! Computes the *global* training objective L_N (over all N clients'
+//! data, whether or not they currently participate), the exact
+//! suboptimality `||w - w*||` for linear regression (w* from the normal
+//! equations), and classification accuracy — on a deterministic,
+//! optionally subsampled evaluation slice chunked to the artifact batch.
+
+use crate::data::Labels;
+use crate::engine::{Engine, ModelKind};
+use crate::fed::ClientFleet;
+use crate::util::{linalg, Rng};
+use anyhow::Result;
+
+pub struct EvalData {
+    /// prebuilt [chunks][b*d] feature batches
+    x_chunks: Vec<Vec<f32>>,
+    /// prebuilt [chunks][b*y_width] label batches
+    y_chunks: Vec<Vec<f32>>,
+    /// exact linreg optimum over ALL shard data (None otherwise)
+    pub w_star: Option<Vec<f32>>,
+    /// loss at w_star (linreg): lets traces report L - L* exactly
+    pub loss_star: f64,
+    classification: bool,
+}
+
+impl EvalData {
+    /// Build from the union of all clients' shards, capped at `max_rows`
+    /// rows (0 = all), chunked to the engine batch.
+    pub fn build(
+        engine: &dyn Engine,
+        fleet: &ClientFleet,
+        max_rows: usize,
+        seed: u64,
+    ) -> Result<EvalData> {
+        let meta = engine.meta();
+        let b = meta.batch;
+        let d = meta.d;
+        let yw = meta.y_width();
+
+        // all rows owned by any client (in shard order = deterministic)
+        let mut rows: Vec<usize> = fleet
+            .shards
+            .iter()
+            .flat_map(|s| s.indices.iter().copied())
+            .collect();
+        if max_rows > 0 && rows.len() > max_rows {
+            let mut rng = Rng::new(seed ^ 0x5eed_e7a1);
+            rng.shuffle(&mut rows);
+            rows.truncate(max_rows);
+        }
+        // drop the ragged tail so every chunk is exactly b rows
+        let chunks = rows.len() / b;
+        anyhow::ensure!(chunks > 0, "not enough rows to evaluate");
+        rows.truncate(chunks * b);
+
+        let mut x_chunks = Vec::with_capacity(chunks);
+        let mut y_chunks = Vec::with_capacity(chunks);
+        for chunk in rows.chunks(b) {
+            let mut x = vec![0.0f32; b * d];
+            let mut y = vec![0.0f32; b * yw];
+            fleet.dataset.gather_x(chunk, &mut x);
+            fleet.dataset.y.encode_into(chunk, &mut y);
+            x_chunks.push(x);
+            y_chunks.push(y);
+        }
+
+        // exact linreg optimum over the FULL federated training set
+        let (w_star, loss_star) = if meta.kind == ModelKind::LinReg {
+            let all_rows: Vec<usize> = fleet
+                .shards
+                .iter()
+                .flat_map(|s| s.indices.iter().copied())
+                .collect();
+            let n = all_rows.len();
+            let mut x = vec![0.0f32; n * d];
+            fleet.dataset.gather_x(&all_rows, &mut x);
+            let y: Vec<f32> = match &fleet.dataset.y {
+                Labels::Real(v) => all_rows.iter().map(|&i| v[i]).collect(),
+                _ => anyhow::bail!("linreg needs real labels"),
+            };
+            let w = linalg::linreg_optimum(&x, &y, n, d, meta.l2 as f64);
+            // exact loss at w*
+            let mut acc = 0.0f64;
+            for r in 0..n {
+                let mut pred = w[d] as f64;
+                for j in 0..d {
+                    pred += w[j] as f64 * x[r * d + j] as f64;
+                }
+                let resid = pred - y[r] as f64;
+                acc += 0.5 * resid * resid;
+            }
+            let mut l2term = 0.0f64;
+            for j in 0..d {
+                l2term += (w[j] as f64) * (w[j] as f64);
+            }
+            (Some(w), acc / n as f64 + 0.5 * meta.l2 as f64 * l2term)
+        } else {
+            (None, 0.0)
+        };
+
+        Ok(EvalData {
+            x_chunks,
+            y_chunks,
+            w_star,
+            loss_star,
+            classification: meta.kind != ModelKind::LinReg,
+        })
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.x_chunks.len()
+    }
+
+    /// Mean loss of `params` over the evaluation slice.
+    pub fn full_loss(&self, engine: &dyn Engine, params: &[f32]) -> Result<f64> {
+        let mut acc = 0.0f64;
+        for (x, y) in self.x_chunks.iter().zip(&self.y_chunks) {
+            acc += engine.loss(params, x, y)? as f64;
+        }
+        Ok(acc / self.x_chunks.len() as f64)
+    }
+
+    /// Mean accuracy over the evaluation slice (NaN for regression).
+    pub fn full_accuracy(&self, engine: &dyn Engine, params: &[f32]) -> Result<f64> {
+        if !self.classification {
+            return Ok(f64::NAN);
+        }
+        let mut acc = 0.0f64;
+        for (x, y) in self.x_chunks.iter().zip(&self.y_chunks) {
+            acc += engine.accuracy(params, x, y)? as f64;
+        }
+        Ok(acc / self.x_chunks.len() as f64)
+    }
+
+    /// ||w - w*|| when the exact optimum is known; NaN otherwise.
+    pub fn dist_to_opt(&self, params: &[f32]) -> f64 {
+        match &self.w_star {
+            Some(w) => linalg::dist2(params, w),
+            None => f64::NAN,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shard, synth};
+    use crate::engine::NativeEngine;
+    use crate::fed::SpeedModel;
+
+    fn linreg_fleet() -> (NativeEngine, ClientFleet) {
+        let mut rng = Rng::new(3);
+        let (ds, _) = synth::linreg(&mut rng, 200, 5, 0.1);
+        let shards = shard::partition_iid(&mut rng, &ds, 10);
+        let fleet =
+            ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+        (NativeEngine::linreg(5, 10, 2), fleet)
+    }
+
+    #[test]
+    fn eval_chunks_and_loss() {
+        let (e, fleet) = linreg_fleet();
+        let ev = EvalData::build(&e, &fleet, 0, 1).unwrap();
+        assert_eq!(ev.num_chunks(), 20);
+        let w0 = vec![0.0f32; 6];
+        let l0 = ev.full_loss(&e, &w0).unwrap();
+        assert!(l0 > 0.0);
+        // loss at w* must be below loss at zero and near loss_star
+        let ws = ev.w_star.clone().unwrap();
+        let ls = ev.full_loss(&e, &ws).unwrap();
+        assert!(ls < l0);
+        assert!((ls - ev.loss_star).abs() < 1e-3, "{ls} vs {}", ev.loss_star);
+    }
+
+    #[test]
+    fn dist_to_opt_zero_at_optimum() {
+        let (e, fleet) = linreg_fleet();
+        let ev = EvalData::build(&e, &fleet, 0, 1).unwrap();
+        let ws = ev.w_star.clone().unwrap();
+        assert_eq!(ev.dist_to_opt(&ws), 0.0);
+        assert!(ev.dist_to_opt(&vec![0.0; 6]) > 0.0);
+        let _ = e;
+    }
+
+    #[test]
+    fn subsampling_caps_rows() {
+        let (e, fleet) = linreg_fleet();
+        let ev = EvalData::build(&e, &fleet, 50, 1).unwrap();
+        assert_eq!(ev.num_chunks(), 5);
+    }
+
+    #[test]
+    fn accuracy_nan_for_regression() {
+        let (e, fleet) = linreg_fleet();
+        let ev = EvalData::build(&e, &fleet, 0, 1).unwrap();
+        assert!(ev.full_accuracy(&e, &vec![0.0; 6]).unwrap().is_nan());
+    }
+}

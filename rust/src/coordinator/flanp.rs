@@ -1,0 +1,332 @@
+//! FLANP (Algorithms 1 + 2): the straggler-resilient meta-algorithm.
+//!
+//! Stage machine over the FedGATE subroutine:
+//!   * start with the n0 *fastest* clients;
+//!   * run FedGATE rounds until the active ERM reaches its statistical
+//!     accuracy, `||grad L_n(w)||^2 <= 2 mu V_ns` (or the Figure-9
+//!     heuristic threshold when mu, c are unknown);
+//!   * double the participant set (next-fastest clients join), reset the
+//!     gradient-tracking variables, re-tune stepsizes (Theorem 1), and
+//!     warm-start from the previous stage's model (Proposition 1);
+//!   * finish when the full-N stage reaches its statistical accuracy.
+
+use super::config::{ExperimentConfig, SolverKind, Subroutine};
+use super::eval::EvalData;
+use super::gate::{
+    active_loss_gradsq, fedgate_round, local_round, GateState, RoundBuffers,
+};
+use super::solvers::{init_params, RunContext};
+use crate::util::linalg;
+use super::stopping::{HeuristicStop, OracleStop, StageStop};
+use crate::engine::Engine;
+use crate::fed::{ClientFleet, Trace};
+use anyhow::Result;
+
+pub fn run_flanp(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    cfg: &ExperimentConfig,
+) -> Result<Trace> {
+    let heuristic = cfg.solver == SolverKind::FlanpHeuristic;
+    let mut oracle = OracleStop::from_config(cfg);
+    let mut heur = HeuristicStop::new();
+
+    let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
+    let mut ctx = RunContext::new(engine, cfg, &eval);
+    let n_total = fleet.num_clients();
+    let mut state = GateState::new(init_params(engine, cfg.seed), n_total);
+    let mut bufs = RoundBuffers::new(engine, cfg.tau);
+
+    let w0 = state.w.clone();
+    let mut n = cfg.n0.min(n_total);
+    let mut stage = 0usize;
+    'stages: loop {
+        // stage setup: fastest-n prefix, fresh tracking, stage stepsizes
+        let active = fleet.fastest(n).to_vec();
+        let speeds = fleet.speeds_of(&active);
+        state.reset_tracking();
+        if !cfg.warm_start && stage > 0 {
+            // ablation: discard the previous stage's model (Prop. 1 off)
+            state.w.copy_from_slice(&w0);
+        }
+        let (eta, gamma) = cfg.stage_stepsizes(n);
+        ctx.trace.stage_transitions.push((ctx.rounds_done(), n));
+
+        // initial stats (first stage only: later stages start from the
+        // model the previous round already recorded at this same clock
+        // time; a duplicate row would break clock monotonicity). Also
+        // primes the heuristic threshold from the first gradient norm.
+        if ctx.trace.rounds.is_empty() {
+            let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
+            if heuristic {
+                heur.observe_initial(g0);
+            }
+            ctx.record(&state.w, n, stage, l0, g0)?;
+        }
+
+        loop {
+            match cfg.subroutine {
+                Subroutine::Gate => fedgate_round(
+                    engine, fleet, &mut state, &active, cfg.tau, eta, gamma,
+                    &mut bufs,
+                )?,
+                Subroutine::Avg => {
+                    // Remark 1: FLANP over plain FedAvg — tau local SGD
+                    // steps (zero tracking) then model averaging
+                    let p = state.w.len();
+                    let zero = vec![0.0f32; p];
+                    let mut acc = vec![0.0f64; p];
+                    for &i in &active {
+                        let wi = local_round(
+                            engine, fleet, i, &state.w, &zero, cfg.tau, eta,
+                            &mut bufs,
+                        )?;
+                        linalg::accumulate(&mut acc, &wi);
+                    }
+                    state.w = linalg::mean_of(&acc, active.len());
+                }
+            }
+            ctx.clock.advance_round(&speeds, cfg.tau);
+            let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
+            ctx.record(&state.w, n, stage, loss, gsq)?;
+
+            let done = if heuristic {
+                heur.is_initialized() && heur.stage_done(n, gsq)
+            } else {
+                oracle.stage_done(n, gsq)
+            };
+            if done {
+                if n >= n_total {
+                    if heuristic {
+                        // Section 5.4: the heuristic has no oracle notion
+                        // of "final accuracy reached" — it keeps halving
+                        // the threshold within the full-N stage and
+                        // refines until the run budget ends
+                        heur.on_stage_advance();
+                        if ctx.should_stop() {
+                            break 'stages;
+                        }
+                        continue;
+                    }
+                    ctx.trace.finished = true;
+                    break 'stages;
+                }
+                // advance: grow participants (Algorithm 1; paper: 2x)
+                if heuristic {
+                    heur.on_stage_advance();
+                } else {
+                    oracle.on_stage_advance();
+                }
+                n = (((n as f64) * cfg.growth).ceil() as usize)
+                    .max(n + 1)
+                    .min(n_total);
+                stage += 1;
+                continue 'stages;
+            }
+            if ctx.should_stop() {
+                break 'stages;
+            }
+        }
+    }
+    Ok(ctx.trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shard, synth};
+    use crate::engine::NativeEngine;
+    use crate::fed::SpeedModel;
+    use crate::util::Rng;
+
+    fn setup(n_clients: usize, s: usize, seed: u64) -> (NativeEngine, ClientFleet) {
+        let mut rng = Rng::new(seed);
+        let (ds, _) = synth::linreg(&mut rng, n_clients * s, 5, 0.05);
+        let shards = shard::partition_iid(&mut rng, &ds, n_clients);
+        let fleet =
+            ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+        (NativeEngine::linreg(5, 10, 5), fleet)
+    }
+
+    fn cfg(solver: SolverKind, n: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::new(solver, "linreg_d5", n, 50);
+        cfg.tau = 5;
+        cfg.eta = 0.05;
+        cfg.n0 = 2;
+        cfg.max_rounds = 400;
+        cfg.mu = 0.5;
+        cfg.c_stat = 0.05;
+        cfg
+    }
+
+    #[test]
+    fn flanp_progresses_through_stages_to_full_n() {
+        let (e, mut fleet) = setup(8, 50, 31);
+        let t = run_flanp(&e, &mut fleet, &cfg(SolverKind::Flanp, 8)).unwrap();
+        assert!(t.finished, "flanp did not finish");
+        // participants double per stage: 2, 4, 8
+        let ns: Vec<usize> = t.stage_transitions.iter().map(|&(_, n)| n).collect();
+        assert_eq!(ns, vec![2, 4, 8]);
+        // participants monotone nondecreasing over rounds
+        assert!(t
+            .rounds
+            .windows(2)
+            .all(|w| w[1].participants >= w[0].participants));
+        // final stage satisfied the full-N statistical accuracy
+        let c = cfg(SolverKind::Flanp, 8);
+        assert!(t.last().unwrap().grad_norm_sq <= c.grad_threshold(8));
+    }
+
+    #[test]
+    fn flanp_active_set_is_fastest_prefix() {
+        let (e, mut fleet) = setup(8, 50, 32);
+        let order = fleet.order.clone();
+        let speeds = fleet.speeds.clone();
+        let t = run_flanp(&e, &mut fleet, &cfg(SolverKind::Flanp, 8)).unwrap();
+        // first-stage round cost must be tau * T_(n0), the n0-th fastest
+        let n0_speed = speeds[order[1]]; // 2nd fastest (n0 = 2)
+        let dt = t.rounds[2].time - t.rounds[1].time;
+        assert!((dt - 5.0 * n0_speed).abs() < 1e-9, "{dt} vs {}", 5.0 * n0_speed);
+    }
+
+    #[test]
+    fn flanp_beats_fedgate_wallclock() {
+        // the paper's headline: FLANP reaches the final statistical
+        // accuracy in less simulated time than full-participation FedGATE
+        let (e, mut fleet) = setup(16, 50, 33);
+        let t_flanp = run_flanp(&e, &mut fleet, &cfg(SolverKind::Flanp, 16)).unwrap();
+        let (e2, mut fleet2) = setup(16, 50, 33);
+        let t_gate = crate::coordinator::run_solver(
+            &e2,
+            &mut fleet2,
+            &cfg(SolverKind::FedGate, 16),
+        )
+        .unwrap();
+        assert!(t_flanp.finished && t_gate.finished);
+        assert!(
+            t_flanp.total_time < t_gate.total_time,
+            "flanp {} !< fedgate {}",
+            t_flanp.total_time,
+            t_gate.total_time
+        );
+    }
+
+    #[test]
+    fn heuristic_flanp_also_converges() {
+        let (e, mut fleet) = setup(8, 50, 34);
+        let t =
+            run_flanp(&e, &mut fleet, &cfg(SolverKind::FlanpHeuristic, 8)).unwrap();
+        // heuristic keeps halving until budgets; it must at least have
+        // advanced past the first stage and descended
+        assert!(t.stage_transitions.len() >= 2, "{:?}", t.stage_transitions);
+        assert!(t.last().unwrap().loss_full < t.rounds[0].loss_full);
+    }
+
+    #[test]
+    fn flanp_n0_larger_than_n_clamps() {
+        let (e, mut fleet) = setup(4, 50, 35);
+        let mut c = cfg(SolverKind::Flanp, 4);
+        c.n0 = 4; // == N: single stage
+        let t = run_flanp(&e, &mut fleet, &c).unwrap();
+        assert_eq!(t.stage_transitions.len(), 1);
+        assert!(t.finished);
+    }
+
+    #[test]
+    fn warm_start_helps_later_stages() {
+        // rounds needed in stage k+1 should be modest thanks to the
+        // warm start (Proposition 1): no stage after the first should
+        // need more rounds than the whole budget
+        let (e, mut fleet) = setup(16, 50, 36);
+        let t = run_flanp(&e, &mut fleet, &cfg(SolverKind::Flanp, 16)).unwrap();
+        assert!(t.finished);
+        let mut per_stage = vec![0usize; t.stage_transitions.len()];
+        for r in &t.rounds {
+            per_stage[r.stage] += 1;
+        }
+        // every stage terminated (no stage ate the whole budget)
+        for (s, &cnt) in per_stage.iter().enumerate() {
+            assert!(cnt < 200, "stage {s} used {cnt} rounds");
+        }
+    }
+}
+
+#[cfg(test)]
+mod ablation_tests {
+    use super::super::config::Subroutine;
+    use super::tests_support::*;
+    use super::*;
+
+    #[test]
+    fn warm_start_saves_rounds() {
+        let (e, mut fleet) = setup_ab(16, 50, 41);
+        let mut warm = cfg_ab(16);
+        warm.warm_start = true;
+        let t_warm = run_flanp(&e, &mut fleet, &warm).unwrap();
+        let (e2, mut fleet2) = setup_ab(16, 50, 41);
+        let mut cold = cfg_ab(16);
+        cold.warm_start = false;
+        let t_cold = run_flanp(&e2, &mut fleet2, &cold).unwrap();
+        assert!(t_warm.finished);
+        // cold restarts must cost at least as much total time
+        assert!(
+            t_warm.total_time <= t_cold.total_time,
+            "warm {} !<= cold {}",
+            t_warm.total_time,
+            t_cold.total_time
+        );
+    }
+
+    #[test]
+    fn growth_factor_controls_stage_count() {
+        let (e, mut fleet) = setup_ab(16, 50, 42);
+        let mut c4 = cfg_ab(16);
+        c4.growth = 4.0;
+        let t4 = run_flanp(&e, &mut fleet, &c4).unwrap();
+        let (e2, mut fleet2) = setup_ab(16, 50, 42);
+        let t2 = run_flanp(&e2, &mut fleet2, &cfg_ab(16)).unwrap();
+        assert!(t4.stage_transitions.len() < t2.stage_transitions.len());
+        let ns: Vec<usize> = t4.stage_transitions.iter().map(|&(_, n)| n).collect();
+        assert_eq!(ns, vec![2, 8, 16]);
+    }
+
+    #[test]
+    fn fedavg_subroutine_also_converges() {
+        // Remark 1: the meta-algorithm works over other solvers
+        let (e, mut fleet) = setup_ab(8, 50, 43);
+        let mut c = cfg_ab(8);
+        c.subroutine = Subroutine::Avg;
+        let t = run_flanp(&e, &mut fleet, &c).unwrap();
+        assert!(t.finished, "flanp-fedavg did not converge");
+        assert!(t.stage_transitions.len() >= 3);
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests_support {
+    use super::*;
+    use crate::data::{shard, synth};
+    use crate::engine::NativeEngine;
+    use crate::fed::SpeedModel;
+    use crate::util::Rng;
+
+    pub fn setup_ab(n_clients: usize, s: usize, seed: u64) -> (NativeEngine, ClientFleet) {
+        let mut rng = Rng::new(seed);
+        let (ds, _) = synth::linreg(&mut rng, n_clients * s, 5, 0.05);
+        let shards = shard::partition_iid(&mut rng, &ds, n_clients);
+        let fleet =
+            ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+        (NativeEngine::linreg(5, 10, 5), fleet)
+    }
+
+    pub fn cfg_ab(n: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::new(SolverKind::Flanp, "linreg_d5", n, 50);
+        cfg.tau = 5;
+        cfg.eta = 0.05;
+        cfg.n0 = 2;
+        cfg.max_rounds = 600;
+        cfg.mu = 0.5;
+        cfg.c_stat = 0.05;
+        cfg
+    }
+}

@@ -1,0 +1,321 @@
+//! The FedGATE round engine (Algorithm 2's inner loop).
+//!
+//! One communication round over an arbitrary active client set:
+//!   1. every active client i starts from the global model w and performs
+//!      tau corrected local steps  w_i <- w_i - eta * (grad_i - delta_i);
+//!   2. uploads Delta_i = (w - w_i^tau) / eta;
+//!   3. the server averages Delta = mean_i Delta_i, updates the tracking
+//!      variables delta_i += (Delta_i - Delta) / tau, and takes the
+//!      two-stepsize step  w <- w - eta * gamma * Delta.
+//!
+//! The same primitives serve FLANP stages, benchmark FedGATE and the
+//! partial-participation variants; FedAvg/FedNova/FedProx reuse the
+//! local-round helper with their own aggregation (solvers.rs).
+
+use crate::engine::{full_loss_grad, Engine};
+use crate::fed::ClientFleet;
+use crate::util::linalg;
+use anyhow::Result;
+
+/// Mutable algorithm state carried across rounds and stages.
+pub struct GateState {
+    /// global model (flat f32[P])
+    pub w: Vec<f32>,
+    /// gradient-tracking variable per client id
+    pub deltas: Vec<Vec<f32>>,
+}
+
+impl GateState {
+    pub fn new(w0: Vec<f32>, num_clients: usize) -> Self {
+        let p = w0.len();
+        GateState { w: w0, deltas: vec![vec![0.0; p]; num_clients] }
+    }
+
+    /// Zero all tracking variables (done at every FLANP stage start).
+    pub fn reset_tracking(&mut self) {
+        for d in &mut self.deltas {
+            d.fill(0.0);
+        }
+    }
+}
+
+/// Reusable batch buffers so the round loop does not allocate.
+pub struct RoundBuffers {
+    pub xs: Vec<f32>,
+    pub ys: Vec<f32>,
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+impl RoundBuffers {
+    pub fn new(engine: &dyn Engine, tau: usize) -> Self {
+        let m = engine.meta();
+        RoundBuffers {
+            xs: vec![0.0; tau * m.batch * m.d],
+            ys: vec![0.0; tau * m.batch * m.y_width()],
+            x: vec![0.0; m.batch * m.d],
+            y: vec![0.0; m.batch * m.y_width()],
+        }
+    }
+}
+
+/// tau corrected local steps for one client, starting from `w`.
+/// Uses the fused round artifact when tau matches the artifact's tau,
+/// otherwise falls back to per-step execution.
+pub fn local_round(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    client: usize,
+    w: &[f32],
+    delta: &[f32],
+    tau: usize,
+    eta: f32,
+    bufs: &mut RoundBuffers,
+) -> Result<Vec<f32>> {
+    let m = engine.meta();
+    if tau == m.tau {
+        fleet.fill_round_batches(client, tau, m.batch, &mut bufs.xs, &mut bufs.ys);
+        return engine.gate_round(w, delta, &bufs.xs, &bufs.ys, eta);
+    }
+    let mut wi = w.to_vec();
+    for _ in 0..tau {
+        fleet.fill_minibatch(client, m.batch, &mut bufs.x, &mut bufs.y);
+        wi = engine.gate_step(&wi, delta, &bufs.x, &bufs.y, eta)?;
+    }
+    Ok(wi)
+}
+
+/// Local rounds for every active client, fanned out across cores when
+/// the engine is thread-safe ([`Engine::as_sync`]); identical results to
+/// the serial path (same per-client RNG streams, same reduction order).
+fn local_rounds_all(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    active: &[usize],
+    w: &[f32],
+    deltas: &[Vec<f32>],
+    tau: usize,
+    eta: f32,
+    bufs: &mut RoundBuffers,
+) -> Result<Vec<Vec<f32>>> {
+    let m = engine.meta();
+    // the fused-batch paths need either a tau-flexible engine or a tau
+    // matching the compiled round artifact
+    if active.len() < 2 || (tau != m.tau && !engine.round_tau_flexible()) {
+        return active
+            .iter()
+            .map(|&i| local_round(engine, fleet, i, w, &deltas[i], tau, eta, bufs))
+            .collect();
+    }
+    // phase 1 (serial): sample every client's tau batches
+    let xstride = tau * m.batch * m.d;
+    let ystride = tau * m.batch * m.y_width();
+    let mut all_xs = vec![0.0f32; active.len() * xstride];
+    let mut all_ys = vec![0.0f32; active.len() * ystride];
+    for (k, &i) in active.iter().enumerate() {
+        fleet.fill_round_batches(
+            i,
+            tau,
+            m.batch,
+            &mut all_xs[k * xstride..(k + 1) * xstride],
+            &mut all_ys[k * ystride..(k + 1) * ystride],
+        );
+    }
+    // phase 2: the clients' local compute — parallel across cores when
+    // the engine is Sync, else a single batch call that shares the
+    // per-round literals (HLO path, §Perf)
+    match engine.as_sync().filter(|e| e.round_tau_flexible()) {
+        Some(es) => crate::util::par::par_map(active.len(), |k| {
+            let i = active[k];
+            es.gate_round(
+                w,
+                &deltas[i],
+                &all_xs[k * xstride..(k + 1) * xstride],
+                &all_ys[k * ystride..(k + 1) * ystride],
+                eta,
+            )
+        })
+        .into_iter()
+        .collect(),
+        None => {
+            let drefs: Vec<&[f32]> =
+                active.iter().map(|&i| deltas[i].as_slice()).collect();
+            engine.gate_rounds_batch(w, &drefs, &all_xs, &all_ys, eta)
+        }
+    }
+}
+
+/// One full FedGATE communication round over `active` clients.
+/// Mutates `state` (global model + tracking variables).
+pub fn fedgate_round(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    state: &mut GateState,
+    active: &[usize],
+    tau: usize,
+    eta: f32,
+    gamma: f32,
+    bufs: &mut RoundBuffers,
+) -> Result<()> {
+    let p = state.w.len();
+    let n = active.len();
+    assert!(n > 0, "empty active set");
+
+    // local work + Delta_i accumulation
+    let wis = local_rounds_all(
+        engine, fleet, active, &state.w, &state.deltas, tau, eta, bufs,
+    )?;
+    let mut delta_sum = vec![0.0f64; p];
+    let mut delta_is: Vec<Vec<f32>> = Vec::with_capacity(n);
+    let inv = 1.0 / eta;
+    for wi in &wis {
+        // Delta_i = (w - w_i^tau) / eta
+        let di: Vec<f32> = state
+            .w
+            .iter()
+            .zip(wi)
+            .map(|(a, b)| (a - b) * inv)
+            .collect();
+        linalg::accumulate(&mut delta_sum, &di);
+        delta_is.push(di);
+    }
+    let delta_avg = linalg::mean_of(&delta_sum, n);
+
+    // tracking update: delta_i += (Delta_i - Delta) / tau
+    let inv_tau = 1.0 / tau as f32;
+    for (&i, di) in active.iter().zip(&delta_is) {
+        let tr = &mut state.deltas[i];
+        for k in 0..p {
+            tr[k] += (di[k] - delta_avg[k]) * inv_tau;
+        }
+    }
+
+    // server update: w <- w - eta * gamma * Delta
+    linalg::axpy(-(eta * gamma), &delta_avg, &mut state.w);
+    Ok(())
+}
+
+/// Exact objective over the active set: mean of full local (loss, grad);
+/// returns (loss, ||grad||^2) — the stopping-rule inputs (the "clients
+/// upload grad L_i(w_n)" step of Algorithm 2).
+pub fn active_loss_gradsq(
+    engine: &dyn Engine,
+    fleet: &ClientFleet,
+    active: &[usize],
+    w: &[f32],
+) -> Result<(f64, f64)> {
+    let p = w.len();
+    // per-client exact gradients, fanned out when the engine is Sync
+    let locals: Vec<(f64, Vec<f32>)> = match engine.as_sync() {
+        Some(es) if active.len() >= 2 => {
+            crate::util::par::par_map(active.len(), |k| {
+                full_loss_grad(es, fleet, active[k], w)
+            })
+            .into_iter()
+            .collect::<Result<_>>()?
+        }
+        _ => active
+            .iter()
+            .map(|&i| full_loss_grad(engine, fleet, i, w))
+            .collect::<Result<_>>()?,
+    };
+    let mut grad_acc = vec![0.0f64; p];
+    let mut loss_acc = 0.0f64;
+    for (li, gi) in &locals {
+        loss_acc += li;
+        linalg::accumulate(&mut grad_acc, gi);
+    }
+    let n = active.len() as f64;
+    let gsq: f64 = grad_acc.iter().map(|g| (g / n) * (g / n)).sum();
+    Ok((loss_acc / n, gsq))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shard, synth};
+    use crate::engine::NativeEngine;
+    use crate::fed::SpeedModel;
+    use crate::util::Rng;
+
+    fn setup() -> (NativeEngine, ClientFleet) {
+        let mut rng = Rng::new(11);
+        let (ds, _) = synth::linreg(&mut rng, 400, 5, 0.05);
+        let shards = shard::partition_iid(&mut rng, &ds, 8);
+        let fleet =
+            ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+        (NativeEngine::linreg(5, 10, 3), fleet)
+    }
+
+    #[test]
+    fn fedgate_rounds_descend_to_low_gradient() {
+        let (e, mut fleet) = setup();
+        let active: Vec<usize> = (0..8).collect();
+        let mut state = GateState::new(vec![0.0; 6], 8);
+        let mut bufs = RoundBuffers::new(&e, 3);
+        let (_, g0) = active_loss_gradsq(&e, &fleet, &active, &state.w).unwrap();
+        for _ in 0..60 {
+            fedgate_round(&e, &mut fleet, &mut state, &active, 3, 0.05, 1.0, &mut bufs)
+                .unwrap();
+        }
+        let (_, g1) = active_loss_gradsq(&e, &fleet, &active, &state.w).unwrap();
+        assert!(g1 < g0 * 1e-2, "grad^2 {g0} -> {g1}");
+    }
+
+    #[test]
+    fn tracking_variables_sum_stays_near_zero() {
+        // sum_i delta_i starts at 0 and the update adds (Delta_i - mean)
+        // which sums to 0 over the active set => invariant preserved
+        let (e, mut fleet) = setup();
+        let active: Vec<usize> = (0..8).collect();
+        let mut state = GateState::new(vec![0.1; 6], 8);
+        let mut bufs = RoundBuffers::new(&e, 3);
+        for _ in 0..5 {
+            fedgate_round(&e, &mut fleet, &mut state, &active, 3, 0.05, 1.0, &mut bufs)
+                .unwrap();
+        }
+        for k in 0..6 {
+            let s: f64 = state.deltas.iter().map(|d| d[k] as f64).sum();
+            assert!(s.abs() < 1e-4, "sum delta[{k}] = {s}");
+        }
+    }
+
+    #[test]
+    fn local_round_fallback_matches_fused_tau() {
+        // engine tau = 3; calling with tau = 3 uses the fused path while
+        // tau = 2 uses the fallback — both must advance the model
+        let (e, mut fleet) = setup();
+        let mut bufs = RoundBuffers::new(&e, 3);
+        let w = vec![0.0f32; 6];
+        let delta = vec![0.0f32; 6];
+        let fused = local_round(&e, &mut fleet, 0, &w, &delta, 3, 0.05, &mut bufs).unwrap();
+        let stepped = local_round(&e, &mut fleet, 0, &w, &delta, 2, 0.05, &mut bufs).unwrap();
+        assert_ne!(fused, w);
+        assert_ne!(stepped, w);
+    }
+
+    #[test]
+    fn subset_round_only_touches_subset_tracking() {
+        let (e, mut fleet) = setup();
+        let mut state = GateState::new(vec![0.2; 6], 8);
+        let mut bufs = RoundBuffers::new(&e, 3);
+        fedgate_round(&e, &mut fleet, &mut state, &[1, 3], 3, 0.05, 1.0, &mut bufs)
+            .unwrap();
+        for (i, d) in state.deltas.iter().enumerate() {
+            let touched = i == 1 || i == 3;
+            let nonzero = d.iter().any(|&v| v != 0.0);
+            assert_eq!(nonzero, touched, "client {i}");
+        }
+    }
+
+    #[test]
+    fn reset_tracking_zeroes() {
+        let (e, mut fleet) = setup();
+        let mut state = GateState::new(vec![0.2; 6], 8);
+        let mut bufs = RoundBuffers::new(&e, 3);
+        fedgate_round(&e, &mut fleet, &mut state, &[0, 1], 3, 0.05, 1.0, &mut bufs)
+            .unwrap();
+        state.reset_tracking();
+        assert!(state.deltas.iter().all(|d| d.iter().all(|&v| v == 0.0)));
+    }
+}

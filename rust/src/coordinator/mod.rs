@@ -1,0 +1,27 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! * [`flanp`] — Algorithm 1/2: the adaptive-node-participation
+//!   meta-algorithm (stage machine, doubling, warm starts, statistical-
+//!   accuracy stopping) instantiated with the FedGATE subroutine.
+//! * [`gate`] — the FedGATE round engine (gradient tracking, two-stepsize
+//!   server update) shared by FLANP stages and the benchmarks.
+//! * [`solvers`] — the benchmark algorithms: FedGATE, FedAvg, FedNova,
+//!   FedProx, and partial-participation FedGATE (random-k / fastest-k).
+//! * [`stopping`] — statistical-accuracy criteria (`||grad||^2 <=
+//!   2 mu V_ns` with `V_ns = c/(ns)`) and the Figure-9 heuristic
+//!   threshold-halving rule.
+//! * [`config`] / [`eval`] — experiment configuration and the shared
+//!   full-objective evaluator.
+
+pub mod config;
+pub mod eval;
+pub mod flanp;
+pub mod gate;
+pub mod solvers;
+pub mod stopping;
+pub mod theory;
+
+pub use config::{ExperimentConfig, SolverKind, StepsizeSchedule};
+pub use eval::EvalData;
+pub use flanp::run_flanp;
+pub use solvers::run_solver;

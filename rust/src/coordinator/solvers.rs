@@ -1,0 +1,507 @@
+//! Benchmark solvers (Section 5): FedGATE, FedAvg, FedNova, FedProx and
+//! the partial-participation FedGATE variants — plus the shared run loop
+//! used by FLANP (`flanp.rs`).
+
+use super::config::{ExperimentConfig, SolverKind};
+use super::eval::EvalData;
+use super::gate::{
+    active_loss_gradsq, fedgate_round, local_round, GateState, RoundBuffers,
+};
+use crate::engine::{Engine, ModelKind};
+use crate::fed::{ClientFleet, RoundRecord, Trace, VirtualClock};
+use crate::util::{linalg, Rng};
+use anyhow::Result;
+
+/// He-initialized flat parameter vector (weights ~ N(0, 2/fan_in),
+/// biases 0) — mirrors `model.init_params` in Layer 2. Deterministic in
+/// the config seed. Zero-init would dead-lock MLP hidden layers.
+pub fn init_params(engine: &dyn Engine, seed: u64) -> Vec<f32> {
+    let meta = engine.meta();
+    let mut rng = Rng::with_stream(seed, 0x1217);
+    let mut out = Vec::with_capacity(meta.param_count);
+    for (fin, fout) in meta.layer_dims() {
+        let scale = (2.0 / fin as f64).sqrt() as f32;
+        for _ in 0..fin * fout {
+            out.push(rng.normal_f32() * scale);
+        }
+        out.extend(std::iter::repeat(0.0).take(fout));
+    }
+    // linear models start at exactly zero (matches the paper's convex
+    // experiments and makes runs comparable across solvers)
+    if meta.kind != ModelKind::Mlp {
+        out.fill(0.0);
+    }
+    out
+}
+
+/// Shared run-loop context: clock + trace + budget/termination logic.
+pub struct RunContext<'a> {
+    pub engine: &'a dyn Engine,
+    pub cfg: &'a ExperimentConfig,
+    pub eval: &'a EvalData,
+    pub clock: VirtualClock,
+    pub trace: Trace,
+}
+
+impl<'a> RunContext<'a> {
+    pub fn new(
+        engine: &'a dyn Engine,
+        cfg: &'a ExperimentConfig,
+        eval: &'a EvalData,
+    ) -> Self {
+        RunContext {
+            engine,
+            cfg,
+            eval,
+            clock: VirtualClock::with_comm_overhead(cfg.comm_overhead),
+            trace: Trace::new(&cfg.solver.name()),
+        }
+    }
+
+    /// Completed communication rounds so far. The trace holds one extra
+    /// row for the initial (round-0, pre-training) evaluation.
+    pub fn completed_rounds(&self) -> usize {
+        self.trace.rounds.len().saturating_sub(1)
+    }
+
+    /// Evaluate + append one trace row. `loss_active`/`grad_sq` are the
+    /// active-set objective stats already computed by the solver (NaN if
+    /// unavailable this round).
+    pub fn record(
+        &mut self,
+        w: &[f32],
+        participants: usize,
+        stage: usize,
+        loss_active: f64,
+        grad_sq: f64,
+    ) -> Result<()> {
+        let round = self.trace.rounds.len();
+        let evaluate = round % self.cfg.eval_every.max(1) == 0;
+        let (loss_full, accuracy) = if evaluate {
+            (
+                self.eval.full_loss(self.engine, w)?,
+                self.eval.full_accuracy(self.engine, w)?,
+            )
+        } else {
+            let prev = self.trace.last();
+            (
+                prev.map(|r| r.loss_full).unwrap_or(f64::NAN),
+                prev.map(|r| r.accuracy).unwrap_or(f64::NAN),
+            )
+        };
+        self.trace.push(RoundRecord {
+            round,
+            time: self.clock.now(),
+            participants,
+            loss_active,
+            loss_full,
+            grad_norm_sq: grad_sq,
+            dist_to_opt: self.eval.dist_to_opt(w),
+            accuracy,
+            stage,
+        });
+        Ok(())
+    }
+
+    /// Number of trace rows so far (used as the next round's index).
+    pub fn rounds_done(&self) -> usize {
+        self.trace.rounds.len()
+    }
+
+    /// True when any run budget or target has been hit.
+    pub fn should_stop(&self) -> bool {
+        if self.completed_rounds() >= self.cfg.max_rounds {
+            return true;
+        }
+        if self.cfg.max_time > 0.0 && self.clock.now() >= self.cfg.max_time {
+            return true;
+        }
+        if let Some(last) = self.trace.last() {
+            if self.cfg.target_loss > 0.0 && last.loss_full <= self.cfg.target_loss {
+                return true;
+            }
+            if self.cfg.target_dist > 0.0
+                && last.dist_to_opt.is_finite()
+                && last.dist_to_opt <= self.cfg.target_dist
+            {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Entry point: dispatch a config to its solver. FLANP variants live in
+/// `flanp.rs` but are reachable from here too.
+pub fn run_solver(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    cfg: &ExperimentConfig,
+) -> Result<Trace> {
+    cfg.validate(engine.meta().batch).map_err(|e| anyhow::anyhow!(e))?;
+    match cfg.solver {
+        SolverKind::Flanp | SolverKind::FlanpHeuristic => {
+            super::flanp::run_flanp(engine, fleet, cfg)
+        }
+        SolverKind::FedGate => run_fedgate_full(engine, fleet, cfg),
+        SolverKind::FedAvg => run_model_average(engine, fleet, cfg, Local::Sgd),
+        SolverKind::FedProx => run_model_average(engine, fleet, cfg, Local::Prox),
+        SolverKind::FedNova => run_fednova(engine, fleet, cfg),
+        SolverKind::FedGatePartialRandom { k } => {
+            run_fedgate_partial(engine, fleet, cfg, k, false)
+        }
+        SolverKind::FedGatePartialFastest { k } => {
+            run_fedgate_partial(engine, fleet, cfg, k, true)
+        }
+    }
+}
+
+/// Non-adaptive FedGATE with all N clients (Proposition 3's benchmark).
+fn run_fedgate_full(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    cfg: &ExperimentConfig,
+) -> Result<Trace> {
+    let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
+    let mut ctx = RunContext::new(engine, cfg, &eval);
+    let n = fleet.num_clients();
+    let active: Vec<usize> = (0..n).collect();
+    let speeds = fleet.speeds_of(&active);
+    let mut state = GateState::new(init_params(engine, cfg.seed), n);
+    let mut bufs = RoundBuffers::new(engine, cfg.tau);
+    let threshold = cfg.grad_threshold(n);
+
+    let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
+    ctx.record(&state.w, n, 0, l0, g0)?;
+    loop {
+        fedgate_round(engine, fleet, &mut state, &active, cfg.tau, cfg.eta, cfg.gamma, &mut bufs)?;
+        ctx.clock.advance_round(&speeds, cfg.tau);
+        let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
+        ctx.record(&state.w, n, 0, loss, gsq)?;
+        if gsq <= threshold {
+            ctx.trace.finished = true;
+            break;
+        }
+        if ctx.should_stop() {
+            break;
+        }
+    }
+    Ok(ctx.trace)
+}
+
+enum Local {
+    Sgd,
+    Prox,
+}
+
+/// FedAvg / FedProx: tau local steps then model averaging.
+fn run_model_average(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    cfg: &ExperimentConfig,
+    local: Local,
+) -> Result<Trace> {
+    let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
+    let mut ctx = RunContext::new(engine, cfg, &eval);
+    let n = fleet.num_clients();
+    let active: Vec<usize> = (0..n).collect();
+    let speeds = fleet.speeds_of(&active);
+    let p = engine.meta().param_count;
+    let mut w = init_params(engine, cfg.seed);
+    let zero_delta = vec![0.0f32; p];
+    let mut bufs = RoundBuffers::new(engine, cfg.tau);
+    let threshold = cfg.grad_threshold(n);
+    let meta = engine.meta();
+
+    let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
+    ctx.record(&w, n, 0, l0, g0)?;
+    loop {
+        let mut acc = vec![0.0f64; p];
+        for &i in &active {
+            let wi = match local {
+                Local::Sgd => {
+                    local_round(engine, fleet, i, &w, &zero_delta, cfg.tau, cfg.eta, &mut bufs)?
+                }
+                Local::Prox => {
+                    if cfg.tau == meta.tau {
+                        fleet.fill_round_batches(
+                            i, cfg.tau, meta.batch, &mut bufs.xs, &mut bufs.ys,
+                        );
+                        engine.prox_round(&w, &w, &bufs.xs, &bufs.ys, cfg.eta, cfg.prox_mu)?
+                    } else {
+                        // per-step fallback: prox gradient = grad + mu*(w_i - w)
+                        let mut wi = w.clone();
+                        for _ in 0..cfg.tau {
+                            fleet.fill_minibatch(i, meta.batch, &mut bufs.x, &mut bufs.y);
+                            let (_, mut g) = engine.loss_grad(&wi, &bufs.x, &bufs.y)?;
+                            for k in 0..p {
+                                g[k] += cfg.prox_mu * (wi[k] - w[k]);
+                            }
+                            linalg::axpy(-cfg.eta, &g, &mut wi);
+                        }
+                        wi
+                    }
+                }
+            };
+            linalg::accumulate(&mut acc, &wi);
+        }
+        w = linalg::mean_of(&acc, n);
+        ctx.clock.advance_round(&speeds, cfg.tau);
+        let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &w)?;
+        ctx.record(&w, n, 0, loss, gsq)?;
+        if gsq <= threshold {
+            ctx.trace.finished = true;
+            break;
+        }
+        if ctx.should_stop() {
+            break;
+        }
+    }
+    Ok(ctx.trace)
+}
+
+/// FedNova (Wang et al., 2020): heterogeneous local-step counts tau_i
+/// sized to a common time window, normalized aggregation.
+fn run_fednova(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    cfg: &ExperimentConfig,
+) -> Result<Trace> {
+    let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
+    let mut ctx = RunContext::new(engine, cfg, &eval);
+    let n = fleet.num_clients();
+    let active: Vec<usize> = (0..n).collect();
+    let speeds = fleet.speeds_of(&active);
+    let p = engine.meta().param_count;
+
+    // Wang et al.'s deadline setup: the round window fits tau local
+    // steps of the SLOWEST client (every client trains for the same
+    // wall-clock window; the server normalizes the heterogeneous tau_i).
+    // tau_i is capped at 2*tau: with i.i.d. synthetic shards the local
+    // drift that penalizes huge tau_i in real federations is mild, so an
+    // uncapped window would overstate FedNova (DESIGN.md §6).
+    let max_t = speeds.iter().cloned().fold(0.0f64, f64::max);
+    let window = cfg.tau as f64 * max_t;
+    let taus: Vec<usize> = speeds
+        .iter()
+        .map(|t| ((window / t).floor() as usize).clamp(1, 2 * cfg.tau))
+        .collect();
+    let tau_eff = taus.iter().sum::<usize>() as f64 / n as f64;
+
+    let mut w = init_params(engine, cfg.seed);
+    let zero_delta = vec![0.0f32; p];
+    let mut bufs = RoundBuffers::new(engine, cfg.tau);
+    let threshold = cfg.grad_threshold(n);
+
+    let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
+    ctx.record(&w, n, 0, l0, g0)?;
+    loop {
+        // normalized update: d_i = (w - w_i) / (eta * tau_i)
+        let mut acc = vec![0.0f64; p];
+        for (idx, &i) in active.iter().enumerate() {
+            let wi = local_round(
+                engine, fleet, i, &w, &zero_delta, taus[idx], cfg.eta, &mut bufs,
+            )?;
+            let inv = 1.0 / (cfg.eta * taus[idx] as f32);
+            let di: Vec<f32> =
+                w.iter().zip(&wi).map(|(a, b)| (a - b) * inv).collect();
+            linalg::accumulate(&mut acc, &di);
+        }
+        let d_avg = linalg::mean_of(&acc, n);
+        // w <- w - eta * tau_eff * mean_i d_i
+        linalg::axpy(-(cfg.eta * tau_eff as f32), &d_avg, &mut w);
+        ctx.clock.advance_round_hetero(&speeds, &taus);
+        let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &w)?;
+        ctx.record(&w, n, 0, loss, gsq)?;
+        if gsq <= threshold {
+            ctx.trace.finished = true;
+            break;
+        }
+        if ctx.should_stop() {
+            break;
+        }
+    }
+    Ok(ctx.trace)
+}
+
+/// Partial-participation FedGATE (Figure 6): k of N clients per round,
+/// chosen uniformly at random or as the k fastest.
+fn run_fedgate_partial(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    cfg: &ExperimentConfig,
+    k: usize,
+    fastest: bool,
+) -> Result<Trace> {
+    let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
+    let mut ctx = RunContext::new(engine, cfg, &eval);
+    let n = fleet.num_clients();
+    let mut state = GateState::new(init_params(engine, cfg.seed), n);
+    let mut bufs = RoundBuffers::new(engine, cfg.tau);
+    let mut rng = Rng::with_stream(cfg.seed, 0x9a47);
+    // stopping measured on the FULL objective's gradient (the comparison
+    // target is the same final accuracy as full participation)
+    let all: Vec<usize> = (0..n).collect();
+    let threshold = cfg.grad_threshold(n);
+
+    let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
+    ctx.record(&state.w, k, 0, l0, g0)?;
+    loop {
+        let active: Vec<usize> = if fastest {
+            fleet.fastest(k).to_vec()
+        } else {
+            rng.sample_indices(n, k)
+        };
+        fedgate_round(engine, fleet, &mut state, &active, cfg.tau, cfg.eta, cfg.gamma, &mut bufs)?;
+        let speeds = fleet.speeds_of(&active);
+        ctx.clock.advance_round(&speeds, cfg.tau);
+        let (loss, gsq) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
+        ctx.record(&state.w, k, 0, loss, gsq)?;
+        if gsq <= threshold {
+            ctx.trace.finished = true;
+            break;
+        }
+        if ctx.should_stop() {
+            break;
+        }
+    }
+    Ok(ctx.trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shard, synth};
+    use crate::engine::NativeEngine;
+    use crate::fed::SpeedModel;
+
+    fn setup(n_clients: usize, s: usize) -> (NativeEngine, ClientFleet) {
+        let mut rng = Rng::new(21);
+        let (ds, _) = synth::linreg(&mut rng, n_clients * s, 5, 0.05);
+        let shards = shard::partition_iid(&mut rng, &ds, n_clients);
+        let fleet =
+            ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+        (NativeEngine::linreg(5, 10, 5), fleet)
+    }
+
+    fn base_cfg(solver: SolverKind) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::new(solver, "linreg_d5", 8, 50);
+        cfg.tau = 5;
+        cfg.eta = 0.05;
+        cfg.max_rounds = 150;
+        cfg.mu = 0.5;
+        cfg.c_stat = 0.05;
+        cfg
+    }
+
+    #[test]
+    fn init_params_he_for_mlp_zero_for_linear() {
+        let lin = NativeEngine::linreg(5, 10, 5);
+        assert!(init_params(&lin, 1).iter().all(|&v| v == 0.0));
+        let mlp = NativeEngine::mlp(6, 3, vec![4], 0.0, 2, 1);
+        let p = init_params(&mlp, 1);
+        assert!(p.iter().any(|&v| v != 0.0));
+        // biases (after each weight block) are zero
+        let w1 = 6 * 4;
+        assert!(p[w1..w1 + 4].iter().all(|&v| v == 0.0));
+        // deterministic
+        assert_eq!(p, init_params(&mlp, 1));
+        assert_ne!(p, init_params(&mlp, 2));
+    }
+
+    #[test]
+    fn fedgate_full_converges_and_finishes() {
+        let (e, mut fleet) = setup(8, 50);
+        let cfg = base_cfg(SolverKind::FedGate);
+        let t = run_solver(&e, &mut fleet, &cfg).unwrap();
+        assert!(t.finished, "did not reach statistical accuracy");
+        let first = t.rounds.first().unwrap();
+        let last = t.last().unwrap();
+        assert!(last.loss_full < first.loss_full);
+        assert!(last.grad_norm_sq <= cfg.grad_threshold(8));
+        // times strictly increase
+        assert!(t.rounds.windows(2).all(|w| w[1].time > w[0].time));
+    }
+
+    #[test]
+    fn fedavg_converges() {
+        let (e, mut fleet) = setup(8, 50);
+        let cfg = base_cfg(SolverKind::FedAvg);
+        let t = run_solver(&e, &mut fleet, &cfg).unwrap();
+        assert!(t.last().unwrap().loss_full < t.rounds[0].loss_full);
+        assert!(t.finished);
+    }
+
+    #[test]
+    fn fedprox_converges() {
+        let (e, mut fleet) = setup(8, 50);
+        let mut cfg = base_cfg(SolverKind::FedProx);
+        cfg.prox_mu = 0.05;
+        let t = run_solver(&e, &mut fleet, &cfg).unwrap();
+        assert!(t.last().unwrap().loss_full < t.rounds[0].loss_full);
+    }
+
+    #[test]
+    fn fednova_converges_with_hetero_taus() {
+        let (e, mut fleet) = setup(8, 50);
+        let cfg = base_cfg(SolverKind::FedNova);
+        let t = run_solver(&e, &mut fleet, &cfg).unwrap();
+        assert!(t.finished);
+        assert!(t.last().unwrap().loss_full < t.rounds[0].loss_full);
+    }
+
+    #[test]
+    fn partial_random_converges_slower_than_full() {
+        let (e, mut fleet) = setup(8, 50);
+        let cfg_full = base_cfg(SolverKind::FedGate);
+        let t_full = run_solver(&e, &mut fleet, &cfg_full).unwrap();
+        let (e2, mut fleet2) = setup(8, 50);
+        let cfg_part = base_cfg(SolverKind::FedGatePartialRandom { k: 2 });
+        let t_part = run_solver(&e2, &mut fleet2, &cfg_part).unwrap();
+        // partial still descends
+        assert!(t_part.last().unwrap().loss_full < t_part.rounds[0].loss_full);
+        // but needs at least as many rounds as full participation
+        assert!(t_part.rounds.len() >= t_full.rounds.len());
+    }
+
+    #[test]
+    fn partial_fastest_rounds_are_cheap() {
+        let (e, mut fleet) = setup(8, 50);
+        let mut cfg = base_cfg(SolverKind::FedGatePartialFastest { k: 2 });
+        cfg.max_rounds = 10;
+        cfg.c_stat = 1e-9; // never reach accuracy; observe timing only
+        let t = run_solver(&e, &mut fleet, &cfg).unwrap();
+        // per-round cost must equal tau * T_(2) (the 2nd fastest client)
+        let sorted_speed = fleet.speeds_of(fleet.fastest(2));
+        let per_round = cfg.tau as f64
+            * sorted_speed.iter().cloned().fold(0.0f64, f64::max);
+        let dt = t.rounds[2].time - t.rounds[1].time;
+        assert!((dt - per_round).abs() < 1e-9, "{dt} vs {per_round}");
+    }
+
+    #[test]
+    fn max_rounds_budget_respected() {
+        let (e, mut fleet) = setup(8, 50);
+        let mut cfg = base_cfg(SolverKind::FedGate);
+        cfg.max_rounds = 7;
+        cfg.c_stat = 1e-12;
+        let t = run_solver(&e, &mut fleet, &cfg).unwrap();
+        assert!(!t.finished);
+        // initial row + 7 rounds
+        assert_eq!(t.rounds.len(), 8);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (e, mut fleet) = setup(6, 50);
+        let cfg = base_cfg(SolverKind::FedGate);
+        let t1 = run_solver(&e, &mut fleet, &cfg).unwrap();
+        let (e2, mut fleet2) = setup(6, 50);
+        let t2 = run_solver(&e2, &mut fleet2, &cfg).unwrap();
+        assert_eq!(t1.rounds.len(), t2.rounds.len());
+        for (a, b) in t1.rounds.iter().zip(&t2.rounds) {
+            assert_eq!(a.loss_full, b.loss_full);
+            assert_eq!(a.time, b.time);
+        }
+    }
+}

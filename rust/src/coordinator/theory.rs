@@ -1,0 +1,124 @@
+//! The paper's analytical runtime expressions (Propositions 2-3,
+//! Theorem 2) as executable predictors — used by `flanp-bench theory`
+//! to compare simulated wall-clock against the theory's shape.
+
+use crate::util::stats::{expected_order_stat_exp, harmonic};
+
+/// Proposition 2: E[T_FLANP] = R * tau * (T_{n0} + T_{2n0} + ... + T_N)
+/// for given per-stage rounds R and local steps tau, over the *sorted*
+/// speeds (fastest first).
+pub fn flanp_runtime(sorted_speeds: &[f64], n0: usize, r: f64, tau: f64) -> f64 {
+    let n = sorted_speeds.len();
+    assert!(n0 >= 1 && n0 <= n);
+    let mut sum = 0.0;
+    let mut k = n0;
+    loop {
+        sum += sorted_speeds[k - 1]; // T_(k): slowest of the active stage
+        if k == n {
+            break;
+        }
+        k = (2 * k).min(n);
+    }
+    r * tau * sum
+}
+
+/// Proposition 3: E[T_FedGATE] = R_G * tau * T_N with
+/// R_G = O(kappa * log(5 * Delta0 * N * s / c)).
+pub fn fedgate_runtime(
+    t_max: f64,
+    n: usize,
+    s: usize,
+    kappa: f64,
+    delta0: f64,
+    c: f64,
+    tau: f64,
+) -> f64 {
+    let r_g = 6.0 * kappa * (5.0 * delta0 * (n * s) as f64 / c).ln();
+    r_g * tau * t_max
+}
+
+/// Theorem 1's per-stage round count R = 12 * kappa * ln 6.
+pub fn stage_rounds(kappa: f64) -> f64 {
+    12.0 * kappa * 6.0f64.ln()
+}
+
+/// Theorem 2 (exponential speeds): the expected-order-statistics ratio
+///   (E[T_(n0)] + E[T_(2n0)] + ... + E[T_(N)]) / E[T_(N)]
+/// which the appendix bounds by 2 + 1/N. Exact via harmonic numbers.
+pub fn exp_order_ratio(n: usize, n0: usize) -> f64 {
+    let mut k = n0;
+    let mut sum = 0.0;
+    loop {
+        sum += expected_order_stat_exp(n, k);
+        if k == n {
+            break;
+        }
+        k = (2 * k).min(n);
+    }
+    sum / harmonic(n)
+}
+
+/// Theorem 2's speedup bound:
+/// E[T_FLANP]/E[T_FedGATE] <= (12 log6 / (5 log(5 Delta0 N s / c))) * (2 + 1/N).
+pub fn speedup_bound(n: usize, s: usize, delta0: f64, c: f64) -> f64 {
+    let log_term = (5.0 * delta0 * (n * s) as f64 / c).ln();
+    (12.0 * 6.0f64.ln() / (5.0 * log_term)) * (2.0 + 1.0 / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flanp_runtime_sums_stage_slowest() {
+        // speeds 1..8 sorted; stages 2,4,8 -> T_2 + T_4 + T_8 = 2+4+8
+        let speeds: Vec<f64> = (1..=8).map(|v| v as f64).collect();
+        let t = flanp_runtime(&speeds, 2, 1.0, 1.0);
+        assert_eq!(t, 14.0);
+        // r, tau scale linearly
+        assert_eq!(flanp_runtime(&speeds, 2, 3.0, 2.0), 84.0);
+    }
+
+    #[test]
+    fn flanp_runtime_handles_non_power_of_two() {
+        let speeds: Vec<f64> = (1..=6).map(|v| v as f64).collect();
+        // stages: 2, 4, min(8,6)=6 -> 2+4+6
+        assert_eq!(flanp_runtime(&speeds, 2, 1.0, 1.0), 12.0);
+    }
+
+    #[test]
+    fn fedgate_runtime_grows_logarithmically_in_ns() {
+        let t1 = fedgate_runtime(1.0, 10, 100, 1.0, 1.0, 1.0, 1.0);
+        let t2 = fedgate_runtime(1.0, 10, 10_000, 1.0, 1.0, 1.0, 1.0);
+        // 100x more samples => + ln(100) rounds, NOT 100x
+        assert!((t2 - t1 - 6.0 * (100.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exp_order_ratio_bounded_by_theorem2() {
+        for n in [4usize, 16, 64, 256, 1024] {
+            let ratio = exp_order_ratio(n, 1);
+            assert!(
+                ratio <= 2.0 + 1.0 / n as f64 + 1e-9,
+                "n={n}: ratio {ratio} exceeds 2 + 1/N"
+            );
+            assert!(ratio > 1.0);
+        }
+    }
+
+    #[test]
+    fn speedup_bound_shrinks_with_ns() {
+        let b_small = speedup_bound(10, 100, 1.0, 1.0);
+        let b_large = speedup_bound(1000, 100, 1.0, 1.0);
+        assert!(b_large < b_small);
+        // the O(1/log(Ns)) shape: doubling log(Ns) halves the bound
+        let b1 = speedup_bound(10, 10, 1.0, 1.0);
+        let b2 = speedup_bound(10_000, 10_000, 1.0, 1.0);
+        assert!(b2 < b1 / 2.0);
+    }
+
+    #[test]
+    fn stage_rounds_matches_theorem1() {
+        assert!((stage_rounds(1.0) - 12.0 * 6.0f64.ln()).abs() < 1e-12);
+    }
+}

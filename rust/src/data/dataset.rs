@@ -1,0 +1,174 @@
+//! In-memory dense dataset: row-major f32 features + labels.
+
+/// Labels: real-valued targets (regression) or class ids (classification).
+#[derive(Clone, Debug)]
+pub enum Labels {
+    Real(Vec<f32>),
+    /// (class id per row, number of classes)
+    Class(Vec<u32>, usize),
+}
+
+impl Labels {
+    pub fn len(&self) -> usize {
+        match self {
+            Labels::Real(v) => v.len(),
+            Labels::Class(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn classes(&self) -> usize {
+        match self {
+            Labels::Real(_) => 1,
+            Labels::Class(_, c) => *c,
+        }
+    }
+
+    /// Width of one encoded label row as fed to the engines
+    /// (f32 target for regression, one-hot f32[C] for classification).
+    pub fn encoded_width(&self) -> usize {
+        match self {
+            Labels::Real(_) => 1,
+            Labels::Class(_, c) => *c,
+        }
+    }
+
+    /// Encode rows `idx` into `out` (len = idx.len() * encoded_width()).
+    pub fn encode_into(&self, idx: &[usize], out: &mut [f32]) {
+        match self {
+            Labels::Real(v) => {
+                assert_eq!(out.len(), idx.len());
+                for (o, &i) in out.iter_mut().zip(idx) {
+                    *o = v[i];
+                }
+            }
+            Labels::Class(v, c) => {
+                assert_eq!(out.len(), idx.len() * c);
+                out.fill(0.0);
+                for (r, &i) in idx.iter().enumerate() {
+                    out[r * c + v[i] as usize] = 1.0;
+                }
+            }
+        }
+    }
+}
+
+/// Dense dataset; `x` is row-major `[n, d]`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Labels,
+    pub d: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Labels, d: usize) -> Self {
+        assert_eq!(x.len() % d, 0, "x length not a multiple of d");
+        assert_eq!(x.len() / d, y.len(), "row count mismatch");
+        Dataset { x, y, d }
+    }
+
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Gather feature rows `idx` into `out` (len = idx.len() * d).
+    pub fn gather_x(&self, idx: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), idx.len() * self.d);
+        for (r, &i) in idx.iter().enumerate() {
+            out[r * self.d..(r + 1) * self.d].copy_from_slice(self.row(i));
+        }
+    }
+
+    /// Standardize features to zero mean / unit variance in place
+    /// (global statistics — the server-side preprocessing step).
+    pub fn standardize(&mut self) {
+        let n = self.n();
+        if n == 0 {
+            return;
+        }
+        for j in 0..self.d {
+            let mut s = 0.0f64;
+            let mut s2 = 0.0f64;
+            for r in 0..n {
+                let v = self.x[r * self.d + j] as f64;
+                s += v;
+                s2 += v * v;
+            }
+            let mean = s / n as f64;
+            let var = (s2 / n as f64 - mean * mean).max(1e-12);
+            let inv = 1.0 / var.sqrt();
+            for r in 0..n {
+                let v = &mut self.x[r * self.d + j];
+                *v = ((*v as f64 - mean) * inv) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_and_row() {
+        let ds = Dataset::new(
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            Labels::Real(vec![10.0, 20.0, 30.0]),
+            2,
+        );
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        let mut out = vec![0.0; 4];
+        ds.gather_x(&[2, 0], &mut out);
+        assert_eq!(out, vec![5.0, 6.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn onehot_encoding() {
+        let y = Labels::Class(vec![2, 0, 1], 3);
+        assert_eq!(y.encoded_width(), 3);
+        let mut out = vec![9.0; 6];
+        y.encode_into(&[0, 2], &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn real_encoding() {
+        let y = Labels::Real(vec![0.5, -1.5]);
+        let mut out = vec![0.0; 2];
+        y.encode_into(&[1, 0], &mut out);
+        assert_eq!(out, vec![-1.5, 0.5]);
+    }
+
+    #[test]
+    fn standardize_moments() {
+        let mut ds = Dataset::new(
+            vec![1.0, 100.0, 2.0, 200.0, 3.0, 300.0, 4.0, 400.0],
+            Labels::Real(vec![0.0; 4]),
+            2,
+        );
+        ds.standardize();
+        for j in 0..2 {
+            let col: Vec<f64> =
+                (0..4).map(|r| ds.x[r * 2 + j] as f64).collect();
+            let m = col.iter().sum::<f64>() / 4.0;
+            let v = col.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / 4.0;
+            assert!(m.abs() < 1e-6);
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row count mismatch")]
+    fn mismatched_rows_panics() {
+        Dataset::new(vec![0.0; 6], Labels::Real(vec![0.0; 2]), 2);
+    }
+}

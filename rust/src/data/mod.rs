@@ -1,0 +1,14 @@
+//! Dataset substrate: synthetic data generators + federated sharding.
+//!
+//! The paper evaluates on MNIST, CIFAR10 and a synthetic regression set.
+//! Raw MNIST/CIFAR are not available in this environment, so we build
+//! statistically equivalent *generators* (DESIGN.md §6): every claim the
+//! paper makes concerns time-to-statistical-accuracy under i.i.d.
+//! across-client data, which any fixed, learnable distribution exercises.
+
+pub mod dataset;
+pub mod shard;
+pub mod synth;
+
+pub use dataset::{Dataset, Labels};
+pub use shard::Shard;

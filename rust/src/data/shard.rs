@@ -1,0 +1,118 @@
+//! Federated sharding: partition a dataset's rows across N clients.
+//!
+//! The paper's setup (Section 2): each of N nodes holds s i.i.d. samples,
+//! drawn once before training; nodes cannot re-sample. An i.i.d. shard is
+//! a random partition of an i.i.d. dataset; we shuffle then slice.
+
+use crate::data::Dataset;
+use crate::util::Rng;
+
+/// One client's view: indices into the shared dataset.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub indices: Vec<usize>,
+}
+
+impl Shard {
+    pub fn s(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// Random equal partition: N shards of s = n/N samples each.
+/// Requires N*s <= n; leftover rows are unused (as in the paper, where
+/// each node stores exactly s samples).
+pub fn partition_iid(rng: &mut Rng, dataset: &Dataset, num_clients: usize) -> Vec<Shard> {
+    let n = dataset.n();
+    assert!(num_clients > 0 && num_clients <= n);
+    let s = n / num_clients;
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    (0..num_clients)
+        .map(|c| Shard { indices: idx[c * s..(c + 1) * s].to_vec() })
+        .collect()
+}
+
+/// Partition with an explicit per-client sample count.
+pub fn partition_fixed_s(
+    rng: &mut Rng,
+    dataset: &Dataset,
+    num_clients: usize,
+    s: usize,
+) -> Vec<Shard> {
+    let n = dataset.n();
+    assert!(
+        num_clients * s <= n,
+        "need {}x{} = {} samples, dataset has {n}",
+        num_clients,
+        s,
+        num_clients * s
+    );
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    (0..num_clients)
+        .map(|c| Shard { indices: idx[c * s..(c + 1) * s].to_vec() })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Labels};
+
+    fn toy(n: usize) -> Dataset {
+        Dataset::new(
+            (0..n * 2).map(|i| i as f32).collect(),
+            Labels::Real(vec![0.0; n]),
+            2,
+        )
+    }
+
+    #[test]
+    fn partition_is_disjoint_and_equal() {
+        let ds = toy(100);
+        let shards = partition_iid(&mut Rng::new(1), &ds, 10);
+        assert_eq!(shards.len(), 10);
+        let mut seen = std::collections::HashSet::new();
+        for sh in &shards {
+            assert_eq!(sh.s(), 10);
+            for &i in &sh.indices {
+                assert!(i < 100);
+                assert!(seen.insert(i), "duplicate index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_drops_remainder() {
+        let ds = toy(103);
+        let shards = partition_iid(&mut Rng::new(2), &ds, 10);
+        let total: usize = shards.iter().map(|s| s.s()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn fixed_s_respects_request() {
+        let ds = toy(100);
+        let shards = partition_fixed_s(&mut Rng::new(3), &ds, 4, 20);
+        assert_eq!(shards.len(), 4);
+        assert!(shards.iter().all(|s| s.s() == 20));
+    }
+
+    #[test]
+    #[should_panic(expected = "samples")]
+    fn fixed_s_overflow_panics() {
+        let ds = toy(50);
+        partition_fixed_s(&mut Rng::new(4), &ds, 10, 10);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = toy(64);
+        let a = partition_iid(&mut Rng::new(9), &ds, 8);
+        let b = partition_iid(&mut Rng::new(9), &ds, 8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.indices, y.indices);
+        }
+    }
+}

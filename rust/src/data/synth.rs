@@ -1,0 +1,193 @@
+//! Synthetic dataset generators (the paper's data substitutes, DESIGN.md §6).
+//!
+//! * [`linreg`] — the paper's own "synthetic dataset" for linear
+//!   regression (Figures 2, 7, 8; Tables 1, 2): Gaussian features, planted
+//!   linear model + observation noise.
+//! * [`mixture`] — a C-class Gaussian-mixture classification set standing
+//!   in for MNIST (d=784, well-separated) and CIFAR10 (lower separation =
+//!   harder, more rounds), preserving the i.i.d.-across-clients setup.
+
+use crate::data::{Dataset, Labels};
+use crate::util::Rng;
+
+/// Planted linear model: y = <w*, x> + b* + noise, x ~ N(0, I_d).
+/// Returns the dataset and the planted flat parameter vector [w*, b*]
+/// (note: the *ERM* optimum differs slightly; use
+/// `util::linalg::linreg_optimum` for exact suboptimality curves).
+pub fn linreg(rng: &mut Rng, n: usize, d: usize, noise: f64) -> (Dataset, Vec<f32>) {
+    let mut w = vec![0.0f32; d + 1];
+    for v in w.iter_mut() {
+        *v = rng.normal_f32();
+    }
+    let mut x = vec![0.0f32; n * d];
+    rng.fill_normal(&mut x, 1.0);
+    let mut y = vec![0.0f32; n];
+    for r in 0..n {
+        let mut s = w[d] as f64;
+        for j in 0..d {
+            s += w[j] as f64 * x[r * d + j] as f64;
+        }
+        y[r] = (s + noise * rng.normal()) as f32;
+    }
+    (Dataset::new(x, Labels::Real(y), d), w)
+}
+
+/// Parameters for the Gaussian-mixture classification generator.
+#[derive(Clone, Debug)]
+pub struct MixtureSpec {
+    pub n: usize,
+    pub d: usize,
+    pub classes: usize,
+    /// distance scale between class means; smaller = harder (CIFAR-like)
+    pub separation: f64,
+    /// within-class standard deviation
+    pub sigma: f64,
+}
+
+impl MixtureSpec {
+    /// MNIST stand-in: 784-dim, 10 classes, comfortably separable.
+    pub fn mnist_like(n: usize) -> Self {
+        MixtureSpec { n, d: 784, classes: 10, separation: 2.2, sigma: 1.0 }
+    }
+
+    /// CIFAR10 stand-in: harder (lower separation). d reduced from 3072
+    /// to keep artifact/runtime size laptop-scale; hardness is what
+    /// matters for the Figure-4 comparison (see DESIGN.md §6).
+    pub fn cifar_like(n: usize) -> Self {
+        MixtureSpec { n, d: 512, classes: 10, separation: 1.1, sigma: 1.3 }
+    }
+}
+
+/// C-class isotropic Gaussian mixture with random unit-ish mean directions.
+pub fn mixture(rng: &mut Rng, spec: &MixtureSpec) -> Dataset {
+    let MixtureSpec { n, d, classes, separation, sigma } = *spec;
+    // class means: random Gaussian directions with ||mean|| = separation,
+    // so the between-class distance is ~separation*sqrt(2) against
+    // per-coordinate noise sigma — a tunable Bayes error
+    let mut means = vec![0.0f32; classes * d];
+    for c in 0..classes {
+        let row = &mut means[c * d..(c + 1) * d];
+        rng.fill_normal(row, 1.0);
+        let norm = (row.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()).sqrt();
+        let scale = (separation / norm) as f32;
+        for v in row.iter_mut() {
+            *v *= scale;
+        }
+    }
+    let mut x = vec![0.0f32; n * d];
+    let mut y = vec![0u32; n];
+    for r in 0..n {
+        let c = rng.below(classes);
+        y[r] = c as u32;
+        let mean = &means[c * d..(c + 1) * d];
+        let row = &mut x[r * d..(r + 1) * d];
+        for (v, m) in row.iter_mut().zip(mean) {
+            *v = m + sigma as f32 * rng.normal_f32();
+        }
+    }
+    Dataset::new(x, Labels::Class(y, classes), d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::linalg;
+
+    #[test]
+    fn linreg_shapes_and_determinism() {
+        let (ds1, w1) = linreg(&mut Rng::new(5), 100, 8, 0.1);
+        let (ds2, w2) = linreg(&mut Rng::new(5), 100, 8, 0.1);
+        assert_eq!(ds1.n(), 100);
+        assert_eq!(ds1.d, 8);
+        assert_eq!(w1.len(), 9);
+        assert_eq!(ds1.x, ds2.x);
+        assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn linreg_erm_optimum_near_planted() {
+        let mut rng = Rng::new(7);
+        let (ds, w_true) = linreg(&mut rng, 5000, 6, 0.05);
+        let y = match &ds.y {
+            Labels::Real(v) => v.clone(),
+            _ => unreachable!(),
+        };
+        let w_star = linalg::linreg_optimum(&ds.x, &y, ds.n(), ds.d, 0.0);
+        let err = linalg::dist2(&w_star, &w_true);
+        assert!(err < 0.05, "|w* - w_true| = {err}");
+    }
+
+    #[test]
+    fn mixture_shapes_and_label_range() {
+        let spec = MixtureSpec { n: 300, d: 20, classes: 4, separation: 2.0, sigma: 1.0 };
+        let ds = mixture(&mut Rng::new(1), &spec);
+        assert_eq!(ds.n(), 300);
+        assert_eq!(ds.d, 20);
+        match &ds.y {
+            Labels::Class(v, c) => {
+                assert_eq!(*c, 4);
+                assert!(v.iter().all(|&l| l < 4));
+                // all classes present in 300 draws (w.h.p.)
+                for cls in 0..4u32 {
+                    assert!(v.contains(&cls));
+                }
+            }
+            _ => panic!("expected class labels"),
+        }
+    }
+
+    #[test]
+    fn mixture_is_linearly_separable_when_far() {
+        // nearest-class-mean classification should beat chance by a lot
+        let spec = MixtureSpec { n: 400, d: 16, classes: 3, separation: 6.0, sigma: 0.5 };
+        let mut rng = Rng::new(3);
+        let ds = mixture(&mut rng, &spec);
+        let (labels, c) = match &ds.y {
+            Labels::Class(v, c) => (v.clone(), *c),
+            _ => unreachable!(),
+        };
+        // estimate class means from the data itself
+        let mut means = vec![0.0f64; c * ds.d];
+        let mut counts = vec![0usize; c];
+        for r in 0..ds.n() {
+            let cls = labels[r] as usize;
+            counts[cls] += 1;
+            for j in 0..ds.d {
+                means[cls * ds.d + j] += ds.row(r)[j] as f64;
+            }
+        }
+        for cls in 0..c {
+            for j in 0..ds.d {
+                means[cls * ds.d + j] /= counts[cls].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for r in 0..ds.n() {
+            let mut best = (f64::INFINITY, 0usize);
+            for cls in 0..c {
+                let dist: f64 = (0..ds.d)
+                    .map(|j| {
+                        let dv = ds.row(r)[j] as f64 - means[cls * ds.d + j];
+                        dv * dv
+                    })
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, cls);
+                }
+            }
+            if best.1 == labels[r] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.n() as f64;
+        assert!(acc > 0.95, "nearest-mean accuracy {acc}");
+    }
+
+    #[test]
+    fn cifar_like_is_harder_than_mnist_like() {
+        let m = MixtureSpec::mnist_like(10);
+        let c = MixtureSpec::cifar_like(10);
+        assert!(c.separation < m.separation);
+        assert!(c.sigma >= m.sigma);
+    }
+}

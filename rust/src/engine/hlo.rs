@@ -1,0 +1,279 @@
+//! PJRT engine: loads and executes the AOT artifacts from the Rust hot
+//! path (the production compute path — Python is never invoked).
+//!
+//! Pipeline per artifact (see /opt/xla-example/load_hlo):
+//!   HLO text --HloModuleProto::from_text_file--> XlaComputation
+//!   --PjRtClient::compile--> PjRtLoadedExecutable --execute--> Literals
+
+use super::{Engine, Manifest, ModelKind, ModelMeta};
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+pub struct HloEngine {
+    meta: ModelMeta,
+    #[allow(dead_code)]
+    client: PjRtClient,
+    loss_exe: PjRtLoadedExecutable,
+    grad_exe: PjRtLoadedExecutable,
+    step_exe: PjRtLoadedExecutable,
+    round_exe: PjRtLoadedExecutable,
+    proxround_exe: PjRtLoadedExecutable,
+    acc_exe: Option<PjRtLoadedExecutable>,
+}
+
+fn compile(
+    client: &PjRtClient,
+    manifest: &Manifest,
+    model: &str,
+    kind: &str,
+    jnp: bool,
+) -> Result<PjRtLoadedExecutable> {
+    let info = manifest
+        .find(model, kind, jnp)
+        .with_context(|| format!("artifact {model}/{kind} (jnp={jnp}) not in manifest"))?;
+    let proto = xla::HloModuleProto::from_text_file(&info.file)
+        .with_context(|| format!("parsing {:?}", info.file))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", info.name))
+}
+
+impl HloEngine {
+    /// Load + compile all artifacts of `model` on a fresh PJRT CPU client.
+    pub fn load(manifest: &Manifest, model: &str) -> Result<Self> {
+        Self::load_variant(manifest, model, false)
+    }
+
+    /// `jnp = true` selects the pure-jnp (no-pallas) artifact variants —
+    /// the perf-pass ablation (build with `aot.py --jnp-variants`).
+    pub fn load_variant(manifest: &Manifest, model: &str, jnp: bool) -> Result<Self> {
+        let meta = manifest.model(model)?.clone();
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let acc_exe = if meta.kind == ModelKind::LinReg {
+            None
+        } else {
+            Some(compile(&client, manifest, model, "acc", jnp)?)
+        };
+        Ok(HloEngine {
+            loss_exe: compile(&client, manifest, model, "loss", jnp)?,
+            grad_exe: compile(&client, manifest, model, "grad", jnp)?,
+            step_exe: compile(&client, manifest, model, "step", jnp)?,
+            round_exe: compile(&client, manifest, model, "round", jnp)?,
+            proxround_exe: compile(&client, manifest, model, "proxround", jnp)?,
+            acc_exe,
+            meta,
+            client,
+        })
+    }
+
+    fn lit1(&self, v: &[f32]) -> Literal {
+        Literal::vec1(v)
+    }
+
+    fn lit2(&self, v: &[f32], r: usize, c: usize) -> Result<Literal> {
+        anyhow::ensure!(v.len() == r * c, "literal shape mismatch");
+        Ok(Literal::vec1(v).reshape(&[r as i64, c as i64])?)
+    }
+
+    fn lit3(&self, v: &[f32], a: usize, r: usize, c: usize) -> Result<Literal> {
+        anyhow::ensure!(v.len() == a * r * c, "literal shape mismatch");
+        Ok(Literal::vec1(v).reshape(&[a as i64, r as i64, c as i64])?)
+    }
+
+    /// y literal: f32[b] for regression, f32[b, C] one-hot otherwise.
+    fn lit_y(&self, y: &[f32], stacked_tau: Option<usize>) -> Result<Literal> {
+        let b = self.meta.batch;
+        let w = self.meta.y_width();
+        match (self.meta.kind, stacked_tau) {
+            (ModelKind::LinReg, None) => {
+                anyhow::ensure!(y.len() == b, "y len");
+                Ok(self.lit1(y))
+            }
+            (ModelKind::LinReg, Some(t)) => self.lit2(y, t, b),
+            (_, None) => self.lit2(y, b, w),
+            (_, Some(t)) => self.lit3(y, t, b, w),
+        }
+    }
+
+    fn run1(&self, exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Literal> {
+        let bufs = exe.execute::<Literal>(args)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple1()?)
+    }
+
+    fn scalar_out(lit: Literal) -> Result<f32> {
+        Ok(lit.to_vec::<f32>()?[0])
+    }
+
+    fn check_xy(&self, x: &[f32], y: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            x.len() == self.meta.batch * self.meta.d,
+            "x batch mismatch: got {}, want {}",
+            x.len(),
+            self.meta.batch * self.meta.d
+        );
+        anyhow::ensure!(
+            y.len() == self.meta.batch * self.meta.y_width(),
+            "y batch mismatch"
+        );
+        Ok(())
+    }
+}
+
+impl Engine for HloEngine {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
+        self.check_xy(x, y)?;
+        let out = self.run1(
+            &self.loss_exe,
+            &[
+                self.lit1(params),
+                self.lit2(x, self.meta.batch, self.meta.d)?,
+                self.lit_y(y, None)?,
+            ],
+        )?;
+        Self::scalar_out(out)
+    }
+
+    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, Vec<f32>)> {
+        self.check_xy(x, y)?;
+        let bufs = self.grad_exe.execute::<Literal>(&[
+            self.lit1(params),
+            self.lit2(x, self.meta.batch, self.meta.d)?,
+            self.lit_y(y, None)?,
+        ])?;
+        let (loss_l, grad_l) = bufs[0][0].to_literal_sync()?.to_tuple2()?;
+        Ok((Self::scalar_out(loss_l)?, grad_l.to_vec::<f32>()?))
+    }
+
+    fn gate_step(
+        &self,
+        params: &[f32],
+        delta: &[f32],
+        x: &[f32],
+        y: &[f32],
+        eta: f32,
+    ) -> Result<Vec<f32>> {
+        self.check_xy(x, y)?;
+        let out = self.run1(
+            &self.step_exe,
+            &[
+                self.lit1(params),
+                self.lit1(delta),
+                self.lit2(x, self.meta.batch, self.meta.d)?,
+                self.lit_y(y, None)?,
+                Literal::scalar(eta),
+            ],
+        )?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn gate_round(
+        &self,
+        params: &[f32],
+        delta: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        eta: f32,
+    ) -> Result<Vec<f32>> {
+        let (b, d, tau) = (self.meta.batch, self.meta.d, self.meta.tau);
+        anyhow::ensure!(
+            xs.len() == tau * b * d,
+            "gate_round wants xs of tau*b*d = {} (artifact tau={tau}), got {}",
+            tau * b * d,
+            xs.len()
+        );
+        let out = self.run1(
+            &self.round_exe,
+            &[
+                self.lit1(params),
+                self.lit1(delta),
+                self.lit3(xs, tau, b, d)?,
+                self.lit_y(ys, Some(tau))?,
+                Literal::scalar(eta),
+            ],
+        )?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn prox_round(
+        &self,
+        params: &[f32],
+        anchor: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        eta: f32,
+        prox_mu: f32,
+    ) -> Result<Vec<f32>> {
+        let (b, d, tau) = (self.meta.batch, self.meta.d, self.meta.tau);
+        anyhow::ensure!(xs.len() == tau * b * d, "prox_round shape");
+        let out = self.run1(
+            &self.proxround_exe,
+            &[
+                self.lit1(params),
+                self.lit1(anchor),
+                self.lit3(xs, tau, b, d)?,
+                self.lit_y(ys, Some(tau))?,
+                Literal::scalar(eta),
+                Literal::scalar(prox_mu),
+            ],
+        )?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn gate_rounds_batch(
+        &self,
+        w: &[f32],
+        deltas: &[&[f32]],
+        xs_all: &[f32],
+        ys_all: &[f32],
+        eta: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        // §Perf: build the shared w / eta literals ONCE per communication
+        // round; only the per-client delta/xs/ys literals vary.
+        let (b, d, tau) = (self.meta.batch, self.meta.d, self.meta.tau);
+        let n = deltas.len();
+        anyhow::ensure!(n > 0, "empty batch");
+        let xstride = xs_all.len() / n;
+        let ystride = ys_all.len() / n;
+        anyhow::ensure!(xstride == tau * b * d, "gate_rounds_batch shape");
+        let w_lit = self.lit1(w);
+        let eta_lit = Literal::scalar(eta);
+        (0..n)
+            .map(|k| {
+                let delta_lit = self.lit1(deltas[k]);
+                let xs_lit =
+                    self.lit3(&xs_all[k * xstride..(k + 1) * xstride], tau, b, d)?;
+                let ys_lit =
+                    self.lit_y(&ys_all[k * ystride..(k + 1) * ystride], Some(tau))?;
+                // execute takes Borrow<Literal>: pass references so the
+                // shared w/eta literals are reused without copies
+                let bufs = self.round_exe.execute::<&Literal>(&[
+                    &w_lit, &delta_lit, &xs_lit, &ys_lit, &eta_lit,
+                ])?;
+                let out = bufs[0][0].to_literal_sync()?.to_tuple1()?;
+                Ok(out.to_vec::<f32>()?)
+            })
+            .collect()
+    }
+
+    fn accuracy(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
+        let Some(exe) = &self.acc_exe else {
+            return Ok(f32::NAN);
+        };
+        self.check_xy(x, y)?;
+        let out = self.run1(
+            exe,
+            &[
+                self.lit1(params),
+                self.lit2(x, self.meta.batch, self.meta.d)?,
+                self.lit_y(y, None)?,
+            ],
+        )?;
+        Self::scalar_out(out)
+    }
+}

@@ -1,0 +1,173 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parses `artifacts/manifest.json`.
+
+use super::{ModelKind, ModelMeta};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered HLO artifact and its I/O signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String, // loss | grad | step | round | proxround | acc
+    pub model: String,
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+fn parse_io(j: &Json) -> Result<Vec<(String, Vec<usize>)>> {
+    j.as_arr()
+        .context("io list not an array")?
+        .iter()
+        .map(|e| {
+            let name = e.req_str("name")?.to_string();
+            let shape = e
+                .req_arr("shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim not usize"))
+                .collect::<Result<Vec<_>>>()?;
+            Ok((name, shape))
+        })
+        .collect()
+}
+
+fn parse_model_meta(j: &Json) -> Result<ModelMeta> {
+    Ok(ModelMeta {
+        name: j.req_str("name")?.to_string(),
+        kind: ModelKind::parse(j.req_str("kind")?)?,
+        d: j.req_usize("d")?,
+        classes: j.req_usize("classes")?,
+        hidden: j
+            .req_arr("hidden")?
+            .iter()
+            .map(|h| h.as_usize().context("hidden not usize"))
+            .collect::<Result<Vec<_>>>()?,
+        l2: j.req_f64("l2")? as f32,
+        param_count: j.req_usize("param_count")?,
+        batch: j.req_usize("batch")?,
+        tau: j.req_usize("tau")?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        Self::parse(&src, dir)
+    }
+
+    pub fn parse(src: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(src).map_err(|e| anyhow::anyhow!("{e}"))?;
+        anyhow::ensure!(
+            j.req_usize("version")? == 1,
+            "unsupported manifest version"
+        );
+        let artifacts = j
+            .req_arr("artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactInfo {
+                    name: a.req_str("name")?.to_string(),
+                    file: dir.join(a.req_str("file")?),
+                    kind: a.req_str("kind")?.to_string(),
+                    model: a.req_str("model")?.to_string(),
+                    inputs: parse_io(a.req("inputs")?)?,
+                    outputs: parse_io(a.req("outputs")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let models = j
+            .req_arr("models")?
+            .iter()
+            .map(|m| {
+                let meta = parse_model_meta(m)?;
+                Ok((meta.name.clone(), meta))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, models })
+    }
+
+    /// Find the artifact of `kind` for `model` (pallas variant, i.e. no
+    /// `_jnp` suffix) — or the `_jnp` variant when `jnp` is set.
+    pub fn find(&self, model: &str, kind: &str, jnp: bool) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.model == model
+                && a.kind == kind
+                && a.name.ends_with("_jnp") == jnp
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "catalog": "quick",
+      "artifacts": [
+        {"name": "linreg_d8_grad", "file": "linreg_d8_grad.hlo.txt",
+         "kind": "grad", "model": "linreg_d8",
+         "inputs": [{"name": "params", "shape": [9]},
+                    {"name": "x", "shape": [5, 8]},
+                    {"name": "y", "shape": [5]}],
+         "outputs": [{"name": "loss", "shape": []},
+                     {"name": "grad", "shape": [9]}],
+         "meta": {}, "sha256_16": "x"}
+      ],
+      "models": [
+        {"name": "linreg_d8", "kind": "linreg", "d": 8, "classes": 1,
+         "hidden": [], "l2": 0.0, "param_count": 9, "batch": 5, "tau": 4,
+         "pallas": true}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("linreg_d8", "grad", false).unwrap();
+        assert_eq!(a.inputs[1].1, vec![5, 8]);
+        assert_eq!(a.file, Path::new("/tmp/a/linreg_d8_grad.hlo.txt"));
+        let meta = m.model("linreg_d8").unwrap();
+        assert_eq!(meta.kind, ModelKind::LinReg);
+        assert_eq!(meta.batch, 5);
+        assert_eq!(meta.expected_param_count(), 9);
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.model("nope").is_err());
+        assert!(m.find("linreg_d8", "round", false).is_none());
+    }
+
+    #[test]
+    fn real_manifest_loads_when_built() {
+        // integration-style: only runs when `make artifacts` has run
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            for a in &m.artifacts {
+                assert!(a.file.exists(), "{:?} missing", a.file);
+            }
+        }
+    }
+}

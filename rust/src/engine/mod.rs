@@ -1,0 +1,233 @@
+//! Compute engines: the numerical core behind the coordinator.
+//!
+//! Two interchangeable implementations of [`Engine`]:
+//!
+//! * [`HloEngine`] — the production path. Loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`, lowered once from JAX+Pallas by
+//!   `make artifacts`), compiles them on the PJRT CPU client and executes
+//!   them from the Rust hot loop. Python is never invoked.
+//! * [`NativeEngine`] — a pure-Rust twin implementing identical math.
+//!   Used for artifact-free unit tests, differential testing against the
+//!   HLO path, and large-N simulations (Table 2 runs N=1000 clients).
+//!
+//! All engines operate on flat `f32[P]` parameter vectors; layout is owned
+//! by Layer 2 (`python/compile/model.py`) and mirrored in
+//! [`native::flat_layout`].
+
+pub mod hlo;
+pub mod manifest;
+pub mod native;
+
+pub use hlo::HloEngine;
+pub use manifest::{ArtifactInfo, Manifest};
+pub use native::NativeEngine;
+
+use anyhow::Result;
+
+/// Which model family an engine computes (Section 5 of the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    LinReg,
+    LogReg,
+    Mlp,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "linreg" => Ok(ModelKind::LinReg),
+            "logreg" => Ok(ModelKind::LogReg),
+            "mlp" => Ok(ModelKind::Mlp),
+            other => anyhow::bail!("unknown model kind '{other}'"),
+        }
+    }
+}
+
+/// Static description of one model variant (mirrors `ModelSpec.to_json`).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub kind: ModelKind,
+    pub d: usize,
+    pub classes: usize,
+    pub hidden: Vec<usize>,
+    pub l2: f32,
+    pub param_count: usize,
+    /// static minibatch size baked into the artifacts
+    pub batch: usize,
+    /// fused-round length baked into the `*_round_t{tau}` artifact
+    pub tau: usize,
+}
+
+impl ModelMeta {
+    /// (in, out) dims of each dense layer — must match model.py.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        match self.kind {
+            ModelKind::LinReg => vec![(self.d, 1)],
+            ModelKind::LogReg => vec![(self.d, self.classes)],
+            ModelKind::Mlp => {
+                let mut dims = Vec::new();
+                let mut prev = self.d;
+                for &h in &self.hidden {
+                    dims.push((prev, h));
+                    prev = h;
+                }
+                dims.push((prev, self.classes));
+                dims
+            }
+        }
+    }
+
+    pub fn expected_param_count(&self) -> usize {
+        self.layer_dims().iter().map(|(i, o)| i * o + o).sum()
+    }
+
+    /// Width of one encoded label row.
+    pub fn y_width(&self) -> usize {
+        if self.kind == ModelKind::LinReg {
+            1
+        } else {
+            self.classes
+        }
+    }
+}
+
+/// The uniform compute interface the coordinator drives.
+///
+/// All batch arguments are exactly `meta().batch` rows; `xs`/`ys` round
+/// arguments stack `tau` such batches. Implementations must be
+/// deterministic functions of their inputs.
+///
+/// (No `Send` bound: [`HloEngine`] holds PJRT handles that are not
+/// thread-safe; parallel simulations use per-thread [`NativeEngine`]s.)
+pub trait Engine {
+    fn meta(&self) -> &ModelMeta;
+
+    /// Mean loss over one batch (+ L2 term).
+    fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32>;
+
+    /// (loss, gradient) over one batch.
+    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[f32])
+        -> Result<(f32, Vec<f32>)>;
+
+    /// One FedGATE-corrected local step: `w - eta * (grad - delta)`.
+    fn gate_step(
+        &self,
+        params: &[f32],
+        delta: &[f32],
+        x: &[f32],
+        y: &[f32],
+        eta: f32,
+    ) -> Result<Vec<f32>>;
+
+    /// `meta().tau` fused local steps (the hot-path call).
+    fn gate_round(
+        &self,
+        params: &[f32],
+        delta: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        eta: f32,
+    ) -> Result<Vec<f32>>;
+
+    /// `meta().tau` FedProx steps towards `anchor`.
+    fn prox_round(
+        &self,
+        params: &[f32],
+        anchor: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        eta: f32,
+        prox_mu: f32,
+    ) -> Result<Vec<f32>>;
+
+    /// Classification accuracy over one batch (NaN for regression).
+    fn accuracy(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32>;
+
+    /// Thread-safe view for fan-out across simulated clients, when the
+    /// implementation supports it. [`NativeEngine`] is stateless and
+    /// returns itself; [`HloEngine`] returns `None` (PJRT handles are
+    /// not exposed as `Sync` by the `xla` crate) and runs serially —
+    /// the PJRT CPU client already parallelizes inside each execute.
+    fn as_sync(&self) -> Option<&(dyn Engine + Sync)> {
+        None
+    }
+
+    /// Whether `gate_round`/`prox_round` accept an arbitrary number of
+    /// stacked batches (true for Native) or only `meta().tau` (HLO).
+    fn round_tau_flexible(&self) -> bool {
+        false
+    }
+
+    /// One fused round for EVERY client in a communication round:
+    /// client k starts from the shared global `w`, uses tracking
+    /// variable `deltas[k]` and its pre-sampled batches
+    /// `xs_all[k*stride..]`. The default loops [`Engine::gate_round`];
+    /// [`HloEngine`] overrides it to build the `w`/`eta` literals once
+    /// per round instead of once per client (§Perf lever 5).
+    fn gate_rounds_batch(
+        &self,
+        w: &[f32],
+        deltas: &[&[f32]],
+        xs_all: &[f32],
+        ys_all: &[f32],
+        eta: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        let m = self.meta();
+        let n = deltas.len();
+        let xstride = xs_all.len() / n.max(1);
+        let ystride = ys_all.len() / n.max(1);
+        debug_assert_eq!(xstride % (m.batch * m.d), 0);
+        (0..n)
+            .map(|k| {
+                self.gate_round(
+                    w,
+                    deltas[k],
+                    &xs_all[k * xstride..(k + 1) * xstride],
+                    &ys_all[k * ystride..(k + 1) * ystride],
+                    eta,
+                )
+            })
+            .collect()
+    }
+}
+
+/// Average (loss, grad) of a client's FULL shard by chunking it through
+/// batch-sized `loss_grad` calls. Exact because every chunk contributes
+/// the same row count and the L2 term is identical across chunks.
+pub fn full_loss_grad(
+    engine: &dyn Engine,
+    fleet: &crate::fed::ClientFleet,
+    client: usize,
+    params: &[f32],
+) -> Result<(f64, Vec<f32>)> {
+    let meta = engine.meta();
+    let b = meta.batch;
+    let mut x_buf = vec![0.0f32; b * meta.d];
+    let mut y_buf = vec![0.0f32; b * meta.y_width()];
+    let mut loss_acc = 0.0f64;
+    let mut grad_acc = vec![0.0f64; meta.param_count];
+    let mut chunks = 0usize;
+    let mut err: Option<anyhow::Error> = None;
+    fleet.for_each_full_chunk(client, b, &mut x_buf, &mut y_buf, |x, y| {
+        if err.is_some() {
+            return;
+        }
+        match engine.loss_grad(params, x, y) {
+            Ok((l, g)) => {
+                loss_acc += l as f64;
+                crate::util::linalg::accumulate(&mut grad_acc, &g);
+                chunks += 1;
+            }
+            Err(e) => err = Some(e),
+        }
+    });
+    if let Some(e) = err {
+        return Err(e);
+    }
+    let inv = 1.0 / chunks.max(1) as f64;
+    Ok((
+        loss_acc * inv,
+        grad_acc.iter().map(|g| (*g * inv) as f32).collect(),
+    ))
+}

@@ -1,0 +1,593 @@
+//! Pure-Rust engine: the differential twin of the JAX/Pallas artifacts.
+//!
+//! Implements exactly the math of `python/compile/model.py` (forward,
+//! softmax cross-entropy / squared loss, L2 on weights only, FedGATE
+//! update) so that `NativeEngine` and `HloEngine` agree to f32 tolerance
+//! on identical inputs — the cross-layer correctness check in
+//! `rust/tests/differential.rs`.
+
+use super::{Engine, ModelKind, ModelMeta};
+use anyhow::Result;
+
+pub struct NativeEngine {
+    meta: ModelMeta,
+}
+
+impl NativeEngine {
+    pub fn new(meta: ModelMeta) -> Self {
+        assert_eq!(
+            meta.param_count,
+            meta.expected_param_count(),
+            "param_count mismatch for {}",
+            meta.name
+        );
+        NativeEngine { meta }
+    }
+
+    /// Convenience constructors mirroring the python catalog.
+    pub fn linreg(d: usize, batch: usize, tau: usize) -> Self {
+        Self::new(ModelMeta {
+            name: format!("linreg_d{d}"),
+            kind: ModelKind::LinReg,
+            d,
+            classes: 1,
+            hidden: vec![],
+            l2: 0.0,
+            param_count: d + 1,
+            batch,
+            tau,
+        })
+    }
+
+    pub fn logreg(d: usize, classes: usize, l2: f32, batch: usize, tau: usize) -> Self {
+        Self::new(ModelMeta {
+            name: format!("logreg_d{d}_c{classes}"),
+            kind: ModelKind::LogReg,
+            d,
+            classes,
+            hidden: vec![],
+            l2,
+            param_count: d * classes + classes,
+            batch,
+            tau,
+        })
+    }
+
+    pub fn mlp(
+        d: usize,
+        classes: usize,
+        hidden: Vec<usize>,
+        l2: f32,
+        batch: usize,
+        tau: usize,
+    ) -> Self {
+        let mut pc = 0;
+        let mut prev = d;
+        for &h in hidden.iter().chain(std::iter::once(&classes)) {
+            pc += prev * h + h;
+            prev = h;
+        }
+        Self::new(ModelMeta {
+            name: format!("mlp_d{d}_c{classes}"),
+            kind: ModelKind::Mlp,
+            d,
+            classes,
+            hidden,
+            l2,
+            param_count: pc,
+            batch,
+            tau,
+        })
+    }
+
+    /// Forward through all layers. Returns per-layer pre-activations
+    /// `zs[l]` ([b, out_l]) and hidden activations `acts[l] = relu(zs[l])`
+    /// (empty for the output layer) so the backward pass can reuse them
+    /// without recomputing (perf: saves one alloc + pass per hidden
+    /// layer per call — see EXPERIMENTS.md §Perf).
+    fn forward_all(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        b: usize,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let dims = self.meta.layer_dims();
+        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(dims.len());
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(dims.len());
+        let mut off = 0usize;
+        for (li, &(fin, fout)) in dims.iter().enumerate() {
+            let w = &params[off..off + fin * fout];
+            let bia = &params[off + fin * fout..off + fin * fout + fout];
+            off += fin * fout + fout;
+            let input: &[f32] = if li == 0 { x } else { &acts[li - 1] };
+            let mut z = vec![0.0f32; b * fout];
+            matmul_bias(input, w, bia, &mut z, b, fin, fout);
+            if li + 1 < dims.len() {
+                acts.push(z.iter().map(|&v| v.max(0.0)).collect());
+            } else {
+                acts.push(Vec::new());
+            }
+            zs.push(z);
+        }
+        (zs, acts)
+    }
+
+    fn l2_loss(&self, params: &[f32]) -> f64 {
+        if self.meta.l2 == 0.0 {
+            return 0.0;
+        }
+        let mut off = 0usize;
+        let mut sq = 0.0f64;
+        for (fin, fout) in self.meta.layer_dims() {
+            for v in &params[off..off + fin * fout] {
+                sq += (*v as f64) * (*v as f64);
+            }
+            off += fin * fout + fout;
+        }
+        0.5 * self.meta.l2 as f64 * sq
+    }
+
+    /// loss + full backward pass. Returns (loss, grad).
+    fn backprop(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, Vec<f32>) {
+        let meta = &self.meta;
+        let dims = meta.layer_dims();
+        let (zs, acts) = self.forward_all(params, x, b);
+        let last = zs.len() - 1;
+        let out_w = dims[last].1;
+
+        // dz for the output layer + data loss
+        let mut dz = vec![0.0f32; b * out_w];
+        let data_loss: f64 = match meta.kind {
+            ModelKind::LinReg => {
+                // loss = 0.5*mean(resid^2); dz = resid / b
+                let mut acc = 0.0f64;
+                for r in 0..b {
+                    let resid = zs[last][r] - y[r];
+                    acc += 0.5 * (resid as f64) * (resid as f64);
+                    dz[r] = resid / b as f32;
+                }
+                acc / b as f64
+            }
+            _ => {
+                // softmax xent; dz = (p - y)/b
+                let mut acc = 0.0f64;
+                for r in 0..b {
+                    let logits = &zs[last][r * out_w..(r + 1) * out_w];
+                    let yrow = &y[r * out_w..(r + 1) * out_w];
+                    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut zsum = 0.0f64;
+                    for &l in logits {
+                        zsum += ((l - m) as f64).exp();
+                    }
+                    let logz = zsum.ln() + m as f64;
+                    for c in 0..out_w {
+                        let p = ((logits[c] as f64 - logz).exp()) as f32;
+                        dz[r * out_w + c] = (p - yrow[c]) / b as f32;
+                        acc -= yrow[c] as f64 * (logits[c] as f64 - logz);
+                    }
+                }
+                acc / b as f64
+            }
+        };
+
+        // walk layers backward accumulating gradients
+        let mut grad = vec![0.0f32; meta.param_count];
+        let mut offsets = Vec::with_capacity(dims.len());
+        {
+            let mut off = 0;
+            for &(fin, fout) in &dims {
+                offsets.push(off);
+                off += fin * fout + fout;
+            }
+        }
+        let mut dcur = dz;
+        for li in (0..dims.len()).rev() {
+            let (fin, fout) = dims[li];
+            let off = offsets[li];
+            let w = &params[off..off + fin * fout];
+            // layer input: x for layer 0, cached relu(z_{li-1}) otherwise
+            let input: &[f32] = if li == 0 { x } else { &acts[li - 1] };
+            // dW = input^T dcur (+ l2*W), db = colsum(dcur)
+            {
+                let (gw, gb) = grad[off..off + fin * fout + fout]
+                    .split_at_mut(fin * fout);
+                for r in 0..b {
+                    let xr = &input[r * fin..(r + 1) * fin];
+                    let dr = &dcur[r * fout..(r + 1) * fout];
+                    for i in 0..fin {
+                        let xi = xr[i];
+                        if xi == 0.0 {
+                            continue;
+                        }
+                        let row = &mut gw[i * fout..(i + 1) * fout];
+                        for j in 0..fout {
+                            row[j] += xi * dr[j];
+                        }
+                    }
+                    for j in 0..fout {
+                        gb[j] += dr[j];
+                    }
+                }
+                if meta.l2 != 0.0 {
+                    for (g, wv) in gw.iter_mut().zip(w) {
+                        *g += meta.l2 * wv;
+                    }
+                }
+            }
+            // propagate: dprev = (dcur W^T) * relu'(z_{li-1})
+            if li > 0 {
+                let mut dprev = vec![0.0f32; b * fin];
+                for r in 0..b {
+                    let dr = &dcur[r * fout..(r + 1) * fout];
+                    let dp = &mut dprev[r * fin..(r + 1) * fin];
+                    for i in 0..fin {
+                        let wrow = &w[i * fout..(i + 1) * fout];
+                        let mut s = 0.0f32;
+                        for j in 0..fout {
+                            s += dr[j] * wrow[j];
+                        }
+                        dp[i] = s;
+                    }
+                }
+                for (dp, z) in dprev.iter_mut().zip(&zs[li - 1]) {
+                    if *z <= 0.0 {
+                        *dp = 0.0;
+                    }
+                }
+                dcur = dprev;
+            }
+        }
+        let total = data_loss + self.l2_loss(params);
+        (total as f32, grad)
+    }
+
+    fn check_batch(&self, x: &[f32], y: &[f32]) -> usize {
+        let b = self.meta.batch;
+        assert_eq!(x.len(), b * self.meta.d, "x batch mismatch");
+        assert_eq!(y.len(), b * self.meta.y_width(), "y batch mismatch");
+        b
+    }
+}
+
+/// z = x @ w + bias; x: [b, fin], w: [fin, fout] row-major.
+fn matmul_bias(x: &[f32], w: &[f32], bias: &[f32], z: &mut [f32], b: usize, fin: usize, fout: usize) {
+    // init with bias
+    for r in 0..b {
+        z[r * fout..(r + 1) * fout].copy_from_slice(bias);
+    }
+    // ikj loop: stride-1 inner over fout
+    for r in 0..b {
+        let xr = &x[r * fin..(r + 1) * fin];
+        let zr = &mut z[r * fout..(r + 1) * fout];
+        for i in 0..fin {
+            let xi = xr[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * fout..(i + 1) * fout];
+            for j in 0..fout {
+                zr[j] += xi * wrow[j];
+            }
+        }
+    }
+}
+
+impl Engine for NativeEngine {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
+        let b = self.check_batch(x, y);
+        let (zs, _) = self.forward_all(params, x, b);
+        let last = zs.len() - 1;
+        let out_w = self.meta.layer_dims()[last].1;
+        let data: f64 = match self.meta.kind {
+            ModelKind::LinReg => {
+                let mut acc = 0.0f64;
+                for r in 0..b {
+                    let resid = (zs[last][r] - y[r]) as f64;
+                    acc += 0.5 * resid * resid;
+                }
+                acc / b as f64
+            }
+            _ => {
+                let mut acc = 0.0f64;
+                for r in 0..b {
+                    let logits = &zs[last][r * out_w..(r + 1) * out_w];
+                    let yrow = &y[r * out_w..(r + 1) * out_w];
+                    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut zsum = 0.0f64;
+                    for &l in logits {
+                        zsum += ((l - m) as f64).exp();
+                    }
+                    let logz = zsum.ln() + m as f64;
+                    for c in 0..out_w {
+                        acc -= yrow[c] as f64 * (logits[c] as f64 - logz);
+                    }
+                }
+                acc / b as f64
+            }
+        };
+        Ok((data + self.l2_loss(params)) as f32)
+    }
+
+    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, Vec<f32>)> {
+        let b = self.check_batch(x, y);
+        Ok(self.backprop(params, x, y, b))
+    }
+
+    fn gate_step(
+        &self,
+        params: &[f32],
+        delta: &[f32],
+        x: &[f32],
+        y: &[f32],
+        eta: f32,
+    ) -> Result<Vec<f32>> {
+        let (_, g) = self.loss_grad(params, x, y)?;
+        Ok(params
+            .iter()
+            .zip(g.iter().zip(delta))
+            .map(|(w, (gi, di))| w - eta * (gi - di))
+            .collect())
+    }
+
+    fn gate_round(
+        &self,
+        params: &[f32],
+        delta: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        eta: f32,
+    ) -> Result<Vec<f32>> {
+        let b = self.meta.batch;
+        let xstride = b * self.meta.d;
+        let ystride = b * self.meta.y_width();
+        assert_eq!(xs.len() % xstride, 0);
+        let tau = xs.len() / xstride;
+        assert_eq!(ys.len(), tau * ystride);
+        let mut w = params.to_vec();
+        for t in 0..tau {
+            w = self.gate_step(
+                &w,
+                delta,
+                &xs[t * xstride..(t + 1) * xstride],
+                &ys[t * ystride..(t + 1) * ystride],
+                eta,
+            )?;
+        }
+        Ok(w)
+    }
+
+    fn prox_round(
+        &self,
+        params: &[f32],
+        anchor: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        eta: f32,
+        prox_mu: f32,
+    ) -> Result<Vec<f32>> {
+        let b = self.meta.batch;
+        let xstride = b * self.meta.d;
+        let ystride = b * self.meta.y_width();
+        let tau = xs.len() / xstride;
+        let mut w = params.to_vec();
+        for t in 0..tau {
+            let (_, mut g) = self.loss_grad(
+                &w,
+                &xs[t * xstride..(t + 1) * xstride],
+                &ys[t * ystride..(t + 1) * ystride],
+            )?;
+            for ((gi, wi), ai) in g.iter_mut().zip(&w).zip(anchor) {
+                *gi += prox_mu * (wi - ai);
+            }
+            for (wi, gi) in w.iter_mut().zip(&g) {
+                *wi -= eta * gi;
+            }
+        }
+        Ok(w)
+    }
+
+    fn accuracy(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
+        if self.meta.kind == ModelKind::LinReg {
+            return Ok(f32::NAN);
+        }
+        let b = self.check_batch(x, y);
+        let (zs, _) = self.forward_all(params, x, b);
+        let last = zs.len() - 1;
+        let c = self.meta.classes;
+        let mut correct = 0usize;
+        for r in 0..b {
+            let logits = &zs[last][r * c..(r + 1) * c];
+            let yrow = &y[r * c..(r + 1) * c];
+            let pred = argmax(logits);
+            let lab = argmax(yrow);
+            if pred == lab {
+                correct += 1;
+            }
+        }
+        Ok(correct as f32 / b as f32)
+    }
+
+    fn as_sync(&self) -> Option<&(dyn Engine + Sync)> {
+        Some(self)
+    }
+
+    fn round_tau_flexible(&self) -> bool {
+        true
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn finite_diff_grad(
+        e: &NativeEngine,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        eps: f32,
+    ) -> Vec<f32> {
+        let mut g = vec![0.0f32; params.len()];
+        let mut p = params.to_vec();
+        for i in 0..params.len() {
+            p[i] = params[i] + eps;
+            let lp = e.loss(&p, x, y).unwrap();
+            p[i] = params[i] - eps;
+            let lm = e.loss(&p, x, y).unwrap();
+            p[i] = params[i];
+            g[i] = (lp - lm) / (2.0 * eps);
+        }
+        g
+    }
+
+    #[test]
+    fn linreg_grad_matches_finite_diff() {
+        let e = NativeEngine::linreg(4, 6, 2);
+        let mut rng = Rng::new(1);
+        let p = rand_vec(&mut rng, 5);
+        let x = rand_vec(&mut rng, 24);
+        let y = rand_vec(&mut rng, 6);
+        let (_, g) = e.loss_grad(&p, &x, &y).unwrap();
+        let fd = finite_diff_grad(&e, &p, &x, &y, 1e-3);
+        for (a, b) in g.iter().zip(&fd) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn logreg_grad_matches_finite_diff() {
+        let e = NativeEngine::logreg(5, 3, 0.1, 4, 2);
+        let mut rng = Rng::new(2);
+        let p = rand_vec(&mut rng, e.meta().param_count);
+        let x = rand_vec(&mut rng, 20);
+        let mut y = vec![0.0f32; 12];
+        for r in 0..4 {
+            y[r * 3 + r % 3] = 1.0;
+        }
+        let (_, g) = e.loss_grad(&p, &x, &y).unwrap();
+        let fd = finite_diff_grad(&e, &p, &x, &y, 1e-3);
+        for (i, (a, b)) in g.iter().zip(&fd).enumerate() {
+            assert!((a - b).abs() < 3e-3, "idx {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mlp_grad_matches_finite_diff() {
+        let e = NativeEngine::mlp(4, 3, vec![6, 5], 0.05, 3, 2);
+        let mut rng = Rng::new(3);
+        let p = rand_vec(&mut rng, e.meta().param_count);
+        let x = rand_vec(&mut rng, 12);
+        let mut y = vec![0.0f32; 9];
+        for r in 0..3 {
+            y[r * 3 + (r + 1) % 3] = 1.0;
+        }
+        let (_, g) = e.loss_grad(&p, &x, &y).unwrap();
+        let fd = finite_diff_grad(&e, &p, &x, &y, 1e-3);
+        for (i, (a, b)) in g.iter().zip(&fd).enumerate() {
+            assert!((a - b).abs() < 5e-3, "idx {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gate_step_formula() {
+        let e = NativeEngine::linreg(3, 2, 1);
+        let mut rng = Rng::new(4);
+        let p = rand_vec(&mut rng, 4);
+        let delta = rand_vec(&mut rng, 4);
+        let x = rand_vec(&mut rng, 6);
+        let y = rand_vec(&mut rng, 2);
+        let (_, g) = e.loss_grad(&p, &x, &y).unwrap();
+        let stepped = e.gate_step(&p, &delta, &x, &y, 0.1).unwrap();
+        for i in 0..4 {
+            let want = p[i] - 0.1 * (g[i] - delta[i]);
+            assert!((stepped[i] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gate_round_equals_sequential_steps() {
+        let e = NativeEngine::logreg(4, 3, 0.01, 2, 3);
+        let mut rng = Rng::new(5);
+        let p = rand_vec(&mut rng, e.meta().param_count);
+        let delta = rand_vec(&mut rng, e.meta().param_count);
+        let xs = rand_vec(&mut rng, 3 * 2 * 4);
+        let mut ys = vec![0.0f32; 3 * 2 * 3];
+        for t in 0..6 {
+            ys[t * 3 + t % 3] = 1.0;
+        }
+        let fused = e.gate_round(&p, &delta, &xs, &ys, 0.05).unwrap();
+        let mut w = p.clone();
+        for t in 0..3 {
+            w = e
+                .gate_step(&w, &delta, &xs[t * 8..(t + 1) * 8], &ys[t * 6..(t + 1) * 6], 0.05)
+                .unwrap();
+        }
+        assert_eq!(fused, w);
+    }
+
+    #[test]
+    fn prox_round_zero_mu_is_plain_sgd() {
+        let e = NativeEngine::linreg(3, 2, 2);
+        let mut rng = Rng::new(6);
+        let p = rand_vec(&mut rng, 4);
+        let anchor = rand_vec(&mut rng, 4);
+        let xs = rand_vec(&mut rng, 2 * 2 * 3);
+        let ys = rand_vec(&mut rng, 4);
+        let prox = e.prox_round(&p, &anchor, &xs, &ys, 0.05, 0.0).unwrap();
+        let zero = vec![0.0f32; 4];
+        let sgd = e.gate_round(&p, &zero, &xs, &ys, 0.05).unwrap();
+        for (a, b) in prox.iter().zip(&sgd) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn accuracy_counts_argmax_matches() {
+        let e = NativeEngine::logreg(2, 2, 0.0, 2, 1);
+        // w maps feature0 -> class1 strongly
+        let p = vec![-5.0, 5.0, 0.0, 0.0, 0.0, 0.0]; // W (2x2 row-major), b (2)
+        let x = vec![1.0, 0.0, -1.0, 0.0];
+        let y_right = vec![0.0, 1.0, 1.0, 0.0];
+        assert_eq!(e.accuracy(&p, &x, &y_right).unwrap(), 1.0);
+        let y_wrong = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(e.accuracy(&p, &x, &y_wrong).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let e = NativeEngine::linreg(5, 10, 1);
+        let mut rng = Rng::new(7);
+        let p0 = rand_vec(&mut rng, 6);
+        let x = rand_vec(&mut rng, 50);
+        let y = rand_vec(&mut rng, 10);
+        let l0 = e.loss(&p0, &x, &y).unwrap();
+        let zero = vec![0.0f32; 6];
+        let mut w = p0;
+        for _ in 0..30 {
+            w = e.gate_step(&w, &zero, &x, &y, 0.1).unwrap();
+        }
+        let l1 = e.loss(&w, &x, &y).unwrap();
+        assert!(l1 < 0.5 * l0, "{l1} !< {l0}/2");
+    }
+}

@@ -1,0 +1,220 @@
+//! The simulated heterogeneous client fleet.
+//!
+//! Owns the mapping client -> (data shard, speed T_i, minibatch RNG) and
+//! the fastest-first ordering FLANP activates prefixes of. All batch
+//! assembly is fill-into-buffer so the coordinator's round loop does not
+//! allocate.
+
+use crate::data::{Dataset, Shard};
+use crate::fed::speed::{sort_fastest_first, SpeedModel};
+use crate::util::Rng;
+
+pub struct ClientFleet {
+    pub dataset: Dataset,
+    pub shards: Vec<Shard>,
+    /// T_i indexed by client id
+    pub speeds: Vec<f64>,
+    /// client ids sorted fastest-first; FLANP stage n uses order[..n]
+    pub order: Vec<usize>,
+    rngs: Vec<Rng>,
+}
+
+impl ClientFleet {
+    pub fn new(
+        dataset: Dataset,
+        shards: Vec<Shard>,
+        speed_model: &SpeedModel,
+        rng: &mut Rng,
+    ) -> Self {
+        let n = shards.len();
+        let speeds = speed_model.draw(rng, n);
+        let order = sort_fastest_first(&speeds);
+        let rngs = (0..n).map(|i| rng.fork(i as u64)).collect();
+        ClientFleet { dataset, shards, speeds, order, rngs }
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Samples held by one client.
+    pub fn s(&self, client: usize) -> usize {
+        self.shards[client].s()
+    }
+
+    pub fn d(&self) -> usize {
+        self.dataset.d
+    }
+
+    /// Client ids of the k fastest clients (FLANP's active prefix).
+    pub fn fastest(&self, k: usize) -> &[usize] {
+        &self.order[..k]
+    }
+
+    /// Speeds of a set of clients (for the virtual clock).
+    pub fn speeds_of(&self, clients: &[usize]) -> Vec<f64> {
+        clients.iter().map(|&c| self.speeds[c]).collect()
+    }
+
+    /// Fill one stochastic minibatch (size b, sampled without replacement
+    /// from the client's shard) into x/y buffers.
+    /// x_buf: [b*d], y_buf: [b*encoded_width].
+    pub fn fill_minibatch(
+        &mut self,
+        client: usize,
+        b: usize,
+        x_buf: &mut [f32],
+        y_buf: &mut [f32],
+    ) {
+        let shard_len = self.shards[client].s();
+        assert!(b <= shard_len, "batch {b} > shard {shard_len}");
+        let rng = &mut self.rngs[client];
+        let picks = rng.sample_indices(shard_len, b);
+        let rows: Vec<usize> =
+            picks.iter().map(|&p| self.shards[client].indices[p]).collect();
+        self.dataset.gather_x(&rows, x_buf);
+        self.dataset.y.encode_into(&rows, y_buf);
+    }
+
+    /// Fill tau stacked minibatches for one fused local round.
+    /// xs_buf: [tau*b*d], ys_buf: [tau*b*encoded_width].
+    pub fn fill_round_batches(
+        &mut self,
+        client: usize,
+        tau: usize,
+        b: usize,
+        xs_buf: &mut [f32],
+        ys_buf: &mut [f32],
+    ) {
+        let d = self.dataset.d;
+        let yw = self.dataset.y.encoded_width();
+        assert_eq!(xs_buf.len(), tau * b * d);
+        assert_eq!(ys_buf.len(), tau * b * yw);
+        for t in 0..tau {
+            let (xs, ys) = (
+                &mut xs_buf[t * b * d..(t + 1) * b * d],
+                &mut ys_buf[t * b * yw..(t + 1) * b * yw],
+            );
+            self.fill_minibatch(client, b, xs, ys);
+        }
+    }
+
+    /// Visit the client's FULL shard in chunks of exactly `b` rows
+    /// (requires s % b == 0 — validated by the experiment config). Used
+    /// for the exact local gradients of the stopping rule.
+    pub fn for_each_full_chunk<F: FnMut(&[f32], &[f32])>(
+        &self,
+        client: usize,
+        b: usize,
+        x_buf: &mut [f32],
+        y_buf: &mut [f32],
+        mut f: F,
+    ) {
+        let shard = &self.shards[client];
+        let s = shard.s();
+        assert_eq!(
+            s % b,
+            0,
+            "shard size {s} must be a multiple of artifact batch {b}"
+        );
+        for chunk in shard.indices.chunks(b) {
+            self.dataset.gather_x(chunk, x_buf);
+            self.dataset.y.encode_into(chunk, y_buf);
+            f(x_buf, y_buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shard, Labels};
+
+    fn fleet(n_clients: usize, s: usize, d: usize) -> ClientFleet {
+        let n = n_clients * s;
+        let mut rng = Rng::new(1);
+        let mut x = vec![0.0f32; n * d];
+        rng.fill_normal(&mut x, 1.0);
+        let y = Labels::Class((0..n).map(|i| (i % 3) as u32).collect(), 3);
+        let ds = Dataset::new(x, y, d);
+        let shards = shard::partition_iid(&mut rng, &ds, n_clients);
+        ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng)
+    }
+
+    #[test]
+    fn order_is_fastest_first() {
+        let f = fleet(10, 20, 4);
+        let sorted: Vec<f64> = f.order.iter().map(|&c| f.speeds[c]).collect();
+        assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(f.fastest(3).len(), 3);
+        assert_eq!(f.fastest(3), &f.order[..3]);
+    }
+
+    #[test]
+    fn minibatch_rows_come_from_own_shard() {
+        let mut f = fleet(5, 20, 4);
+        let b = 8;
+        let mut x = vec![0.0; b * 4];
+        let mut y = vec![0.0; b * 3];
+        f.fill_minibatch(2, b, &mut x, &mut y);
+        // every sampled row must match some row of client 2's shard
+        for r in 0..b {
+            let row = &x[r * 4..(r + 1) * 4];
+            let found = f.shards[2]
+                .indices
+                .iter()
+                .any(|&i| f.dataset.row(i) == row);
+            assert!(found, "row {r} not in shard");
+        }
+        // one-hot rows sum to 1
+        for r in 0..b {
+            let s: f32 = y[r * 3..(r + 1) * 3].iter().sum();
+            assert_eq!(s, 1.0);
+        }
+    }
+
+    #[test]
+    fn round_batches_fill_every_slot() {
+        let mut f = fleet(3, 30, 4);
+        let (tau, b) = (5, 6);
+        let mut xs = vec![f32::NAN; tau * b * 4];
+        let mut ys = vec![f32::NAN; tau * b * 3];
+        f.fill_round_batches(0, tau, b, &mut xs, &mut ys);
+        assert!(xs.iter().all(|v| v.is_finite()));
+        assert!(ys.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn full_chunks_cover_shard_exactly_once() {
+        let f = fleet(4, 24, 4);
+        let b = 6;
+        let mut x = vec![0.0; b * 4];
+        let mut y = vec![0.0; b * 3];
+        let mut rows_seen = 0;
+        f.for_each_full_chunk(1, b, &mut x, &mut y, |xc, _| {
+            rows_seen += xc.len() / 4;
+        });
+        assert_eq!(rows_seen, 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn full_chunks_reject_indivisible_batch() {
+        let f = fleet(4, 25, 4);
+        let mut x = vec![0.0; 6 * 4];
+        let mut y = vec![0.0; 6 * 3];
+        f.for_each_full_chunk(0, 6, &mut x, &mut y, |_, _| {});
+    }
+
+    #[test]
+    fn minibatch_streams_differ_across_clients() {
+        let mut f = fleet(3, 30, 4);
+        let b = 4;
+        let mut x1 = vec![0.0; b * 4];
+        let mut x2 = vec![0.0; b * 4];
+        let mut y = vec![0.0; b * 3];
+        f.fill_minibatch(0, b, &mut x1, &mut y);
+        f.fill_minibatch(1, b, &mut x2, &mut y);
+        assert_ne!(x1, x2);
+    }
+}

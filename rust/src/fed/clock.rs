@@ -1,0 +1,119 @@
+//! Discrete-event virtual wall-clock.
+//!
+//! The paper measures wall-clock in units of the per-update times T_i:
+//! one synchronous round with participant set P and tau local updates
+//! costs `tau * max_{i in P} T_i` (the server waits for the slowest
+//! participant — Propositions 2 and 3). An optional per-round
+//! communication overhead models the upload/broadcast latency.
+
+#[derive(Clone, Debug)]
+pub struct VirtualClock {
+    now: f64,
+    /// fixed per-round communication overhead (0 by default: the paper's
+    /// analysis is computation-dominated)
+    pub comm_overhead: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { now: 0.0, comm_overhead: 0.0 }
+    }
+
+    pub fn with_comm_overhead(comm: f64) -> Self {
+        VirtualClock { now: 0.0, comm_overhead: comm }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by one synchronous round: `updates` local updates on every
+    /// participant with speeds `t_participants`; returns the round cost.
+    pub fn advance_round(&mut self, t_participants: &[f64], updates: usize) -> f64 {
+        let slowest = t_participants
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max);
+        let cost = updates as f64 * slowest + self.comm_overhead;
+        self.now += cost;
+        cost
+    }
+
+    /// Advance by a heterogeneous round (FedNova): client i performs
+    /// `updates[i]` updates at speed `t[i]`; the server waits for the
+    /// slowest *product*.
+    pub fn advance_round_hetero(&mut self, t: &[f64], updates: &[usize]) -> f64 {
+        assert_eq!(t.len(), updates.len());
+        let slowest = t
+            .iter()
+            .zip(updates)
+            .map(|(ti, &u)| ti * u as f64)
+            .fold(0.0f64, f64::max);
+        let cost = slowest + self.comm_overhead;
+        self.now += cost;
+        cost
+    }
+
+    pub fn reset(&mut self) {
+        self.now = 0.0;
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_cost_is_tau_times_slowest() {
+        let mut c = VirtualClock::new();
+        let cost = c.advance_round(&[10.0, 30.0, 20.0], 5);
+        assert_eq!(cost, 150.0);
+        assert_eq!(c.now(), 150.0);
+        c.advance_round(&[1.0], 2);
+        assert_eq!(c.now(), 152.0);
+    }
+
+    #[test]
+    fn monotonicity() {
+        let mut c = VirtualClock::new();
+        let mut prev = 0.0;
+        for k in 1..50 {
+            c.advance_round(&[k as f64], k);
+            assert!(c.now() > prev);
+            prev = c.now();
+        }
+    }
+
+    #[test]
+    fn comm_overhead_added_per_round() {
+        let mut c = VirtualClock::with_comm_overhead(7.0);
+        c.advance_round(&[10.0], 1);
+        assert_eq!(c.now(), 17.0);
+    }
+
+    #[test]
+    fn hetero_round_uses_product() {
+        let mut c = VirtualClock::new();
+        // slow client does few updates: 100*1=100; fast does many: 10*20=200
+        let cost = c.advance_round_hetero(&[100.0, 10.0], &[1, 20]);
+        assert_eq!(cost, 200.0);
+    }
+
+    #[test]
+    fn faster_prefix_is_cheaper() {
+        // the FLANP premise: a round over the fastest m < n clients costs
+        // no more than a round over all n
+        let speeds = vec![10.0, 20.0, 80.0, 400.0];
+        let mut a = VirtualClock::new();
+        let mut b = VirtualClock::new();
+        a.advance_round(&speeds[..2], 10);
+        b.advance_round(&speeds, 10);
+        assert!(a.now() <= b.now());
+    }
+}

@@ -1,0 +1,191 @@
+//! Per-round metric traces — everything the paper's figures plot.
+
+use crate::util::json::{obj, Json};
+use std::io::Write;
+use std::path::Path;
+
+/// One communication round's measurements.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// virtual wall-clock at the END of this round
+    pub time: f64,
+    /// number of participating clients this round
+    pub participants: usize,
+    /// global training loss L_n over the ACTIVE set (what the solver sees)
+    pub loss_active: f64,
+    /// global training loss L_N over ALL N clients' data (what the paper
+    /// plots — progress towards the full-ERM objective)
+    pub loss_full: f64,
+    /// squared norm of the active-set gradient (stopping rule input)
+    pub grad_norm_sq: f64,
+    /// ||w - w*|| when the exact optimum is known (linreg), else NaN
+    pub dist_to_opt: f64,
+    /// test / train accuracy when classification, else NaN
+    pub accuracy: f64,
+    /// FLANP stage index (0 for non-adaptive solvers)
+    pub stage: usize,
+}
+
+/// A full run's trace plus identifying metadata.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub algo: String,
+    pub rounds: Vec<RoundRecord>,
+    /// stage-transition log: (round, new participant count)
+    pub stage_transitions: Vec<(usize, usize)>,
+    pub finished: bool,
+    /// total simulated time at termination
+    pub total_time: f64,
+}
+
+impl Trace {
+    pub fn new(algo: &str) -> Self {
+        Trace { algo: algo.to_string(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.total_time = rec.time;
+        self.rounds.push(rec);
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.rounds.last()
+    }
+
+    /// First virtual time at which `loss_full <= target` (linear
+    /// interpolation is unnecessary: round granularity matches the paper).
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.loss_full <= target)
+            .map(|r| r.time)
+    }
+
+    /// First virtual time at which `dist_to_opt <= target`.
+    pub fn time_to_dist(&self, target: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.dist_to_opt <= target)
+            .map(|r| r.time)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("algo", self.algo.as_str().into()),
+            ("finished", self.finished.into()),
+            ("total_time", self.total_time.into()),
+            (
+                "stage_transitions",
+                self.stage_transitions
+                    .iter()
+                    .map(|&(r, n)| Json::Arr(vec![r.into(), n.into()]))
+                    .collect(),
+            ),
+            (
+                "rounds",
+                self.rounds
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("round", r.round.into()),
+                            ("time", r.time.into()),
+                            ("participants", r.participants.into()),
+                            ("loss_active", json_num(r.loss_active)),
+                            ("loss_full", json_num(r.loss_full)),
+                            ("grad_norm_sq", json_num(r.grad_norm_sq)),
+                            ("dist_to_opt", json_num(r.dist_to_opt)),
+                            ("accuracy", json_num(r.accuracy)),
+                            ("stage", r.stage.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ])
+    }
+
+    /// CSV with a header row (one line per round).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage\n",
+        );
+        for r in &self.rounds {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{}\n",
+                r.round,
+                r.time,
+                r.participants,
+                r.loss_active,
+                r.loss_full,
+                r.grad_norm_sq,
+                r.dist_to_opt,
+                r.accuracy,
+                r.stage
+            ));
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+fn json_num(v: f64) -> Json {
+    // JSON has no NaN; encode as null
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, time: f64, loss: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            time,
+            participants: 4,
+            loss_active: loss,
+            loss_full: loss,
+            grad_norm_sq: loss * loss,
+            dist_to_opt: f64::NAN,
+            accuracy: f64::NAN,
+            stage: 0,
+        }
+    }
+
+    #[test]
+    fn time_to_loss_finds_first_crossing() {
+        let mut t = Trace::new("x");
+        t.push(rec(0, 10.0, 1.0));
+        t.push(rec(1, 20.0, 0.5));
+        t.push(rec(2, 30.0, 0.2));
+        assert_eq!(t.time_to_loss(0.5), Some(20.0));
+        assert_eq!(t.time_to_loss(0.1), None);
+        assert_eq!(t.total_time, 30.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut t = Trace::new("x");
+        t.push(rec(0, 1.0, 2.0));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("round,time"));
+    }
+
+    #[test]
+    fn json_encodes_nan_as_null() {
+        let mut t = Trace::new("x");
+        t.push(rec(0, 1.0, 2.0));
+        let s = t.to_json().to_string();
+        assert!(s.contains("\"dist_to_opt\":null"));
+        // and parses back
+        crate::util::json::Json::parse(&s).unwrap();
+    }
+}

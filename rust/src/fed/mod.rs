@@ -1,0 +1,12 @@
+//! Federated substrate: heterogeneous client fleet, speed models, virtual
+//! wall-clock, and per-round metric traces.
+
+pub mod client;
+pub mod clock;
+pub mod metrics;
+pub mod speed;
+
+pub use client::ClientFleet;
+pub use clock::VirtualClock;
+pub use metrics::{RoundRecord, Trace};
+pub use speed::SpeedModel;

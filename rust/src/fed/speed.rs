@@ -1,0 +1,117 @@
+//! Client computation-speed models (Section 2, "System Heterogeneity").
+//!
+//! `T_i` is node i's expected time for one local model update. The paper
+//! uses two models in the experiments:
+//!   * fixed speeds drawn uniformly from [50, 500]   (Section 5.1)
+//!   * i.i.d. exponential with rate lambda           (Section 5.2, Thm 2)
+//! plus the homogeneous case (all T_i equal) discussed after Theorem 2.
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpeedModel {
+    /// T_i ~ Uniform[lo, hi), fixed for the whole run.
+    Uniform { lo: f64, hi: f64 },
+    /// T_i ~ Exponential(lambda), fixed for the whole run.
+    Exponential { lambda: f64 },
+    /// All clients identical: T_i = t.
+    Homogeneous { t: f64 },
+}
+
+impl SpeedModel {
+    /// The paper's Section-5.1 default.
+    pub fn paper_uniform() -> Self {
+        SpeedModel::Uniform { lo: 50.0, hi: 500.0 }
+    }
+
+    /// Draw T_1..T_N (unsorted).
+    pub fn draw(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| match self {
+                SpeedModel::Uniform { lo, hi } => rng.uniform(*lo, *hi),
+                SpeedModel::Exponential { lambda } => rng.exponential(*lambda),
+                SpeedModel::Homogeneous { t } => *t,
+            })
+            .collect()
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        // "uniform:50:500" | "exp:1.0" | "homog:100"
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["uniform", lo, hi] => Ok(SpeedModel::Uniform {
+                lo: lo.parse().map_err(|_| "bad lo")?,
+                hi: hi.parse().map_err(|_| "bad hi")?,
+            }),
+            ["exp", l] => Ok(SpeedModel::Exponential {
+                lambda: l.parse().map_err(|_| "bad lambda")?,
+            }),
+            ["homog", t] => Ok(SpeedModel::Homogeneous {
+                t: t.parse().map_err(|_| "bad t")?,
+            }),
+            _ => Err(format!("unknown speed model '{s}'")),
+        }
+    }
+}
+
+/// Sort clients fastest-first and return the permutation: `order[rank] =
+/// original index`. FLANP activates prefixes of this order.
+pub fn sort_fastest_first(speeds: &[f64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..speeds.len()).collect();
+    order.sort_by(|&a, &b| speeds[a].partial_cmp(&speeds[b]).unwrap());
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_in_range() {
+        let m = SpeedModel::paper_uniform();
+        let ts = m.draw(&mut Rng::new(1), 1000);
+        assert!(ts.iter().all(|&t| (50.0..500.0).contains(&t)));
+    }
+
+    #[test]
+    fn exponential_positive_with_right_mean() {
+        let m = SpeedModel::Exponential { lambda: 2.0 };
+        let ts = m.draw(&mut Rng::new(2), 50_000);
+        assert!(ts.iter().all(|&t| t > 0.0));
+        let mean = ts.iter().sum::<f64>() / ts.len() as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn homogeneous_all_equal() {
+        let m = SpeedModel::Homogeneous { t: 7.5 };
+        assert!(m.draw(&mut Rng::new(3), 10).iter().all(|&t| t == 7.5));
+    }
+
+    #[test]
+    fn sorting_is_fastest_first() {
+        let speeds = vec![5.0, 1.0, 3.0];
+        let order = sort_fastest_first(&speeds);
+        assert_eq!(order, vec![1, 2, 0]);
+        // sorted speeds are non-decreasing
+        let sorted: Vec<f64> = order.iter().map(|&i| speeds[i]).collect();
+        assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(
+            SpeedModel::parse("uniform:50:500").unwrap(),
+            SpeedModel::paper_uniform()
+        );
+        assert_eq!(
+            SpeedModel::parse("exp:0.5").unwrap(),
+            SpeedModel::Exponential { lambda: 0.5 }
+        );
+        assert_eq!(
+            SpeedModel::parse("homog:10").unwrap(),
+            SpeedModel::Homogeneous { t: 10.0 }
+        );
+        assert!(SpeedModel::parse("nope").is_err());
+    }
+}

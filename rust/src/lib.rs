@@ -1,0 +1,31 @@
+//! FLANP — Straggler-Resilient Federated Learning.
+//!
+//! Rust + JAX + Pallas reproduction of *"Straggler-Resilient Federated
+//! Learning: Leveraging the Interplay Between Statistical Accuracy and
+//! System Heterogeneity"* (Reisizadeh et al., 2020).
+//!
+//! Three layers (see `DESIGN.md`):
+//!
+//! * **Layer 3 (this crate)** — the federated coordinator: the FLANP
+//!   adaptive-node-participation meta-algorithm ([`coordinator::flanp`]),
+//!   the FedGATE / FedAvg / FedNova / FedProx solvers, the simulated
+//!   heterogeneous client fleet and virtual wall-clock ([`fed`]), and the
+//!   PJRT runtime that executes AOT-compiled JAX/Pallas artifacts
+//!   ([`engine::HloEngine`]).
+//! * **Layer 2** — JAX models over flat parameter vectors
+//!   (`python/compile/model.py`), lowered once by `make artifacts`.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`), the tiled
+//!   matmul + fused-update hot spots, lowered into the same HLO.
+//!
+//! Python never runs at training time: the coordinator is self-contained
+//! once `artifacts/` exists.
+
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod fed;
+pub mod setup;
+pub mod util;
+
+pub use coordinator::config::{ExperimentConfig, SolverKind};
+pub use engine::{Engine, ModelMeta};

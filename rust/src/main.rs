@@ -1,0 +1,166 @@
+//! `flanp` — CLI entry point: run one federated experiment end to end.
+//!
+//! Examples:
+//!   flanp run --solver flanp   --model linreg_d25 --clients 100 --s 100
+//!   flanp run --solver fedgate --model logreg_d784_c10 --clients 50 \
+//!       --s 1200 --engine hlo --trace out.csv
+//!   flanp list-artifacts
+
+use anyhow::{Context, Result};
+use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::engine::Manifest;
+use flanp::fed::SpeedModel;
+use flanp::setup;
+use flanp::util::cli::Args;
+use std::path::Path;
+
+const USAGE: &str = "\
+flanp — straggler-resilient federated learning (FLANP)
+
+USAGE:
+  flanp run [options]            run one experiment, print a summary
+  flanp list-artifacts [options] list the AOT artifact catalog
+  flanp help                     show this help
+
+OPTIONS (run):
+  --solver S        flanp | flanp-heuristic | fedgate | fedavg | fednova |
+                    fedprox | fedgate-randK | fedgate-fastK   [flanp]
+  --model M         manifest model name                [linreg_d25]
+  --engine E        hlo | native                       [hlo]
+  --artifacts DIR   artifact directory                 [artifacts]
+  --clients N       number of clients                  [50]
+  --s S             samples per client                 [100]
+  --n0 N0           FLANP initial participants         [2]
+  --eta F --gamma F stepsizes                          [0.05, 1.0]
+  --tau T           local updates per round            [artifact tau]
+  --mu F --c F      statistical-accuracy constants     [0.01, 1.0]
+  --speed SPEC      uniform:50:500 | exp:1.0 | homog:100
+  --seed N          PRNG seed                          [1]
+  --max-rounds R    round budget                       [400]
+  --eval-rows N     rows for full-objective eval (0=all) [2000]
+  --trace PATH      write per-round CSV trace
+  --noise F         linreg label noise                 [0.1]
+  --separation F    mixture class separation (classification data)
+  --quiet           suppress the configuration line
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let mut args = Args::from_env(&["run", "list-artifacts", "help"])
+        .map_err(|e| anyhow::anyhow!(e))?;
+    match args.subcommand.as_deref() {
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some("list-artifacts") => {
+            let dir = args.flag_str(
+                "artifacts",
+                setup::default_artifacts_dir().to_str().unwrap(),
+            );
+            args.finish().map_err(|e| anyhow::anyhow!(e))?;
+            let manifest = Manifest::load(Path::new(&dir))?;
+            println!("{} artifacts in {dir}:", manifest.artifacts.len());
+            for a in &manifest.artifacts {
+                let ins: Vec<String> =
+                    a.inputs.iter().map(|(n, s)| format!("{n}{s:?}")).collect();
+                println!("  {:<44} {}", a.name, ins.join(" "));
+            }
+            Ok(())
+        }
+        Some("run") => cmd_run(&mut args),
+        Some(other) => anyhow::bail!("unknown subcommand '{other}'"),
+    }
+}
+
+fn cmd_run(args: &mut Args) -> Result<()> {
+    let solver = SolverKind::parse(&args.flag_str("solver", "flanp"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let model = args.flag_str("model", "linreg_d25");
+    let engine_kind = args.flag_str("engine", "hlo");
+    let artifacts_dir = args.flag_str(
+        "artifacts",
+        setup::default_artifacts_dir().to_str().unwrap(),
+    );
+    let clients = args.flag_usize("clients", 50).map_err(|e| anyhow::anyhow!(e))?;
+    let s = args.flag_usize("s", 100).map_err(|e| anyhow::anyhow!(e))?;
+    let n0 = args.flag_usize("n0", 2).map_err(|e| anyhow::anyhow!(e))?;
+    let eta = args.flag_f64("eta", 0.05).map_err(|e| anyhow::anyhow!(e))? as f32;
+    let gamma = args.flag_f64("gamma", 1.0).map_err(|e| anyhow::anyhow!(e))? as f32;
+    let tau = args.flag_usize("tau", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let mu = args.flag_f64("mu", 0.01).map_err(|e| anyhow::anyhow!(e))?;
+    let c_stat = args.flag_f64("c", 1.0).map_err(|e| anyhow::anyhow!(e))?;
+    let speed = SpeedModel::parse(&args.flag_str("speed", "uniform:50:500"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.flag_usize("seed", 1).map_err(|e| anyhow::anyhow!(e))? as u64;
+    let max_rounds =
+        args.flag_usize("max-rounds", 400).map_err(|e| anyhow::anyhow!(e))?;
+    let eval_rows =
+        args.flag_usize("eval-rows", 2000).map_err(|e| anyhow::anyhow!(e))?;
+    let trace_path = args.flag_opt("trace");
+    let noise = args.flag_f64("noise", 0.1).map_err(|e| anyhow::anyhow!(e))?;
+    let separation =
+        args.flag_f64("separation", 0.0).map_err(|e| anyhow::anyhow!(e))?;
+    let quiet = args.switch("quiet");
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let engine = setup::build_engine(&engine_kind, &model, Path::new(&artifacts_dir))?;
+    let meta = engine.meta().clone();
+
+    let mut cfg = ExperimentConfig::new(solver, &model, clients, s);
+    cfg.eta = eta;
+    cfg.gamma = gamma;
+    cfg.tau = if tau == 0 { meta.tau } else { tau };
+    cfg.n0 = n0;
+    cfg.mu = mu;
+    cfg.c_stat = c_stat;
+    cfg.speed = speed;
+    cfg.seed = seed;
+    cfg.max_rounds = max_rounds;
+    cfg.eval_rows = eval_rows;
+
+    let mut fleet = setup::build_fleet(&meta, &cfg, noise, separation)?;
+
+    if !quiet {
+        println!(
+            "flanp run: solver={} model={} engine={} N={} s={} tau={} eta={} gamma={}",
+            cfg.solver.name(),
+            model,
+            engine_kind,
+            clients,
+            s,
+            cfg.tau,
+            eta,
+            gamma
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let trace = run_solver(engine.as_ref(), &mut fleet, &cfg)?;
+    let wall = t0.elapsed();
+
+    let last = trace.last().context("empty trace")?;
+    println!(
+        "done: rounds={} virtual_time={:.1} loss_full={:.6} grad^2={:.3e} \
+         dist={:.4} acc={:.4} finished={} ({} stages) [{:.2?} real]",
+        last.round,
+        trace.total_time,
+        last.loss_full,
+        last.grad_norm_sq,
+        last.dist_to_opt,
+        last.accuracy,
+        trace.finished,
+        trace.stage_transitions.len().max(1),
+        wall
+    );
+    if let Some(p) = trace_path {
+        trace.write_csv(Path::new(&p))?;
+        println!("trace written to {p}");
+    }
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! Shared experiment assembly: engine + dataset + fleet from a config.
+//! Used by the CLI (`main.rs`), the bench harness (`flanp-bench`), the
+//! examples and the integration tests.
+
+use crate::coordinator::ExperimentConfig;
+use crate::data::{shard, synth};
+use crate::engine::{Engine, HloEngine, Manifest, ModelKind, ModelMeta, NativeEngine};
+use crate::fed::ClientFleet;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    // honor the env override used by tests run from other CWDs
+    if let Ok(dir) = std::env::var("FLANP_ARTIFACTS") {
+        return dir.into();
+    }
+    let cwd = Path::new("artifacts");
+    if cwd.exists() {
+        return cwd.to_path_buf();
+    }
+    // fall back to the crate root (useful under `cargo test`)
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Build an engine by kind ("hlo" loads artifacts; "native" is the
+/// pure-Rust twin — metadata from the manifest when present, else parsed
+/// from the model name).
+pub fn build_engine(
+    engine_kind: &str,
+    model: &str,
+    artifacts_dir: &Path,
+) -> Result<Box<dyn Engine>> {
+    match engine_kind {
+        "hlo" => {
+            let manifest = Manifest::load(artifacts_dir)?;
+            Ok(Box::new(HloEngine::load(&manifest, model)?))
+        }
+        "native" => {
+            if let Ok(manifest) = Manifest::load(artifacts_dir) {
+                if let Ok(meta) = manifest.model(model) {
+                    return Ok(Box::new(NativeEngine::new(meta.clone())));
+                }
+            }
+            Ok(Box::new(native_from_name(model)?))
+        }
+        other => anyhow::bail!("unknown engine '{other}' (hlo|native)"),
+    }
+}
+
+/// Parse model names like `linreg_d25`, `logreg_d784_c10`,
+/// `mlp_d512_c10_h128_h64` into a NativeEngine with catalog defaults.
+pub fn native_from_name(name: &str) -> Result<NativeEngine> {
+    let mut kind = "";
+    let mut d = 0usize;
+    let mut c = 1usize;
+    let mut hidden = Vec::new();
+    for (i, part) in name.split('_').enumerate() {
+        if i == 0 {
+            kind = part;
+            continue;
+        }
+        if let Some(v) = part.strip_prefix('d') {
+            d = v.parse().context("bad d")?;
+        } else if let Some(v) = part.strip_prefix('c') {
+            c = v.parse().context("bad c")?;
+        } else if let Some(v) = part.strip_prefix('h') {
+            hidden.push(v.parse().context("bad h")?);
+        }
+    }
+    anyhow::ensure!(d > 0, "model name '{name}' lacks a d<dim> part");
+    // batch/tau defaults matching the full catalog (aot.py)
+    Ok(match kind {
+        "linreg" => NativeEngine::linreg(d, 10, 10),
+        "logreg" => NativeEngine::logreg(d, c, 0.01, 50, 10),
+        "mlp" => NativeEngine::mlp(d, c, hidden, 0.01, 50, 10),
+        other => anyhow::bail!("unknown model kind '{other}'"),
+    })
+}
+
+/// Synthesize the dataset the model family expects (DESIGN.md §6) and
+/// shard it across `cfg.num_clients` clients of `cfg.s` samples each.
+pub fn build_fleet(
+    meta: &ModelMeta,
+    cfg: &ExperimentConfig,
+    noise: f64,
+    separation: f64,
+) -> Result<ClientFleet> {
+    let mut rng = Rng::new(cfg.seed);
+    let total = cfg.num_clients * cfg.s;
+    let dataset = match meta.kind {
+        ModelKind::LinReg => synth::linreg(&mut rng, total, meta.d, noise).0,
+        _ => {
+            // d >= 700 is the MNIST-like regime, smaller the CIFAR-like
+            let mut spec = if meta.d >= 700 {
+                synth::MixtureSpec::mnist_like(total)
+            } else {
+                synth::MixtureSpec::cifar_like(total)
+            };
+            spec.d = meta.d;
+            spec.classes = meta.classes;
+            if separation > 0.0 {
+                spec.separation = separation;
+            }
+            synth::mixture(&mut rng, &spec)
+        }
+    };
+    let shards =
+        shard::partition_fixed_s(&mut rng, &dataset, cfg.num_clients, cfg.s);
+    Ok(ClientFleet::new(dataset, shards, &cfg.speed, &mut rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SolverKind;
+
+    #[test]
+    fn native_from_name_parses_catalog_names() {
+        let e = native_from_name("linreg_d25").unwrap();
+        assert_eq!(e.meta().param_count, 26);
+        let e = native_from_name("logreg_d784_c10").unwrap();
+        assert_eq!(e.meta().param_count, 7850);
+        let e = native_from_name("mlp_d512_c10_h128_h64").unwrap();
+        assert_eq!(e.meta().hidden, vec![128, 64]);
+        assert!(native_from_name("mlp").is_err());
+        assert!(native_from_name("gru_d5").is_err());
+    }
+
+    #[test]
+    fn build_fleet_linreg_shapes() {
+        let e = native_from_name("linreg_d25").unwrap();
+        let cfg = ExperimentConfig::new(SolverKind::Flanp, "linreg_d25", 10, 20);
+        let fleet = build_fleet(e.meta(), &cfg, 0.1, 0.0).unwrap();
+        assert_eq!(fleet.num_clients(), 10);
+        assert_eq!(fleet.s(0), 20);
+        assert_eq!(fleet.d(), 25);
+    }
+
+    #[test]
+    fn build_fleet_classification_uses_mixture() {
+        let e = native_from_name("logreg_d784_c10").unwrap();
+        let cfg =
+            ExperimentConfig::new(SolverKind::FedGate, "logreg_d784_c10", 4, 100);
+        let fleet = build_fleet(e.meta(), &cfg, 0.0, 0.0).unwrap();
+        assert_eq!(fleet.dataset.y.classes(), 10);
+        assert_eq!(fleet.d(), 784);
+    }
+}

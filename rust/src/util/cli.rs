@@ -1,0 +1,162 @@
+//! Minimal CLI flag parser (clap is unavailable offline).
+//!
+//! Grammar: `prog [subcommand] --flag value --switch ... positional`.
+//! Flags may be `--k v` or `--k=v`. Unknown flags are an error so typos
+//! fail loudly in experiment scripts.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        subcommands: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") && subcommands.contains(&first.as_str())
+            {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--k v` if a non-flag follows, else a switch
+                    match it.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(body.to_string(), v);
+                        }
+                        _ => out.switches.push(body.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(subcommands: &[&str]) -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1), subcommands)
+    }
+
+    fn mark(&mut self, key: &str) {
+        self.known.push(key.to_string());
+    }
+
+    pub fn flag_str(&mut self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn flag_opt(&mut self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn flag_usize(&mut self, key: &str, default: usize) -> Result<usize, String> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn flag_f64(&mut self, key: &str, default: f64) -> Result<f64, String> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn switch(&mut self, key: &str) -> bool {
+        self.mark(key);
+        self.switches.iter().any(|s| s == key)
+            || self.flags.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Call after reading all flags: rejects anything unrecognized.
+    pub fn finish(&self) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !self.known.contains(k) {
+                return Err(format!("unknown flag --{k}"));
+            }
+        }
+        for k in &self.switches {
+            if !self.known.contains(k) {
+                return Err(format!("unknown switch --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["run", "fig1"])
+            .unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // note the grammar: a bare token after `--flag` is consumed as its
+        // value, so positionals go before switches (or use --flag=value)
+        let mut a = parse("fig1 out.csv --n 50 --eta=0.05 --quick");
+        assert_eq!(a.subcommand.as_deref(), Some("fig1"));
+        assert_eq!(a.flag_usize("n", 0).unwrap(), 50);
+        assert_eq!(a.flag_f64("eta", 0.0).unwrap(), 0.05);
+        assert!(a.switch("quick"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = parse("run");
+        assert_eq!(a.flag_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.flag_str("mode", "x"), "x");
+        assert!(!a.switch("quick"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let mut a = parse("run --oops 3");
+        let _ = a.flag_usize("n", 1);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let mut a = parse("run --n abc");
+        assert!(a.flag_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let mut a = parse("run --shift=-2.5");
+        assert_eq!(a.flag_f64("shift", 0.0).unwrap(), -2.5);
+    }
+}

@@ -1,0 +1,247 @@
+//! Small dense linear algebra: vector ops for the coordinator hot path and
+//! a Gaussian-elimination solver used to compute the exact linear-regression
+//! optimum `w*` (Figures 2, 7, 8 plot `||w - w*||`).
+
+/// y += a * x (fused server update; the Rust twin of kernels.axpy).
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// out = a * x + y, allocating.
+pub fn axpy_new(a: f32, x: &[f32], y: &[f32]) -> Vec<f32> {
+    x.iter().zip(y).map(|(xi, yi)| a * xi + yi).collect()
+}
+
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| *a as f64 * *b as f64).sum()
+}
+
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    dot(x, x)
+}
+
+pub fn norm2(x: &[f32]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+pub fn sub(x: &[f32], y: &[f32]) -> Vec<f32> {
+    x.iter().zip(y).map(|(a, b)| a - b).collect()
+}
+
+pub fn dist2(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| {
+            let d = (*a - *b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Accumulate `x` into `acc` (f64 accumulation for stable averaging).
+pub fn accumulate(acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, v) in acc.iter_mut().zip(x) {
+        *a += *v as f64;
+    }
+}
+
+/// acc / n -> f32 vector.
+pub fn mean_of(acc: &[f64], n: usize) -> Vec<f32> {
+    let inv = 1.0 / n as f64;
+    acc.iter().map(|a| (*a * inv) as f32).collect()
+}
+
+/// Solve A x = b for symmetric positive-definite A (n x n, row-major) by
+/// Gaussian elimination with partial pivoting. Used for the linreg normal
+/// equations (d <= a few hundred), f64 throughout.
+pub fn solve(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut m = a.to_vec();
+    let mut rhs = b.to_vec();
+    for col in 0..n {
+        // partial pivot
+        let mut piv = col;
+        let mut best = m[col * n + col].abs();
+        for row in col + 1..n {
+            let v = m[row * n + col].abs();
+            if v > best {
+                best = v;
+                piv = row;
+            }
+        }
+        if best < 1e-12 {
+            return None; // singular
+        }
+        if piv != col {
+            for k in 0..n {
+                m.swap(col * n + k, piv * n + k);
+            }
+            rhs.swap(col, piv);
+        }
+        let d = m[col * n + col];
+        for row in col + 1..n {
+            let f = m[row * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                m[row * n + k] -= f * m[col * n + k];
+            }
+            rhs[row] -= f * rhs[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut s = rhs[row];
+        for k in row + 1..n {
+            s -= m[row * n + k] * x[k];
+        }
+        x[row] = s / m[row * n + row];
+    }
+    Some(x)
+}
+
+/// Exact ridge-regression optimum of
+///   0.5/n * ||X w + b 1 - y||^2 + 0.5*l2*||w||^2
+/// over the (row-major) data. Returns the flat param vector [w..., b]
+/// matching the Layer-2 linreg layout.
+pub fn linreg_optimum(x: &[f32], y: &[f32], n: usize, d: usize, l2: f64) -> Vec<f32> {
+    assert_eq!(x.len(), n * d);
+    assert_eq!(y.len(), n);
+    // augmented design [X | 1]; normal equations (G + n*l2*I') w = X^T y
+    let dd = d + 1;
+    let mut g = vec![0.0f64; dd * dd];
+    let mut rhs = vec![0.0f64; dd];
+    for r in 0..n {
+        let row = &x[r * d..(r + 1) * d];
+        for i in 0..d {
+            let xi = row[i] as f64;
+            rhs[i] += xi * y[r] as f64;
+            for j in i..d {
+                g[i * dd + j] += xi * row[j] as f64;
+            }
+            g[i * dd + d] += xi; // vs bias column
+        }
+        rhs[d] += y[r] as f64;
+    }
+    g[d * dd + d] = n as f64;
+    // mirror the upper triangle
+    for i in 0..dd {
+        for j in 0..i {
+            g[i * dd + j] = g[j * dd + i];
+        }
+    }
+    // ridge on weights only (not bias) — matches model.py `_l2_term`
+    for i in 0..d {
+        g[i * dd + i] += l2 * n as f64;
+    }
+    let w = solve(&g, &rhs, dd).expect("normal equations singular");
+    w.into_iter().map(|v| v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn axpy_matches_naive() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(-2.0, &x, &mut y);
+        assert_eq!(y, vec![8.0, 16.0, 24.0]);
+        assert_eq!(axpy_new(-2.0, &x, &[10.0, 20.0, 30.0]), y);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+        assert!((norm2_sq(&[3.0, 4.0]) - 25.0).abs() < 1e-9);
+        assert!((dist2(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn solve_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![3.0, -2.0];
+        assert_eq!(solve(&a, &b, 2).unwrap(), b);
+    }
+
+    #[test]
+    fn solve_known_system() {
+        // [2 1; 1 3] x = [5; 10] -> x = [1, 3]
+        let a = vec![2.0, 1.0, 1.0, 3.0];
+        let x = solve(&a, &[5.0, 10.0], 2).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_rejects_singular() {
+        let a = vec![1.0, 2.0, 2.0, 4.0];
+        assert!(solve(&a, &[1.0, 2.0], 2).is_none());
+    }
+
+    #[test]
+    fn linreg_optimum_recovers_planted_model() {
+        let mut rng = Rng::new(1);
+        let (n, d) = (2000, 6);
+        let w_true: Vec<f64> = (0..d).map(|i| (i as f64) - 2.5).collect();
+        let b_true = 0.7;
+        let mut x = vec![0.0f32; n * d];
+        rng.fill_normal(&mut x, 1.0);
+        let y: Vec<f32> = (0..n)
+            .map(|r| {
+                let mut s = b_true;
+                for i in 0..d {
+                    s += w_true[i] * x[r * d + i] as f64;
+                }
+                (s + 0.01 * rng.normal()) as f32
+            })
+            .collect();
+        let w = linreg_optimum(&x, &y, n, d, 0.0);
+        for i in 0..d {
+            assert!((w[i] as f64 - w_true[i]).abs() < 0.02, "w[{i}]={}", w[i]);
+        }
+        assert!((w[d] as f64 - b_true).abs() < 0.02);
+    }
+
+    #[test]
+    fn linreg_optimum_gradient_is_zero() {
+        // at w*, the gradient of the regularized ERM must vanish
+        let mut rng = Rng::new(2);
+        let (n, d, l2) = (500, 4, 0.1);
+        let mut x = vec![0.0f32; n * d];
+        rng.fill_normal(&mut x, 1.0);
+        let y: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let w = linreg_optimum(&x, &y, n, d, l2);
+        // grad_w = X^T (Xw + b - y)/n + l2 w ; grad_b = mean(resid)
+        let mut gw = vec![0.0f64; d];
+        let mut gb = 0.0f64;
+        for r in 0..n {
+            let mut pred = w[d] as f64;
+            for i in 0..d {
+                pred += w[i] as f64 * x[r * d + i] as f64;
+            }
+            let resid = pred - y[r] as f64;
+            gb += resid;
+            for i in 0..d {
+                gw[i] += resid * x[r * d + i] as f64;
+            }
+        }
+        for i in 0..d {
+            let g = gw[i] / n as f64 + l2 * w[i] as f64;
+            assert!(g.abs() < 1e-4, "gw[{i}]={g}");
+        }
+        assert!((gb / n as f64).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,15 @@
+//! Dependency-free utility substrate.
+//!
+//! The build is fully offline with only `xla` + `anyhow` vendored, so the
+//! crates a project would normally pull (rand, serde, clap, proptest,
+//! criterion) are replaced by small, unit-tested implementations here.
+
+pub mod cli;
+pub mod json;
+pub mod linalg;
+pub mod par;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,82 @@
+//! Minimal scoped-thread parallel map (no rayon offline).
+//!
+//! `par_map(n, f)` evaluates `f(0..n)` across `available_parallelism`
+//! worker threads with static chunking and returns results in order.
+//! Used by the coordinator to fan local client work out across cores —
+//! the simulated analogue of clients computing concurrently.
+
+/// Number of worker threads to use for `n` items.
+pub fn threads_for(n: usize) -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    cores.min(n).max(1)
+}
+
+/// Parallel map over `0..n` preserving order. `f` must be `Sync`.
+/// Falls back to a serial loop for tiny inputs.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads_for(n);
+    if workers <= 1 || n < 2 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [Option<T>] = &mut out;
+        let mut start = 0usize;
+        let mut handles = Vec::new();
+        while start < n {
+            let len = chunk.min(n - start);
+            let (head, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let begin = start;
+            let fref = &f;
+            handles.push(scope.spawn(move || {
+                for (off, slot) in head.iter_mut().enumerate() {
+                    *slot = Some(fref(begin + off));
+                }
+            }));
+            start += len;
+        }
+        for h in handles {
+            h.join().expect("par_map worker panicked");
+        }
+    });
+    out.into_iter().map(|x| x.expect("par_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map() {
+        let got = par_map(1000, |i| i * i);
+        let want: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn order_preserved_with_uneven_chunks() {
+        let got = par_map(17, |i| i);
+        assert_eq!(got, (0..17).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn threads_bounded_by_items() {
+        assert_eq!(threads_for(1), 1);
+        assert!(threads_for(100) >= 1);
+    }
+}

@@ -1,0 +1,230 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs; on failure it greedily shrinks using the input's `Shrink`
+//! implementation and panics with the minimal counterexample. Used by the
+//! coordinator invariants suite (`rust/tests/properties.rs`).
+
+use crate::util::Rng;
+use std::fmt::Debug;
+
+/// Types that can propose structurally smaller candidates of themselves.
+pub trait Shrink: Sized + Clone {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<usize> {
+        let mut c = Vec::new();
+        if *self > 0 {
+            c.push(0);
+            c.push(self / 2);
+            c.push(self - 1);
+        }
+        c.dedup();
+        c
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<u64> {
+        let mut c = Vec::new();
+        if *self > 0 {
+            c.push(0);
+            c.push(self / 2);
+        }
+        c.dedup();
+        c
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<f64> {
+        let mut c = Vec::new();
+        if *self != 0.0 {
+            c.push(0.0);
+            c.push(self / 2.0);
+        }
+        c
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<(A, B)> {
+        let mut out: Vec<(A, B)> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<(A, B, C)> {
+        let mut out: Vec<(A, B, C)> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        out.push(self[..self.len() - 1].to_vec());
+        // shrink one element
+        if let Some(first) = self.first() {
+            for cand in first.shrink() {
+                let mut v = self.clone();
+                v[0] = cand;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs; shrink + panic on failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}):\n  \
+                 counterexample: {min_input:?}\n  reason: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, P>(mut input: T, mut msg: String, prop: &P) -> (T, String)
+where
+    T: Shrink + Debug,
+    P: Fn(&T) -> Result<(), String>,
+{
+    // bounded greedy descent
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in input.shrink() {
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (input, msg)
+}
+
+/// Generator helper: usize in [lo, hi].
+pub fn gen_usize(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Generator helper: f64 in [lo, hi).
+pub fn gen_f64(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    rng.uniform(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |r| gen_usize(r, 0, 100),
+            |_| {
+                Ok(())
+            },
+        );
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample")]
+    fn failing_property_panics_with_counterexample() {
+        forall(
+            2,
+            100,
+            |r| gen_usize(r, 0, 1000),
+            |&x| {
+                if x < 500 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        let caught = std::panic::catch_unwind(|| {
+            forall(
+                3,
+                100,
+                |r| gen_usize(r, 0, 10_000),
+                |&x| if x < 17 { Ok(()) } else { Err("ge 17".into()) },
+            );
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // greedy halving from any failing x should land near the boundary
+        let ce: usize = msg
+            .split("counterexample: ")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(ce >= 17 && ce <= 40, "shrunk to {ce}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let v = vec![5usize, 6, 7, 8];
+        assert!(v.shrink().iter().any(|c| c.len() < v.len()));
+    }
+}

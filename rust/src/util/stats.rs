@@ -1,0 +1,97 @@
+//! Summary statistics + the harmonic-number helpers used by the runtime
+//! analysis (Theorem 2's order-statistics argument) and by benches.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Nearest-rank percentile (p in [0, 100]) over a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// H_n = 1 + 1/2 + ... + 1/n (expected order statistics of exp(1): the
+/// i-th fastest of N clients has E[T_(i)] = H_N - H_{N-i}; Appendix D).
+pub fn harmonic(n: usize) -> f64 {
+    (1..=n).map(|k| 1.0 / k as f64).sum()
+}
+
+/// E[T_(i)] for i.i.d. exp(1) order statistics.
+pub fn expected_order_stat_exp(n: usize, i: usize) -> f64 {
+    assert!(i >= 1 && i <= n);
+    harmonic(n) - harmonic(n - i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn harmonic_values() {
+        assert!((harmonic(1) - 1.0).abs() < 1e-12);
+        assert!((harmonic(4) - (1.0 + 0.5 + 1.0 / 3.0 + 0.25)).abs() < 1e-12);
+        // ln(n) + gamma bounds
+        let n = 1000;
+        let h = harmonic(n);
+        let gamma = 0.5772156649;
+        assert!(h > (n as f64).ln() + gamma);
+        assert!(h < ((n + 1) as f64).ln() + gamma);
+    }
+
+    #[test]
+    fn order_stats_monotone_and_sum() {
+        let n = 16;
+        let mut prev = 0.0;
+        for i in 1..=n {
+            let e = expected_order_stat_exp(n, i);
+            assert!(e > prev);
+            prev = e;
+        }
+        // E[T_(N)] = H_N
+        assert!((expected_order_stat_exp(n, n) - harmonic(n)).abs() < 1e-12);
+    }
+}

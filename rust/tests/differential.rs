@@ -1,0 +1,161 @@
+//! Cross-layer differential tests: HloEngine (PJRT executing the
+//! JAX/Pallas artifacts) vs NativeEngine (pure Rust) must agree to f32
+//! tolerance on identical inputs, for every model in the catalog and
+//! every Engine method. This is the correctness keystone of the stack:
+//! pallas == jnp (pytest) and jnp == rust (here) closes the triangle.
+//!
+//! Requires `make artifacts`; tests are skipped (with a loud message)
+//! when the manifest is missing.
+
+use flanp::engine::{Engine, HloEngine, Manifest, ModelKind, NativeEngine};
+use flanp::setup;
+use flanp::util::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = setup::default_artifacts_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP differential tests: {e:#}");
+            None
+        }
+    }
+}
+
+fn rand_vec(rng: &mut Rng, n: usize, sigma: f32) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, sigma);
+    v
+}
+
+fn labels(rng: &mut Rng, meta: &flanp::engine::ModelMeta, tau: usize) -> Vec<f32> {
+    let rows = tau * meta.batch;
+    if meta.y_width() == 1 {
+        rand_vec(rng, rows, 1.0)
+    } else {
+        let mut y = vec![0.0f32; rows * meta.classes];
+        for r in 0..rows {
+            y[r * meta.classes + rng.below(meta.classes)] = 1.0;
+        }
+        y
+    }
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let denom = 1.0f32.max(x.abs()).max(y.abs());
+        worst = worst.max((x - y).abs() / denom);
+    }
+    assert!(worst <= tol, "{what}: max rel err {worst} > {tol}");
+}
+
+fn check_model(manifest: &Manifest, model: &str, tol: f32) {
+    let hlo = HloEngine::load(manifest, model).expect("load hlo engine");
+    let native = NativeEngine::new(manifest.model(model).unwrap().clone());
+    let meta = native.meta().clone();
+    let mut rng = Rng::new(0xd1ff ^ meta.param_count as u64);
+
+    let params = rand_vec(&mut rng, meta.param_count, 0.3);
+    let delta = rand_vec(&mut rng, meta.param_count, 0.05);
+    let x = rand_vec(&mut rng, meta.batch * meta.d, 1.0);
+    let y = labels(&mut rng, &meta, 1);
+    let xs = rand_vec(&mut rng, meta.tau * meta.batch * meta.d, 1.0);
+    let ys = labels(&mut rng, &meta, meta.tau);
+
+    // loss
+    let lh = hlo.loss(&params, &x, &y).unwrap();
+    let ln = native.loss(&params, &x, &y).unwrap();
+    assert_close(&[lh], &[ln], tol, &format!("{model}/loss"));
+
+    // loss + grad
+    let (glh, gh) = hlo.loss_grad(&params, &x, &y).unwrap();
+    let (gln, gn) = native.loss_grad(&params, &x, &y).unwrap();
+    assert_close(&[glh], &[gln], tol, &format!("{model}/grad.loss"));
+    assert_close(&gh, &gn, tol, &format!("{model}/grad"));
+
+    // gate step
+    let sh = hlo.gate_step(&params, &delta, &x, &y, 0.05).unwrap();
+    let sn = native.gate_step(&params, &delta, &x, &y, 0.05).unwrap();
+    assert_close(&sh, &sn, tol, &format!("{model}/gate_step"));
+
+    // fused round
+    let rh = hlo.gate_round(&params, &delta, &xs, &ys, 0.05).unwrap();
+    let rn = native.gate_round(&params, &delta, &xs, &ys, 0.05).unwrap();
+    assert_close(&rh, &rn, tol * 4.0, &format!("{model}/gate_round"));
+
+    // prox round
+    let anchor = rand_vec(&mut rng, meta.param_count, 0.3);
+    let ph = hlo.prox_round(&params, &anchor, &xs, &ys, 0.05, 0.1).unwrap();
+    let pn = native.prox_round(&params, &anchor, &xs, &ys, 0.05, 0.1).unwrap();
+    assert_close(&ph, &pn, tol * 4.0, &format!("{model}/prox_round"));
+
+    // accuracy (classification only)
+    if meta.kind != ModelKind::LinReg {
+        let ah = hlo.accuracy(&params, &x, &y).unwrap();
+        let an = native.accuracy(&params, &x, &y).unwrap();
+        assert_close(&[ah], &[an], 1e-6, &format!("{model}/accuracy"));
+    }
+}
+
+#[test]
+fn hlo_matches_native_linreg() {
+    let Some(m) = manifest() else { return };
+    check_model(&m, "linreg_d25", 2e-4);
+}
+
+#[test]
+fn hlo_matches_native_logreg() {
+    let Some(m) = manifest() else { return };
+    check_model(&m, "logreg_d784_c10", 5e-4);
+}
+
+#[test]
+fn hlo_matches_native_mlp_mnist_like() {
+    let Some(m) = manifest() else { return };
+    check_model(&m, "mlp_d784_c10_h128_h64", 2e-3);
+}
+
+#[test]
+fn hlo_matches_native_mlp_cifar_like() {
+    let Some(m) = manifest() else { return };
+    check_model(&m, "mlp_d512_c10_h128_h64", 2e-3);
+}
+
+#[test]
+fn full_run_identical_between_engines() {
+    // the strongest check: a complete FLANP run produces the same round
+    // count and near-identical trajectories on both engines
+    let Some(m) = manifest() else { return };
+    use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+
+    let mut cfg = ExperimentConfig::new(SolverKind::Flanp, "linreg_d25", 12, 50);
+    cfg.tau = 10;
+    cfg.eta = 0.05;
+    cfg.n0 = 2;
+    cfg.mu = 0.5;
+    cfg.c_stat = 0.05;
+    cfg.seed = 77;
+
+    let hlo = HloEngine::load(&m, "linreg_d25").unwrap();
+    let native = NativeEngine::new(m.model("linreg_d25").unwrap().clone());
+
+    let mut fleet1 = setup::build_fleet(hlo.meta(), &cfg, 0.1, 0.0).unwrap();
+    let t1 = run_solver(&hlo, &mut fleet1, &cfg).unwrap();
+    let mut fleet2 = setup::build_fleet(native.meta(), &cfg, 0.1, 0.0).unwrap();
+    let t2 = run_solver(&native, &mut fleet2, &cfg).unwrap();
+
+    assert_eq!(t1.rounds.len(), t2.rounds.len(), "round count");
+    assert_eq!(t1.stage_transitions, t2.stage_transitions, "stages");
+    for (a, b) in t1.rounds.iter().zip(&t2.rounds) {
+        assert!(
+            (a.loss_full - b.loss_full).abs() < 1e-4 * (1.0 + a.loss_full.abs()),
+            "round {}: {} vs {}",
+            a.round,
+            a.loss_full,
+            b.loss_full
+        );
+        assert_eq!(a.time, b.time, "virtual clock must be engine-invariant");
+    }
+}

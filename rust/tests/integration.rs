@@ -1,0 +1,222 @@
+//! End-to-end integration tests: full experiments through the public API
+//! on the native engine (fast) plus paper-shape assertions — the
+//! qualitative claims each figure makes, at CI scale.
+
+use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::data::{shard, synth};
+use flanp::engine::{Engine, NativeEngine};
+use flanp::fed::{ClientFleet, SpeedModel};
+use flanp::setup;
+use flanp::util::json::Json;
+use flanp::util::Rng;
+
+fn linreg_cfg(solver: SolverKind, n: usize, s: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(solver, "linreg_d25", n, s);
+    cfg.tau = 10;
+    cfg.eta = 0.05;
+    cfg.n0 = 2;
+    cfg.mu = 0.5;
+    cfg.c_stat = 0.5;
+    cfg.max_rounds = 1500;
+    cfg.eval_every = 5;
+    cfg.eval_rows = 500;
+    cfg.seed = 3;
+    cfg
+}
+
+fn run(cfg: &ExperimentConfig) -> flanp::fed::Trace {
+    let engine = setup::native_from_name(&cfg.model).unwrap();
+    let mut fleet = setup::build_fleet(engine.meta(), cfg, 0.1, 0.0).unwrap();
+    run_solver(&engine, &mut fleet, cfg).unwrap()
+}
+
+#[test]
+fn headline_flanp_beats_all_full_participation_benchmarks() {
+    // Figures 1-4's qualitative claim at small scale: FLANP reaches the
+    // final statistical accuracy in less simulated time than every
+    // full-participation benchmark.
+    let flanp = run(&linreg_cfg(SolverKind::Flanp, 24, 50));
+    assert!(flanp.finished);
+    for bench in [SolverKind::FedGate, SolverKind::FedAvg, SolverKind::FedNova] {
+        let t = run(&linreg_cfg(bench.clone(), 24, 50));
+        assert!(t.finished, "{} unfinished", bench.name());
+        assert!(
+            flanp.total_time < t.total_time,
+            "flanp {} !< {} {}",
+            flanp.total_time,
+            bench.name(),
+            t.total_time
+        );
+    }
+}
+
+#[test]
+fn speedup_grows_with_heterogeneity() {
+    // wider speed spread => bigger FLANP gain (the straggler premise)
+    let mut narrow_f = linreg_cfg(SolverKind::Flanp, 16, 50);
+    narrow_f.speed = SpeedModel::Uniform { lo: 240.0, hi: 280.0 };
+    let mut narrow_g = linreg_cfg(SolverKind::FedGate, 16, 50);
+    narrow_g.speed = SpeedModel::Uniform { lo: 240.0, hi: 280.0 };
+    let ratio_narrow =
+        run(&narrow_f).total_time / run(&narrow_g).total_time;
+
+    let wide_f = linreg_cfg(SolverKind::Flanp, 16, 50); // default [50,500)
+    let wide_g = linreg_cfg(SolverKind::FedGate, 16, 50);
+    let ratio_wide = run(&wide_f).total_time / run(&wide_g).total_time;
+
+    assert!(
+        ratio_wide < ratio_narrow,
+        "wide-spread ratio {ratio_wide} !< narrow {ratio_narrow}"
+    );
+}
+
+#[test]
+fn homogeneous_speed_ratio_improves_with_s() {
+    // Section 4.2's second gain is the log(Ns)/log(N) *sample-adaptivity*
+    // factor: asymptotic in s (the expressions in (4) favor FLANP only
+    // once log(5*Delta0*N*s/c) > (18 log6 / 7.5) * log2(N)). At CI scale
+    // the testable claim is the trend: with identical clients, the
+    // T_FLANP / T_FedGATE ratio must improve (decrease) as s grows, and
+    // stay within a small constant of 1.
+    let ratio = |s: usize| {
+        let mut f = linreg_cfg(SolverKind::Flanp, 16, s);
+        f.speed = SpeedModel::Homogeneous { t: 100.0 };
+        let mut g = linreg_cfg(SolverKind::FedGate, 16, s);
+        g.speed = SpeedModel::Homogeneous { t: 100.0 };
+        let tf = run(&f);
+        let tg = run(&g);
+        assert!(tf.finished && tg.finished);
+        tf.total_time / tg.total_time
+    };
+    let (r_small, r_big) = (ratio(50), ratio(200));
+    assert!(
+        r_big < r_small,
+        "homogeneous ratio did not improve with s: {r_small} -> {r_big}"
+    );
+    assert!(r_big < 2.0, "homogeneous overhead too large: {r_big}");
+}
+
+#[test]
+fn fastest_k_saturates_above_flanp() {
+    // Figure 6b: fastest-k partial participation converges fast but to a
+    // worse model (only k clients' data); FLANP reaches lower loss
+    let mut flanp_cfg = linreg_cfg(SolverKind::Flanp, 16, 50);
+    flanp_cfg.max_rounds = 600;
+    let flanp = run(&flanp_cfg);
+    let mut pk = linreg_cfg(SolverKind::FedGatePartialFastest { k: 2 }, 16, 50);
+    pk.max_rounds = 600;
+    pk.c_stat = 0.5;
+    let partial = run(&pk);
+    let lf = flanp.last().unwrap().dist_to_opt;
+    let lp = partial.last().unwrap().dist_to_opt;
+    assert!(
+        lp > lf,
+        "fastest-k dist {lp} should saturate above flanp {lf}"
+    );
+}
+
+#[test]
+fn exponential_speeds_runtime_ratio_shrinks_with_n() {
+    // Theorem 2 / Table 2 shape: T_FLANP / T_FedGATE decreases with N
+    let ratio = |n: usize| {
+        let mut f = linreg_cfg(SolverKind::Flanp, n, 50);
+        f.speed = SpeedModel::Exponential { lambda: 1.0 };
+        f.seed = 9;
+        let mut g = linreg_cfg(SolverKind::FedGate, n, 50);
+        g.speed = SpeedModel::Exponential { lambda: 1.0 };
+        g.seed = 9;
+        run(&f).total_time / run(&g).total_time
+    };
+    let (r_small, r_big) = (ratio(8), ratio(64));
+    assert!(
+        r_big < r_small,
+        "ratio at N=64 ({r_big}) !< ratio at N=8 ({r_small})"
+    );
+}
+
+#[test]
+fn trace_csv_and_json_roundtrip() {
+    let t = run(&linreg_cfg(SolverKind::Flanp, 8, 50));
+    let csv = t.to_csv();
+    assert!(csv.lines().count() == t.rounds.len() + 1);
+    assert!(csv.starts_with("round,time,participants"));
+    let j = Json::parse(&t.to_json().to_string()).unwrap();
+    assert_eq!(
+        j.req_arr("rounds").unwrap().len(),
+        t.rounds.len()
+    );
+    assert_eq!(j.req_str("algo").unwrap(), "flanp");
+}
+
+#[test]
+fn logreg_federation_learns_to_classify() {
+    // classification E2E on the native engine: accuracy well above chance
+    let mut cfg = ExperimentConfig::new(SolverKind::Flanp, "logreg_d16_c4", 8, 100);
+    cfg.tau = 5;
+    cfg.eta = 0.1;
+    cfg.n0 = 2;
+    cfg.mu = 0.01;
+    cfg.c_stat = 10.0;
+    cfg.max_rounds = 100;
+    cfg.seed = 4;
+
+    let engine = NativeEngine::logreg(16, 4, 0.01, 10, 5);
+    let mut rng = Rng::new(cfg.seed);
+    let spec = synth::MixtureSpec {
+        n: 800,
+        d: 16,
+        classes: 4,
+        separation: 3.0,
+        sigma: 1.0,
+    };
+    let ds = synth::mixture(&mut rng, &spec);
+    let shards = shard::partition_fixed_s(&mut rng, &ds, 8, 100);
+    let mut fleet = ClientFleet::new(ds, shards, &cfg.speed, &mut rng);
+    let t = run_solver(&engine, &mut fleet, &cfg).unwrap();
+    let acc = t.last().unwrap().accuracy;
+    assert!(acc > 0.8, "final accuracy {acc} <= 0.8");
+}
+
+#[test]
+fn mlp_federation_reduces_loss() {
+    // small nonconvex E2E: two-hidden-layer MLP on a mixture
+    let mut cfg =
+        ExperimentConfig::new(SolverKind::Flanp, "mlp_d16_c4_h12_h8", 6, 60);
+    cfg.tau = 5;
+    cfg.eta = 0.05;
+    cfg.n0 = 2;
+    cfg.mu = 0.01;
+    cfg.c_stat = 20.0;
+    cfg.max_rounds = 60;
+    cfg.seed = 6;
+
+    let engine = NativeEngine::mlp(16, 4, vec![12, 8], 0.01, 10, 5);
+    let mut rng = Rng::new(cfg.seed);
+    let spec = synth::MixtureSpec {
+        n: 360,
+        d: 16,
+        classes: 4,
+        separation: 2.5,
+        sigma: 1.0,
+    };
+    let ds = synth::mixture(&mut rng, &spec);
+    let shards = shard::partition_fixed_s(&mut rng, &ds, 6, 60);
+    let mut fleet = ClientFleet::new(ds, shards, &cfg.speed, &mut rng);
+    let t = run_solver(&engine, &mut fleet, &cfg).unwrap();
+    let first = t.rounds.first().unwrap().loss_full;
+    let last = t.last().unwrap().loss_full;
+    assert!(last < 0.6 * first, "mlp loss {first} -> {last}");
+}
+
+#[test]
+fn config_validation_bubbles_up() {
+    let engine = NativeEngine::linreg(5, 10, 5);
+    let mut rng = Rng::new(1);
+    let (ds, _) = synth::linreg(&mut rng, 100, 5, 0.1);
+    let shards = shard::partition_iid(&mut rng, &ds, 4);
+    let mut fleet = ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+    // s = 25 is not a multiple of batch 10 => config error
+    let cfg = ExperimentConfig::new(SolverKind::FedGate, "linreg_d5", 4, 25);
+    let err = run_solver(&engine, &mut fleet, &cfg).unwrap_err();
+    assert!(err.to_string().contains("multiple"), "{err}");
+}

@@ -1,0 +1,303 @@
+//! Property-based tests of coordinator invariants (hand-rolled harness,
+//! `flanp::util::prop`). Each property runs over randomized federation
+//! shapes, speeds and seeds; failures shrink to a minimal counterexample.
+
+use flanp::coordinator::gate::{
+    active_loss_gradsq, fedgate_round, GateState, RoundBuffers,
+};
+use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::data::{shard, synth};
+use flanp::engine::NativeEngine;
+use flanp::fed::speed::sort_fastest_first;
+use flanp::fed::{ClientFleet, SpeedModel, VirtualClock};
+use flanp::util::prop::{forall, gen_usize};
+use flanp::util::{linalg, Rng};
+
+fn fleet_of(seed: u64, n_clients: usize, s: usize, d: usize) -> (NativeEngine, ClientFleet) {
+    let mut rng = Rng::new(seed);
+    let (ds, _) = synth::linreg(&mut rng, n_clients * s, d, 0.1);
+    let shards = shard::partition_iid(&mut rng, &ds, n_clients);
+    let fleet = ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+    (NativeEngine::linreg(d, 10, 5), fleet)
+}
+
+#[test]
+fn prop_flanp_participants_monotone_and_doubling() {
+    forall(
+        101,
+        8,
+        |r| (gen_usize(r, 2, 16), gen_usize(r, 1, 3), r.next_u64()),
+        |&(n_clients, n0, seed)| {
+            if n_clients < 2 || n0 < 1 {
+                return Ok(()); // out of domain (shrunk candidates)
+            }
+            let (e, mut fleet) = fleet_of(seed, n_clients, 50, 5);
+            let mut cfg =
+                ExperimentConfig::new(SolverKind::Flanp, "linreg_d5", n_clients, 50);
+            cfg.n0 = n0.min(n_clients);
+            cfg.tau = 5;
+            cfg.mu = 0.5;
+            cfg.c_stat = 0.1;
+            cfg.max_rounds = 300;
+            cfg.seed = seed;
+            let t = run_solver(&e, &mut fleet, &cfg).map_err(|e| e.to_string())?;
+            // 1. participants never decrease
+            if !t.rounds.windows(2).all(|w| w[1].participants >= w[0].participants) {
+                return Err("participants decreased".into());
+            }
+            // 2. stage sizes follow n -> min(2n, N)
+            let sizes: Vec<usize> =
+                t.stage_transitions.iter().map(|&(_, n)| n).collect();
+            for w in sizes.windows(2) {
+                if w[1] != (2 * w[0]).min(n_clients) {
+                    return Err(format!("stage sizes {sizes:?} not doubling"));
+                }
+            }
+            // 3. virtual time strictly increases
+            if !t.rounds.windows(2).all(|w| w[1].time > w[0].time) {
+                return Err("virtual clock not monotone".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_flanp_active_prefix_is_fastest() {
+    forall(
+        102,
+        10,
+        |r| (gen_usize(r, 3, 24), r.next_u64()),
+        |&(n_clients, seed)| {
+            let (_, fleet) = fleet_of(seed, n_clients, 20, 4);
+            // fastest(k) must be exactly the k smallest speeds
+            for k in 1..=n_clients {
+                let chosen = fleet.speeds_of(fleet.fastest(k));
+                let mut all = fleet.speeds.clone();
+                all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let max_chosen = chosen.iter().cloned().fold(0.0f64, f64::max);
+                if max_chosen > all[k - 1] + 1e-12 {
+                    return Err(format!("fastest({k}) includes speed {max_chosen}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tracking_sum_invariant() {
+    // sum_i delta_i over the ACTIVE set stays ~0 through any number of
+    // rounds (the gradient-tracking correction is mean-preserving)
+    forall(
+        103,
+        6,
+        |r| (gen_usize(r, 2, 10), gen_usize(r, 1, 12), r.next_u64()),
+        |&(n_clients, rounds, seed)| {
+            let (_, mut fleet) = fleet_of(seed, n_clients, 30, 4);
+            let e = NativeEngine::linreg(4, 10, 5);
+            let active: Vec<usize> = (0..n_clients).collect();
+            let mut state = GateState::new(vec![0.05; 5], n_clients);
+            let mut bufs = RoundBuffers::new(&e, 5);
+            for _ in 0..rounds {
+                fedgate_round(&e, &mut fleet, &mut state, &active, 5, 0.05, 1.0, &mut bufs)
+                    .map_err(|er| er.to_string())?;
+            }
+            for k in 0..state.w.len() {
+                let s: f64 = state.deltas.iter().map(|d| d[k] as f64).sum();
+                if s.abs() > 1e-3 {
+                    return Err(format!("tracking sum drifted to {s}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_clock_round_cost_formula() {
+    forall(
+        104,
+        50,
+        |r| {
+            let n = gen_usize(r, 1, 12);
+            let speeds: Vec<usize> =
+                (0..n).map(|_| gen_usize(r, 1, 1000)).collect();
+            (speeds, gen_usize(r, 1, 30))
+        },
+        |(speeds, tau)| {
+            let fs: Vec<f64> = speeds.iter().map(|&s| s as f64).collect();
+            let mut clock = VirtualClock::new();
+            let cost = clock.advance_round(&fs, *tau);
+            let expect = *tau as f64 * fs.iter().cloned().fold(0.0, f64::max);
+            if (cost - expect).abs() > 1e-9 {
+                return Err(format!("cost {cost} != {expect}"));
+            }
+            if clock.now() != cost {
+                return Err("clock.now() != first round cost".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sort_fastest_first_is_sorting_network() {
+    forall(
+        105,
+        60,
+        |r| {
+            let n = gen_usize(r, 1, 40);
+            (0..n).map(|_| gen_usize(r, 0, 10_000)).collect::<Vec<usize>>()
+        },
+        |speeds| {
+            let fs: Vec<f64> = speeds.iter().map(|&s| s as f64).collect();
+            let order = sort_fastest_first(&fs);
+            // permutation
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            if sorted != (0..fs.len()).collect::<Vec<_>>() {
+                return Err("not a permutation".into());
+            }
+            // non-decreasing speeds
+            let ordered: Vec<f64> = order.iter().map(|&i| fs[i]).collect();
+            if !ordered.windows(2).all(|w| w[0] <= w[1]) {
+                return Err("not sorted".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_aggregation_linearity() {
+    // mean_of(accumulate(xs)) == elementwise mean, for any shapes
+    forall(
+        106,
+        40,
+        |r| (gen_usize(r, 1, 8), gen_usize(r, 1, 50), r.next_u64()),
+        |&(k, p, seed)| {
+            let mut rng = Rng::new(seed);
+            let vecs: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..p).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let mut acc = vec![0.0f64; p];
+            for v in &vecs {
+                linalg::accumulate(&mut acc, v);
+            }
+            let mean = linalg::mean_of(&acc, k);
+            for j in 0..p {
+                let want: f64 =
+                    vecs.iter().map(|v| v[j] as f64).sum::<f64>() / k as f64;
+                if (mean[j] as f64 - want).abs() > 1e-5 {
+                    return Err(format!("mean[{j}] {} != {want}", mean[j]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gradient_of_active_set_is_mean_of_locals() {
+    forall(
+        107,
+        6,
+        |r| (gen_usize(r, 1, 6), r.next_u64()),
+        |&(n_active, seed)| {
+            let (e, fleet) = fleet_of(seed, 6, 30, 4);
+            let active: Vec<usize> = (0..n_active).collect();
+            let w = vec![0.1f32; 5];
+            let (_, gsq) = active_loss_gradsq(&e, &fleet, &active, &w)
+                .map_err(|er| er.to_string())?;
+            // manual recomputation
+            let mut acc = vec![0.0f64; 5];
+            for &i in &active {
+                let (_, gi) = flanp::engine::full_loss_grad(&e, &fleet, i, &w)
+                    .map_err(|er| er.to_string())?;
+                linalg::accumulate(&mut acc, &gi);
+            }
+            let want: f64 = acc
+                .iter()
+                .map(|g| (g / n_active as f64).powi(2))
+                .sum();
+            if (gsq - want).abs() > 1e-9 * (1.0 + want) {
+                return Err(format!("gradsq {gsq} != {want}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_determinism_across_identical_runs() {
+    forall(
+        108,
+        4,
+        |r| (gen_usize(r, 2, 8), r.next_u64() % 1000),
+        |&(n_clients, seed)| {
+            let run = || {
+                let (_, mut fleet) = fleet_of(seed, n_clients, 30, 4);
+                let e = NativeEngine::linreg(4, 10, 5);
+                let mut cfg = ExperimentConfig::new(
+                    SolverKind::FedGate,
+                    "linreg_d4",
+                    n_clients,
+                    30,
+                );
+                cfg.tau = 5;
+                cfg.mu = 0.5;
+                cfg.c_stat = 0.1;
+                cfg.max_rounds = 20;
+                cfg.seed = seed;
+                run_solver(&e, &mut fleet, &cfg).map_err(|er| er.to_string())
+            };
+            let (a, b) = (run()?, run()?);
+            if a.rounds.len() != b.rounds.len() {
+                return Err("round counts differ".into());
+            }
+            for (x, y) in a.rounds.iter().zip(&b.rounds) {
+                if x.loss_full != y.loss_full || x.time != y.time {
+                    return Err(format!(
+                        "round {} diverged: {} vs {}",
+                        x.round, x.loss_full, y.loss_full
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partial_fastest_round_cost_bounded_by_kth_speed() {
+    forall(
+        109,
+        5,
+        |r| (gen_usize(r, 4, 10), gen_usize(r, 1, 3), r.next_u64()),
+        |&(n_clients, k, seed)| {
+            let (_, mut fleet) = fleet_of(seed, n_clients, 30, 4);
+            let mut cfg = ExperimentConfig::new(
+                SolverKind::FedGatePartialFastest { k },
+                "linreg_d4",
+                n_clients,
+                30,
+            );
+            cfg.tau = 5;
+            cfg.mu = 0.5;
+            cfg.c_stat = 1e-12; // never finish; measure timing only
+            cfg.max_rounds = 5;
+            cfg.seed = seed;
+            let kth = fleet.speeds_of(fleet.fastest(k)).iter().cloned().fold(0.0, f64::max);
+            let e = NativeEngine::linreg(4, 10, 5);
+            let t = run_solver(&e, &mut fleet, &cfg).map_err(|er| er.to_string())?;
+            for w in t.rounds.windows(2) {
+                let dt = w[1].time - w[0].time;
+                if (dt - 5.0 * kth).abs() > 1e-9 {
+                    return Err(format!("round cost {dt} != tau*T_(k) {}", 5.0 * kth));
+                }
+            }
+            Ok(())
+        },
+    );
+}
