@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
             cfg.n0 = 2;
             cfg.mu = 0.5;
             cfg.c_stat = 0.5;
-            cfg.speed = speed.clone();
+            cfg.system = speed.clone().into();
             cfg.seed = 11;
             cfg.max_rounds = 2000;
             cfg.eval_every = 5;

@@ -1,0 +1,76 @@
+//! Time-varying system heterogeneity: the scenarios `fed::system` opens
+//! beyond the paper's static speed draws.
+//!
+//! The seed sorted clients by a single oracle draw; FLANP now re-ranks
+//! its fastest-prefix at every stage boundary from TiFL-style online
+//! EWMA estimates of observed round times. This demo runs FLANP (with
+//! and without estimation) against full-participation FedGATE under
+//! four scenarios — static, per-round log-normal jitter, two-state
+//! Markov fast/slow drift, and Markov drift with 5% round dropouts —
+//! and prints the simulated wall-clock each needs to reach the same
+//! statistical accuracy, plus the dropout totals the event-driven clock
+//! recorded.
+//!
+//!   cargo run --release --example time_varying_speeds
+
+use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::fed::SystemModel;
+use flanp::setup;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = setup::default_artifacts_dir();
+    let engine = setup::build_engine("native", "linreg_d25", &artifacts)?;
+
+    let scenarios = [
+        ("static (paper)", "uniform:50:500"),
+        ("jitter 30%", "jitter:0.3:uniform:50:500"),
+        ("markov 4x drift", "markov:4:0.1:0.5:uniform:50:500"),
+        ("drift + dropout", "drop:0.05:markov:4:0.1:0.5:uniform:50:500"),
+    ];
+
+    for (label, spec) in scenarios {
+        let system = SystemModel::parse(spec).map_err(anyhow::Error::msg)?;
+        println!("== scenario: {label}  ({spec}) ==");
+        let mut fedgate_time = None;
+        for (name, solver, estimate) in [
+            ("fedgate", SolverKind::FedGate, true),
+            ("flanp", SolverKind::Flanp, true),
+            ("flanp-oracle", SolverKind::Flanp, false),
+        ] {
+            let mut cfg = ExperimentConfig::new(solver, "linreg_d25", 32, 100);
+            cfg.tau = 10;
+            cfg.eta = 0.05;
+            cfg.n0 = 2;
+            cfg.mu = 0.5;
+            cfg.c_stat = 0.5;
+            cfg.system = system.clone();
+            cfg.estimate_speeds = estimate;
+            cfg.seed = 17;
+            cfg.max_rounds = 3000;
+            cfg.eval_every = 5;
+            cfg.eval_rows = 500;
+
+            let mut fleet = setup::build_fleet(engine.meta(), &cfg, 0.1, 0.0)?;
+            let trace = run_solver(engine.as_ref(), &mut fleet, &cfg)?;
+            let last = trace.last().unwrap();
+            let dropped: usize = trace.rounds.iter().map(|r| r.dropped).sum();
+            if name == "fedgate" {
+                fedgate_time = Some(trace.total_time);
+            }
+            let vs = fedgate_time
+                .map(|t| format!("{:>5.2}x fedgate", trace.total_time / t))
+                .unwrap_or_default();
+            println!(
+                "  {name:<13} rounds={:<5} sim-time={:<12.1} ||w-w*||={:<8.4} \
+                 dropped={dropped:<4} finished={} {vs}",
+                last.round, trace.total_time, last.dist_to_opt, trace.finished,
+            );
+        }
+    }
+    println!(
+        "\nFLANP's advantage persists under drift because the online \
+         estimator keeps the active prefix aligned with the CURRENTLY \
+         fastest clients; `flanp-oracle` ranks by the stale initial draw."
+    );
+    Ok(())
+}

@@ -2,7 +2,7 @@
 //! evaluation (Section 5). One subcommand per experiment; see DESIGN.md §5
 //! for the mapping and EXPERIMENTS.md for recorded paper-vs-measured runs.
 //!
-//!   flanp-bench fig1 .. fig9 | table1 | table2 | all [options]
+//!   flanp-bench fig1 .. fig9 | table1 | table2 | scenarios | all [options]
 //!
 //! Options:
 //!   --quick           reduced sizes (CI-scale; shapes still hold)
@@ -10,6 +10,13 @@
 //!   --out DIR         CSV trace directory     [results]
 //!   --seed N          PRNG seed               [1]
 //!   --trials N        seeds averaged for tables [3]
+//!   --speed SPEC      override every experiment's system-heterogeneity
+//!                     scenario (same grammar as `flanp run --speed`,
+//!                     e.g. markov:4:0.1:0.5:uniform:50:500)
+//!
+//! `scenarios` sweeps FLANP vs FedGATE across the time-varying
+//! heterogeneity scenarios opened by fed::system (static / jitter /
+//! Markov drift / dropout).
 //!
 //! Measured "time" is the simulated wall-clock of the paper's timing
 //! model (round cost = tau * max participant T_i) — the same units the
@@ -19,7 +26,7 @@ use anyhow::{Context, Result};
 use flanp::coordinator::config::Subroutine;
 use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
 use flanp::engine::Engine;
-use flanp::fed::{SpeedModel, Trace};
+use flanp::fed::{SpeedModel, SystemModel, Trace};
 use flanp::setup;
 use flanp::util::cli::Args;
 use std::path::PathBuf;
@@ -30,6 +37,8 @@ struct BenchOpts {
     out: PathBuf,
     seed: u64,
     trials: usize,
+    /// global scenario override (--speed)
+    system: Option<SystemModel>,
 }
 
 fn main() {
@@ -41,7 +50,7 @@ fn main() {
 
 const EXPS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6a", "fig6b", "fig7",
-    "fig8", "fig9", "table1", "table2", "ablate", "all",
+    "fig8", "fig9", "table1", "table2", "ablate", "scenarios", "all",
 ];
 
 fn real_main() -> Result<()> {
@@ -56,6 +65,11 @@ fn real_main() -> Result<()> {
         out: PathBuf::from(args.flag_str("out", "results")),
         seed: args.flag_usize("seed", 1).map_err(|e| anyhow::anyhow!(e))? as u64,
         trials: args.flag_usize("trials", 3).map_err(|e| anyhow::anyhow!(e))?,
+        system: args
+            .flag_opt("speed")
+            .map(|s| SystemModel::parse(&s))
+            .transpose()
+            .map_err(|e| anyhow::anyhow!(e))?,
     };
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
     std::fs::create_dir_all(&opts.out)?;
@@ -72,6 +86,7 @@ fn real_main() -> Result<()> {
         "fig8" | "table2" => table2(&opts)?,
         "fig9" => fig9(&opts)?,
         "ablate" => ablate(&opts)?,
+        "scenarios" => scenarios(&opts)?,
         "all" => {
             fig1(&opts)?;
             fig2(&opts)?;
@@ -95,8 +110,14 @@ fn real_main() -> Result<()> {
 // ---------------------------------------------------------------------------
 
 /// Run one config and return its trace (building engine + fleet fresh so
-/// every algorithm sees identical data and speeds for a given seed).
+/// every algorithm sees identical data and speeds for a given seed). A
+/// `--speed` override replaces the experiment's scenario wholesale.
 fn run_one(opts: &BenchOpts, cfg: &ExperimentConfig, tag: &str) -> Result<Trace> {
+    let mut cfg = cfg.clone();
+    if let Some(system) = &opts.system {
+        cfg.system = system.clone();
+    }
+    let cfg = &cfg;
     let engine: Box<dyn Engine> = setup::build_engine(
         &opts.engine,
         &cfg.model,
@@ -316,7 +337,7 @@ fn fig5(opts: &BenchOpts) -> Result<()> {
         cfg.eta = 0.05;
         cfg.tau = 10;
         cfg.n0 = 2;
-        cfg.speed = SpeedModel::Exponential { lambda: 1.0 / 275.0 };
+        cfg.system = SpeedModel::Exponential { lambda: 1.0 / 275.0 }.into();
         cfg.seed = opts.seed;
         cfg.max_rounds = 50 * rounds;
         cfg.max_time = time_budget(rounds, cfg.tau);
@@ -399,7 +420,7 @@ fn runtime_pair(opts: &BenchOpts, n: usize, s: usize, tag: &str) -> Result<(f64,
             cfg.eta = 0.05;
             cfg.tau = 10;
             cfg.n0 = 2;
-            cfg.speed = SpeedModel::Exponential { lambda: 1.0 / 275.0 };
+            cfg.system = SpeedModel::Exponential { lambda: 1.0 / 275.0 }.into();
             cfg.seed = opts.seed + trial as u64;
             cfg.max_rounds = 3000;
             cfg.eval_rows = 500;
@@ -499,6 +520,69 @@ fn fig9(opts: &BenchOpts) -> Result<()> {
         heur / oracle,
         if heur <= oracle * 2.0 { "tracks oracle (Fig 9)" } else { "diverges" }
     );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Scenarios — time-varying heterogeneity (fed::system): FLANP's online
+// speed estimation vs full-participation FedGATE under drift and dropout
+// ---------------------------------------------------------------------------
+
+fn scenarios(opts: &BenchOpts) -> Result<()> {
+    // each row runs its OWN spec; a global override would silently turn
+    // the sweep into four identical, mislabeled runs
+    anyhow::ensure!(
+        opts.system.is_none(),
+        "--speed conflicts with the scenarios sweep (it runs a fixed scenario grid)"
+    );
+    println!("=== Scenarios: FLANP (online estimation) vs FedGATE under drift ===");
+    let (n, s, rounds) = if opts.quick { (12, 50, 800) } else { (32, 100, 3000) };
+    let specs = [
+        ("static", "uniform:50:500"),
+        ("jitter", "jitter:0.3:uniform:50:500"),
+        ("markov", "markov:4:0.1:0.5:uniform:50:500"),
+        ("markov+drop", "drop:0.05:markov:4:0.1:0.5:uniform:50:500"),
+    ];
+    println!(
+        "  {:>14} {:>14} {:>14} {:>10} {:>15}",
+        "scenario", "T_FLANP", "T_FedGATE", "ratio", "dropped(f/g)"
+    );
+    for (label, spec) in specs {
+        let system = SystemModel::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+        let mut times = [0.0f64; 2];
+        let mut dropped = [0usize; 2];
+        for (slot, solver) in [SolverKind::Flanp, SolverKind::FedGate]
+            .into_iter()
+            .enumerate()
+        {
+            let mut cfg = ExperimentConfig::new(solver, "linreg_d25", n, s);
+            cfg.eta = 0.05;
+            cfg.tau = 10;
+            cfg.n0 = 2;
+            cfg.mu = 0.5;
+            cfg.c_stat = 0.5;
+            cfg.system = system.clone();
+            cfg.seed = opts.seed;
+            cfg.max_rounds = rounds;
+            cfg.eval_every = 5;
+            cfg.eval_rows = 500;
+            let trace = run_one(opts, &cfg, &format!("scenario_{label}"))?;
+            anyhow::ensure!(
+                trace.finished,
+                "{} did not reach statistical accuracy under {spec}",
+                cfg.solver.name()
+            );
+            times[slot] = trace.total_time;
+            dropped[slot] = trace.rounds.iter().map(|r| r.dropped).sum::<usize>();
+        }
+        println!(
+            "  {label:>14} {:>14.1} {:>14.1} {:>10.2} {:>15}",
+            times[0],
+            times[1],
+            times[0] / times[1],
+            format!("{}/{}", dropped[0], dropped[1]),
+        );
+    }
     Ok(())
 }
 

@@ -1,6 +1,6 @@
 //! Experiment configuration: every knob of every figure in one struct.
 
-use crate::fed::SpeedModel;
+use crate::fed::{SpeedModel, SystemModel};
 
 /// Which algorithm drives the run.
 #[derive(Clone, Debug, PartialEq)]
@@ -93,7 +93,15 @@ pub struct ExperimentConfig {
     pub c_stat: f64,
     /// FedProx proximal coefficient
     pub prox_mu: f32,
-    pub speed: SpeedModel,
+    /// system-heterogeneity scenario: base speed draw + per-round
+    /// dynamics + dropout (plain [`SpeedModel`]s convert via `.into()`)
+    pub system: SystemModel,
+    /// FLANP ranks its fastest-prefix from the online EWMA speed
+    /// estimates (TiFL-style) instead of oracle speeds. Under static
+    /// scenarios both rankings are identical bit-for-bit.
+    pub estimate_speeds: bool,
+    /// EWMA smoothing of the online speed estimator, in (0, 1]
+    pub ewma_alpha: f64,
     pub seed: u64,
     pub max_rounds: usize,
     /// virtual-time budget (0 = unlimited)
@@ -144,7 +152,9 @@ impl ExperimentConfig {
             mu: 0.01,
             c_stat: 1.0,
             prox_mu: 0.1,
-            speed: SpeedModel::paper_uniform(),
+            system: SpeedModel::paper_uniform().into(),
+            estimate_speeds: true,
+            ewma_alpha: crate::fed::DEFAULT_EWMA_ALPHA,
             seed: 1,
             max_rounds: 400,
             max_time: 0.0,
@@ -210,6 +220,13 @@ impl ExperimentConfig {
         if self.eta <= 0.0 || self.gamma <= 0.0 {
             return Err("stepsizes must be positive".into());
         }
+        self.system.validate()?;
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            return Err(format!(
+                "ewma_alpha = {} outside (0, 1]",
+                self.ewma_alpha
+            ));
+        }
         if matches!(
             self.solver,
             SolverKind::FedGatePartialRandom { k: 0 }
@@ -263,6 +280,20 @@ mod tests {
         cfg.n0 = 2;
         cfg.solver = SolverKind::FedGatePartialRandom { k: 20 };
         assert!(cfg.validate(10).is_err());
+        cfg.solver = SolverKind::Flanp;
+        cfg.ewma_alpha = 0.0;
+        assert!(cfg.validate(10).is_err());
+        cfg.ewma_alpha = 0.25;
+        cfg.system.p_drop = 1.0;
+        assert!(cfg.validate(10).is_err());
+    }
+
+    #[test]
+    fn scenario_configs_validate() {
+        let mut cfg = ExperimentConfig::new(SolverKind::Flanp, "m", 10, 100);
+        cfg.system =
+            SystemModel::parse("drop:0.05:markov:4:0.1:0.5:uniform:50:500").unwrap();
+        assert!(cfg.validate(10).is_ok());
     }
 
     #[test]

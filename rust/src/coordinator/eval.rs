@@ -153,8 +153,12 @@ mod tests {
         let mut rng = Rng::new(3);
         let (ds, _) = synth::linreg(&mut rng, 200, 5, 0.1);
         let shards = shard::partition_iid(&mut rng, &ds, 10);
-        let fleet =
-            ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+        let fleet = ClientFleet::new(
+            ds,
+            shards,
+            &SpeedModel::paper_uniform().into(),
+            &mut rng,
+        );
         (NativeEngine::linreg(5, 10, 2), fleet)
     }
 

@@ -41,9 +41,10 @@ pub fn run_flanp(
     let mut n = cfg.n0.min(n_total);
     let mut stage = 0usize;
     'stages: loop {
-        // stage setup: fastest-n prefix, fresh tracking, stage stepsizes
-        let active = fleet.fastest(n).to_vec();
-        let speeds = fleet.speeds_of(&active);
+        // stage setup: fastest-n prefix (re-ranked from the online speed
+        // estimates at every stage boundary — TiFL-style — unless the
+        // oracle ranking is forced), fresh tracking, stage stepsizes
+        let active = fleet.active_prefix(n, cfg.estimate_speeds);
         state.reset_tracking();
         if !cfg.warm_start && stage > 0 {
             // ablation: discard the previous stage's model (Prop. 1 off)
@@ -61,34 +62,49 @@ pub fn run_flanp(
             if heuristic {
                 heur.observe_initial(g0);
             }
-            ctx.record(&state.w, n, stage, l0, g0)?;
+            ctx.record(&state.w, n, stage, l0, g0, 0)?;
         }
 
         loop {
-            match cfg.subroutine {
-                Subroutine::Gate => fedgate_round(
-                    engine, fleet, &mut state, &active, cfg.tau, eta, gamma,
-                    &mut bufs,
-                )?,
-                Subroutine::Avg => {
-                    // Remark 1: FLANP over plain FedAvg — tau local SGD
-                    // steps (zero tracking) then model averaging
-                    let p = state.w.len();
-                    let zero = vec![0.0f32; p];
-                    let mut acc = vec![0.0f64; p];
-                    for &i in &active {
-                        let wi = local_round(
-                            engine, fleet, i, &state.w, &zero, cfg.tau, eta,
-                            &mut bufs,
-                        )?;
-                        linalg::accumulate(&mut acc, &wi);
+            // realize this round's system conditions (event-driven: the
+            // process advances for every client, active or not) and
+            // split the cohort into arrivals vs dropouts
+            let (cond, participants) = fleet.realize_round(&active);
+            if !participants.is_empty() {
+                match cfg.subroutine {
+                    Subroutine::Gate => fedgate_round(
+                        engine, fleet, &mut state, &participants, cfg.tau,
+                        eta, gamma, &mut bufs,
+                    )?,
+                    Subroutine::Avg => {
+                        // Remark 1: FLANP over plain FedAvg — tau local SGD
+                        // steps (zero tracking) then model averaging
+                        let p = state.w.len();
+                        let zero = vec![0.0f32; p];
+                        let mut acc = vec![0.0f64; p];
+                        for &i in &participants {
+                            let wi = local_round(
+                                engine, fleet, i, &state.w, &zero, cfg.tau,
+                                eta, &mut bufs,
+                            )?;
+                            linalg::accumulate(&mut acc, &wi);
+                        }
+                        state.w = linalg::mean_of(&acc, participants.len());
                     }
-                    state.w = linalg::mean_of(&acc, active.len());
                 }
             }
-            ctx.clock.advance_round(&speeds, cfg.tau);
+            // dropped clients hold the round open until the deadline, so
+            // the server's wait is the max over the whole intended cohort
+            let times: Vec<f64> = active.iter().map(|&i| cond.times[i]).collect();
+            let ev = ctx.clock.charge_round(
+                &active,
+                &times,
+                cfg.tau,
+                active.len() - participants.len(),
+            );
+            fleet.observe_round(&participants, &cond);
             let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
-            ctx.record(&state.w, n, stage, loss, gsq)?;
+            ctx.record(&state.w, n, stage, loss, gsq, ev.dropped)?;
 
             let done = if heuristic {
                 heur.is_initialized() && heur.stage_done(n, gsq)
@@ -143,8 +159,12 @@ mod tests {
         let mut rng = Rng::new(seed);
         let (ds, _) = synth::linreg(&mut rng, n_clients * s, 5, 0.05);
         let shards = shard::partition_iid(&mut rng, &ds, n_clients);
-        let fleet =
-            ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+        let fleet = ClientFleet::new(
+            ds,
+            shards,
+            &SpeedModel::paper_uniform().into(),
+            &mut rng,
+        );
         (NativeEngine::linreg(5, 10, 5), fleet)
     }
 
@@ -314,8 +334,12 @@ pub(crate) mod tests_support {
         let mut rng = Rng::new(seed);
         let (ds, _) = synth::linreg(&mut rng, n_clients * s, 5, 0.05);
         let shards = shard::partition_iid(&mut rng, &ds, n_clients);
-        let fleet =
-            ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+        let fleet = ClientFleet::new(
+            ds,
+            shards,
+            &SpeedModel::paper_uniform().into(),
+            &mut rng,
+        );
         (NativeEngine::linreg(5, 10, 5), fleet)
     }
 

@@ -242,8 +242,12 @@ mod tests {
         let mut rng = Rng::new(11);
         let (ds, _) = synth::linreg(&mut rng, 400, 5, 0.05);
         let shards = shard::partition_iid(&mut rng, &ds, 8);
-        let fleet =
-            ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+        let fleet = ClientFleet::new(
+            ds,
+            shards,
+            &SpeedModel::paper_uniform().into(),
+            &mut rng,
+        );
         (NativeEngine::linreg(5, 10, 3), fleet)
     }
 

@@ -66,7 +66,8 @@ impl<'a> RunContext<'a> {
 
     /// Evaluate + append one trace row. `loss_active`/`grad_sq` are the
     /// active-set objective stats already computed by the solver (NaN if
-    /// unavailable this round).
+    /// unavailable this round); `dropped` is the round's dropout count
+    /// from the clock's [`crate::fed::RoundEvent`].
     pub fn record(
         &mut self,
         w: &[f32],
@@ -74,6 +75,7 @@ impl<'a> RunContext<'a> {
         stage: usize,
         loss_active: f64,
         grad_sq: f64,
+        dropped: usize,
     ) -> Result<()> {
         let round = self.trace.rounds.len();
         let evaluate = round % self.cfg.eval_every.max(1) == 0;
@@ -99,6 +101,7 @@ impl<'a> RunContext<'a> {
             dist_to_opt: self.eval.dist_to_opt(w),
             accuracy,
             stage,
+            dropped,
         });
         Ok(())
     }
@@ -166,18 +169,29 @@ fn run_fedgate_full(
     let mut ctx = RunContext::new(engine, cfg, &eval);
     let n = fleet.num_clients();
     let active: Vec<usize> = (0..n).collect();
-    let speeds = fleet.speeds_of(&active);
     let mut state = GateState::new(init_params(engine, cfg.seed), n);
     let mut bufs = RoundBuffers::new(engine, cfg.tau);
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
-    ctx.record(&state.w, n, 0, l0, g0)?;
+    ctx.record(&state.w, n, 0, l0, g0, 0)?;
     loop {
-        fedgate_round(engine, fleet, &mut state, &active, cfg.tau, cfg.eta, cfg.gamma, &mut bufs)?;
-        ctx.clock.advance_round(&speeds, cfg.tau);
+        let (cond, participants) = fleet.realize_round(&active);
+        if !participants.is_empty() {
+            fedgate_round(
+                engine, fleet, &mut state, &participants, cfg.tau, cfg.eta,
+                cfg.gamma, &mut bufs,
+            )?;
+        }
+        let ev = ctx.clock.charge_round(
+            &active,
+            &cond.times,
+            cfg.tau,
+            active.len() - participants.len(),
+        );
+        fleet.observe_round(&participants, &cond);
         let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
-        ctx.record(&state.w, n, 0, loss, gsq)?;
+        ctx.record(&state.w, n, 0, loss, gsq, ev.dropped)?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -205,7 +219,6 @@ fn run_model_average(
     let mut ctx = RunContext::new(engine, cfg, &eval);
     let n = fleet.num_clients();
     let active: Vec<usize> = (0..n).collect();
-    let speeds = fleet.speeds_of(&active);
     let p = engine.meta().param_count;
     let mut w = init_params(engine, cfg.seed);
     let zero_delta = vec![0.0f32; p];
@@ -214,10 +227,11 @@ fn run_model_average(
     let meta = engine.meta();
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
-    ctx.record(&w, n, 0, l0, g0)?;
+    ctx.record(&w, n, 0, l0, g0, 0)?;
     loop {
+        let (cond, participants) = fleet.realize_round(&active);
         let mut acc = vec![0.0f64; p];
-        for &i in &active {
+        for &i in &participants {
             let wi = match local {
                 Local::Sgd => {
                     local_round(engine, fleet, i, &w, &zero_delta, cfg.tau, cfg.eta, &mut bufs)?
@@ -245,10 +259,18 @@ fn run_model_average(
             };
             linalg::accumulate(&mut acc, &wi);
         }
-        w = linalg::mean_of(&acc, n);
-        ctx.clock.advance_round(&speeds, cfg.tau);
+        if !participants.is_empty() {
+            w = linalg::mean_of(&acc, participants.len());
+        }
+        let ev = ctx.clock.charge_round(
+            &active,
+            &cond.times,
+            cfg.tau,
+            active.len() - participants.len(),
+        );
+        fleet.observe_round(&participants, &cond);
         let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &w)?;
-        ctx.record(&w, n, 0, loss, gsq)?;
+        ctx.record(&w, n, 0, loss, gsq, ev.dropped)?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -271,22 +293,7 @@ fn run_fednova(
     let mut ctx = RunContext::new(engine, cfg, &eval);
     let n = fleet.num_clients();
     let active: Vec<usize> = (0..n).collect();
-    let speeds = fleet.speeds_of(&active);
     let p = engine.meta().param_count;
-
-    // Wang et al.'s deadline setup: the round window fits tau local
-    // steps of the SLOWEST client (every client trains for the same
-    // wall-clock window; the server normalizes the heterogeneous tau_i).
-    // tau_i is capped at 2*tau: with i.i.d. synthetic shards the local
-    // drift that penalizes huge tau_i in real federations is mild, so an
-    // uncapped window would overstate FedNova (DESIGN.md §6).
-    let max_t = speeds.iter().cloned().fold(0.0f64, f64::max);
-    let window = cfg.tau as f64 * max_t;
-    let taus: Vec<usize> = speeds
-        .iter()
-        .map(|t| ((window / t).floor() as usize).clamp(1, 2 * cfg.tau))
-        .collect();
-    let tau_eff = taus.iter().sum::<usize>() as f64 / n as f64;
 
     let mut w = init_params(engine, cfg.seed);
     let zero_delta = vec![0.0f32; p];
@@ -294,25 +301,55 @@ fn run_fednova(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
-    ctx.record(&w, n, 0, l0, g0)?;
+    ctx.record(&w, n, 0, l0, g0, 0)?;
     loop {
-        // normalized update: d_i = (w - w_i) / (eta * tau_i)
-        let mut acc = vec![0.0f64; p];
-        for (idx, &i) in active.iter().enumerate() {
-            let wi = local_round(
-                engine, fleet, i, &w, &zero_delta, taus[idx], cfg.eta, &mut bufs,
-            )?;
-            let inv = 1.0 / (cfg.eta * taus[idx] as f32);
-            let di: Vec<f32> =
-                w.iter().zip(&wi).map(|(a, b)| (a - b) * inv).collect();
-            linalg::accumulate(&mut acc, &di);
+        // Wang et al.'s deadline setup, re-derived each round from the
+        // REALIZED speeds: the round window fits tau local steps of the
+        // slowest client (every client trains for the same wall-clock
+        // window; the server normalizes the heterogeneous tau_i).
+        // tau_i is capped at 2*tau: with i.i.d. synthetic shards the
+        // local drift that penalizes huge tau_i in real federations is
+        // mild, so an uncapped window would overstate FedNova
+        // (DESIGN.md §6). Under a static scenario every round derives
+        // the seed's original constants.
+        let (cond, participants) = fleet.realize_round(&active);
+        let max_t = cond.times.iter().cloned().fold(0.0f64, f64::max);
+        let window = cfg.tau as f64 * max_t;
+        let taus: Vec<usize> = cond
+            .times
+            .iter()
+            .map(|t| ((window / t).floor() as usize).clamp(1, 2 * cfg.tau))
+            .collect();
+
+        if !participants.is_empty() {
+            let tau_eff = participants.iter().map(|&i| taus[i]).sum::<usize>()
+                as f64
+                / participants.len() as f64;
+            // normalized update: d_i = (w - w_i) / (eta * tau_i)
+            let mut acc = vec![0.0f64; p];
+            for &i in &participants {
+                let wi = local_round(
+                    engine, fleet, i, &w, &zero_delta, taus[i], cfg.eta,
+                    &mut bufs,
+                )?;
+                let inv = 1.0 / (cfg.eta * taus[i] as f32);
+                let di: Vec<f32> =
+                    w.iter().zip(&wi).map(|(a, b)| (a - b) * inv).collect();
+                linalg::accumulate(&mut acc, &di);
+            }
+            let d_avg = linalg::mean_of(&acc, participants.len());
+            // w <- w - eta * tau_eff * mean_i d_i
+            linalg::axpy(-(cfg.eta * tau_eff as f32), &d_avg, &mut w);
         }
-        let d_avg = linalg::mean_of(&acc, n);
-        // w <- w - eta * tau_eff * mean_i d_i
-        linalg::axpy(-(cfg.eta * tau_eff as f32), &d_avg, &mut w);
-        ctx.clock.advance_round_hetero(&speeds, &taus);
+        let ev = ctx.clock.charge_round_hetero(
+            &active,
+            &cond.times,
+            &taus,
+            active.len() - participants.len(),
+        );
+        fleet.observe_round(&participants, &cond);
         let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &w)?;
-        ctx.record(&w, n, 0, loss, gsq)?;
+        ctx.record(&w, n, 0, loss, gsq, ev.dropped)?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -345,18 +382,33 @@ fn run_fedgate_partial(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
-    ctx.record(&state.w, k, 0, l0, g0)?;
+    ctx.record(&state.w, k, 0, l0, g0, 0)?;
     loop {
+        // chosen from the oracle ordering (the paper's baseline — only
+        // FLANP gets the online estimator), then realized conditions
+        // split arrivals from dropouts
         let active: Vec<usize> = if fastest {
             fleet.fastest(k).to_vec()
         } else {
             rng.sample_indices(n, k)
         };
-        fedgate_round(engine, fleet, &mut state, &active, cfg.tau, cfg.eta, cfg.gamma, &mut bufs)?;
-        let speeds = fleet.speeds_of(&active);
-        ctx.clock.advance_round(&speeds, cfg.tau);
+        let (cond, participants) = fleet.realize_round(&active);
+        if !participants.is_empty() {
+            fedgate_round(
+                engine, fleet, &mut state, &participants, cfg.tau, cfg.eta,
+                cfg.gamma, &mut bufs,
+            )?;
+        }
+        let times: Vec<f64> = active.iter().map(|&i| cond.times[i]).collect();
+        let ev = ctx.clock.charge_round(
+            &active,
+            &times,
+            cfg.tau,
+            active.len() - participants.len(),
+        );
+        fleet.observe_round(&participants, &cond);
         let (loss, gsq) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
-        ctx.record(&state.w, k, 0, loss, gsq)?;
+        ctx.record(&state.w, k, 0, loss, gsq, ev.dropped)?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -379,8 +431,12 @@ mod tests {
         let mut rng = Rng::new(21);
         let (ds, _) = synth::linreg(&mut rng, n_clients * s, 5, 0.05);
         let shards = shard::partition_iid(&mut rng, &ds, n_clients);
-        let fleet =
-            ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+        let fleet = ClientFleet::new(
+            ds,
+            shards,
+            &SpeedModel::paper_uniform().into(),
+            &mut rng,
+        );
         (NativeEngine::linreg(5, 10, 5), fleet)
     }
 

@@ -1,0 +1,78 @@
+//! Stub `HloEngine` compiled when the `pjrt` feature is off (the `xla`
+//! PJRT bindings are not vendored in the offline build image). Keeps the
+//! whole crate — including the differential tests and benches, which
+//! skip themselves when artifacts are missing — compiling against the
+//! exact same API as the real engine in `hlo.rs`.
+
+use super::{Engine, Manifest, ModelMeta};
+use anyhow::Result;
+
+pub struct HloEngine {
+    meta: ModelMeta,
+}
+
+impl HloEngine {
+    pub fn load(manifest: &Manifest, model: &str) -> Result<Self> {
+        Self::load_variant(manifest, model, false)
+    }
+
+    pub fn load_variant(_manifest: &Manifest, model: &str, _jnp: bool) -> Result<Self> {
+        anyhow::bail!(
+            "HloEngine for '{model}' unavailable: this build has no PJRT \
+             runtime (compile with --features pjrt and the xla crate, or \
+             use --engine native)"
+        )
+    }
+}
+
+impl Engine for HloEngine {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn loss(&self, _params: &[f32], _x: &[f32], _y: &[f32]) -> Result<f32> {
+        unreachable!("stub HloEngine cannot be constructed")
+    }
+
+    fn loss_grad(&self, _params: &[f32], _x: &[f32], _y: &[f32]) -> Result<(f32, Vec<f32>)> {
+        unreachable!("stub HloEngine cannot be constructed")
+    }
+
+    fn gate_step(
+        &self,
+        _params: &[f32],
+        _delta: &[f32],
+        _x: &[f32],
+        _y: &[f32],
+        _eta: f32,
+    ) -> Result<Vec<f32>> {
+        unreachable!("stub HloEngine cannot be constructed")
+    }
+
+    fn gate_round(
+        &self,
+        _params: &[f32],
+        _delta: &[f32],
+        _xs: &[f32],
+        _ys: &[f32],
+        _eta: f32,
+    ) -> Result<Vec<f32>> {
+        unreachable!("stub HloEngine cannot be constructed")
+    }
+
+    fn prox_round(
+        &self,
+        _params: &[f32],
+        _anchor: &[f32],
+        _xs: &[f32],
+        _ys: &[f32],
+        _eta: f32,
+        _prox_mu: f32,
+    ) -> Result<Vec<f32>> {
+        unreachable!("stub HloEngine cannot be constructed")
+    }
+
+    fn accuracy(&self, _params: &[f32], _x: &[f32], _y: &[f32]) -> Result<f32> {
+        unreachable!("stub HloEngine cannot be constructed")
+    }
+}

@@ -14,6 +14,10 @@
 //! by Layer 2 (`python/compile/model.py`) and mirrored in
 //! [`native::flat_layout`].
 
+#[cfg(feature = "pjrt")]
+pub mod hlo;
+#[cfg(not(feature = "pjrt"))]
+#[path = "hlo_stub.rs"]
 pub mod hlo;
 pub mod manifest;
 pub mod native;

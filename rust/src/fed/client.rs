@@ -1,21 +1,33 @@
 //! The simulated heterogeneous client fleet.
 //!
-//! Owns the mapping client -> (data shard, speed T_i, minibatch RNG) and
-//! the fastest-first ordering FLANP activates prefixes of. All batch
-//! assembly is fill-into-buffer so the coordinator's round loop does not
-//! allocate.
+//! Owns the mapping client -> (data shard, system conditions, minibatch
+//! RNG), the oracle fastest-first ordering, the realized per-round
+//! heterogeneity process ([`SystemState`]) and the online speed
+//! estimates ([`SpeedEstimator`]) FLANP ranks its prefixes from. All
+//! batch assembly is fill-into-buffer so the coordinator's round loop
+//! does not allocate.
 
 use crate::data::{Dataset, Shard};
-use crate::fed::speed::{sort_fastest_first, SpeedModel};
+use crate::fed::speed::sort_fastest_first;
+use crate::fed::system::{RoundConditions, SpeedEstimator, SystemModel, SystemState};
 use crate::util::Rng;
+
+/// Default EWMA smoothing for the online estimator; overridden from
+/// `ExperimentConfig::ewma_alpha` by `setup::build_fleet`.
+pub const DEFAULT_EWMA_ALPHA: f64 = 0.25;
 
 pub struct ClientFleet {
     pub dataset: Dataset,
     pub shards: Vec<Shard>,
-    /// T_i indexed by client id
+    /// oracle base times T_i indexed by client id (the system model's
+    /// base draw; realized per-round times may drift from these)
     pub speeds: Vec<f64>,
-    /// client ids sorted fastest-first; FLANP stage n uses order[..n]
+    /// client ids sorted fastest-first by ORACLE base speed
     pub order: Vec<usize>,
+    /// realized per-round heterogeneity process
+    pub system: SystemState,
+    /// online EWMA estimates of per-update times (TiFL-style)
+    pub estimates: SpeedEstimator,
     rngs: Vec<Rng>,
 }
 
@@ -23,18 +35,83 @@ impl ClientFleet {
     pub fn new(
         dataset: Dataset,
         shards: Vec<Shard>,
-        speed_model: &SpeedModel,
+        system_model: &SystemModel,
+        rng: &mut Rng,
+    ) -> Self {
+        Self::with_alpha(dataset, shards, system_model, DEFAULT_EWMA_ALPHA, rng)
+    }
+
+    /// Like [`ClientFleet::new`] with an explicit estimator smoothing
+    /// (`ExperimentConfig::ewma_alpha` — validate the config first).
+    pub fn with_alpha(
+        dataset: Dataset,
+        shards: Vec<Shard>,
+        system_model: &SystemModel,
+        ewma_alpha: f64,
         rng: &mut Rng,
     ) -> Self {
         let n = shards.len();
-        let speeds = speed_model.draw(rng, n);
+        let speeds = system_model.base.draw(rng, n);
         let order = sort_fastest_first(&speeds);
-        let rngs = (0..n).map(|i| rng.fork(i as u64)).collect();
-        ClientFleet { dataset, shards, speeds, order, rngs }
+        let rngs: Vec<Rng> = (0..n).map(|i| rng.fork(i as u64)).collect();
+        // the system stream is forked AFTER the per-client minibatch
+        // streams, so every scenario consumes exactly the seed's draw
+        // sequence for data synthesis and batch sampling
+        let sys_rng = rng.fork(n as u64);
+        let mut system =
+            SystemState::new(system_model.clone(), speeds.clone(), sys_rng);
+        // profiling probe (TiFL tiering): one realized observation primes
+        // the estimator before any round is charged; under static
+        // dynamics this is exactly T_i, so estimate-based ranking
+        // reproduces the oracle ranking bit-for-bit
+        let probe = system.next_round();
+        let estimates = SpeedEstimator::new(&probe.times, ewma_alpha);
+        ClientFleet { dataset, shards, speeds, order, system, estimates, rngs }
     }
 
     pub fn num_clients(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Realize the next round's conditions for every client. The process
+    /// advances globally (all clients, every round), so realized
+    /// trajectories are independent of which clients are active.
+    pub fn next_round_conditions(&mut self) -> RoundConditions {
+        self.system.next_round()
+    }
+
+    /// One round's shared orchestration step for every solver: realize
+    /// the next conditions and split the intended cohort into the
+    /// clients whose upload arrives (`participants`) vs dropouts. The
+    /// caller charges the clock over the WHOLE cohort (dropouts hold
+    /// the round open until the deadline) and aggregates only the
+    /// participants.
+    pub fn realize_round(&mut self, active: &[usize]) -> (RoundConditions, Vec<usize>) {
+        let cond = self.next_round_conditions();
+        let participants: Vec<usize> =
+            active.iter().copied().filter(|&i| cond.available[i]).collect();
+        (cond, participants)
+    }
+
+    /// Active set for a stage of k clients: ranked by the online speed
+    /// estimates when `estimated` (re-ranks under drift, TiFL-style),
+    /// else the oracle fastest-first prefix.
+    pub fn active_prefix(&self, k: usize, estimated: bool) -> Vec<usize> {
+        if estimated {
+            let mut ranked = self.estimates.ranked();
+            ranked.truncate(k);
+            ranked
+        } else {
+            self.order[..k].to_vec()
+        }
+    }
+
+    /// Feed the round's observed upload timings back into the estimator
+    /// (only clients whose upload arrived can be measured).
+    pub fn observe_round(&mut self, participants: &[usize], cond: &RoundConditions) {
+        for &i in participants {
+            self.estimates.observe(i, cond.times[i]);
+        }
     }
 
     /// Samples held by one client.
@@ -129,8 +206,18 @@ impl ClientFleet {
 mod tests {
     use super::*;
     use crate::data::{shard, Labels};
+    use crate::fed::speed::SpeedModel;
 
     fn fleet(n_clients: usize, s: usize, d: usize) -> ClientFleet {
+        fleet_sys(n_clients, s, d, &SpeedModel::paper_uniform().into())
+    }
+
+    fn fleet_sys(
+        n_clients: usize,
+        s: usize,
+        d: usize,
+        system: &SystemModel,
+    ) -> ClientFleet {
         let n = n_clients * s;
         let mut rng = Rng::new(1);
         let mut x = vec![0.0f32; n * d];
@@ -138,7 +225,7 @@ mod tests {
         let y = Labels::Class((0..n).map(|i| (i % 3) as u32).collect(), 3);
         let ds = Dataset::new(x, y, d);
         let shards = shard::partition_iid(&mut rng, &ds, n_clients);
-        ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng)
+        ClientFleet::new(ds, shards, system, &mut rng)
     }
 
     #[test]
@@ -148,6 +235,56 @@ mod tests {
         assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
         assert_eq!(f.fastest(3).len(), 3);
         assert_eq!(f.fastest(3), &f.order[..3]);
+    }
+
+    #[test]
+    fn static_prefix_matches_oracle_and_conditions_match_speeds() {
+        let mut f = fleet(10, 20, 4);
+        // estimator primed by the static probe == oracle speeds exactly
+        assert_eq!(f.estimates.estimates(), &f.speeds[..]);
+        assert_eq!(f.active_prefix(4, true), f.active_prefix(4, false));
+        assert_eq!(f.active_prefix(4, false), &f.order[..4]);
+        let cond = f.next_round_conditions();
+        assert_eq!(cond.times, f.speeds);
+        assert!(cond.available.iter().all(|&a| a));
+        // static observations never move the estimates
+        let all: Vec<usize> = (0..10).collect();
+        f.observe_round(&all, &cond);
+        assert_eq!(f.estimates.estimates(), &f.speeds[..]);
+    }
+
+    #[test]
+    fn drifted_observations_rerank_the_prefix() {
+        let mut f = fleet(6, 20, 4);
+        let fastest = f.order[0];
+        // the oracle-fastest client slows down 100x for many rounds
+        let mut cond = f.next_round_conditions();
+        cond.times[fastest] *= 100.0;
+        for _ in 0..30 {
+            f.observe_round(&[fastest], &cond);
+        }
+        let prefix = f.active_prefix(3, true);
+        assert!(
+            !prefix.contains(&fastest),
+            "estimated prefix {prefix:?} still contains slowed client {fastest}"
+        );
+        // oracle ranking is unaffected
+        assert!(f.active_prefix(3, false).contains(&fastest));
+    }
+
+    #[test]
+    fn same_seed_same_base_draw_across_scenarios() {
+        // scenario dynamics must not perturb the base draw or the data
+        // streams: same seed => same oracle speeds under any dynamics
+        let a = fleet(6, 20, 4);
+        let b = fleet_sys(
+            6,
+            20,
+            4,
+            &SystemModel::parse("drop:0.2:markov:4:0.2:0.2:uniform:50:500").unwrap(),
+        );
+        assert_eq!(a.speeds, b.speeds);
+        assert_eq!(a.order, b.order);
     }
 
     #[test]

@@ -5,6 +5,34 @@
 //! costs `tau * max_{i in P} T_i` (the server waits for the slowest
 //! participant — Propositions 2 and 3). An optional per-round
 //! communication overhead models the upload/broadcast latency.
+//!
+//! The clock exposes two layers:
+//!
+//! * the **event interface** ([`VirtualClock::charge_round`] /
+//!   [`VirtualClock::charge_round_hetero`]): charges realized per-client
+//!   times and records one [`RoundEvent`] per round — who the straggler
+//!   was, how many clients dropped. This is what the coordinator uses.
+//! * the **legacy helpers** ([`VirtualClock::advance_round`] /
+//!   [`VirtualClock::advance_round_hetero`]): cost arithmetic only, kept
+//!   for direct use in tests and theory checks. Both layers share the
+//!   same cost formula, so they agree bit-for-bit on identical inputs.
+
+/// One completed communication round as charged to the clock.
+#[derive(Clone, Debug)]
+pub struct RoundEvent {
+    /// 0-based index among charged rounds
+    pub round: usize,
+    /// total cost charged (compute critical path + comm overhead)
+    pub cost: f64,
+    /// client id on the critical path (this round's straggler)
+    pub slowest: Option<usize>,
+    /// realized per-update time of that client
+    pub slowest_time: f64,
+    /// clients whose update arrived
+    pub participants: usize,
+    /// clients that dropped (held the deadline open, uploaded nothing)
+    pub dropped: usize,
+}
 
 #[derive(Clone, Debug)]
 pub struct VirtualClock {
@@ -12,24 +40,126 @@ pub struct VirtualClock {
     /// fixed per-round communication overhead (0 by default: the paper's
     /// analysis is computation-dominated)
     pub comm_overhead: f64,
+    events: Vec<RoundEvent>,
 }
 
 impl VirtualClock {
     pub fn new() -> Self {
-        VirtualClock { now: 0.0, comm_overhead: 0.0 }
+        VirtualClock { now: 0.0, comm_overhead: 0.0, events: Vec::new() }
     }
 
     pub fn with_comm_overhead(comm: f64) -> Self {
-        VirtualClock { now: 0.0, comm_overhead: comm }
+        VirtualClock { now: 0.0, comm_overhead: comm, events: Vec::new() }
     }
 
     pub fn now(&self) -> f64 {
         self.now
     }
 
-    /// Advance by one synchronous round: `updates` local updates on every
-    /// participant with speeds `t_participants`; returns the round cost.
+    /// Every round charged through the event interface, in order. This
+    /// stream (straggler identity + realized critical-path time per
+    /// round) is the substrate for deadline/async aggregation policies
+    /// (ROADMAP "fed::system follow-ons"); per-round dropout counts are
+    /// additionally persisted on each trace row.
+    pub fn events(&self) -> &[RoundEvent] {
+        &self.events
+    }
+
+    /// Total dropouts recorded across all charged rounds.
+    pub fn total_dropped(&self) -> usize {
+        self.events.iter().map(|e| e.dropped).sum()
+    }
+
+    /// Charge one synchronous round: client `ids[k]` needs
+    /// `updates * times[k]` compute time and the server waits for the
+    /// slowest member. Dropped clients are included in `ids`/`times`
+    /// (they hold the round open until the deadline) but counted in
+    /// `dropped` because their upload never arrives.
+    pub fn charge_round(
+        &mut self,
+        ids: &[usize],
+        times: &[f64],
+        updates: usize,
+        dropped: usize,
+    ) -> RoundEvent {
+        debug_assert_eq!(ids.len(), times.len());
+        debug_assert!(
+            !ids.is_empty(),
+            "charging a round with an empty participant set"
+        );
+        debug_assert!(dropped <= ids.len());
+        let mut slowest = None;
+        let mut slowest_time = 0.0f64;
+        for (k, &t) in times.iter().enumerate() {
+            if t > slowest_time || slowest.is_none() {
+                slowest_time = slowest_time.max(t);
+                slowest = Some(ids[k]);
+            }
+        }
+        let cost = updates as f64 * slowest_time + self.comm_overhead;
+        self.now += cost;
+        let ev = RoundEvent {
+            round: self.events.len(),
+            cost,
+            slowest,
+            slowest_time,
+            participants: ids.len() - dropped,
+            dropped,
+        };
+        self.events.push(ev.clone());
+        ev
+    }
+
+    /// Charge a heterogeneous round (FedNova): client `ids[k]` performs
+    /// `updates[k]` updates at per-update time `times[k]`; the server
+    /// waits for the slowest *product*.
+    pub fn charge_round_hetero(
+        &mut self,
+        ids: &[usize],
+        times: &[f64],
+        updates: &[usize],
+        dropped: usize,
+    ) -> RoundEvent {
+        debug_assert_eq!(ids.len(), times.len());
+        debug_assert_eq!(ids.len(), updates.len());
+        debug_assert!(
+            !ids.is_empty(),
+            "charging a round with an empty participant set"
+        );
+        let mut slowest = None;
+        let mut slowest_total = 0.0f64;
+        let mut slowest_time = 0.0f64;
+        for (k, (&t, &u)) in times.iter().zip(updates).enumerate() {
+            let total = t * u as f64;
+            if total > slowest_total || slowest.is_none() {
+                slowest_total = slowest_total.max(total);
+                slowest_time = t;
+                slowest = Some(ids[k]);
+            }
+        }
+        let cost = slowest_total + self.comm_overhead;
+        self.now += cost;
+        let ev = RoundEvent {
+            round: self.events.len(),
+            cost,
+            slowest,
+            slowest_time,
+            participants: ids.len() - dropped,
+            dropped,
+        };
+        self.events.push(ev.clone());
+        ev
+    }
+
+    /// Legacy helper: advance by one synchronous round of `updates` local
+    /// updates on every participant with speeds `t_participants`; returns
+    /// the round cost. Records no event. An empty slice would silently
+    /// charge only `comm_overhead`, which is always a caller bug.
     pub fn advance_round(&mut self, t_participants: &[f64], updates: usize) -> f64 {
+        debug_assert!(
+            !t_participants.is_empty(),
+            "advance_round over an empty participant slice"
+        );
         let slowest = t_participants
             .iter()
             .cloned()
@@ -39,11 +169,15 @@ impl VirtualClock {
         cost
     }
 
-    /// Advance by a heterogeneous round (FedNova): client i performs
+    /// Legacy helper: heterogeneous round — client i performs
     /// `updates[i]` updates at speed `t[i]`; the server waits for the
-    /// slowest *product*.
+    /// slowest *product*. Records no event.
     pub fn advance_round_hetero(&mut self, t: &[f64], updates: &[usize]) -> f64 {
         assert_eq!(t.len(), updates.len());
+        debug_assert!(
+            !t.is_empty(),
+            "advance_round_hetero over an empty participant slice"
+        );
         let slowest = t
             .iter()
             .zip(updates)
@@ -56,6 +190,7 @@ impl VirtualClock {
 
     pub fn reset(&mut self) {
         self.now = 0.0;
+        self.events.clear();
     }
 }
 
@@ -115,5 +250,60 @@ mod tests {
         a.advance_round(&speeds[..2], 10);
         b.advance_round(&speeds, 10);
         assert!(a.now() <= b.now());
+    }
+
+    #[test]
+    fn charge_round_matches_advance_round_and_records_event() {
+        let speeds = [10.0, 30.0, 20.0];
+        let mut legacy = VirtualClock::with_comm_overhead(3.0);
+        let mut event = VirtualClock::with_comm_overhead(3.0);
+        let cost = legacy.advance_round(&speeds, 5);
+        let ev = event.charge_round(&[7, 8, 9], &speeds, 5, 1);
+        assert_eq!(ev.cost, cost);
+        assert_eq!(event.now(), legacy.now());
+        assert_eq!(ev.slowest, Some(8), "straggler is the slowest client");
+        assert_eq!(ev.slowest_time, 30.0);
+        assert_eq!(ev.participants, 2);
+        assert_eq!(ev.dropped, 1);
+        assert_eq!(event.events().len(), 1);
+        assert_eq!(event.total_dropped(), 1);
+        // legacy path records no events
+        assert!(legacy.events().is_empty());
+    }
+
+    #[test]
+    fn charge_round_hetero_matches_advance_round_hetero() {
+        let (t, u) = ([100.0, 10.0], [1usize, 20]);
+        let mut legacy = VirtualClock::new();
+        let mut event = VirtualClock::new();
+        let cost = legacy.advance_round_hetero(&t, &u);
+        let ev = event.charge_round_hetero(&[3, 4], &t, &u, 0);
+        assert_eq!(ev.cost, cost);
+        assert_eq!(ev.slowest, Some(4), "critical path is the max product");
+        assert_eq!(event.now(), legacy.now());
+    }
+
+    #[test]
+    fn reset_clears_events() {
+        let mut c = VirtualClock::new();
+        c.charge_round(&[0], &[5.0], 2, 0);
+        c.reset();
+        assert_eq!(c.now(), 0.0);
+        assert!(c.events().is_empty());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "empty participant slice")]
+    fn advance_round_rejects_empty_participants() {
+        // regression: an empty fold used to silently return comm_overhead
+        VirtualClock::new().advance_round(&[], 5);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "empty participant set")]
+    fn charge_round_rejects_empty_participants() {
+        VirtualClock::new().charge_round(&[], &[], 5, 0);
     }
 }

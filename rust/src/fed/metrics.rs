@@ -25,6 +25,9 @@ pub struct RoundRecord {
     pub accuracy: f64,
     /// FLANP stage index (0 for non-adaptive solvers)
     pub stage: usize,
+    /// clients that dropped out of this round (scenario-dependent; 0
+    /// under the paper's static scenarios)
+    pub dropped: usize,
 }
 
 /// A full run's trace plus identifying metadata.
@@ -97,6 +100,7 @@ impl Trace {
                             ("dist_to_opt", json_num(r.dist_to_opt)),
                             ("accuracy", json_num(r.accuracy)),
                             ("stage", r.stage.into()),
+                            ("dropped", r.dropped.into()),
                         ])
                     })
                     .collect(),
@@ -107,11 +111,11 @@ impl Trace {
     /// CSV with a header row (one line per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage\n",
+            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage,dropped\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.time,
                 r.participants,
@@ -120,7 +124,8 @@ impl Trace {
                 r.grad_norm_sq,
                 r.dist_to_opt,
                 r.accuracy,
-                r.stage
+                r.stage,
+                r.dropped
             ));
         }
         s
@@ -156,6 +161,7 @@ mod tests {
             dist_to_opt: f64::NAN,
             accuracy: f64::NAN,
             stage: 0,
+            dropped: 0,
         }
     }
 

@@ -1,12 +1,15 @@
-//! Federated substrate: heterogeneous client fleet, speed models, virtual
-//! wall-clock, and per-round metric traces.
+//! Federated substrate: heterogeneous client fleet, system-heterogeneity
+//! scenarios (speed models + per-round dynamics + dropout), virtual
+//! wall-clock with round events, and per-round metric traces.
 
 pub mod client;
 pub mod clock;
 pub mod metrics;
 pub mod speed;
+pub mod system;
 
-pub use client::ClientFleet;
-pub use clock::VirtualClock;
+pub use client::{ClientFleet, DEFAULT_EWMA_ALPHA};
+pub use clock::{RoundEvent, VirtualClock};
 pub use metrics::{RoundRecord, Trace};
 pub use speed::SpeedModel;
+pub use system::{Dynamics, RoundConditions, SpeedEstimator, SystemModel, SystemState};

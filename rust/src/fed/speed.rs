@@ -38,18 +38,44 @@ impl SpeedModel {
     pub fn parse(s: &str) -> Result<Self, String> {
         // "uniform:50:500" | "exp:1.0" | "homog:100"
         let parts: Vec<&str> = s.split(':').collect();
+        // NB: slice-pattern bindings below are `&&str`, hence the `&&`.
+        let num = |what: &str, tok: &&str| -> Result<f64, String> {
+            tok.parse()
+                .map_err(|_| format!("bad {what} '{tok}' in speed spec '{s}'"))
+        };
         match parts.as_slice() {
-            ["uniform", lo, hi] => Ok(SpeedModel::Uniform {
-                lo: lo.parse().map_err(|_| "bad lo")?,
-                hi: hi.parse().map_err(|_| "bad hi")?,
-            }),
-            ["exp", l] => Ok(SpeedModel::Exponential {
-                lambda: l.parse().map_err(|_| "bad lambda")?,
-            }),
-            ["homog", t] => Ok(SpeedModel::Homogeneous {
-                t: t.parse().map_err(|_| "bad t")?,
-            }),
-            _ => Err(format!("unknown speed model '{s}'")),
+            ["uniform", lo, hi] => {
+                let (lo, hi) = (num("lo", lo)?, num("hi", hi)?);
+                if hi <= lo {
+                    return Err(format!(
+                        "uniform bounds need lo < hi in speed spec '{s}'"
+                    ));
+                }
+                Ok(SpeedModel::Uniform { lo, hi })
+            }
+            ["exp", l] => {
+                let lambda = num("lambda", l)?;
+                if lambda <= 0.0 {
+                    return Err(format!(
+                        "lambda must be positive in speed spec '{s}'"
+                    ));
+                }
+                Ok(SpeedModel::Exponential { lambda })
+            }
+            ["homog", t] => Ok(SpeedModel::Homogeneous { t: num("t", t)? }),
+            _ => Err(format!(
+                "unknown speed model '{s}' \
+                 (expected uniform:lo:hi | exp:lambda | homog:t)"
+            )),
+        }
+    }
+
+    /// Canonical spec string; `parse(spec()) == self`.
+    pub fn spec(&self) -> String {
+        match self {
+            SpeedModel::Uniform { lo, hi } => format!("uniform:{lo}:{hi}"),
+            SpeedModel::Exponential { lambda } => format!("exp:{lambda}"),
+            SpeedModel::Homogeneous { t } => format!("homog:{t}"),
         }
     }
 }
@@ -113,5 +139,20 @@ mod tests {
             SpeedModel::Homogeneous { t: 10.0 }
         );
         assert!(SpeedModel::parse("nope").is_err());
+        // spec() is the parseable canonical form for every variant
+        for spec in ["uniform:50:500", "exp:0.5", "homog:10"] {
+            let m = SpeedModel::parse(spec).unwrap();
+            assert_eq!(m.spec(), spec);
+            assert_eq!(SpeedModel::parse(&m.spec()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn parse_errors_include_the_offending_spec() {
+        for bad in ["uniform:a:500", "uniform:500:50", "exp:-1", "exp:x", "homog:y"] {
+            let e = SpeedModel::parse(bad).unwrap_err();
+            assert!(e.contains(bad), "error '{e}' does not name '{bad}'");
+        }
+        assert!(SpeedModel::parse("warp:9").unwrap_err().contains("warp:9"));
     }
 }

@@ -1,0 +1,475 @@
+//! Event-driven system-heterogeneity core (`fed::system`).
+//!
+//! The seed modeled `T_i` as one static draw sorted once at fleet
+//! construction. Real federations drift: TiFL (Chai et al.) re-estimates
+//! client latency online because device speeds change, and Hard et al.
+//! show availability churn materially changes which algorithm wins. This
+//! module makes the heterogeneity model a first-class subsystem:
+//!
+//! * [`SystemModel`] — a scenario description: the base [`SpeedModel`]
+//!   draw plus per-round [`Dynamics`] (static / multiplicative jitter /
+//!   two-state Markov fast-slow) and an availability (dropout) process.
+//! * [`SystemState`] — the realized per-round stochastic process, fully
+//!   deterministic in its own RNG stream (independent of minibatch
+//!   sampling, so scenarios never perturb the optimization path).
+//! * [`SpeedEstimator`] — TiFL-style EWMA tracker of observed per-update
+//!   times; FLANP re-ranks its fastest-prefix from these estimates at
+//!   every stage boundary instead of reading oracle speeds.
+//!
+//! Under `Dynamics::Static` with zero dropout every realized round equals
+//! the base draw bit-for-bit, so the event-driven clock reproduces the
+//! seed's traces exactly (see `tests/system.rs`).
+
+use crate::fed::speed::{sort_fastest_first, SpeedModel};
+use crate::util::Rng;
+
+/// Per-round speed dynamics layered on top of the base draw.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dynamics {
+    /// `T_i(round) = T_i` — the seed's behavior, bit-for-bit.
+    Static,
+    /// `T_i(round) = T_i * exp(sigma * z)`, `z ~ N(0,1)` i.i.d. per
+    /// client and round (multiplicative log-normal jitter).
+    Jitter { sigma: f64 },
+    /// Two-state Markov chain per client: fast (`T_i`) and slow
+    /// (`slow_factor * T_i`). One transition per round:
+    /// fast→slow w.p. `p_slow`, slow→fast w.p. `p_recover`.
+    Markov {
+        slow_factor: f64,
+        p_slow: f64,
+        p_recover: f64,
+    },
+}
+
+/// A complete system-heterogeneity scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemModel {
+    /// distribution of the per-client base times `T_i`
+    pub base: SpeedModel,
+    pub dynamics: Dynamics,
+    /// per-round probability that a client drops out of the round: it
+    /// still holds the round open until the deadline (the server waits),
+    /// but its update never arrives.
+    pub p_drop: f64,
+}
+
+impl From<SpeedModel> for SystemModel {
+    fn from(base: SpeedModel) -> Self {
+        SystemModel { base, dynamics: Dynamics::Static, p_drop: 0.0 }
+    }
+}
+
+impl SystemModel {
+    /// The paper's Section-5.1 default: static uniform [50, 500).
+    pub fn paper_uniform() -> Self {
+        SpeedModel::paper_uniform().into()
+    }
+
+    pub fn is_static(&self) -> bool {
+        self.dynamics == Dynamics::Static && self.p_drop == 0.0
+    }
+
+    /// Parse a scenario spec. Grammar (prefixes compose, base spec last):
+    ///
+    /// ```text
+    ///   [drop:P:] [static: | jitter:SIGMA: | markov:F:PS:PR:] BASE
+    ///   BASE = uniform:lo:hi | exp:lambda | homog:t
+    /// ```
+    ///
+    /// Plain base specs (`uniform:50:500`) parse as static scenarios, so
+    /// every seed-era `--speed` value keeps working unchanged. Examples:
+    /// `jitter:0.3:uniform:50:500`, `drop:0.05:markov:4:0.1:0.5:exp:0.01`.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let toks: Vec<&str> = spec.split(':').collect();
+        let mut i = 0;
+        let num = |what: &str, tok: Option<&&str>| -> Result<f64, String> {
+            let tok = tok.ok_or_else(|| {
+                format!("missing {what} in system spec '{spec}'")
+            })?;
+            tok.parse().map_err(|_| {
+                format!("bad {what} '{tok}' in system spec '{spec}'")
+            })
+        };
+
+        let mut p_drop = 0.0;
+        if toks.get(i) == Some(&"drop") {
+            p_drop = num("drop probability", toks.get(i + 1))?;
+            if !(0.0..1.0).contains(&p_drop) {
+                return Err(format!(
+                    "drop probability {p_drop} outside [0, 1) in system spec '{spec}'"
+                ));
+            }
+            i += 2;
+        }
+        let dynamics = match toks.get(i).copied() {
+            Some("static") => {
+                i += 1;
+                Dynamics::Static
+            }
+            Some("jitter") => {
+                let sigma = num("jitter sigma", toks.get(i + 1))?;
+                if sigma < 0.0 {
+                    return Err(format!(
+                        "jitter sigma {sigma} must be >= 0 in system spec '{spec}'"
+                    ));
+                }
+                i += 2;
+                Dynamics::Jitter { sigma }
+            }
+            Some("markov") => {
+                let slow_factor = num("markov slow factor", toks.get(i + 1))?;
+                let p_slow = num("markov p_slow", toks.get(i + 2))?;
+                let p_recover = num("markov p_recover", toks.get(i + 3))?;
+                if slow_factor < 1.0 {
+                    return Err(format!(
+                        "markov slow factor {slow_factor} must be >= 1 in system spec '{spec}'"
+                    ));
+                }
+                for (name, p) in [("p_slow", p_slow), ("p_recover", p_recover)] {
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!(
+                            "markov {name} {p} outside [0, 1] in system spec '{spec}'"
+                        ));
+                    }
+                }
+                i += 4;
+                Dynamics::Markov { slow_factor, p_slow, p_recover }
+            }
+            _ => Dynamics::Static,
+        };
+        let base = SpeedModel::parse(&toks[i..].join(":"))?;
+        Ok(SystemModel { base, dynamics, p_drop })
+    }
+
+    /// Canonical spec string; `parse(spec()) == self` for every scenario.
+    pub fn spec(&self) -> String {
+        let mut s = String::new();
+        if self.p_drop > 0.0 {
+            s.push_str(&format!("drop:{}:", self.p_drop));
+        }
+        match &self.dynamics {
+            Dynamics::Static => {}
+            Dynamics::Jitter { sigma } => s.push_str(&format!("jitter:{sigma}:")),
+            Dynamics::Markov { slow_factor, p_slow, p_recover } => {
+                s.push_str(&format!("markov:{slow_factor}:{p_slow}:{p_recover}:"))
+            }
+        }
+        s.push_str(&self.base.spec());
+        s
+    }
+
+    /// Structural sanity check (configs can be built without `parse`).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..1.0).contains(&self.p_drop) {
+            return Err(format!("p_drop {} outside [0, 1)", self.p_drop));
+        }
+        match self.dynamics {
+            Dynamics::Static => {}
+            Dynamics::Jitter { sigma } => {
+                if !(sigma >= 0.0) {
+                    return Err(format!("jitter sigma {sigma} must be >= 0"));
+                }
+            }
+            Dynamics::Markov { slow_factor, p_slow, p_recover } => {
+                if !(slow_factor >= 1.0) {
+                    return Err(format!("slow factor {slow_factor} must be >= 1"));
+                }
+                if !(0.0..=1.0).contains(&p_slow) || !(0.0..=1.0).contains(&p_recover) {
+                    return Err(format!(
+                        "markov probabilities ({p_slow}, {p_recover}) outside [0, 1]"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One round's realized conditions for EVERY client (indexed by id).
+#[derive(Clone, Debug)]
+pub struct RoundConditions {
+    /// realized per-update compute time this round
+    pub times: Vec<f64>,
+    /// false when the client drops out of this round
+    pub available: Vec<bool>,
+}
+
+/// The realized heterogeneity process. Advances once per communication
+/// round for ALL clients, so RNG consumption — and therefore every
+/// realized trajectory — is independent of which clients are active.
+#[derive(Clone, Debug)]
+pub struct SystemState {
+    model: SystemModel,
+    /// the base draw `T_i` (the oracle speeds of the static scenario)
+    base: Vec<f64>,
+    /// Markov slow-state flags (all clients start fast)
+    slow: Vec<bool>,
+    rng: Rng,
+    rounds_realized: usize,
+}
+
+impl SystemState {
+    pub fn new(model: SystemModel, base: Vec<f64>, rng: Rng) -> Self {
+        let n = base.len();
+        SystemState { model, base, slow: vec![false; n], rng, rounds_realized: 0 }
+    }
+
+    pub fn model(&self) -> &SystemModel {
+        &self.model
+    }
+
+    pub fn base_speeds(&self) -> &[f64] {
+        &self.base
+    }
+
+    pub fn rounds_realized(&self) -> usize {
+        self.rounds_realized
+    }
+
+    /// Realize the next round. Static scenarios consume no randomness and
+    /// return the base draw unchanged (bit-for-bit seed parity).
+    pub fn next_round(&mut self) -> RoundConditions {
+        self.rounds_realized += 1;
+        let n = self.base.len();
+        let mut times = Vec::with_capacity(n);
+        match self.model.dynamics {
+            Dynamics::Static => times.extend_from_slice(&self.base),
+            Dynamics::Jitter { sigma } => {
+                for i in 0..n {
+                    let factor = (sigma * self.rng.normal()).exp();
+                    times.push(self.base[i] * factor);
+                }
+            }
+            Dynamics::Markov { slow_factor, p_slow, p_recover } => {
+                for i in 0..n {
+                    let u = self.rng.next_f64();
+                    self.slow[i] =
+                        if self.slow[i] { u >= p_recover } else { u < p_slow };
+                    times.push(if self.slow[i] {
+                        self.base[i] * slow_factor
+                    } else {
+                        self.base[i]
+                    });
+                }
+            }
+        }
+        let available = if self.model.p_drop > 0.0 {
+            (0..n).map(|_| self.rng.next_f64() >= self.model.p_drop).collect()
+        } else {
+            vec![true; n]
+        };
+        RoundConditions { times, available }
+    }
+}
+
+/// TiFL-style online speed estimator: an EWMA over observed per-update
+/// times. The coordinator feeds it the realized upload timings of every
+/// participating client; FLANP ranks its fastest-prefix from the current
+/// estimates instead of oracle speeds.
+#[derive(Clone, Debug)]
+pub struct SpeedEstimator {
+    est: Vec<f64>,
+    alpha: f64,
+    observations: Vec<u64>,
+}
+
+impl SpeedEstimator {
+    /// `prior` is one profiling observation per client (TiFL's tiering
+    /// probe); under static dynamics it equals the true `T_i` exactly.
+    pub fn new(prior: &[f64], alpha: f64) -> Self {
+        assert!(
+            alpha > 0.0 && alpha <= 1.0,
+            "EWMA alpha {alpha} outside (0, 1]"
+        );
+        SpeedEstimator {
+            est: prior.to_vec(),
+            alpha,
+            observations: vec![0; prior.len()],
+        }
+    }
+
+    /// Fold one observed per-update time into the estimate. Written as
+    /// `est += alpha * (obs - est)` so an observation equal to the
+    /// current estimate is an exact fixed point — static scenarios keep
+    /// estimates bit-identical to the oracle speeds forever.
+    pub fn observe(&mut self, client: usize, per_update_time: f64) {
+        let e = &mut self.est[client];
+        *e += self.alpha * (per_update_time - *e);
+        self.observations[client] += 1;
+    }
+
+    pub fn estimate(&self, client: usize) -> f64 {
+        self.est[client]
+    }
+
+    pub fn estimates(&self) -> &[f64] {
+        &self.est
+    }
+
+    pub fn observations(&self, client: usize) -> u64 {
+        self.observations[client]
+    }
+
+    /// Client ids sorted fastest-first by current estimate (stable:
+    /// equal estimates keep id order, matching the oracle sort).
+    pub fn ranked(&self) -> Vec<usize> {
+        sort_fastest_first(&self.est)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys(spec: &str) -> SystemModel {
+        SystemModel::parse(spec).unwrap()
+    }
+
+    #[test]
+    fn parse_roundtrips_every_variant() {
+        for spec in [
+            "uniform:50:500",
+            "exp:0.5",
+            "homog:10",
+            "static:uniform:50:500",
+            "jitter:0.3:uniform:50:500",
+            "markov:4:0.1:0.5:exp:0.01",
+            "drop:0.05:uniform:50:500",
+            "drop:0.05:jitter:0.2:homog:100",
+            "drop:0.1:markov:2:0.2:0.4:uniform:50:500",
+        ] {
+            let m = sys(spec);
+            assert_eq!(SystemModel::parse(&m.spec()).unwrap(), m, "spec {spec}");
+        }
+        // canonical form drops the redundant `static:` prefix
+        assert_eq!(sys("static:homog:5").spec(), "homog:5");
+        assert_eq!(sys("uniform:50:500"), SystemModel::paper_uniform());
+    }
+
+    #[test]
+    fn parse_errors_name_the_full_spec() {
+        for bad in [
+            "jitter:x:uniform:50:500",
+            "markov:4:0.1:uniform:50:500", // missing p_recover
+            "drop:1.5:homog:10",
+            "markov:0.5:0.1:0.1:homog:10", // slow factor < 1
+            "warp:9",
+        ] {
+            let e = SystemModel::parse(bad).unwrap_err();
+            assert!(e.contains(bad) || e.contains("speed"), "error '{e}' for '{bad}'");
+        }
+        // base-layer errors carry the base spec
+        let e = SystemModel::parse("jitter:0.1:uniform:a:500").unwrap_err();
+        assert!(e.contains("uniform:a:500"), "{e}");
+    }
+
+    #[test]
+    fn static_rounds_equal_base_bit_for_bit() {
+        let base = vec![110.0, 70.5, 300.25];
+        let mut st = SystemState::new(
+            sys("uniform:50:500"),
+            base.clone(),
+            Rng::with_stream(1, 2),
+        );
+        for _ in 0..5 {
+            let c = st.next_round();
+            assert_eq!(c.times, base);
+            assert!(c.available.iter().all(|&a| a));
+        }
+        assert_eq!(st.rounds_realized(), 5);
+    }
+
+    #[test]
+    fn jitter_perturbs_multiplicatively() {
+        let base = vec![100.0; 64];
+        let mut st =
+            SystemState::new(sys("jitter:0.2:homog:100"), base, Rng::new(3));
+        let c = st.next_round();
+        assert!(c.times.iter().all(|&t| t > 0.0));
+        assert!(c.times.iter().any(|&t| t != 100.0));
+        // log-normal(0, 0.2): all realistic mass within e^{±10 sigma}
+        assert!(c.times.iter().all(|&t| (10.0..1000.0).contains(&t)));
+        // successive rounds re-draw
+        let c2 = st.next_round();
+        assert_ne!(c.times, c2.times);
+    }
+
+    #[test]
+    fn markov_times_take_exactly_two_levels() {
+        let base = vec![100.0; 32];
+        let mut st = SystemState::new(
+            sys("markov:4:0.3:0.3:homog:100"),
+            base,
+            Rng::new(7),
+        );
+        let mut seen_slow = false;
+        for _ in 0..50 {
+            let c = st.next_round();
+            for &t in &c.times {
+                assert!(t == 100.0 || t == 400.0, "time {t}");
+                seen_slow |= t == 400.0;
+            }
+        }
+        assert!(seen_slow, "no slow transitions in 50 rounds at p=0.3");
+    }
+
+    #[test]
+    fn dropout_rate_matches_probability() {
+        let base = vec![1.0; 100];
+        let mut st =
+            SystemState::new(sys("drop:0.2:homog:1"), base, Rng::new(11));
+        let mut dropped = 0usize;
+        let rounds = 200;
+        for _ in 0..rounds {
+            let c = st.next_round();
+            dropped += c.available.iter().filter(|&&a| !a).count();
+        }
+        let rate = dropped as f64 / (rounds * 100) as f64;
+        assert!((rate - 0.2).abs() < 0.02, "dropout rate {rate}");
+    }
+
+    #[test]
+    fn realization_is_deterministic_in_the_stream() {
+        let mk = || {
+            SystemState::new(
+                sys("drop:0.1:markov:4:0.2:0.4:uniform:50:500"),
+                vec![60.0, 120.0, 240.0],
+                Rng::with_stream(5, 9),
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..20 {
+            let (ca, cb) = (a.next_round(), b.next_round());
+            assert_eq!(ca.times, cb.times);
+            assert_eq!(ca.available, cb.available);
+        }
+    }
+
+    #[test]
+    fn estimator_is_exact_fixed_point_on_static_observations() {
+        let prior = vec![50.0, 275.3, 499.9];
+        let mut est = SpeedEstimator::new(&prior, 0.25);
+        for _ in 0..100 {
+            for (i, &t) in prior.iter().enumerate() {
+                est.observe(i, t);
+            }
+        }
+        // bit-for-bit: static scenarios never perturb the ranking
+        assert_eq!(est.estimates(), &prior[..]);
+        assert_eq!(est.ranked(), vec![0, 1, 2]);
+        assert_eq!(est.observations(1), 100);
+    }
+
+    #[test]
+    fn estimator_tracks_drift_and_reranks() {
+        // client 0 starts fastest, then slows 10x; client 1 is steady
+        let mut est = SpeedEstimator::new(&[50.0, 100.0], 0.5);
+        assert_eq!(est.ranked(), vec![0, 1]);
+        for _ in 0..20 {
+            est.observe(0, 500.0);
+            est.observe(1, 100.0);
+        }
+        assert!(est.estimate(0) > 400.0, "{}", est.estimate(0));
+        assert_eq!(est.ranked(), vec![1, 0], "estimator did not re-rank");
+    }
+}

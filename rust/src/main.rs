@@ -9,7 +9,7 @@
 use anyhow::{Context, Result};
 use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
 use flanp::engine::Manifest;
-use flanp::fed::SpeedModel;
+use flanp::fed::SystemModel;
 use flanp::setup;
 use flanp::util::cli::Args;
 use std::path::Path;
@@ -34,7 +34,15 @@ OPTIONS (run):
   --eta F --gamma F stepsizes                          [0.05, 1.0]
   --tau T           local updates per round            [artifact tau]
   --mu F --c F      statistical-accuracy constants     [0.01, 1.0]
-  --speed SPEC      uniform:50:500 | exp:1.0 | homog:100
+  --speed SPEC      system-heterogeneity scenario      [uniform:50:500]
+                    grammar: [drop:P:][jitter:SIGMA:|markov:F:PS:PR:]BASE
+                    BASE = uniform:lo:hi | exp:lambda | homog:t
+                    e.g. jitter:0.3:uniform:50:500 (per-round log-normal
+                    jitter), markov:4:0.1:0.5:exp:0.004 (fast/slow Markov
+                    drift), drop:0.05:uniform:50:500 (5% round dropouts)
+  --ewma F          EWMA alpha of the online speed estimator [0.25]
+  --oracle-ranking  rank FLANP prefixes by oracle speeds instead of the
+                    online estimates
   --seed N          PRNG seed                          [1]
   --max-rounds R    round budget                       [400]
   --eval-rows N     rows for full-objective eval (0=all) [2000]
@@ -96,8 +104,12 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     let tau = args.flag_usize("tau", 0).map_err(|e| anyhow::anyhow!(e))?;
     let mu = args.flag_f64("mu", 0.01).map_err(|e| anyhow::anyhow!(e))?;
     let c_stat = args.flag_f64("c", 1.0).map_err(|e| anyhow::anyhow!(e))?;
-    let speed = SpeedModel::parse(&args.flag_str("speed", "uniform:50:500"))
+    let system = SystemModel::parse(&args.flag_str("speed", "uniform:50:500"))
         .map_err(|e| anyhow::anyhow!(e))?;
+    let ewma = args
+        .flag_f64("ewma", flanp::fed::DEFAULT_EWMA_ALPHA)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let oracle_ranking = args.switch("oracle-ranking");
     let seed = args.flag_usize("seed", 1).map_err(|e| anyhow::anyhow!(e))? as u64;
     let max_rounds =
         args.flag_usize("max-rounds", 400).map_err(|e| anyhow::anyhow!(e))?;
@@ -120,16 +132,22 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     cfg.n0 = n0;
     cfg.mu = mu;
     cfg.c_stat = c_stat;
-    cfg.speed = speed;
+    cfg.system = system;
+    cfg.estimate_speeds = !oracle_ranking;
+    cfg.ewma_alpha = ewma;
     cfg.seed = seed;
     cfg.max_rounds = max_rounds;
     cfg.eval_rows = eval_rows;
+    // validate before the fleet is built: bad flags (e.g. --ewma 0) must
+    // surface as config errors, not construction-time assertions
+    cfg.validate(meta.batch).map_err(|e| anyhow::anyhow!(e))?;
 
     let mut fleet = setup::build_fleet(&meta, &cfg, noise, separation)?;
 
     if !quiet {
         println!(
-            "flanp run: solver={} model={} engine={} N={} s={} tau={} eta={} gamma={}",
+            "flanp run: solver={} model={} engine={} N={} s={} tau={} eta={} \
+             gamma={} system={} ranking={}",
             cfg.solver.name(),
             model,
             engine_kind,
@@ -137,7 +155,9 @@ fn cmd_run(args: &mut Args) -> Result<()> {
             s,
             cfg.tau,
             eta,
-            gamma
+            gamma,
+            cfg.system.spec(),
+            if cfg.estimate_speeds { "estimated" } else { "oracle" },
         );
     }
     let t0 = std::time::Instant::now();

@@ -108,7 +108,13 @@ pub fn build_fleet(
     };
     let shards =
         shard::partition_fixed_s(&mut rng, &dataset, cfg.num_clients, cfg.s);
-    Ok(ClientFleet::new(dataset, shards, &cfg.speed, &mut rng))
+    Ok(ClientFleet::with_alpha(
+        dataset,
+        shards,
+        &cfg.system,
+        cfg.ewma_alpha,
+        &mut rng,
+    ))
 }
 
 #[cfg(test)]

@@ -54,9 +54,9 @@ fn headline_flanp_beats_all_full_participation_benchmarks() {
 fn speedup_grows_with_heterogeneity() {
     // wider speed spread => bigger FLANP gain (the straggler premise)
     let mut narrow_f = linreg_cfg(SolverKind::Flanp, 16, 50);
-    narrow_f.speed = SpeedModel::Uniform { lo: 240.0, hi: 280.0 };
+    narrow_f.system = SpeedModel::Uniform { lo: 240.0, hi: 280.0 }.into();
     let mut narrow_g = linreg_cfg(SolverKind::FedGate, 16, 50);
-    narrow_g.speed = SpeedModel::Uniform { lo: 240.0, hi: 280.0 };
+    narrow_g.system = SpeedModel::Uniform { lo: 240.0, hi: 280.0 }.into();
     let ratio_narrow =
         run(&narrow_f).total_time / run(&narrow_g).total_time;
 
@@ -80,9 +80,9 @@ fn homogeneous_speed_ratio_improves_with_s() {
     // stay within a small constant of 1.
     let ratio = |s: usize| {
         let mut f = linreg_cfg(SolverKind::Flanp, 16, s);
-        f.speed = SpeedModel::Homogeneous { t: 100.0 };
+        f.system = SpeedModel::Homogeneous { t: 100.0 }.into();
         let mut g = linreg_cfg(SolverKind::FedGate, 16, s);
-        g.speed = SpeedModel::Homogeneous { t: 100.0 };
+        g.system = SpeedModel::Homogeneous { t: 100.0 }.into();
         let tf = run(&f);
         let tg = run(&g);
         assert!(tf.finished && tg.finished);
@@ -120,10 +120,10 @@ fn exponential_speeds_runtime_ratio_shrinks_with_n() {
     // Theorem 2 / Table 2 shape: T_FLANP / T_FedGATE decreases with N
     let ratio = |n: usize| {
         let mut f = linreg_cfg(SolverKind::Flanp, n, 50);
-        f.speed = SpeedModel::Exponential { lambda: 1.0 };
+        f.system = SpeedModel::Exponential { lambda: 1.0 }.into();
         f.seed = 9;
         let mut g = linreg_cfg(SolverKind::FedGate, n, 50);
-        g.speed = SpeedModel::Exponential { lambda: 1.0 };
+        g.system = SpeedModel::Exponential { lambda: 1.0 }.into();
         g.seed = 9;
         run(&f).total_time / run(&g).total_time
     };
@@ -171,7 +171,7 @@ fn logreg_federation_learns_to_classify() {
     };
     let ds = synth::mixture(&mut rng, &spec);
     let shards = shard::partition_fixed_s(&mut rng, &ds, 8, 100);
-    let mut fleet = ClientFleet::new(ds, shards, &cfg.speed, &mut rng);
+    let mut fleet = ClientFleet::new(ds, shards, &cfg.system, &mut rng);
     let t = run_solver(&engine, &mut fleet, &cfg).unwrap();
     let acc = t.last().unwrap().accuracy;
     assert!(acc > 0.8, "final accuracy {acc} <= 0.8");
@@ -201,7 +201,7 @@ fn mlp_federation_reduces_loss() {
     };
     let ds = synth::mixture(&mut rng, &spec);
     let shards = shard::partition_fixed_s(&mut rng, &ds, 6, 60);
-    let mut fleet = ClientFleet::new(ds, shards, &cfg.speed, &mut rng);
+    let mut fleet = ClientFleet::new(ds, shards, &cfg.system, &mut rng);
     let t = run_solver(&engine, &mut fleet, &cfg).unwrap();
     let first = t.rounds.first().unwrap().loss_full;
     let last = t.last().unwrap().loss_full;
@@ -214,7 +214,8 @@ fn config_validation_bubbles_up() {
     let mut rng = Rng::new(1);
     let (ds, _) = synth::linreg(&mut rng, 100, 5, 0.1);
     let shards = shard::partition_iid(&mut rng, &ds, 4);
-    let mut fleet = ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+    let mut fleet =
+        ClientFleet::new(ds, shards, &SpeedModel::paper_uniform().into(), &mut rng);
     // s = 25 is not a multiple of batch 10 => config error
     let cfg = ExperimentConfig::new(SolverKind::FedGate, "linreg_d5", 4, 25);
     let err = run_solver(&engine, &mut fleet, &cfg).unwrap_err();

@@ -17,7 +17,8 @@ fn fleet_of(seed: u64, n_clients: usize, s: usize, d: usize) -> (NativeEngine, C
     let mut rng = Rng::new(seed);
     let (ds, _) = synth::linreg(&mut rng, n_clients * s, d, 0.1);
     let shards = shard::partition_iid(&mut rng, &ds, n_clients);
-    let fleet = ClientFleet::new(ds, shards, &SpeedModel::paper_uniform(), &mut rng);
+    let fleet =
+        ClientFleet::new(ds, shards, &SpeedModel::paper_uniform().into(), &mut rng);
     (NativeEngine::linreg(d, 10, 5), fleet)
 }
 

@@ -1,0 +1,162 @@
+//! fed::system differential + scenario tests.
+//!
+//! The differential tests prove the event-driven clock reproduces the
+//! seed's accounting EXACTLY under a static `SystemModel`: same per-round
+//! costs (recomputed with the legacy `advance_round` arithmetic from the
+//! oracle speeds), same stage transitions, same `total_time`, and
+//! estimate-ranked prefixes identical to oracle-ranked ones. The scenario
+//! tests exercise the new time-varying models end to end through the
+//! public CLI spec grammar.
+
+use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::fed::{SystemModel, Trace, VirtualClock};
+use flanp::setup;
+
+fn base_cfg(solver: SolverKind, n: usize, s: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(solver, "linreg_d25", n, s);
+    cfg.tau = 10;
+    cfg.eta = 0.05;
+    cfg.n0 = 2;
+    cfg.mu = 0.5;
+    cfg.c_stat = 0.5;
+    cfg.max_rounds = 2000;
+    cfg.eval_every = 5;
+    cfg.eval_rows = 500;
+    cfg.seed = 3;
+    cfg
+}
+
+fn run(cfg: &ExperimentConfig) -> (Trace, Vec<f64>, Vec<usize>) {
+    let engine = setup::native_from_name(&cfg.model).unwrap();
+    let mut fleet = setup::build_fleet(engine.meta(), cfg, 0.1, 0.0).unwrap();
+    let speeds = fleet.speeds.clone();
+    let order = fleet.order.clone();
+    let trace = run_solver(&engine, &mut fleet, cfg).unwrap();
+    (trace, speeds, order)
+}
+
+/// Recompute the seed's cost sequence with the legacy clock arithmetic:
+/// round k over the fastest-`participants` oracle prefix costs
+/// `tau * max(prefix speeds) + comm`. Times must match bit-for-bit.
+fn assert_seed_accounting(
+    trace: &Trace,
+    speeds: &[f64],
+    order: &[usize],
+    tau: usize,
+) {
+    let mut legacy = VirtualClock::new();
+    assert_eq!(trace.rounds[0].time, 0.0, "initial record precedes rounds");
+    for r in &trace.rounds[1..] {
+        let prefix: Vec<f64> =
+            order[..r.participants].iter().map(|&c| speeds[c]).collect();
+        legacy.advance_round(&prefix, tau);
+        assert_eq!(
+            r.time,
+            legacy.now(),
+            "round {} diverged from the seed cost model",
+            r.round
+        );
+        assert_eq!(r.dropped, 0, "static scenario recorded a dropout");
+    }
+    assert_eq!(trace.total_time, legacy.now());
+}
+
+#[test]
+fn static_flanp_trace_reproduces_seed_costs_exactly() {
+    let cfg = base_cfg(SolverKind::Flanp, 16, 50);
+    assert!(cfg.system.is_static() && cfg.estimate_speeds);
+    let (trace, speeds, order) = run(&cfg);
+    assert!(trace.finished);
+    // participants double through stages exactly as in the seed
+    let ns: Vec<usize> = trace.stage_transitions.iter().map(|&(_, n)| n).collect();
+    assert_eq!(ns, vec![2, 4, 8, 16]);
+    assert_seed_accounting(&trace, &speeds, &order, cfg.tau);
+}
+
+#[test]
+fn static_fedgate_trace_reproduces_seed_costs_exactly() {
+    let cfg = base_cfg(SolverKind::FedGate, 12, 50);
+    let (trace, speeds, order) = run(&cfg);
+    assert!(trace.finished);
+    assert_seed_accounting(&trace, &speeds, &order, cfg.tau);
+}
+
+#[test]
+fn online_estimation_is_bit_identical_to_oracle_when_static() {
+    // the estimator's probe prior equals the oracle speeds under static
+    // dynamics and observations are exact fixed points, so the FULL
+    // trace — ranking, costs, losses — matches the oracle run exactly
+    let est = base_cfg(SolverKind::Flanp, 16, 50);
+    let mut oracle = base_cfg(SolverKind::Flanp, 16, 50);
+    oracle.estimate_speeds = false;
+    let (t_est, ..) = run(&est);
+    let (t_ora, ..) = run(&oracle);
+    assert_eq!(t_est.rounds.len(), t_ora.rounds.len());
+    assert_eq!(t_est.stage_transitions, t_ora.stage_transitions);
+    assert_eq!(t_est.total_time, t_ora.total_time);
+    for (a, b) in t_est.rounds.iter().zip(&t_ora.rounds) {
+        assert_eq!(a.time, b.time);
+        assert_eq!(a.loss_full, b.loss_full);
+        assert_eq!(a.grad_norm_sq, b.grad_norm_sq);
+    }
+}
+
+#[test]
+fn flanp_with_estimation_beats_fedgate_under_markov_drift() {
+    // acceptance: a time-varying scenario runs end to end from the CLI
+    // spec grammar, FLANP (online speed estimation on by default) still
+    // reaches full-N statistical accuracy and wins on wall-clock
+    let system = SystemModel::parse("markov:4:0.1:0.5:uniform:50:500").unwrap();
+    let mut flanp = base_cfg(SolverKind::Flanp, 16, 50);
+    flanp.system = system.clone();
+    let mut gate = base_cfg(SolverKind::FedGate, 16, 50);
+    gate.system = system;
+    let (t_flanp, ..) = run(&flanp);
+    let (t_gate, ..) = run(&gate);
+    assert!(t_flanp.finished, "flanp unfinished under markov drift");
+    assert!(t_gate.finished, "fedgate unfinished under markov drift");
+    assert!(
+        t_flanp.total_time < t_gate.total_time,
+        "flanp {} !< fedgate {} under markov drift",
+        t_flanp.total_time,
+        t_gate.total_time
+    );
+}
+
+#[test]
+fn jitter_scenario_runs_end_to_end_and_perturbs_the_clock() {
+    let mut cfg = base_cfg(SolverKind::Flanp, 16, 50);
+    cfg.system = SystemModel::parse("jitter:0.3:uniform:50:500").unwrap();
+    let (jittered, ..) = run(&cfg);
+    let (still, ..) = run(&base_cfg(SolverKind::Flanp, 16, 50));
+    assert!(jittered.finished);
+    // same optimization trajectory lengths are possible, but realized
+    // round costs must differ from the static draw
+    assert_ne!(jittered.total_time, still.total_time);
+}
+
+#[test]
+fn dropout_scenario_records_drops_and_still_converges() {
+    let mut cfg = base_cfg(SolverKind::FedGate, 16, 50);
+    cfg.system = SystemModel::parse("drop:0.1:uniform:50:500").unwrap();
+    let (trace, ..) = run(&cfg);
+    assert!(trace.finished, "fedgate unfinished under 10% dropout");
+    let total_dropped: usize = trace.rounds.iter().map(|r| r.dropped).sum();
+    assert!(
+        total_dropped > 0,
+        "no dropouts recorded across {} rounds at p=0.1",
+        trace.rounds.len()
+    );
+    // dropped counts never exceed the cohort
+    assert!(trace.rounds.iter().all(|r| r.dropped <= 16));
+}
+
+#[test]
+fn scenario_selection_flows_through_config_validation() {
+    let mut cfg = base_cfg(SolverKind::Flanp, 8, 50);
+    cfg.system =
+        SystemModel::parse("drop:0.05:markov:4:0.1:0.5:uniform:50:500").unwrap();
+    assert!(cfg.validate(10).is_ok());
+    cfg.system.p_drop = 1.0; // every client always drops: invalid
+    assert!(cfg.validate(10).is_err());
+}
