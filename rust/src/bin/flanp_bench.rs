@@ -1,35 +1,64 @@
 //! `flanp-bench` — regenerates every table and figure of the paper's
-//! evaluation (Section 5). One subcommand per experiment; see DESIGN.md §5
-//! for the mapping and EXPERIMENTS.md for recorded paper-vs-measured runs.
-//!
-//!   flanp-bench fig1 .. fig9 | table1 | table2 | scenarios | all [options]
-//!
-//! Options:
-//!   --quick           reduced sizes (CI-scale; shapes still hold)
-//!   --engine E        native | hlo            [native]
-//!   --out DIR         CSV trace directory     [results]
-//!   --seed N          PRNG seed               [1]
-//!   --trials N        seeds averaged for tables [3]
-//!   --speed SPEC      override every experiment's system-heterogeneity
-//!                     scenario (same grammar as `flanp run --speed`,
-//!                     e.g. markov:4:0.1:0.5:uniform:50:500)
-//!
-//! `scenarios` sweeps FLANP vs FedGATE across the time-varying
-//! heterogeneity scenarios opened by fed::system (static / jitter /
-//! Markov drift / dropout).
-//!
-//! Measured "time" is the simulated wall-clock of the paper's timing
-//! model (round cost = tau * max participant T_i) — the same units the
-//! paper's x-axes use, since its speeds are simulated draws too.
+//! evaluation (Section 5) plus the scenario and async/semi-synchronous
+//! sweeps. One subcommand per experiment; see DESIGN.md §5 for the
+//! mapping, EXPERIMENTS.md for recorded paper-vs-measured runs and
+//! `docs/scenarios.md` for the scenario playbook. Run
+//! `flanp-bench help` for the full option reference.
 
 use anyhow::{Context, Result};
 use flanp::coordinator::config::Subroutine;
 use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
 use flanp::engine::Engine;
-use flanp::fed::{SpeedModel, SystemModel, Trace};
+use flanp::fed::{DeadlinePolicy, SpeedModel, SystemModel, Trace};
 use flanp::setup;
 use flanp::util::cli::Args;
 use std::path::PathBuf;
+
+const USAGE: &str = "\
+flanp-bench — regenerate the paper's evaluation + scenario sweeps
+
+USAGE:
+  flanp-bench <experiment> [options]
+  flanp-bench help
+
+EXPERIMENTS:
+  fig1 .. fig9      the paper's figures (fig7 = table1, fig8 = table2)
+  table1 | table2   runtime ratio tables (effect of s / of N)
+  ablate            warm start / growth factor / subroutine ablations
+  scenarios         FLANP vs FedGATE under time-varying heterogeneity
+                    (static / jitter / markov / markov+drop)
+  async             FLANP vs FedGATE vs FedBuff vs deadline variants
+                    under the same four scenarios (semi-sync + async
+                    aggregation; see docs/scenarios.md)
+  all               every figure/table/ablation above
+
+OPTIONS:
+  --quick           reduced sizes (CI-scale; shapes still hold)
+  --engine E        native | hlo            [native]
+  --out DIR         CSV trace directory     [results]
+  --seed N          PRNG seed               [1]
+  --trials N        seeds averaged for tables [3]
+  --speed SPEC      override every experiment's system-heterogeneity
+                    scenario (not valid for the scenarios/async sweeps,
+                    which run their own scenario grids)
+                    grammar: [drop:P:][static:|jitter:SIGMA:|markov:F:PS:PR:]BASE
+                    prefixes (composable, dropout first):
+                      drop:P:            P in [0,1): per-round client dropout
+                      static:            no per-round dynamics (default)
+                      jitter:SIGMA:      log-normal per-round speed jitter
+                      markov:F:PS:PR:    fast/slow Markov drift (slow = F x
+                                         base, fast->slow PS, slow->fast PR)
+                    BASE = uniform:lo:hi | exp:lambda | homog:t
+                    e.g. markov:4:0.1:0.5:uniform:50:500
+
+Deadline policy specs used by the async sweep (and `flanp run
+--deadline`): sync | fixed:T | quantile:Q | adaptive:F.
+
+Measured \"time\" is the simulated wall-clock of the paper's timing
+model (round cost = tau * max participant T_i; deadline rounds cost
+min(deadline, slowest); FedBuff charges buffer-flush times) — the same
+units the paper's x-axes use, since its speeds are simulated draws too.
+";
 
 struct BenchOpts {
     quick: bool,
@@ -50,15 +79,25 @@ fn main() {
 
 const EXPS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6a", "fig6b", "fig7",
-    "fig8", "fig9", "table1", "table2", "ablate", "scenarios", "all",
+    "fig8", "fig9", "table1", "table2", "ablate", "scenarios", "async",
+    "all", "help",
 ];
 
 fn real_main() -> Result<()> {
     let mut args = Args::from_env(EXPS).map_err(|e| anyhow::anyhow!(e))?;
+    // `flanp-bench --help` works like the `help` subcommand
+    if args.switch("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
     let sub = args
         .subcommand
         .clone()
-        .context("usage: flanp-bench <fig1..fig9|table1|table2|all> [--quick]")?;
+        .with_context(|| format!("missing experiment subcommand\n{USAGE}"))?;
+    if sub == "help" {
+        print!("{USAGE}");
+        return Ok(());
+    }
     let opts = BenchOpts {
         quick: args.switch("quick"),
         engine: args.flag_str("engine", "native"),
@@ -87,6 +126,7 @@ fn real_main() -> Result<()> {
         "fig9" => fig9(&opts)?,
         "ablate" => ablate(&opts)?,
         "scenarios" => scenarios(&opts)?,
+        "async" => async_sweep(&opts)?,
         "all" => {
             fig1(&opts)?;
             fig2(&opts)?;
@@ -582,6 +622,97 @@ fn scenarios(opts: &BenchOpts) -> Result<()> {
             times[0] / times[1],
             format!("{}/{}", dropped[0], dropped[1]),
         );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Async / semi-synchronous aggregation — deadline policies + FedBuff vs
+// the synchronous baselines, across the fed::system scenario grid
+// ---------------------------------------------------------------------------
+
+fn async_sweep(opts: &BenchOpts) -> Result<()> {
+    // each row runs its OWN spec; a global override would silently turn
+    // the sweep into identical, mislabeled runs
+    anyhow::ensure!(
+        opts.system.is_none(),
+        "--speed conflicts with the async sweep (it runs a fixed scenario grid)"
+    );
+    println!(
+        "=== Async/semi-sync: FLANP vs FedGATE vs FedBuff vs deadline variants ==="
+    );
+    let (n, s, rounds) = if opts.quick { (12, 50, 1200) } else { (32, 100, 4000) };
+    let specs = [
+        ("static", "uniform:50:500"),
+        ("jitter", "jitter:0.3:uniform:50:500"),
+        ("markov", "markov:6:0.15:0.4:uniform:50:500"),
+        ("markov+drop", "drop:0.05:markov:6:0.15:0.4:uniform:50:500"),
+    ];
+    let variants: Vec<(&str, SolverKind, DeadlinePolicy)> = vec![
+        ("flanp-sync", SolverKind::Flanp, DeadlinePolicy::Sync),
+        (
+            "flanp-q80",
+            SolverKind::Flanp,
+            DeadlinePolicy::Quantile { q: 0.8 },
+        ),
+        (
+            "flanp-adapt",
+            SolverKind::Flanp,
+            DeadlinePolicy::Adaptive { target: 0.8 },
+        ),
+        ("fedgate-sync", SolverKind::FedGate, DeadlinePolicy::Sync),
+        (
+            "fedgate-q80",
+            SolverKind::FedGate,
+            DeadlinePolicy::Quantile { q: 0.8 },
+        ),
+        (
+            "fedbuff",
+            SolverKind::FedBuff { k: (n / 4).max(2) },
+            DeadlinePolicy::Sync,
+        ),
+    ];
+    for (label, spec) in specs {
+        let system = SystemModel::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+        println!("  -- scenario {label} ({spec}) --");
+        let mut sync_time = None;
+        for (name, solver, ddl) in &variants {
+            let mut cfg = ExperimentConfig::new(solver.clone(), "linreg_d25", n, s);
+            cfg.eta = 0.05;
+            cfg.tau = 10;
+            cfg.n0 = 2;
+            cfg.mu = 0.5;
+            cfg.c_stat = 0.5;
+            cfg.system = system.clone();
+            cfg.deadline = ddl.clone();
+            cfg.seed = opts.seed;
+            // fedbuff "rounds" are buffer flushes — far cheaper than a
+            // full cohort round, so a fair time-to-target comparison
+            // needs a proportionally larger flush budget
+            cfg.max_rounds = if matches!(solver, SolverKind::FedBuff { .. }) {
+                rounds * 10
+            } else {
+                rounds
+            };
+            cfg.eval_every = 5;
+            cfg.eval_rows = 500;
+            let trace = run_one(opts, &cfg, &format!("async_{label}_{name}"))?;
+            let missed: usize = trace.rounds.iter().map(|r| r.missed).sum();
+            let dropped: usize = trace.rounds.iter().map(|r| r.dropped).sum();
+            if *name == "flanp-sync" {
+                sync_time = Some(trace.total_time);
+            }
+            let speedup = sync_time
+                .map(|t0| format!("{:>5.2}x vs flanp-sync", t0 / trace.total_time))
+                .unwrap_or_default();
+            println!(
+                "  {name:<14} time={:<12.1} rounds={:<5} missed={missed:<5} \
+                 dropped={dropped:<5} finished={} {speedup}",
+                trace.total_time,
+                trace.rounds.len().saturating_sub(1),
+                trace.finished,
+            );
+        }
     }
     Ok(())
 }

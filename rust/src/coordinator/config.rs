@@ -1,6 +1,6 @@
 //! Experiment configuration: every knob of every figure in one struct.
 
-use crate::fed::{SpeedModel, SystemModel};
+use crate::fed::{DeadlinePolicy, SpeedModel, SystemModel};
 
 /// Which algorithm drives the run.
 #[derive(Clone, Debug, PartialEq)]
@@ -22,6 +22,12 @@ pub enum SolverKind {
     FedGatePartialRandom { k: usize },
     /// FedGATE with the k fastest participants every round (Fig. 6b).
     FedGatePartialFastest { k: usize },
+    /// FedBuff (Nguyen et al. 2022): buffered asynchronous aggregation —
+    /// clients train continuously against the model snapshot they last
+    /// pulled; the server applies a staleness-weighted average whenever
+    /// k uploads fill its buffer. No round deadline: the clock advances
+    /// to each buffer-flush time.
+    FedBuff { k: usize },
 }
 
 impl SolverKind {
@@ -35,6 +41,7 @@ impl SolverKind {
             SolverKind::FedProx => "fedprox".into(),
             SolverKind::FedGatePartialRandom { k } => format!("fedgate-rand{k}"),
             SolverKind::FedGatePartialFastest { k } => format!("fedgate-fast{k}"),
+            SolverKind::FedBuff { k } => format!("fedbuff{k}"),
         }
     }
 
@@ -47,6 +54,11 @@ impl SolverKind {
         if let Some(k) = s.strip_prefix("fedgate-fast") {
             return Ok(SolverKind::FedGatePartialFastest {
                 k: k.parse().map_err(|_| "bad k")?,
+            });
+        }
+        if let Some(k) = s.strip_prefix("fedbuff") {
+            return Ok(SolverKind::FedBuff {
+                k: k.parse().map_err(|_| "bad buffer size k")?,
             });
         }
         match s {
@@ -96,6 +108,11 @@ pub struct ExperimentConfig {
     /// system-heterogeneity scenario: base speed draw + per-round
     /// dynamics + dropout (plain [`SpeedModel`]s convert via `.into()`)
     pub system: SystemModel,
+    /// Aggregation deadline policy (fed::aggregation): how the server
+    /// decides when to close a round and aggregate whatever arrived.
+    /// [`DeadlinePolicy::Sync`] (the default) waits for the slowest
+    /// cohort member — the paper's model, bit-identical to the seed.
+    pub deadline: DeadlinePolicy,
     /// FLANP ranks its fastest-prefix from the online EWMA speed
     /// estimates (TiFL-style) instead of oracle speeds. Under static
     /// scenarios both rankings are identical bit-for-bit.
@@ -153,6 +170,7 @@ impl ExperimentConfig {
             c_stat: 1.0,
             prox_mu: 0.1,
             system: SpeedModel::paper_uniform().into(),
+            deadline: DeadlinePolicy::Sync,
             estimate_speeds: true,
             ewma_alpha: crate::fed::DEFAULT_EWMA_ALPHA,
             seed: 1,
@@ -221,6 +239,20 @@ impl ExperimentConfig {
             return Err("stepsizes must be positive".into());
         }
         self.system.validate()?;
+        self.deadline.validate()?;
+        if self.deadline != DeadlinePolicy::Sync
+            && !matches!(
+                self.solver,
+                SolverKind::Flanp | SolverKind::FlanpHeuristic | SolverKind::FedGate
+            )
+        {
+            return Err(format!(
+                "deadline policy '{}' applies to the synchronous cohort \
+                 solvers (flanp | flanp-heuristic | fedgate), not {}",
+                self.deadline.spec(),
+                self.solver.name()
+            ));
+        }
         if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
             return Err(format!(
                 "ewma_alpha = {} outside (0, 1]",
@@ -231,11 +263,13 @@ impl ExperimentConfig {
             self.solver,
             SolverKind::FedGatePartialRandom { k: 0 }
                 | SolverKind::FedGatePartialFastest { k: 0 }
+                | SolverKind::FedBuff { k: 0 }
         ) {
-            return Err("partial participation k must be positive".into());
+            return Err("partial participation / buffer size k must be positive".into());
         }
         if let SolverKind::FedGatePartialRandom { k }
-        | SolverKind::FedGatePartialFastest { k } = self.solver
+        | SolverKind::FedGatePartialFastest { k }
+        | SolverKind::FedBuff { k } = self.solver
         {
             if k > self.num_clients {
                 return Err("k exceeds num_clients".into());
@@ -307,9 +341,39 @@ mod tests {
             "fedprox",
             "fedgate-rand5",
             "fedgate-fast8",
+            "fedbuff4",
         ] {
             assert_eq!(SolverKind::parse(s).unwrap().name(), s);
         }
         assert!(SolverKind::parse("sgd").is_err());
+        assert!(SolverKind::parse("fedbuff").is_err(), "buffer size required");
+    }
+
+    #[test]
+    fn deadline_policies_validate_per_solver() {
+        let mut cfg = ExperimentConfig::new(SolverKind::Flanp, "m", 10, 100);
+        cfg.deadline = DeadlinePolicy::Quantile { q: 0.8 };
+        assert!(cfg.validate(10).is_ok());
+        cfg.solver = SolverKind::FedGate;
+        assert!(cfg.validate(10).is_ok());
+        // asynchronous / averaging solvers have no cohort deadline
+        cfg.solver = SolverKind::FedBuff { k: 4 };
+        assert!(cfg.validate(10).is_err());
+        cfg.solver = SolverKind::FedAvg;
+        assert!(cfg.validate(10).is_err());
+        cfg.deadline = DeadlinePolicy::Sync;
+        assert!(cfg.validate(10).is_ok());
+        // malformed policies are rejected regardless of solver
+        cfg.solver = SolverKind::Flanp;
+        cfg.deadline = DeadlinePolicy::Quantile { q: 1.5 };
+        assert!(cfg.validate(10).is_err());
+        // fedbuff buffer size is bounded by the fleet
+        cfg.deadline = DeadlinePolicy::Sync;
+        cfg.solver = SolverKind::FedBuff { k: 0 };
+        assert!(cfg.validate(10).is_err());
+        cfg.solver = SolverKind::FedBuff { k: 11 };
+        assert!(cfg.validate(10).is_err());
+        cfg.solver = SolverKind::FedBuff { k: 5 };
+        assert!(cfg.validate(10).is_ok());
     }
 }

@@ -9,17 +9,28 @@
 //!     gradient-tracking variables, re-tune stepsizes (Theorem 1), and
 //!     warm-start from the previous stage's model (Proposition 1);
 //!   * finish when the full-N stage reaches its statistical accuracy.
+//!
+//! With a non-[`Sync`](crate::fed::DeadlinePolicy::Sync) aggregation
+//! deadline the stage machine runs **semi-synchronously**: each round
+//! aggregates only the clients that arrived by the policy's deadline and
+//! charges `min(deadline, slowest)` to the clock. The statistical-
+//! accuracy rule is unchanged — it thresholds the gradient of the FULL
+//! intended cohort's objective, whose statistical accuracy `V_ns`
+//! depends on the cohort's data, not on which subset arrived — so stage
+//! boundaries (and the final full-N stop) remain sound under partial
+//! participation; partial rounds just make less progress per round while
+//! costing less wall-clock (see `stopping.rs`).
 
 use super::config::{ExperimentConfig, SolverKind, Subroutine};
 use super::eval::EvalData;
 use super::gate::{
     active_loss_gradsq, fedgate_round, local_round, GateState, RoundBuffers,
 };
-use super::solvers::{init_params, RunContext};
+use super::solvers::{deadline_round, init_params, RunContext};
 use crate::util::linalg;
 use super::stopping::{HeuristicStop, OracleStop, StageStop};
 use crate::engine::Engine;
-use crate::fed::{ClientFleet, Trace};
+use crate::fed::{ClientFleet, DeadlineController, Trace};
 use anyhow::Result;
 
 pub fn run_flanp(
@@ -30,6 +41,7 @@ pub fn run_flanp(
     let heuristic = cfg.solver == SolverKind::FlanpHeuristic;
     let mut oracle = OracleStop::from_config(cfg);
     let mut heur = HeuristicStop::new();
+    let mut ddl = DeadlineController::new(cfg.deadline.clone());
 
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
@@ -62,18 +74,26 @@ pub fn run_flanp(
             if heuristic {
                 heur.observe_initial(g0);
             }
-            ctx.record(&state.w, n, stage, l0, g0, 0)?;
+            ctx.record(&state.w, n, stage, l0, g0, 0, 0)?;
         }
 
         loop {
             // realize this round's system conditions (event-driven: the
-            // process advances for every client, active or not) and
-            // split the cohort into arrivals vs dropouts
+            // process advances for every client, active or not), split
+            // the cohort into arrivals vs dropouts vs deadline misses,
+            // charge the clock and update the speed estimates. Only the
+            // arrived clients' updates are aggregated; under the Sync
+            // policy this is the whole available cohort, bit-identically
+            // to the seed's synchronous rounds.
             let (cond, participants) = fleet.realize_round(&active);
-            if !participants.is_empty() {
+            let (arrived, ev) = deadline_round(
+                &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
+                cfg.tau,
+            );
+            if !arrived.is_empty() {
                 match cfg.subroutine {
                     Subroutine::Gate => fedgate_round(
-                        engine, fleet, &mut state, &participants, cfg.tau,
+                        engine, fleet, &mut state, &arrived, cfg.tau,
                         eta, gamma, &mut bufs,
                     )?,
                     Subroutine::Avg => {
@@ -82,29 +102,19 @@ pub fn run_flanp(
                         let p = state.w.len();
                         let zero = vec![0.0f32; p];
                         let mut acc = vec![0.0f64; p];
-                        for &i in &participants {
+                        for &i in &arrived {
                             let wi = local_round(
                                 engine, fleet, i, &state.w, &zero, cfg.tau,
                                 eta, &mut bufs,
                             )?;
                             linalg::accumulate(&mut acc, &wi);
                         }
-                        state.w = linalg::mean_of(&acc, participants.len());
+                        state.w = linalg::mean_of(&acc, arrived.len());
                     }
                 }
             }
-            // dropped clients hold the round open until the deadline, so
-            // the server's wait is the max over the whole intended cohort
-            let times: Vec<f64> = active.iter().map(|&i| cond.times[i]).collect();
-            let ev = ctx.clock.charge_round(
-                &active,
-                &times,
-                cfg.tau,
-                active.len() - participants.len(),
-            );
-            fleet.observe_round(&participants, &cond);
             let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
-            ctx.record(&state.w, n, stage, loss, gsq, ev.dropped)?;
+            ctx.record(&state.w, n, stage, loss, gsq, ev.dropped, ev.missed)?;
 
             let done = if heuristic {
                 heur.is_initialized() && heur.stage_done(n, gsq)

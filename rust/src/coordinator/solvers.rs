@@ -1,6 +1,7 @@
-//! Benchmark solvers (Section 5): FedGATE, FedAvg, FedNova, FedProx and
-//! the partial-participation FedGATE variants — plus the shared run loop
-//! used by FLANP (`flanp.rs`).
+//! Benchmark solvers (Section 5): FedGATE, FedAvg, FedNova, FedProx, the
+//! partial-participation FedGATE variants and the FedBuff buffered-async
+//! solver — plus the shared run loop used by FLANP (`flanp.rs`) and the
+//! deadline-bounded round step shared by the semi-synchronous solvers.
 
 use super::config::{ExperimentConfig, SolverKind};
 use super::eval::EvalData;
@@ -8,7 +9,10 @@ use super::gate::{
     active_loss_gradsq, fedgate_round, local_round, GateState, RoundBuffers,
 };
 use crate::engine::{Engine, ModelKind};
-use crate::fed::{ClientFleet, RoundRecord, Trace, VirtualClock};
+use crate::fed::{
+    ClientFleet, DeadlineController, RoundConditions, RoundEvent, RoundRecord,
+    Trace, VirtualClock,
+};
 use crate::util::{linalg, Rng};
 use anyhow::Result;
 
@@ -66,8 +70,9 @@ impl<'a> RunContext<'a> {
 
     /// Evaluate + append one trace row. `loss_active`/`grad_sq` are the
     /// active-set objective stats already computed by the solver (NaN if
-    /// unavailable this round); `dropped` is the round's dropout count
-    /// from the clock's [`crate::fed::RoundEvent`].
+    /// unavailable this round); `dropped` / `missed` are the round's
+    /// dropout and deadline-miss counts from the clock's
+    /// [`crate::fed::RoundEvent`].
     pub fn record(
         &mut self,
         w: &[f32],
@@ -76,6 +81,7 @@ impl<'a> RunContext<'a> {
         loss_active: f64,
         grad_sq: f64,
         dropped: usize,
+        missed: usize,
     ) -> Result<()> {
         let round = self.trace.rounds.len();
         let evaluate = round % self.cfg.eval_every.max(1) == 0;
@@ -102,6 +108,7 @@ impl<'a> RunContext<'a> {
             accuracy,
             stage,
             dropped,
+            missed,
         });
         Ok(())
     }
@@ -134,6 +141,53 @@ impl<'a> RunContext<'a> {
     }
 }
 
+/// One deadline-bounded synchronous round step, shared by FLANP and
+/// benchmark FedGATE: compute the cohort's deadline from the *estimated*
+/// speeds, split the realized arrivals from the deadline misses, charge
+/// the clock (`min(deadline, slowest cohort member)` — a partial round
+/// charges only the deadline), and feed exact / censored observations
+/// back into the speed estimator. Returns the clients whose update
+/// actually arrived (the only ones the caller may aggregate) and the
+/// charged [`RoundEvent`].
+///
+/// Under [`crate::fed::DeadlinePolicy::Sync`] the deadline is `+inf`:
+/// every available client arrives, no censored observations are made and
+/// the charged cost is bit-identical to the synchronous path.
+pub(crate) fn deadline_round(
+    ctx: &mut RunContext,
+    fleet: &mut ClientFleet,
+    ddl: &mut DeadlineController,
+    active: &[usize],
+    cond: &RoundConditions,
+    participants: &[usize],
+    updates: usize,
+) -> (Vec<usize>, RoundEvent) {
+    let est: Vec<f64> =
+        active.iter().map(|&i| fleet.estimates.estimate(i)).collect();
+    let deadline = ddl.round_deadline(&est, updates);
+    let (arrived, late): (Vec<usize>, Vec<usize>) = participants
+        .iter()
+        .copied()
+        .partition(|&i| updates as f64 * cond.times[i] <= deadline);
+    let times: Vec<f64> = active.iter().map(|&i| cond.times[i]).collect();
+    let ev = ctx.clock.charge_round_deadline(
+        active,
+        &times,
+        updates,
+        deadline,
+        active.len() - participants.len(),
+        late.len(),
+    );
+    fleet.observe_round(&arrived, cond);
+    fleet.observe_censored(&late, deadline / updates as f64);
+    // the adaptive policy tunes on the deadline-CONTROLLABLE outcome:
+    // arrivals out of the available participants. Dropped clients can
+    // never arrive by any deadline, so counting them would pin the
+    // scale at its ceiling under heavy dropout (degenerating to sync).
+    ddl.observe_round(arrived.len(), participants.len());
+    (arrived, ev)
+}
+
 /// Entry point: dispatch a config to its solver. FLANP variants live in
 /// `flanp.rs` but are reachable from here too.
 pub fn run_solver(
@@ -156,10 +210,14 @@ pub fn run_solver(
         SolverKind::FedGatePartialFastest { k } => {
             run_fedgate_partial(engine, fleet, cfg, k, true)
         }
+        SolverKind::FedBuff { k } => run_fedbuff(engine, fleet, cfg, k),
     }
 }
 
 /// Non-adaptive FedGATE with all N clients (Proposition 3's benchmark).
+/// Honors the configured aggregation deadline policy: with a finite
+/// deadline only arrived clients are aggregated and the round charges
+/// `min(deadline, slowest)`.
 fn run_fedgate_full(
     engine: &dyn Engine,
     fleet: &mut ClientFleet,
@@ -167,6 +225,7 @@ fn run_fedgate_full(
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
+    let mut ddl = DeadlineController::new(cfg.deadline.clone());
     let n = fleet.num_clients();
     let active: Vec<usize> = (0..n).collect();
     let mut state = GateState::new(init_params(engine, cfg.seed), n);
@@ -174,24 +233,20 @@ fn run_fedgate_full(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
-    ctx.record(&state.w, n, 0, l0, g0, 0)?;
+    ctx.record(&state.w, n, 0, l0, g0, 0, 0)?;
     loop {
         let (cond, participants) = fleet.realize_round(&active);
-        if !participants.is_empty() {
+        let (arrived, ev) = deadline_round(
+            &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
+        );
+        if !arrived.is_empty() {
             fedgate_round(
-                engine, fleet, &mut state, &participants, cfg.tau, cfg.eta,
+                engine, fleet, &mut state, &arrived, cfg.tau, cfg.eta,
                 cfg.gamma, &mut bufs,
             )?;
         }
-        let ev = ctx.clock.charge_round(
-            &active,
-            &cond.times,
-            cfg.tau,
-            active.len() - participants.len(),
-        );
-        fleet.observe_round(&participants, &cond);
         let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
-        ctx.record(&state.w, n, 0, loss, gsq, ev.dropped)?;
+        ctx.record(&state.w, n, 0, loss, gsq, ev.dropped, ev.missed)?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -227,7 +282,7 @@ fn run_model_average(
     let meta = engine.meta();
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
-    ctx.record(&w, n, 0, l0, g0, 0)?;
+    ctx.record(&w, n, 0, l0, g0, 0, 0)?;
     loop {
         let (cond, participants) = fleet.realize_round(&active);
         let mut acc = vec![0.0f64; p];
@@ -270,7 +325,7 @@ fn run_model_average(
         );
         fleet.observe_round(&participants, &cond);
         let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &w)?;
-        ctx.record(&w, n, 0, loss, gsq, ev.dropped)?;
+        ctx.record(&w, n, 0, loss, gsq, ev.dropped, ev.missed)?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -301,7 +356,7 @@ fn run_fednova(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
-    ctx.record(&w, n, 0, l0, g0, 0)?;
+    ctx.record(&w, n, 0, l0, g0, 0, 0)?;
     loop {
         // Wang et al.'s deadline setup, re-derived each round from the
         // REALIZED speeds: the round window fits tau local steps of the
@@ -349,7 +404,7 @@ fn run_fednova(
         );
         fleet.observe_round(&participants, &cond);
         let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &w)?;
-        ctx.record(&w, n, 0, loss, gsq, ev.dropped)?;
+        ctx.record(&w, n, 0, loss, gsq, ev.dropped, ev.missed)?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -382,7 +437,7 @@ fn run_fedgate_partial(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
-    ctx.record(&state.w, k, 0, l0, g0, 0)?;
+    ctx.record(&state.w, k, 0, l0, g0, 0, 0)?;
     loop {
         // chosen from the oracle ordering (the paper's baseline — only
         // FLANP gets the online estimator), then realized conditions
@@ -408,12 +463,145 @@ fn run_fedgate_partial(
         );
         fleet.observe_round(&participants, &cond);
         let (loss, gsq) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
-        ctx.record(&state.w, k, 0, loss, gsq, ev.dropped)?;
+        ctx.record(&state.w, k, 0, loss, gsq, ev.dropped, ev.missed)?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
         }
         if ctx.should_stop() {
+            break;
+        }
+    }
+    Ok(ctx.trace)
+}
+
+/// FedBuff staleness discount (Nguyen et al. 2022): an update computed
+/// against a model `staleness` server versions old is downweighted by
+/// `1 / sqrt(1 + staleness)`.
+pub fn staleness_weight(staleness: usize) -> f64 {
+    1.0 / (1.0 + staleness as f64).sqrt()
+}
+
+/// FedBuff (Nguyen et al. 2022): buffered asynchronous aggregation.
+///
+/// Every client trains continuously: it pulls the current server model,
+/// runs tau local steps at its own realized speed, uploads, and
+/// immediately pulls again. The server buffers uploads and applies one
+/// staleness-weighted averaged update whenever `k` of them accumulate —
+/// no round deadline, no waiting for stragglers. Simulated as a
+/// discrete-event loop over per-client completion times; each buffer
+/// flush is one "round" on the trace and advances the virtual clock to
+/// the flush time ([`VirtualClock::charge_until`]). Speed realizations
+/// advance once per flush via the same [`crate::fed::SystemState`]
+/// process the synchronous solvers use, so FedBuff sees the same
+/// scenario dynamics as its comparison baselines.
+///
+/// Stopping matches the synchronous benchmarks: the run finishes when
+/// the full-objective gradient meets the N-client statistical accuracy
+/// `||grad||^2 <= 2 mu V_Ns`.
+fn run_fedbuff(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    cfg: &ExperimentConfig,
+    k: usize,
+) -> Result<Trace> {
+    let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
+    let mut ctx = RunContext::new(engine, cfg, &eval);
+    let n = fleet.num_clients();
+    let all: Vec<usize> = (0..n).collect();
+    let p = engine.meta().param_count;
+    let mut w = init_params(engine, cfg.seed);
+    let zero_delta = vec![0.0f32; p];
+    let mut bufs = RoundBuffers::new(engine, cfg.tau);
+    let threshold = cfg.grad_threshold(n);
+
+    // per-client async state: the model snapshot it trains against, the
+    // server version it pulled, its upload time and this attempt's
+    // realized conditions
+    let mut start_w: Vec<Vec<f32>> = vec![w.clone(); n];
+    let mut start_version = vec![0usize; n];
+    let mut finish = vec![0.0f64; n];
+    let mut attempt_time = vec![0.0f64; n];
+    let mut avail = vec![true; n];
+    let mut version = 0usize;
+
+    let mut cond = fleet.next_round_conditions();
+    for i in 0..n {
+        attempt_time[i] = cond.times[i];
+        avail[i] = cond.available[i];
+        finish[i] = cfg.tau as f64 * cond.times[i];
+    }
+
+    let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &w)?;
+    ctx.record(&w, n, 0, l0, g0, 0, 0)?;
+
+    // server buffer: staleness-weighted delta accumulator. Dropped
+    // uploads are tracked per CLIENT (a fast unavailable client can
+    // fail several attempts within one flush window; the trace row
+    // reports distinct clients so `dropped` never exceeds the fleet)
+    let mut acc = vec![0.0f64; p];
+    let mut buffered = 0usize;
+    let mut dropped_since_flush = vec![false; n];
+    // liveness bound: under extreme dropout the buffer can take many
+    // completions to fill; cap total client attempts so the loop always
+    // terminates even if no flush ever happens
+    let max_attempts = (cfg.max_rounds + 1) * n.max(k) * 4;
+    let mut attempts = 0usize;
+    loop {
+        // pop the earliest completion (completion times are finite and
+        // strictly positive, so the comparison never sees NaN)
+        let i = (0..n)
+            .min_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap())
+            .unwrap();
+        let t_i = finish[i];
+        attempts += 1;
+        if avail[i] {
+            let wi = local_round(
+                engine, fleet, i, &start_w[i], &zero_delta, cfg.tau, cfg.eta,
+                &mut bufs,
+            )?;
+            // Delta_i = (w_start - w_i^tau) / eta, discounted by staleness
+            let staleness = version - start_version[i];
+            let inv = (staleness_weight(staleness) / cfg.eta as f64) as f32;
+            let sw = &start_w[i];
+            for j in 0..p {
+                acc[j] += ((sw[j] - wi[j]) * inv) as f64;
+            }
+            buffered += 1;
+            fleet.estimates.observe(i, attempt_time[i]);
+        } else {
+            dropped_since_flush[i] = true;
+        }
+        if buffered == k {
+            // flush: apply the buffered mean, advance clock and version
+            let d_avg = linalg::mean_of(&acc, k);
+            linalg::axpy(-(cfg.eta * cfg.gamma), &d_avg, &mut w);
+            version += 1;
+            let dropped = dropped_since_flush.iter().filter(|&&d| d).count();
+            let ev = ctx.clock.charge_until(t_i, k, dropped, 0);
+            let (loss, gsq) = active_loss_gradsq(engine, fleet, &all, &w)?;
+            ctx.record(&w, k, 0, loss, gsq, ev.dropped, 0)?;
+            acc.fill(0.0);
+            buffered = 0;
+            dropped_since_flush.fill(false);
+            // the heterogeneity process advances once per flush
+            cond = fleet.next_round_conditions();
+            if gsq <= threshold {
+                ctx.trace.finished = true;
+                break;
+            }
+            if ctx.should_stop() {
+                break;
+            }
+        }
+        // relaunch client i from the current server model under the
+        // latest realized conditions
+        start_w[i].copy_from_slice(&w);
+        start_version[i] = version;
+        attempt_time[i] = cond.times[i];
+        avail[i] = cond.available[i];
+        finish[i] = t_i + cfg.tau as f64 * cond.times[i];
+        if attempts >= max_attempts {
             break;
         }
     }
@@ -533,6 +721,69 @@ mod tests {
             * sorted_speed.iter().cloned().fold(0.0f64, f64::max);
         let dt = t.rounds[2].time - t.rounds[1].time;
         assert!((dt - per_round).abs() < 1e-9, "{dt} vs {per_round}");
+    }
+
+    #[test]
+    fn staleness_weight_discounts_old_updates() {
+        assert_eq!(staleness_weight(0), 1.0);
+        assert_eq!(staleness_weight(3), 0.5);
+        assert!(staleness_weight(10) < staleness_weight(1));
+    }
+
+    #[test]
+    fn fedbuff_converges_and_finishes() {
+        let (e, mut fleet) = setup(8, 50);
+        let mut cfg = base_cfg(SolverKind::FedBuff { k: 3 });
+        // staleness-discounted buffered updates make smaller effective
+        // steps than a full synchronous round: allow more flushes
+        cfg.max_rounds = 800;
+        let t = run_solver(&e, &mut fleet, &cfg).unwrap();
+        assert!(t.finished, "fedbuff did not reach statistical accuracy");
+        assert!(t.last().unwrap().loss_full < t.rounds[0].loss_full);
+        // flush times never decrease
+        assert!(t.rounds.windows(2).all(|w| w[1].time >= w[0].time));
+        // every flush aggregates exactly k buffered uploads
+        assert!(t.rounds[1..].iter().all(|r| r.participants == 3));
+    }
+
+    #[test]
+    fn fedbuff_deterministic_given_seed() {
+        let (e, mut fleet) = setup(6, 50);
+        let cfg = base_cfg(SolverKind::FedBuff { k: 2 });
+        let t1 = run_solver(&e, &mut fleet, &cfg).unwrap();
+        let (e2, mut fleet2) = setup(6, 50);
+        let t2 = run_solver(&e2, &mut fleet2, &cfg).unwrap();
+        assert_eq!(t1.rounds.len(), t2.rounds.len());
+        for (a, b) in t1.rounds.iter().zip(&t2.rounds) {
+            assert_eq!(a.loss_full, b.loss_full);
+            assert_eq!(a.time, b.time);
+        }
+    }
+
+    #[test]
+    fn fedbuff_flushes_track_fast_clients() {
+        // with k = 2 of 8, early flushes happen before a full synchronous
+        // round over all 8 would have closed: the first flush time must
+        // be at most tau * (2nd fastest speed) * ... actually the 2nd
+        // arrival of ANY client, which is bounded by tau * 2nd-fastest
+        let (e, mut fleet) = setup(8, 50);
+        let sorted = fleet.speeds_of(fleet.fastest(8));
+        let slowest = sorted.iter().cloned().fold(0.0f64, f64::max);
+        let second_fastest = {
+            let mut s = sorted.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s[1]
+        };
+        let mut cfg = base_cfg(SolverKind::FedBuff { k: 2 });
+        cfg.max_rounds = 5;
+        cfg.c_stat = 1e-9; // timing-only run
+        let t = run_solver(&e, &mut fleet, &cfg).unwrap();
+        let first_flush = t.rounds[1].time;
+        assert!(
+            first_flush <= cfg.tau as f64 * second_fastest + 1e-9,
+            "first flush {first_flush} waited past the 2nd-fastest client"
+        );
+        assert!(first_flush < cfg.tau as f64 * slowest);
     }
 
     #[test]

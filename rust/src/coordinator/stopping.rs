@@ -7,6 +7,18 @@
 //! Heuristic rule (Section 5.4, Figure 9): mu and c are unknown; the
 //! threshold starts at half the initial squared gradient norm and is
 //! halved at every stage transition.
+//!
+//! # Partial participation (aggregation deadlines)
+//!
+//! Both rules stay sound when rounds aggregate only a subset of the
+//! stage's cohort (a finite [`crate::fed::DeadlinePolicy`]): the
+//! statistical accuracy `V_ns = c/(n s)` is a property of the *intended*
+//! cohort's n·s samples — the ERM the stage is solving — not of which
+//! subset uploaded in a particular round. The FLANP driver therefore
+//! keeps `n` = the stage cohort size and evaluates `||grad L_n(w)||^2`
+//! over the full cohort's data; deadline-missed updates slow per-round
+//! progress but never loosen the bar a stage must clear before the
+//! participant set grows.
 
 use super::config::ExperimentConfig;
 

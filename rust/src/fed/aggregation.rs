@@ -1,0 +1,365 @@
+//! Aggregation deadline policies (`fed::aggregation`).
+//!
+//! Every solver in the seed aggregated fully synchronously: one round
+//! ends when the *slowest* cohort member uploads, so a single straggler
+//! stalls everyone (the premise of the paper — and the cost its FLANP
+//! algorithm attacks by shrinking the cohort). Production FL stacks
+//! attack the same cost from the other side: the server sets a **round
+//! deadline** `t_deadline`, aggregates whatever arrived by then, and
+//! discards (or buffers) the rest — see Hard et al., *Learning from
+//! straggler clients in federated learning* (2024) and the tier-based
+//! deadlines of TiFL (Chai et al., 2020).
+//!
+//! This module is the policy layer for that behavior:
+//!
+//! * [`DeadlinePolicy`] — the configuration: how each round's deadline
+//!   is chosen ([`DeadlinePolicy::Sync`] waits forever, reproducing the
+//!   seed bit-for-bit; `Fixed` / `Quantile` / `Adaptive` close rounds
+//!   early). Parsed from the CLI with [`DeadlinePolicy::parse`].
+//! * [`DeadlineController`] — the per-run state machine: computes one
+//!   deadline per round from the cohort's *estimated* speeds (the same
+//!   TiFL-style EWMA estimates FLANP ranks its prefixes from, so the
+//!   deadline choice and the speed estimator interact exactly as the
+//!   paper's interplay suggests) and, for the adaptive variant, tunes
+//!   itself from observed arrival fractions.
+//!
+//! Deadlines are expressed in **compute time for the whole round**: a
+//! client performing `tau` local updates at per-update time `T_i`
+//! arrives iff `tau * T_i <= deadline`. The virtual clock then charges
+//! `min(deadline, slowest cohort member)` per round — see
+//! [`crate::fed::VirtualClock::charge_round_deadline`].
+//!
+//! ```
+//! use flanp::fed::DeadlinePolicy;
+//!
+//! // spec grammar: sync | fixed:T | quantile:Q | adaptive:F
+//! let p = DeadlinePolicy::parse("quantile:0.8").unwrap();
+//! assert_eq!(p, DeadlinePolicy::Quantile { q: 0.8 });
+//! assert_eq!(p.spec(), "quantile:0.8");
+//! // every canonical spec re-parses to the same policy
+//! assert_eq!(DeadlinePolicy::parse(&p.spec()).unwrap(), p);
+//! ```
+
+/// How the server chooses each round's aggregation deadline.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum DeadlinePolicy {
+    /// No deadline: the server waits for every cohort member (the
+    /// paper's synchronous model, bit-identical to the seed).
+    #[default]
+    Sync,
+    /// A fixed compute-time budget per round. `t` is the *total* round
+    /// time (it already includes the `tau` local updates): a client
+    /// arrives iff `tau * T_i <= t`.
+    Fixed { t: f64 },
+    /// `deadline = tau * Q-quantile of the cohort's estimated
+    /// per-update times`, `q` in (0, 1]. `q = 1` budgets for the
+    /// slowest *estimated* member — under drift the realized slowest
+    /// may still miss, which is exactly the TiFL-style interaction
+    /// between deadline choice and speed estimation.
+    Quantile { q: f64 },
+    /// Self-tuning: starts from the cohort's estimated median and
+    /// rescales itself multiplicatively each round to keep the arrival
+    /// fraction near `target`.
+    Adaptive { target: f64 },
+}
+
+impl DeadlinePolicy {
+    /// Parse a policy spec. Grammar:
+    ///
+    /// ```text
+    ///   sync | fixed:T | quantile:Q | adaptive:F
+    /// ```
+    ///
+    /// `T` is a positive round compute-time budget, `Q` a quantile in
+    /// (0, 1], `F` a target arrival fraction in (0, 1].
+    ///
+    /// ```
+    /// use flanp::fed::DeadlinePolicy;
+    /// assert_eq!(DeadlinePolicy::parse("sync").unwrap(), DeadlinePolicy::Sync);
+    /// assert_eq!(
+    ///     DeadlinePolicy::parse("fixed:1500").unwrap(),
+    ///     DeadlinePolicy::Fixed { t: 1500.0 }
+    /// );
+    /// assert!(DeadlinePolicy::parse("quantile:1.5").is_err());
+    /// ```
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let (kind, rest) = match spec.split_once(':') {
+            Some((k, r)) => (k, Some(r)),
+            None => (spec, None),
+        };
+        let num = |what: &str| -> Result<f64, String> {
+            let tok = rest.ok_or_else(|| {
+                format!("missing {what} in deadline spec '{spec}'")
+            })?;
+            tok.parse().map_err(|_| {
+                format!("bad {what} '{tok}' in deadline spec '{spec}'")
+            })
+        };
+        let policy = match kind {
+            "sync" => {
+                if rest.is_some() {
+                    return Err(format!(
+                        "sync takes no parameter in deadline spec '{spec}'"
+                    ));
+                }
+                DeadlinePolicy::Sync
+            }
+            "fixed" => DeadlinePolicy::Fixed { t: num("budget")? },
+            "quantile" => DeadlinePolicy::Quantile { q: num("quantile")? },
+            "adaptive" => DeadlinePolicy::Adaptive { target: num("target")? },
+            _ => {
+                return Err(format!(
+                    "unknown deadline policy '{spec}' \
+                     (expected sync | fixed:T | quantile:Q | adaptive:F)"
+                ))
+            }
+        };
+        policy.validate().map_err(|e| format!("{e} in deadline spec '{spec}'"))?;
+        Ok(policy)
+    }
+
+    /// Canonical spec string; `parse(spec()) == self` for every policy.
+    pub fn spec(&self) -> String {
+        match self {
+            DeadlinePolicy::Sync => "sync".into(),
+            DeadlinePolicy::Fixed { t } => format!("fixed:{t}"),
+            DeadlinePolicy::Quantile { q } => format!("quantile:{q}"),
+            DeadlinePolicy::Adaptive { target } => format!("adaptive:{target}"),
+        }
+    }
+
+    /// Structural sanity check (configs can be built without `parse`).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            DeadlinePolicy::Sync => Ok(()),
+            DeadlinePolicy::Fixed { t } => {
+                // +inf is legal: an unreachable deadline is exactly Sync
+                if t > 0.0 {
+                    Ok(())
+                } else {
+                    Err(format!("fixed deadline budget {t} must be positive"))
+                }
+            }
+            DeadlinePolicy::Quantile { q } => {
+                if q > 0.0 && q <= 1.0 {
+                    Ok(())
+                } else {
+                    Err(format!("quantile {q} outside (0, 1]"))
+                }
+            }
+            DeadlinePolicy::Adaptive { target } => {
+                if target > 0.0 && target <= 1.0 {
+                    Ok(())
+                } else {
+                    Err(format!("adaptive target fraction {target} outside (0, 1]"))
+                }
+            }
+        }
+    }
+}
+
+/// Bounds on the adaptive policy's self-tuned scale so one pathological
+/// round cannot drive the deadline to zero or infinity.
+const ADAPTIVE_SCALE_MIN: f64 = 0.25;
+const ADAPTIVE_SCALE_MAX: f64 = 64.0;
+/// Multiplicative loosen / tighten factors (AIMD-flavored: loosen fast
+/// when rounds starve, tighten gently while arrivals are plentiful).
+const ADAPTIVE_LOOSEN: f64 = 1.25;
+const ADAPTIVE_TIGHTEN: f64 = 0.97;
+
+/// Per-run deadline state: computes one deadline per round and (for
+/// [`DeadlinePolicy::Adaptive`]) learns from arrival outcomes.
+///
+/// The controller is deterministic: the same policy, estimate stream and
+/// arrival history always produce the same deadline sequence.
+///
+/// ```
+/// use flanp::fed::{DeadlineController, DeadlinePolicy};
+///
+/// // deadline arithmetic: quantile policies budget tau local updates at
+/// // the Q-quantile of the cohort's estimated per-update times
+/// let ddl = DeadlineController::new(DeadlinePolicy::Quantile { q: 0.5 });
+/// let est = [10.0, 20.0, 30.0, 40.0];
+/// assert_eq!(ddl.round_deadline(&est, 5), 5.0 * 20.0);
+/// // sync never imposes a deadline
+/// let sync = DeadlineController::new(DeadlinePolicy::Sync);
+/// assert_eq!(sync.round_deadline(&est, 5), f64::INFINITY);
+/// ```
+#[derive(Clone, Debug)]
+pub struct DeadlineController {
+    policy: DeadlinePolicy,
+    /// adaptive multiplier on the estimated-median budget
+    scale: f64,
+}
+
+impl DeadlineController {
+    pub fn new(policy: DeadlinePolicy) -> Self {
+        DeadlineController { policy, scale: 1.0 }
+    }
+
+    pub fn policy(&self) -> &DeadlinePolicy {
+        &self.policy
+    }
+
+    /// The adaptive policy's current scale (1.0 unless adapted).
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// This round's deadline for a cohort whose *estimated* per-update
+    /// times are `est`, performing `updates` local updates each.
+    /// Returns `f64::INFINITY` when the policy never closes early.
+    pub fn round_deadline(&self, est: &[f64], updates: usize) -> f64 {
+        match self.policy {
+            DeadlinePolicy::Sync => f64::INFINITY,
+            DeadlinePolicy::Fixed { t } => t,
+            DeadlinePolicy::Quantile { q } => {
+                updates as f64 * quantile(est, q)
+            }
+            DeadlinePolicy::Adaptive { .. } => {
+                self.scale * updates as f64 * quantile(est, 0.5)
+            }
+        }
+    }
+
+    /// Feed one round's outcome back: `arrived` out of the `cohort`
+    /// clients the deadline could have admitted (callers pass the
+    /// *available* participants, not the intended cohort — dropped
+    /// clients can never arrive by any deadline and must not drive the
+    /// tuning). Only the adaptive policy changes state: below-target
+    /// arrival fractions loosen the deadline, at-or-above-target rounds
+    /// tighten it gently; all-dropout rounds (`cohort == 0`) are
+    /// ignored.
+    pub fn observe_round(&mut self, arrived: usize, cohort: usize) {
+        if let DeadlinePolicy::Adaptive { target } = self.policy {
+            if cohort == 0 {
+                return;
+            }
+            let frac = arrived as f64 / cohort as f64;
+            let factor =
+                if frac < target { ADAPTIVE_LOOSEN } else { ADAPTIVE_TIGHTEN };
+            self.scale =
+                (self.scale * factor).clamp(ADAPTIVE_SCALE_MIN, ADAPTIVE_SCALE_MAX);
+        }
+    }
+}
+
+/// Empirical `q`-quantile (nearest-rank, `q` in (0, 1]) of `xs`.
+/// `q = 1` is the maximum; an empty slice yields `+inf` so a deadline
+/// over an empty cohort never rejects anyone.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::INFINITY;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_variant() {
+        for spec in ["sync", "fixed:1500", "quantile:0.8", "adaptive:0.9"] {
+            let p = DeadlinePolicy::parse(spec).unwrap();
+            assert_eq!(p.spec(), spec);
+            assert_eq!(DeadlinePolicy::parse(&p.spec()).unwrap(), p, "{spec}");
+        }
+    }
+
+    #[test]
+    fn parse_errors_name_the_full_spec() {
+        for bad in [
+            "fixed",          // missing budget
+            "fixed:-3",       // non-positive budget
+            "fixed:x",        // non-numeric
+            "quantile:0",     // outside (0, 1]
+            "quantile:1.5",   // outside (0, 1]
+            "adaptive:0",     // outside (0, 1]
+            "sync:1",         // sync takes no parameter
+            "lenient:2",      // unknown policy
+        ] {
+            let e = DeadlinePolicy::parse(bad).unwrap_err();
+            assert!(e.contains(bad), "error '{e}' does not name '{bad}'");
+        }
+    }
+
+    #[test]
+    fn validate_accepts_infinite_fixed_budget() {
+        assert!(DeadlinePolicy::Fixed { t: f64::INFINITY }.validate().is_ok());
+        assert!(DeadlinePolicy::Fixed { t: 0.0 }.validate().is_err());
+    }
+
+    #[test]
+    fn quantile_is_nearest_rank() {
+        let xs = [40.0, 10.0, 30.0, 20.0];
+        assert_eq!(quantile(&xs, 0.25), 10.0);
+        assert_eq!(quantile(&xs, 0.5), 20.0);
+        assert_eq!(quantile(&xs, 0.75), 30.0);
+        assert_eq!(quantile(&xs, 1.0), 40.0);
+        // tiny q still returns the minimum, never an out-of-range rank
+        assert_eq!(quantile(&xs, 0.01), 10.0);
+        assert_eq!(quantile(&[], 0.5), f64::INFINITY);
+    }
+
+    #[test]
+    fn sync_and_fixed_deadlines() {
+        let est = [100.0, 200.0];
+        let sync = DeadlineController::new(DeadlinePolicy::Sync);
+        assert_eq!(sync.round_deadline(&est, 10), f64::INFINITY);
+        let fixed = DeadlineController::new(DeadlinePolicy::Fixed { t: 750.0 });
+        // fixed budgets ignore the cohort and the update count
+        assert_eq!(fixed.round_deadline(&est, 10), 750.0);
+        assert_eq!(fixed.round_deadline(&[], 1), 750.0);
+    }
+
+    #[test]
+    fn quantile_deadline_scales_with_updates() {
+        let ddl = DeadlineController::new(DeadlinePolicy::Quantile { q: 1.0 });
+        assert_eq!(ddl.round_deadline(&[50.0, 500.0], 10), 5000.0);
+        assert_eq!(ddl.round_deadline(&[50.0, 500.0], 1), 500.0);
+    }
+
+    #[test]
+    fn adaptive_loosens_when_starved_and_tightens_when_full() {
+        let mut ddl =
+            DeadlineController::new(DeadlinePolicy::Adaptive { target: 0.8 });
+        let est = [100.0; 4];
+        let d0 = ddl.round_deadline(&est, 10);
+        assert_eq!(d0, 1000.0); // scale 1.0 * tau * median
+        ddl.observe_round(0, 4); // starved round: loosen
+        assert!(ddl.round_deadline(&est, 10) > d0);
+        let loosened = ddl.round_deadline(&est, 10);
+        ddl.observe_round(4, 4); // full round: tighten gently
+        assert!(ddl.round_deadline(&est, 10) < loosened);
+    }
+
+    #[test]
+    fn adaptive_scale_is_clamped() {
+        let mut ddl =
+            DeadlineController::new(DeadlinePolicy::Adaptive { target: 0.5 });
+        for _ in 0..1000 {
+            ddl.observe_round(0, 10);
+        }
+        assert_eq!(ddl.scale(), ADAPTIVE_SCALE_MAX);
+        for _ in 0..10_000 {
+            ddl.observe_round(10, 10);
+        }
+        assert_eq!(ddl.scale(), ADAPTIVE_SCALE_MIN);
+        // empty cohorts never move the scale
+        let before = ddl.scale();
+        ddl.observe_round(0, 0);
+        assert_eq!(ddl.scale(), before);
+    }
+
+    #[test]
+    fn non_adaptive_policies_ignore_outcomes() {
+        let mut ddl = DeadlineController::new(DeadlinePolicy::Quantile { q: 0.5 });
+        let before = ddl.round_deadline(&[10.0, 20.0], 5);
+        ddl.observe_round(0, 2);
+        assert_eq!(ddl.round_deadline(&[10.0, 20.0], 5), before);
+    }
+}

@@ -114,6 +114,16 @@ impl ClientFleet {
         }
     }
 
+    /// Censored feedback for deadline-missed clients: the server only
+    /// learns their per-update time exceeded `per_update_floor`
+    /// (`deadline / updates`); the estimator is pulled up toward the
+    /// bound, never down (see [`SpeedEstimator::observe_censored`]).
+    pub fn observe_censored(&mut self, missed: &[usize], per_update_floor: f64) {
+        for &i in missed {
+            self.estimates.observe_censored(i, per_update_floor);
+        }
+    }
+
     /// Samples held by one client.
     pub fn s(&self, client: usize) -> usize {
         self.shards[client].s()

@@ -6,16 +6,46 @@
 //! participant — Propositions 2 and 3). An optional per-round
 //! communication overhead models the upload/broadcast latency.
 //!
-//! The clock exposes two layers:
+//! The clock exposes three layers:
 //!
 //! * the **event interface** ([`VirtualClock::charge_round`] /
 //!   [`VirtualClock::charge_round_hetero`]): charges realized per-client
 //!   times and records one [`RoundEvent`] per round — who the straggler
 //!   was, how many clients dropped. This is what the coordinator uses.
+//! * the **deadline interface**
+//!   ([`VirtualClock::charge_round_deadline`] /
+//!   [`VirtualClock::charge_round_hetero_deadline`] /
+//!   [`VirtualClock::charge_until`]): semi-synchronous rounds close at
+//!   `min(deadline, slowest cohort member)` — a partial round charges
+//!   only the deadline, never the straggler beyond it — and buffered-
+//!   async servers advance the clock to arbitrary flush times. The
+//!   synchronous interface is the special case `deadline = +inf`, so
+//!   both agree bit-for-bit (see the regression tests in
+//!   `tests/deadline.rs`).
 //! * the **legacy helpers** ([`VirtualClock::advance_round`] /
 //!   [`VirtualClock::advance_round_hetero`]): cost arithmetic only, kept
-//!   for direct use in tests and theory checks. Both layers share the
+//!   for direct use in tests and theory checks. All layers share the
 //!   same cost formula, so they agree bit-for-bit on identical inputs.
+//!
+//! Deadline arithmetic in one doc-test:
+//!
+//! ```
+//! use flanp::fed::VirtualClock;
+//!
+//! let mut c = VirtualClock::new();
+//! // cohort of 3, 10 updates each: products are 100, 400, 200.
+//! // A 250-budget deadline closes the round early: the straggler
+//! // (client 1, product 400) misses and the round costs 250, not 400.
+//! let ev = c.charge_round_deadline(&[0, 1, 2], &[10.0, 40.0, 20.0], 10, 250.0, 0, 1);
+//! assert_eq!(ev.cost, 250.0);
+//! assert_eq!(ev.missed, 1);
+//! assert_eq!(ev.participants, 2);
+//! // with deadline = +inf the same round reproduces the synchronous
+//! // cost exactly: tau * max T_i = 400
+//! let ev = c.charge_round_deadline(&[0, 1, 2], &[10.0, 40.0, 20.0], 10, f64::INFINITY, 0, 0);
+//! assert_eq!(ev.cost, 400.0);
+//! assert_eq!(c.now(), 650.0);
+//! ```
 
 /// One completed communication round as charged to the clock.
 #[derive(Clone, Debug)]
@@ -28,10 +58,13 @@ pub struct RoundEvent {
     pub slowest: Option<usize>,
     /// realized per-update time of that client
     pub slowest_time: f64,
-    /// clients whose update arrived
+    /// clients whose update arrived and was aggregated
     pub participants: usize,
-    /// clients that dropped (held the deadline open, uploaded nothing)
+    /// clients that dropped (uploaded nothing at all this round)
     pub dropped: usize,
+    /// clients that were computing but missed the aggregation deadline
+    /// (their update is discarded; 0 under synchronous aggregation)
+    pub missed: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -58,9 +91,10 @@ impl VirtualClock {
 
     /// Every round charged through the event interface, in order. This
     /// stream (straggler identity + realized critical-path time per
-    /// round) is the substrate for deadline/async aggregation policies
-    /// (ROADMAP "fed::system follow-ons"); per-round dropout counts are
-    /// additionally persisted on each trace row.
+    /// round) is the substrate the deadline/async aggregation policies
+    /// ([`crate::fed::DeadlinePolicy`], the FedBuff solver) are built
+    /// on; per-round dropout and deadline-miss counts are additionally
+    /// persisted on each trace row.
     pub fn events(&self) -> &[RoundEvent] {
         &self.events
     }
@@ -70,11 +104,64 @@ impl VirtualClock {
         self.events.iter().map(|e| e.dropped).sum()
     }
 
+    /// Total deadline misses recorded across all charged rounds.
+    pub fn total_missed(&self) -> usize {
+        self.events.iter().map(|e| e.missed).sum()
+    }
+
+    /// Shared core of every round-charging path: the critical path is
+    /// the max per-client total `times[k] * updates[k]`, truncated at
+    /// the aggregation deadline. `deadline = +inf` reproduces the
+    /// synchronous formula bit-for-bit (`min(+inf, x) == x`, and the
+    /// max total is the one product `t_max * updates` the synchronous
+    /// path computes).
+    fn charge_core(
+        &mut self,
+        ids: &[usize],
+        times: &[f64],
+        total_of: impl Fn(usize) -> f64,
+        deadline: f64,
+        dropped: usize,
+        missed: usize,
+    ) -> RoundEvent {
+        debug_assert_eq!(ids.len(), times.len());
+        debug_assert!(
+            !ids.is_empty(),
+            "charging a round with an empty participant set"
+        );
+        debug_assert!(dropped + missed <= ids.len());
+        debug_assert!(deadline > 0.0, "non-positive deadline {deadline}");
+        let mut slowest = None;
+        let mut slowest_total = 0.0f64;
+        let mut slowest_time = 0.0f64;
+        for (k, &t) in times.iter().enumerate() {
+            let total = total_of(k);
+            if total > slowest_total || slowest.is_none() {
+                slowest_total = total;
+                slowest_time = t;
+                slowest = Some(ids[k]);
+            }
+        }
+        let cost = slowest_total.min(deadline) + self.comm_overhead;
+        self.now += cost;
+        let ev = RoundEvent {
+            round: self.events.len(),
+            cost,
+            slowest,
+            slowest_time,
+            participants: ids.len() - dropped - missed,
+            dropped,
+            missed,
+        };
+        self.events.push(ev.clone());
+        ev
+    }
+
     /// Charge one synchronous round: client `ids[k]` needs
     /// `updates * times[k]` compute time and the server waits for the
     /// slowest member. Dropped clients are included in `ids`/`times`
-    /// (they hold the round open until the deadline) but counted in
-    /// `dropped` because their upload never arrives.
+    /// (they hold the round open) but counted in `dropped` because
+    /// their upload never arrives.
     pub fn charge_round(
         &mut self,
         ids: &[usize],
@@ -82,32 +169,32 @@ impl VirtualClock {
         updates: usize,
         dropped: usize,
     ) -> RoundEvent {
-        debug_assert_eq!(ids.len(), times.len());
-        debug_assert!(
-            !ids.is_empty(),
-            "charging a round with an empty participant set"
-        );
-        debug_assert!(dropped <= ids.len());
-        let mut slowest = None;
-        let mut slowest_time = 0.0f64;
-        for (k, &t) in times.iter().enumerate() {
-            if t > slowest_time || slowest.is_none() {
-                slowest_time = slowest_time.max(t);
-                slowest = Some(ids[k]);
-            }
-        }
-        let cost = updates as f64 * slowest_time + self.comm_overhead;
-        self.now += cost;
-        let ev = RoundEvent {
-            round: self.events.len(),
-            cost,
-            slowest,
-            slowest_time,
-            participants: ids.len() - dropped,
+        self.charge_round_deadline(ids, times, updates, f64::INFINITY, dropped, 0)
+    }
+
+    /// Charge one deadline-bounded round of `updates` local updates per
+    /// client: the server aggregates whatever arrived by `deadline` and
+    /// the round costs `min(deadline, updates * max times)` — a partial
+    /// round charges only the deadline, not the straggler beyond it.
+    /// `missed` counts the clients whose compute exceeded the deadline
+    /// (classified by the caller, which also discards their updates).
+    pub fn charge_round_deadline(
+        &mut self,
+        ids: &[usize],
+        times: &[f64],
+        updates: usize,
+        deadline: f64,
+        dropped: usize,
+        missed: usize,
+    ) -> RoundEvent {
+        self.charge_core(
+            ids,
+            times,
+            |k| times[k] * updates as f64,
+            deadline,
             dropped,
-        };
-        self.events.push(ev.clone());
-        ev
+            missed,
+        )
     }
 
     /// Charge a heterogeneous round (FedNova): client `ids[k]` performs
@@ -120,32 +207,61 @@ impl VirtualClock {
         updates: &[usize],
         dropped: usize,
     ) -> RoundEvent {
-        debug_assert_eq!(ids.len(), times.len());
+        self.charge_round_hetero_deadline(
+            ids,
+            times,
+            updates,
+            f64::INFINITY,
+            dropped,
+            0,
+        )
+    }
+
+    /// Deadline-bounded heterogeneous round: like
+    /// [`VirtualClock::charge_round_hetero`] but the server stops
+    /// waiting at `deadline`.
+    pub fn charge_round_hetero_deadline(
+        &mut self,
+        ids: &[usize],
+        times: &[f64],
+        updates: &[usize],
+        deadline: f64,
+        dropped: usize,
+        missed: usize,
+    ) -> RoundEvent {
         debug_assert_eq!(ids.len(), updates.len());
-        debug_assert!(
-            !ids.is_empty(),
-            "charging a round with an empty participant set"
-        );
-        let mut slowest = None;
-        let mut slowest_total = 0.0f64;
-        let mut slowest_time = 0.0f64;
-        for (k, (&t, &u)) in times.iter().zip(updates).enumerate() {
-            let total = t * u as f64;
-            if total > slowest_total || slowest.is_none() {
-                slowest_total = slowest_total.max(total);
-                slowest_time = t;
-                slowest = Some(ids[k]);
-            }
-        }
-        let cost = slowest_total + self.comm_overhead;
+        self.charge_core(
+            ids,
+            times,
+            |k| times[k] * updates[k] as f64,
+            deadline,
+            dropped,
+            missed,
+        )
+    }
+
+    /// Advance the clock to the absolute time `t` and record the
+    /// interval as one event (buffered-async aggregation: the server
+    /// flushes its buffer at the K-th arrival). `t` earlier than `now`
+    /// charges only the communication overhead — with a nonzero
+    /// overhead, back-to-back flushes serialize on the server.
+    pub fn charge_until(
+        &mut self,
+        t: f64,
+        participants: usize,
+        dropped: usize,
+        missed: usize,
+    ) -> RoundEvent {
+        let cost = (t - self.now).max(0.0) + self.comm_overhead;
         self.now += cost;
         let ev = RoundEvent {
             round: self.events.len(),
             cost,
-            slowest,
-            slowest_time,
-            participants: ids.len() - dropped,
+            slowest: None,
+            slowest_time: 0.0,
+            participants,
             dropped,
+            missed,
         };
         self.events.push(ev.clone());
         ev
@@ -265,6 +381,7 @@ mod tests {
         assert_eq!(ev.slowest_time, 30.0);
         assert_eq!(ev.participants, 2);
         assert_eq!(ev.dropped, 1);
+        assert_eq!(ev.missed, 0);
         assert_eq!(event.events().len(), 1);
         assert_eq!(event.total_dropped(), 1);
         // legacy path records no events
@@ -281,6 +398,101 @@ mod tests {
         assert_eq!(ev.cost, cost);
         assert_eq!(ev.slowest, Some(4), "critical path is the max product");
         assert_eq!(event.now(), legacy.now());
+    }
+
+    #[test]
+    fn deadline_truncates_the_straggler() {
+        let mut c = VirtualClock::with_comm_overhead(3.0);
+        // products: 50, 150, 100 at tau = 5; deadline 120 cuts client 8
+        let ev = c.charge_round_deadline(
+            &[7, 8, 9],
+            &[10.0, 30.0, 20.0],
+            5,
+            120.0,
+            0,
+            1,
+        );
+        assert_eq!(ev.cost, 123.0);
+        assert_eq!(ev.participants, 2);
+        assert_eq!(ev.missed, 1);
+        // the straggler identity is still the critical-path client
+        assert_eq!(ev.slowest, Some(8));
+        assert_eq!(c.total_missed(), 1);
+    }
+
+    #[test]
+    fn infinite_deadline_is_bit_identical_to_sync() {
+        let speeds = [110.25, 317.5, 50.125, 499.9];
+        let mut sync = VirtualClock::with_comm_overhead(1.5);
+        let mut ddl = VirtualClock::with_comm_overhead(1.5);
+        for tau in 1..20usize {
+            let a = sync.charge_round(&[0, 1, 2, 3], &speeds, tau, 0);
+            let b = ddl.charge_round_deadline(
+                &[0, 1, 2, 3],
+                &speeds,
+                tau,
+                f64::INFINITY,
+                0,
+                0,
+            );
+            assert_eq!(a.cost, b.cost, "tau {tau}");
+            assert_eq!(a.slowest, b.slowest);
+            assert_eq!(a.slowest_time, b.slowest_time);
+        }
+        assert_eq!(sync.now(), ddl.now());
+    }
+
+    #[test]
+    fn deadline_larger_than_straggler_changes_nothing() {
+        let mut a = VirtualClock::new();
+        let mut b = VirtualClock::new();
+        let ea = a.charge_round(&[0, 1], &[10.0, 20.0], 5, 0);
+        let eb = b.charge_round_deadline(&[0, 1], &[10.0, 20.0], 5, 100.1, 0, 0);
+        assert_eq!(ea.cost, eb.cost);
+        assert_eq!(a.now(), b.now());
+    }
+
+    #[test]
+    fn hetero_deadline_truncates_the_product() {
+        let mut c = VirtualClock::new();
+        // products 100 and 200; deadline 150 cuts the 20-update client
+        let ev = c.charge_round_hetero_deadline(
+            &[3, 4],
+            &[100.0, 10.0],
+            &[1, 20],
+            150.0,
+            0,
+            1,
+        );
+        assert_eq!(ev.cost, 150.0);
+        assert_eq!(ev.missed, 1);
+    }
+
+    #[test]
+    fn charge_until_advances_to_absolute_time() {
+        let mut c = VirtualClock::new();
+        let ev = c.charge_until(40.0, 4, 1, 0);
+        assert_eq!(ev.cost, 40.0);
+        assert_eq!(c.now(), 40.0);
+        assert_eq!(ev.participants, 4);
+        assert_eq!(ev.dropped, 1);
+        let ev = c.charge_until(55.5, 2, 0, 0);
+        assert_eq!(ev.cost, 15.5);
+        assert_eq!(c.now(), 55.5);
+        // a flush at (or before) the current time is free without comm
+        let ev = c.charge_until(55.5, 1, 0, 0);
+        assert_eq!(ev.cost, 0.0);
+        assert_eq!(c.now(), 55.5);
+    }
+
+    #[test]
+    fn charge_until_serializes_on_comm_overhead() {
+        let mut c = VirtualClock::with_comm_overhead(2.0);
+        c.charge_until(10.0, 1, 0, 0);
+        assert_eq!(c.now(), 12.0);
+        // a flush "due" at t=11 (already past) still pays the overhead
+        c.charge_until(11.0, 1, 0, 0);
+        assert_eq!(c.now(), 14.0);
     }
 
     #[test]

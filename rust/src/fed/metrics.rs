@@ -28,6 +28,10 @@ pub struct RoundRecord {
     /// clients that dropped out of this round (scenario-dependent; 0
     /// under the paper's static scenarios)
     pub dropped: usize,
+    /// clients that were computing but missed the aggregation deadline
+    /// (0 under synchronous aggregation — the arrived-vs-missed split
+    /// of the deadline policies in [`crate::fed::aggregation`])
+    pub missed: usize,
 }
 
 /// A full run's trace plus identifying metadata.
@@ -101,6 +105,7 @@ impl Trace {
                             ("accuracy", json_num(r.accuracy)),
                             ("stage", r.stage.into()),
                             ("dropped", r.dropped.into()),
+                            ("missed", r.missed.into()),
                         ])
                     })
                     .collect(),
@@ -111,11 +116,11 @@ impl Trace {
     /// CSV with a header row (one line per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage,dropped\n",
+            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage,dropped,missed\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.time,
                 r.participants,
@@ -125,7 +130,8 @@ impl Trace {
                 r.dist_to_opt,
                 r.accuracy,
                 r.stage,
-                r.dropped
+                r.dropped,
+                r.missed
             ));
         }
         s
@@ -162,6 +168,7 @@ mod tests {
             accuracy: f64::NAN,
             stage: 0,
             dropped: 0,
+            missed: 0,
         }
     }
 

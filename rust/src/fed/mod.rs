@@ -1,13 +1,16 @@
 //! Federated substrate: heterogeneous client fleet, system-heterogeneity
-//! scenarios (speed models + per-round dynamics + dropout), virtual
-//! wall-clock with round events, and per-round metric traces.
+//! scenarios (speed models + per-round dynamics + dropout), aggregation
+//! deadline policies, virtual wall-clock with round events, and
+//! per-round metric traces.
 
+pub mod aggregation;
 pub mod client;
 pub mod clock;
 pub mod metrics;
 pub mod speed;
 pub mod system;
 
+pub use aggregation::{DeadlineController, DeadlinePolicy};
 pub use client::{ClientFleet, DEFAULT_EWMA_ALPHA};
 pub use clock::{RoundEvent, VirtualClock};
 pub use metrics::{RoundRecord, Trace};

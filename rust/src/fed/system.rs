@@ -19,6 +19,25 @@
 //! Under `Dynamics::Static` with zero dropout every realized round equals
 //! the base draw bit-for-bit, so the event-driven clock reproduces the
 //! seed's traces exactly (see `tests/system.rs`).
+//!
+//! Scenario specs compose a dropout prefix, a dynamics prefix and a base
+//! speed model (full grammar in `docs/scenarios.md`):
+//!
+//! ```
+//! use flanp::fed::{Dynamics, SystemModel};
+//!
+//! // [drop:P:][static:|jitter:SIGMA:|markov:F:PS:PR:]BASE
+//! let m = SystemModel::parse("drop:0.05:markov:4:0.1:0.5:uniform:50:500").unwrap();
+//! assert_eq!(m.p_drop, 0.05);
+//! assert_eq!(
+//!     m.dynamics,
+//!     Dynamics::Markov { slow_factor: 4.0, p_slow: 0.1, p_recover: 0.5 }
+//! );
+//! // plain base specs parse as static scenarios (seed compatibility)
+//! assert!(SystemModel::parse("uniform:50:500").unwrap().is_static());
+//! // the canonical spec string roundtrips
+//! assert_eq!(SystemModel::parse(&m.spec()).unwrap(), m);
+//! ```
 
 use crate::fed::speed::{sort_fastest_first, SpeedModel};
 use crate::util::Rng;
@@ -298,6 +317,20 @@ impl SpeedEstimator {
         self.observations[client] += 1;
     }
 
+    /// Fold a *censored* observation: the client was still computing at
+    /// the aggregation deadline, so all we learn is `per-update time >
+    /// lower_bound` (`lower_bound = deadline / updates`). The estimate
+    /// is pulled up toward the bound when the bound exceeds it and left
+    /// untouched otherwise — a censored observation can never make a
+    /// client look *faster*, which would feed back into tighter
+    /// deadlines and starve the round (the deadline/estimation
+    /// interplay TiFL warns about).
+    pub fn observe_censored(&mut self, client: usize, lower_bound: f64) {
+        if lower_bound > self.est[client] {
+            self.observe(client, lower_bound);
+        }
+    }
+
     pub fn estimate(&self, client: usize) -> f64 {
         self.est[client]
     }
@@ -458,6 +491,19 @@ mod tests {
         assert_eq!(est.estimates(), &prior[..]);
         assert_eq!(est.ranked(), vec![0, 1, 2]);
         assert_eq!(est.observations(1), 100);
+    }
+
+    #[test]
+    fn censored_observations_only_pull_estimates_up() {
+        let mut est = SpeedEstimator::new(&[100.0], 0.5);
+        // bound below the estimate: no information, no movement
+        est.observe_censored(0, 60.0);
+        assert_eq!(est.estimate(0), 100.0);
+        assert_eq!(est.observations(0), 0);
+        // bound above: the estimate moves toward the bound
+        est.observe_censored(0, 200.0);
+        assert_eq!(est.estimate(0), 150.0);
+        assert_eq!(est.observations(0), 1);
     }
 
     #[test]

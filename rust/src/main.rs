@@ -9,7 +9,7 @@
 use anyhow::{Context, Result};
 use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
 use flanp::engine::Manifest;
-use flanp::fed::SystemModel;
+use flanp::fed::{DeadlinePolicy, SystemModel};
 use flanp::setup;
 use flanp::util::cli::Args;
 use std::path::Path;
@@ -24,7 +24,9 @@ USAGE:
 
 OPTIONS (run):
   --solver S        flanp | flanp-heuristic | fedgate | fedavg | fednova |
-                    fedprox | fedgate-randK | fedgate-fastK   [flanp]
+                    fedprox | fedgate-randK | fedgate-fastK | fedbuffK
+                    (fedbuffK = buffered-async, flush every K uploads)
+                                                       [flanp]
   --model M         manifest model name                [linreg_d25]
   --engine E        hlo | native                       [hlo]
   --artifacts DIR   artifact directory                 [artifacts]
@@ -35,11 +37,26 @@ OPTIONS (run):
   --tau T           local updates per round            [artifact tau]
   --mu F --c F      statistical-accuracy constants     [0.01, 1.0]
   --speed SPEC      system-heterogeneity scenario      [uniform:50:500]
-                    grammar: [drop:P:][jitter:SIGMA:|markov:F:PS:PR:]BASE
+                    grammar: [drop:P:][static:|jitter:SIGMA:|markov:F:PS:PR:]BASE
+                    prefixes (composable, dropout first):
+                      drop:P:            P in [0,1): per-round client dropout
+                      static:            no per-round dynamics (default)
+                      jitter:SIGMA:      log-normal per-round speed jitter
+                      markov:F:PS:PR:    fast/slow Markov drift (slow = F x
+                                         base, fast->slow PS, slow->fast PR)
                     BASE = uniform:lo:hi | exp:lambda | homog:t
                     e.g. jitter:0.3:uniform:50:500 (per-round log-normal
                     jitter), markov:4:0.1:0.5:exp:0.004 (fast/slow Markov
                     drift), drop:0.05:uniform:50:500 (5% round dropouts)
+  --deadline SPEC   aggregation deadline policy        [sync]
+                    sync           wait for the slowest cohort member
+                    fixed:T        aggregate whatever arrived by round
+                                   compute time T
+                    quantile:Q     deadline = tau * Q-quantile of the
+                                   cohort's estimated speeds, Q in (0,1]
+                    adaptive:F     self-tuning deadline targeting arrival
+                                   fraction F in (0,1]
+                    (applies to flanp | flanp-heuristic | fedgate)
   --ewma F          EWMA alpha of the online speed estimator [0.25]
   --oracle-ranking  rank FLANP prefixes by oracle speeds instead of the
                     online estimates
@@ -62,6 +79,12 @@ fn main() {
 fn real_main() -> Result<()> {
     let mut args = Args::from_env(&["run", "list-artifacts", "help"])
         .map_err(|e| anyhow::anyhow!(e))?;
+    // `flanp run --help` (and `--help` anywhere) prints the same usage
+    // text as the `help` subcommand
+    if args.switch("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
     match args.subcommand.as_deref() {
         Some("help") | None => {
             print!("{USAGE}");
@@ -106,6 +129,8 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     let c_stat = args.flag_f64("c", 1.0).map_err(|e| anyhow::anyhow!(e))?;
     let system = SystemModel::parse(&args.flag_str("speed", "uniform:50:500"))
         .map_err(|e| anyhow::anyhow!(e))?;
+    let deadline = DeadlinePolicy::parse(&args.flag_str("deadline", "sync"))
+        .map_err(|e| anyhow::anyhow!(e))?;
     let ewma = args
         .flag_f64("ewma", flanp::fed::DEFAULT_EWMA_ALPHA)
         .map_err(|e| anyhow::anyhow!(e))?;
@@ -133,6 +158,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     cfg.mu = mu;
     cfg.c_stat = c_stat;
     cfg.system = system;
+    cfg.deadline = deadline;
     cfg.estimate_speeds = !oracle_ranking;
     cfg.ewma_alpha = ewma;
     cfg.seed = seed;
@@ -147,7 +173,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     if !quiet {
         println!(
             "flanp run: solver={} model={} engine={} N={} s={} tau={} eta={} \
-             gamma={} system={} ranking={}",
+             gamma={} system={} deadline={} ranking={}",
             cfg.solver.name(),
             model,
             engine_kind,
@@ -157,6 +183,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
             eta,
             gamma,
             cfg.system.spec(),
+            cfg.deadline.spec(),
             if cfg.estimate_speeds { "estimated" } else { "oracle" },
         );
     }

@@ -1,0 +1,256 @@
+//! Deadline-policy + buffered-async integration tests.
+//!
+//! The regression tests prove the aggregation-policy layer is a strict
+//! superset of the seed's synchronous model: an unreachable deadline
+//! (`fixed:+inf`) reproduces the synchronous FLANP trace bit-for-bit,
+//! under static AND time-varying scenarios. The edge-case tests cover
+//! rounds where nothing arrives (deadline too tight, or every client
+//! dropped). The acceptance test is the ISSUE's headline: under a Markov
+//! straggler scenario, deadline-based partial aggregation strictly
+//! reduces simulated wall-clock vs synchronous aggregation while still
+//! reaching the target statistical accuracy.
+
+use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::fed::{DeadlinePolicy, SystemModel, Trace};
+use flanp::setup;
+
+fn base_cfg(solver: SolverKind, n: usize, s: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(solver, "linreg_d25", n, s);
+    cfg.tau = 10;
+    cfg.eta = 0.05;
+    cfg.n0 = 2;
+    cfg.mu = 0.5;
+    cfg.c_stat = 0.5;
+    cfg.max_rounds = 2000;
+    cfg.eval_every = 5;
+    cfg.eval_rows = 500;
+    cfg.seed = 3;
+    cfg
+}
+
+fn run(cfg: &ExperimentConfig) -> Trace {
+    let engine = setup::native_from_name(&cfg.model).unwrap();
+    let mut fleet = setup::build_fleet(engine.meta(), cfg, 0.1, 0.0).unwrap();
+    run_solver(&engine, &mut fleet, cfg).unwrap()
+}
+
+fn assert_traces_identical(a: &Trace, b: &Trace) {
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    assert_eq!(a.stage_transitions, b.stage_transitions);
+    assert_eq!(a.total_time, b.total_time);
+    assert_eq!(a.finished, b.finished);
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.time, y.time, "round {}", x.round);
+        assert_eq!(x.loss_full, y.loss_full, "round {}", x.round);
+        assert_eq!(x.grad_norm_sq, y.grad_norm_sq, "round {}", x.round);
+        assert_eq!(x.missed, y.missed, "round {}", x.round);
+        assert_eq!(x.dropped, y.dropped, "round {}", x.round);
+    }
+}
+
+#[test]
+fn infinite_deadline_reproduces_sync_flanp_bit_identically() {
+    // regression (ISSUE acceptance): deadline = +inf IS the synchronous
+    // model — same costs, same losses, same stage machine, to the bit
+    let sync = base_cfg(SolverKind::Flanp, 16, 50);
+    let mut inf = base_cfg(SolverKind::Flanp, 16, 50);
+    inf.deadline = DeadlinePolicy::Fixed { t: f64::INFINITY };
+    let (t_sync, t_inf) = (run(&sync), run(&inf));
+    assert!(t_sync.finished);
+    assert!(t_sync.rounds.iter().all(|r| r.missed == 0));
+    assert_traces_identical(&t_sync, &t_inf);
+}
+
+#[test]
+fn infinite_deadline_is_sync_under_time_varying_scenarios_too() {
+    let system =
+        SystemModel::parse("drop:0.05:markov:4:0.1:0.5:uniform:50:500").unwrap();
+    let mut sync = base_cfg(SolverKind::Flanp, 12, 50);
+    sync.system = system.clone();
+    let mut inf = sync.clone();
+    inf.deadline = DeadlinePolicy::Fixed { t: f64::INFINITY };
+    assert_traces_identical(&run(&sync), &run(&inf));
+}
+
+#[test]
+fn zero_arrivals_by_deadline_never_panics() {
+    // homogeneous T_i = 100 and a 500-budget deadline with tau = 10:
+    // every client needs 1000 > 500, so NOTHING ever arrives. The run
+    // must not panic or divide by zero: the model never moves, every
+    // round charges exactly the deadline, every cohort member is missed.
+    let mut cfg = base_cfg(SolverKind::Flanp, 8, 50);
+    cfg.system = SystemModel::parse("homog:100").unwrap();
+    cfg.deadline = DeadlinePolicy::Fixed { t: 500.0 };
+    cfg.c_stat = 1e-9; // the stage machine must stay at n0 = 2
+    cfg.max_rounds = 15;
+    let t = run(&cfg);
+    assert!(!t.finished);
+    assert_eq!(t.rounds.len(), 16, "initial row + 15 starved rounds");
+    for (k, r) in t.rounds.iter().enumerate() {
+        assert_eq!(r.time, 500.0 * k as f64, "round {k} must charge the deadline");
+        assert_eq!(r.loss_full, t.rounds[0].loss_full, "model moved with 0 arrivals");
+        if k > 0 {
+            assert_eq!(r.missed, 2, "whole n0 = 2 cohort misses every round");
+            assert_eq!(r.dropped, 0);
+        }
+    }
+    assert_eq!(t.total_time, 500.0 * 15.0);
+}
+
+#[test]
+fn all_dropout_rounds_never_panic() {
+    // p_drop = 0.9 over a 2-client cohort: most rounds lose EVERY client
+    // (dropout + deadline layers both see empty arrival sets)
+    let mut cfg = base_cfg(SolverKind::Flanp, 8, 50);
+    cfg.system = SystemModel::parse("drop:0.9:uniform:50:500").unwrap();
+    cfg.deadline = DeadlinePolicy::Quantile { q: 0.8 };
+    cfg.c_stat = 1e-6; // keep the stage machine at n0 = 2 all run
+    cfg.max_rounds = 40;
+    let t = run(&cfg);
+    assert_eq!(t.rounds.len(), 41);
+    // times never decrease even across starved rounds
+    assert!(t.rounds.windows(2).all(|w| w[1].time >= w[0].time));
+    // at p = 0.9 an all-dropout 2-client round is near-certain in 40
+    let max_dropped = t.rounds.iter().map(|r| r.dropped).max().unwrap();
+    assert_eq!(max_dropped, 2, "no all-dropout round in 40 tries at p=0.9");
+    // accounting never exceeds the cohort
+    assert!(t.rounds.iter().all(|r| r.dropped + r.missed <= 2));
+}
+
+#[test]
+fn deadline_partial_aggregation_beats_sync_under_markov_stragglers() {
+    // ISSUE acceptance: under a Markov straggler scenario, aggregating
+    // whatever arrived by an estimated-speed quantile deadline strictly
+    // reduces simulated wall-clock vs waiting for the slowest client —
+    // while still reaching the same target statistical accuracy
+    let system = SystemModel::parse("markov:4:0.1:0.5:uniform:50:500").unwrap();
+    let mut sync = base_cfg(SolverKind::Flanp, 16, 50);
+    sync.system = system.clone();
+    let mut ddl = sync.clone();
+    ddl.deadline = DeadlinePolicy::Quantile { q: 0.8 };
+    let (t_sync, t_ddl) = (run(&sync), run(&ddl));
+    assert!(t_sync.finished, "sync flanp unfinished under markov drift");
+    assert!(
+        t_ddl.finished,
+        "deadline flanp did not reach the target statistical accuracy"
+    );
+    // partial rounds actually happened…
+    let missed: usize = t_ddl.rounds.iter().map(|r| r.missed).sum();
+    assert!(missed > 0, "deadline policy never cut a straggler");
+    // …and they strictly reduce total wall-clock
+    assert!(
+        t_ddl.total_time < t_sync.total_time,
+        "deadline {} !< sync {}",
+        t_ddl.total_time,
+        t_sync.total_time
+    );
+}
+
+#[test]
+fn deadline_fedgate_also_runs_and_cuts_stragglers() {
+    let system = SystemModel::parse("markov:4:0.1:0.5:uniform:50:500").unwrap();
+    let mut sync = base_cfg(SolverKind::FedGate, 12, 50);
+    sync.system = system.clone();
+    let mut ddl = sync.clone();
+    ddl.deadline = DeadlinePolicy::Quantile { q: 0.8 };
+    let (t_sync, t_ddl) = (run(&sync), run(&ddl));
+    assert!(t_sync.finished && t_ddl.finished);
+    let missed: usize = t_ddl.rounds.iter().map(|r| r.missed).sum();
+    assert!(missed > 0);
+    assert!(
+        t_ddl.total_time < t_sync.total_time,
+        "deadline {} !< sync {}",
+        t_ddl.total_time,
+        t_sync.total_time
+    );
+}
+
+#[test]
+fn adaptive_deadline_converges_and_self_tunes() {
+    // the adaptive policy starts from the estimated-median budget (which
+    // misses ~half a uniform cohort) and must loosen itself enough to
+    // keep making progress — the run still reaches full accuracy
+    let mut cfg = base_cfg(SolverKind::Flanp, 16, 50);
+    cfg.system = SystemModel::parse("markov:4:0.1:0.5:uniform:50:500").unwrap();
+    cfg.deadline = DeadlinePolicy::Adaptive { target: 0.8 };
+    let t = run(&cfg);
+    assert!(t.finished, "adaptive-deadline flanp unfinished");
+    let missed: usize = t.rounds.iter().map(|r| r.missed).sum();
+    assert!(missed > 0, "adaptive policy never closed a round early");
+}
+
+#[test]
+fn fedbuff_descends_faster_than_sync_fedgate_under_markov() {
+    // buffered-async aggregation never waits for stragglers at all;
+    // under Markov drift its cheap fast-client flushes reach a shared
+    // mid-training loss target in less simulated time than synchronous
+    // full-participation FedGATE (whose every round pays the straggler)
+    let system = SystemModel::parse("markov:4:0.1:0.5:uniform:50:500").unwrap();
+    let mut gate = base_cfg(SolverKind::FedGate, 12, 50);
+    gate.system = system.clone();
+    gate.eval_every = 1;
+    let mut buff = base_cfg(SolverKind::FedBuff { k: 3 }, 12, 50);
+    buff.system = system;
+    buff.eval_every = 1;
+    buff.max_rounds = 20_000; // flushes are much cheaper than full rounds
+    let (t_gate, t_buff) = (run(&gate), run(&buff));
+    assert!(t_gate.finished, "fedgate unfinished under markov drift");
+    // fedbuff still descends to a meaningful loss under async staleness
+    let start = t_buff.rounds[0].loss_full;
+    let finl = t_buff.last().unwrap().loss_full;
+    assert!(finl < 0.1 * start, "fedbuff barely descended: {start} -> {finl}");
+    // shared target: 90% of fedgate's total drop — both curves cross it
+    let g_final = t_gate.last().unwrap().loss_full;
+    let target = start - 0.9 * (start - g_final);
+    let tt_gate = t_gate.time_to_loss(target).expect("fedgate missed target");
+    let tt_buff = t_buff.time_to_loss(target).expect("fedbuff missed target");
+    assert!(
+        tt_buff < tt_gate,
+        "fedbuff {tt_buff} !< fedgate {tt_gate} to shared loss {target}"
+    );
+}
+
+#[test]
+fn fedbuff_dropped_counts_are_bounded_by_the_fleet() {
+    // regression: a fast unavailable client fails several upload
+    // attempts within one flush window; the trace must report distinct
+    // dropped clients, never more than the fleet holds
+    let mut cfg = base_cfg(SolverKind::FedBuff { k: 3 }, 10, 50);
+    cfg.system = SystemModel::parse("drop:0.5:uniform:50:500").unwrap();
+    cfg.c_stat = 1e-9; // never finish; exercise many flush windows
+    cfg.max_rounds = 200;
+    let t = run(&cfg);
+    assert!(t.rounds.iter().all(|r| r.dropped <= 10), "dropped exceeds fleet");
+    let total: usize = t.rounds.iter().map(|r| r.dropped).sum();
+    assert!(total > 0, "50% dropout produced no dropped uploads");
+    assert!(t.rounds.windows(2).all(|w| w[1].time >= w[0].time));
+}
+
+#[test]
+fn adaptive_deadline_ignores_dropouts_when_tuning() {
+    // regression: dropped clients can never arrive by any deadline; if
+    // they counted toward the arrival-fraction target the scale would
+    // pin at its ceiling and the policy would degenerate to sync. Under
+    // drift + dropout the adaptive policy must still cut stragglers.
+    let mut cfg = base_cfg(SolverKind::Flanp, 16, 50);
+    cfg.system =
+        SystemModel::parse("drop:0.3:markov:4:0.1:0.5:uniform:50:500").unwrap();
+    cfg.deadline = DeadlinePolicy::Adaptive { target: 0.8 };
+    cfg.max_rounds = 400;
+    let t = run(&cfg);
+    let missed: usize = t.rounds.iter().map(|r| r.missed).sum();
+    assert!(missed > 0, "adaptive policy degenerated to sync under dropout");
+}
+
+#[test]
+fn deadline_policy_flows_through_config_validation() {
+    let mut cfg = base_cfg(SolverKind::Flanp, 8, 50);
+    cfg.deadline = DeadlinePolicy::parse("quantile:0.8").unwrap();
+    assert!(cfg.validate(10).is_ok());
+    cfg.deadline = DeadlinePolicy::Quantile { q: 0.0 };
+    assert!(cfg.validate(10).is_err());
+    // async + cohort deadline is contradictory
+    cfg.solver = SolverKind::FedBuff { k: 2 };
+    cfg.deadline = DeadlinePolicy::parse("fixed:1000").unwrap();
+    assert!(cfg.validate(10).is_err());
+}
