@@ -1,0 +1,76 @@
+//! TiFL-style tier scheduling (`fed::tiers`): cached latency tiers vs
+//! re-ranking individuals every round.
+//!
+//! Re-ranking the active prefix from live estimates every round tracks
+//! drift perfectly — and pays a scheduling event every single round.
+//! TiFL's observation is that caching tier membership and re-tiering
+//! only when an estimate drifts past a hysteresis band keeps nearly the
+//! same wall-clock at a tiny fraction of the scheduling churn. This demo
+//! runs FLANP under Markov fast/slow drift with four ranking cadences —
+//! cached tiers, per-round individual re-ranking, stage-boundary
+//! re-ranking, oracle ranking — plus the credit-scheduled `tifl` solver,
+//! and prints each run's simulated wall-clock next to the re-rank /
+//! re-tier events it paid.
+//!
+//!   cargo run --release --example tiered_selection
+
+use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::fed::{SystemModel, TierPolicy};
+use flanp::setup;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = setup::default_artifacts_dir();
+    let engine = setup::build_engine("native", "linreg_d25", &artifacts)?;
+    let system = SystemModel::parse("markov:4:0.1:0.5:uniform:50:500")
+        .map_err(anyhow::Error::msg)?;
+    let policy = TierPolicy::parse("tiers:4").map_err(anyhow::Error::msg)?;
+
+    println!("== FLANP ranking cadences under {} ==", system.spec());
+    // (label, solver, tier policy, per-round re-rank, estimate ranking)
+    let variants: [(&str, SolverKind, bool, bool, bool); 5] = [
+        ("tiered (cached)", SolverKind::Flanp, true, false, true),
+        ("per-round rerank", SolverKind::Flanp, false, true, true),
+        ("stage rerank", SolverKind::Flanp, false, false, true),
+        ("oracle ranking", SolverKind::Flanp, false, false, false),
+        ("tifl solver", SolverKind::Tifl, true, false, true),
+    ];
+    for (label, solver, tiered, perround, estimated) in variants {
+        let is_tifl = solver == SolverKind::Tifl;
+        let mut cfg = ExperimentConfig::new(solver, "linreg_d25", 32, 100);
+        cfg.tau = 10;
+        cfg.eta = 0.05;
+        cfg.n0 = 2;
+        cfg.mu = 0.5;
+        cfg.c_stat = 0.5;
+        cfg.system = system.clone();
+        cfg.tiers = if tiered { Some(policy.clone()) } else { None };
+        cfg.rerank_per_round = perround;
+        cfg.estimate_speeds = estimated;
+        cfg.seed = 17;
+        // tifl trains one tier per round: cheap rounds, larger budget
+        cfg.max_rounds = if is_tifl { 12_000 } else { 3000 };
+        cfg.eval_every = 5;
+        cfg.eval_rows = 500;
+
+        let mut fleet = setup::build_fleet(engine.meta(), &cfg, 0.1, 0.0)?;
+        let trace = run_solver(engine.as_ref(), &mut fleet, &cfg)?;
+        let last = trace.last().unwrap();
+        println!(
+            "  {label:<17} rounds={:<5} sim-time={:<12.1} reranks={:<5} \
+             ||w-w*||={:<8.4} finished={}",
+            last.round,
+            trace.total_time,
+            trace.total_reranks(),
+            last.dist_to_opt,
+            trace.finished,
+        );
+    }
+    println!(
+        "\nThe cached-tier run tracks the per-round re-ranker's wall-clock \
+         while re-tiering only when the 4x Markov drift genuinely pushes a \
+         client past its hysteresis band; the tifl solver goes further and \
+         schedules one whole tier per round by fairness credits, so its \
+         rounds never wait for a straggler outside the tier."
+    );
+    Ok(())
+}

@@ -9,7 +9,7 @@ use anyhow::{Context, Result};
 use flanp::coordinator::config::Subroutine;
 use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
 use flanp::engine::Engine;
-use flanp::fed::{DeadlinePolicy, SpeedModel, SystemModel, Trace};
+use flanp::fed::{DeadlinePolicy, SpeedModel, SystemModel, TierPolicy, Trace};
 use flanp::setup;
 use flanp::util::cli::Args;
 use std::path::PathBuf;
@@ -30,6 +30,11 @@ EXPERIMENTS:
   async             FLANP vs FedGATE vs FedBuff vs deadline variants
                     under the same four scenarios (semi-sync + async
                     aggregation; see docs/scenarios.md)
+  tiers             tier-cached FLANP (tiers:K[:hysteresis:H]) vs
+                    per-round individual re-ranking vs stage re-ranking
+                    vs oracle ranking, plus the tifl solver, under the
+                    same four scenarios — reports wall-clock AND the
+                    re-rank/re-tier events each cadence pays
   all               every figure/table/ablation above
 
 OPTIONS:
@@ -53,6 +58,11 @@ OPTIONS:
 
 Deadline policy specs used by the async sweep (and `flanp run
 --deadline`): sync | fixed:T | quantile:Q | adaptive:F.
+
+Tier specs used by the tiers sweep (and `flanp run --tiers`):
+tiers:K[:hysteresis:H] — K latency tiers clustered from the online
+speed estimates, membership cached until an estimate drifts past H x
+its tier's band (H >= 1, default 1.5).
 
 Measured \"time\" is the simulated wall-clock of the paper's timing
 model (round cost = tau * max participant T_i; deadline rounds cost
@@ -80,7 +90,7 @@ fn main() {
 const EXPS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6a", "fig6b", "fig7",
     "fig8", "fig9", "table1", "table2", "ablate", "scenarios", "async",
-    "all", "help",
+    "tiers", "all", "help",
 ];
 
 fn real_main() -> Result<()> {
@@ -127,6 +137,7 @@ fn real_main() -> Result<()> {
         "ablate" => ablate(&opts)?,
         "scenarios" => scenarios(&opts)?,
         "async" => async_sweep(&opts)?,
+        "tiers" => tiers_sweep(&opts)?,
         "all" => {
             fig1(&opts)?;
             fig2(&opts)?;
@@ -710,6 +721,80 @@ fn async_sweep(opts: &BenchOpts) -> Result<()> {
                  dropped={dropped:<5} finished={} {speedup}",
                 trace.total_time,
                 trace.rounds.len().saturating_sub(1),
+                trace.finished,
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tiers — TiFL-style cached tier scheduling (fed::tiers) vs per-round
+// individual re-ranking vs oracle ranking, across the scenario grid
+// ---------------------------------------------------------------------------
+
+fn tiers_sweep(opts: &BenchOpts) -> Result<()> {
+    // each row runs its OWN spec; a global override would silently turn
+    // the sweep into identical, mislabeled runs
+    anyhow::ensure!(
+        opts.system.is_none(),
+        "--speed conflicts with the tiers sweep (it runs a fixed scenario grid)"
+    );
+    println!("=== Tiers: cached tier scheduling vs re-ranking cadences ===");
+    let (n, s, rounds) = if opts.quick { (12, 50, 800) } else { (32, 100, 3000) };
+    let policy = TierPolicy::parse("tiers:4").map_err(|e| anyhow::anyhow!(e))?;
+    let specs = [
+        ("static", "uniform:50:500"),
+        ("jitter", "jitter:0.3:uniform:50:500"),
+        ("markov", "markov:4:0.1:0.5:uniform:50:500"),
+        ("markov+drop", "drop:0.05:markov:4:0.1:0.5:uniform:50:500"),
+    ];
+    // (label, solver, tiers, per-round re-rank, estimate-based ranking).
+    // The per-round baseline runs first so every later row — tiered in
+    // particular — prints its wall-clock ratio against it.
+    let variants: Vec<(&str, SolverKind, bool, bool, bool)> = vec![
+        ("flanp-perround", SolverKind::Flanp, false, true, true),
+        ("flanp-tiered", SolverKind::Flanp, true, false, true),
+        ("flanp-stage", SolverKind::Flanp, false, false, true),
+        ("flanp-oracle", SolverKind::Flanp, false, false, false),
+        ("tifl", SolverKind::Tifl, true, false, true),
+    ];
+    for (label, spec) in specs {
+        let system = SystemModel::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+        println!("  -- scenario {label} ({spec}) --");
+        let mut perround_time = None;
+        for (name, solver, tiered, perround, estimated) in &variants {
+            let mut cfg = ExperimentConfig::new(solver.clone(), "linreg_d25", n, s);
+            cfg.eta = 0.05;
+            cfg.tau = 10;
+            cfg.n0 = 2;
+            cfg.mu = 0.5;
+            cfg.c_stat = 0.5;
+            cfg.system = system.clone();
+            cfg.tiers = if *tiered { Some(policy.clone()) } else { None };
+            cfg.rerank_per_round = *perround;
+            cfg.estimate_speeds = *estimated;
+            cfg.seed = opts.seed;
+            // tifl trains one tier per round — cheap, straggler-free
+            // rounds, but only 1/K of the fleet progresses per round, so
+            // a fair time-to-accuracy comparison needs a larger budget
+            cfg.max_rounds =
+                if *solver == SolverKind::Tifl { rounds * 4 } else { rounds };
+            cfg.eval_every = 5;
+            cfg.eval_rows = 500;
+            let trace = run_one(opts, &cfg, &format!("tiers_{label}_{name}"))?;
+            if *name == "flanp-perround" {
+                perround_time = Some(trace.total_time);
+            }
+            let vs = perround_time
+                .map(|t0| format!("{:>5.2}x vs perround", t0 / trace.total_time))
+                .unwrap_or_default();
+            println!(
+                "  {name:<15} time={:<12.1} rounds={:<5} reranks={:<5} \
+                 finished={} {vs}",
+                trace.total_time,
+                trace.rounds.len().saturating_sub(1),
+                trace.total_reranks(),
                 trace.finished,
             );
         }

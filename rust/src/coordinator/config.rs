@@ -1,6 +1,6 @@
 //! Experiment configuration: every knob of every figure in one struct.
 
-use crate::fed::{DeadlinePolicy, SpeedModel, SystemModel};
+use crate::fed::{DeadlinePolicy, SpeedModel, SystemModel, TierPolicy};
 
 /// Which algorithm drives the run.
 #[derive(Clone, Debug, PartialEq)]
@@ -28,6 +28,12 @@ pub enum SolverKind {
     /// k uploads fill its buffer. No round deadline: the clock advances
     /// to each buffer-flush time.
     FedBuff { k: usize },
+    /// TiFL (Chai et al. 2020): tier-scheduled FedGATE — the fleet is
+    /// clustered into latency tiers from the online speed estimates
+    /// (`fed::tiers`) and each round trains ONE whole tier, chosen by
+    /// fairness credits so slow tiers still contribute. The tier count
+    /// and hysteresis come from [`ExperimentConfig::tiers`] (required).
+    Tifl,
 }
 
 impl SolverKind {
@@ -42,6 +48,7 @@ impl SolverKind {
             SolverKind::FedGatePartialRandom { k } => format!("fedgate-rand{k}"),
             SolverKind::FedGatePartialFastest { k } => format!("fedgate-fast{k}"),
             SolverKind::FedBuff { k } => format!("fedbuff{k}"),
+            SolverKind::Tifl => "tifl".into(),
         }
     }
 
@@ -68,6 +75,7 @@ impl SolverKind {
             "fedavg" => Ok(SolverKind::FedAvg),
             "fednova" => Ok(SolverKind::FedNova),
             "fedprox" => Ok(SolverKind::FedProx),
+            "tifl" => Ok(SolverKind::Tifl),
             _ => Err(format!("unknown solver '{s}'")),
         }
     }
@@ -117,6 +125,18 @@ pub struct ExperimentConfig {
     /// estimates (TiFL-style) instead of oracle speeds. Under static
     /// scenarios both rankings are identical bit-for-bit.
     pub estimate_speeds: bool,
+    /// TiFL tier scheduling (`fed::tiers`): cluster the fleet into
+    /// latency tiers from the online estimates, cache membership across
+    /// rounds/stages and re-tier only past the hysteresis band. `None`
+    /// disables tiering. When set, FLANP snaps its stage sizes to tier
+    /// boundaries (a stage admits whole tiers); required by
+    /// [`SolverKind::Tifl`].
+    pub tiers: Option<TierPolicy>,
+    /// Re-rank the FLANP active prefix from the estimates EVERY round
+    /// instead of at stage boundaries — the per-round individual
+    /// re-ranking baseline that tier caching is measured against.
+    /// Mutually exclusive with `tiers`.
+    pub rerank_per_round: bool,
     /// EWMA smoothing of the online speed estimator, in (0, 1]
     pub ewma_alpha: f64,
     pub seed: u64,
@@ -172,6 +192,8 @@ impl ExperimentConfig {
             system: SpeedModel::paper_uniform().into(),
             deadline: DeadlinePolicy::Sync,
             estimate_speeds: true,
+            tiers: None,
+            rerank_per_round: false,
             ewma_alpha: crate::fed::DEFAULT_EWMA_ALPHA,
             seed: 1,
             max_rounds: 400,
@@ -243,13 +265,62 @@ impl ExperimentConfig {
         if self.deadline != DeadlinePolicy::Sync
             && !matches!(
                 self.solver,
-                SolverKind::Flanp | SolverKind::FlanpHeuristic | SolverKind::FedGate
+                SolverKind::Flanp
+                    | SolverKind::FlanpHeuristic
+                    | SolverKind::FedGate
+                    | SolverKind::Tifl
             )
         {
             return Err(format!(
                 "deadline policy '{}' applies to the synchronous cohort \
-                 solvers (flanp | flanp-heuristic | fedgate), not {}",
+                 solvers (flanp | flanp-heuristic | fedgate | tifl), not {}",
                 self.deadline.spec(),
+                self.solver.name()
+            ));
+        }
+        if let Some(tiers) = &self.tiers {
+            tiers.validate()?;
+            if !self.estimate_speeds {
+                return Err("tier scheduling ranks from the online speed \
+                            estimates; it cannot be combined with oracle \
+                            ranking"
+                    .into());
+            }
+            if self.rerank_per_round {
+                return Err("tiers and rerank_per_round are mutually \
+                            exclusive ranking cadences"
+                    .into());
+            }
+            if !matches!(
+                self.solver,
+                SolverKind::Flanp | SolverKind::FlanpHeuristic | SolverKind::Tifl
+            ) {
+                return Err(format!(
+                    "tier scheduling applies to flanp | flanp-heuristic | \
+                     tifl, not {}",
+                    self.solver.name()
+                ));
+            }
+        }
+        if self.solver == SolverKind::Tifl && self.tiers.is_none() {
+            return Err(
+                "tifl requires a tier policy (--tiers tiers:K[:hysteresis:H])"
+                    .into(),
+            );
+        }
+        if self.rerank_per_round && !self.estimate_speeds {
+            return Err(
+                "rerank_per_round requires estimate-based ranking".into()
+            );
+        }
+        if self.rerank_per_round
+            && !matches!(
+                self.solver,
+                SolverKind::Flanp | SolverKind::FlanpHeuristic
+            )
+        {
+            return Err(format!(
+                "rerank_per_round applies to flanp | flanp-heuristic, not {}",
                 self.solver.name()
             ));
         }
@@ -342,6 +413,7 @@ mod tests {
             "fedgate-rand5",
             "fedgate-fast8",
             "fedbuff4",
+            "tifl",
         ] {
             assert_eq!(SolverKind::parse(s).unwrap().name(), s);
         }
@@ -375,5 +447,52 @@ mod tests {
         assert!(cfg.validate(10).is_err());
         cfg.solver = SolverKind::FedBuff { k: 5 };
         assert!(cfg.validate(10).is_ok());
+        // tifl is a synchronous cohort solver: deadlines apply
+        cfg.solver = SolverKind::Tifl;
+        cfg.tiers = Some(TierPolicy::new(4));
+        cfg.deadline = DeadlinePolicy::Quantile { q: 0.8 };
+        assert!(cfg.validate(10).is_ok());
+    }
+
+    #[test]
+    fn tier_configs_validate_per_solver() {
+        let mut cfg = ExperimentConfig::new(SolverKind::Flanp, "m", 10, 100);
+        cfg.tiers = Some(TierPolicy::parse("tiers:4:hysteresis:2").unwrap());
+        assert!(cfg.validate(10).is_ok());
+        // tifl requires a tier policy...
+        cfg.solver = SolverKind::Tifl;
+        assert!(cfg.validate(10).is_ok());
+        cfg.tiers = None;
+        assert!(cfg.validate(10).is_err());
+        // ...and tiering is meaningless for the non-adaptive benchmarks
+        cfg.solver = SolverKind::FedGate;
+        cfg.tiers = Some(TierPolicy::new(4));
+        assert!(cfg.validate(10).is_err());
+        // tiering ranks from estimates: oracle ranking conflicts
+        cfg.solver = SolverKind::Flanp;
+        cfg.estimate_speeds = false;
+        assert!(cfg.validate(10).is_err());
+        cfg.estimate_speeds = true;
+        assert!(cfg.validate(10).is_ok());
+        // tier caching and per-round re-ranking are exclusive cadences
+        cfg.rerank_per_round = true;
+        assert!(cfg.validate(10).is_err());
+        cfg.tiers = None;
+        assert!(cfg.validate(10).is_ok());
+        // per-round re-ranking needs estimates too
+        cfg.estimate_speeds = false;
+        assert!(cfg.validate(10).is_err());
+        // ...and only the FLANP stage machine has a prefix to re-rank
+        cfg.estimate_speeds = true;
+        cfg.solver = SolverKind::FedGate;
+        assert!(cfg.validate(10).is_err());
+        cfg.solver = SolverKind::Flanp;
+        // malformed tier policies are rejected regardless of solver
+        cfg.estimate_speeds = true;
+        cfg.rerank_per_round = false;
+        cfg.tiers = Some(TierPolicy { tiers: 0, hysteresis: 1.5 });
+        assert!(cfg.validate(10).is_err());
+        cfg.tiers = Some(TierPolicy { tiers: 4, hysteresis: 0.9 });
+        assert!(cfg.validate(10).is_err());
     }
 }

@@ -20,6 +20,22 @@
 //! boundaries (and the final full-N stop) remain sound under partial
 //! participation; partial rounds just make less progress per round while
 //! costing less wall-clock (see `stopping.rs`).
+//!
+//! Active-set ranking runs at one of three cadences:
+//!
+//! * **stage** (default): re-rank the estimate-based fastest prefix at
+//!   every stage boundary;
+//! * **per-round** ([`ExperimentConfig::rerank_per_round`]): re-rank the
+//!   prefix every round — the individual re-ranking baseline TiFL
+//!   measures against;
+//! * **tiered** ([`ExperimentConfig::tiers`]): ride the cached
+//!   [`crate::fed::TierScheduler`] membership — stage sizes snap to tier
+//!   boundaries so a stage admits whole tiers — and recompute only when
+//!   a client's estimate breaches its tier's hysteresis band.
+//!
+//! Every ranking refresh (re-rank or re-tier) is charged to the trace's
+//! `reranks` column, so the scheduling-overhead comparison between the
+//! cadences is inspectable per run (`flanp-bench tiers`).
 
 use super::config::{ExperimentConfig, SolverKind, Subroutine};
 use super::eval::EvalData;
@@ -42,6 +58,10 @@ pub fn run_flanp(
     let mut oracle = OracleStop::from_config(cfg);
     let mut heur = HeuristicStop::new();
     let mut ddl = DeadlineController::new(cfg.deadline.clone());
+    let tiered = cfg.tiers.is_some();
+    if let Some(policy) = &cfg.tiers {
+        fleet.ensure_tiers(policy);
+    }
 
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
@@ -54,15 +74,30 @@ pub fn run_flanp(
     let mut stage = 0usize;
     'stages: loop {
         // stage setup: fastest-n prefix (re-ranked from the online speed
-        // estimates at every stage boundary — TiFL-style — unless the
-        // oracle ranking is forced), fresh tracking, stage stepsizes
-        let active = fleet.active_prefix(n, cfg.estimate_speeds);
+        // estimates at every stage boundary — or read from the cached
+        // tier membership, snapping the stage to whole tiers — unless
+        // the oracle ranking is forced), fresh tracking, stage stepsizes
+        let mut pending_reranks = 0usize;
+        let mut active = if tiered {
+            pending_reranks += fleet.refresh_tiers() as usize;
+            fleet.tiered_prefix(n)
+        } else {
+            if cfg.estimate_speeds {
+                pending_reranks += 1;
+            }
+            fleet.active_prefix(n, cfg.estimate_speeds)
+        };
+        n = active.len(); // tier-granular stages admit whole tiers
         state.reset_tracking();
         if !cfg.warm_start && stage > 0 {
             // ablation: discard the previous stage's model (Prop. 1 off)
             state.w.copy_from_slice(&w0);
         }
-        let (eta, gamma) = cfg.stage_stepsizes(n);
+        let (mut eta, mut gamma) = cfg.stage_stepsizes(n);
+        // stage_transitions logs the size each stage STARTS with; a
+        // mid-stage re-tier that grows the snapped cohort (rare — it
+        // needs boundary drift, not just membership churn) retunes the
+        // stepsizes below but is not a stage transition
         ctx.trace.stage_transitions.push((ctx.rounds_done(), n));
 
         // initial stats (first stage only: later stages start from the
@@ -74,10 +109,42 @@ pub fn run_flanp(
             if heuristic {
                 heur.observe_initial(g0);
             }
-            ctx.record(&state.w, n, stage, l0, g0, 0, 0)?;
+            ctx.record(
+                &state.w,
+                n,
+                stage,
+                l0,
+                g0,
+                0,
+                0,
+                std::mem::take(&mut pending_reranks),
+            )?;
         }
 
+        let mut first_round_of_stage = true;
         loop {
+            // between-round ranking maintenance (the stage setup above
+            // already ranked the first round): tiered runs ride the
+            // cached membership and only react when the hysteresis band
+            // trips; the per-round baseline re-ranks every round
+            if !std::mem::take(&mut first_round_of_stage) {
+                if tiered {
+                    if fleet.refresh_tiers() {
+                        active = fleet.tiered_prefix(n);
+                        if active.len() != n {
+                            // new boundaries grew the snapped cohort:
+                            // retune the stage stepsizes so eta/gamma and
+                            // the stopping threshold track the same n
+                            n = active.len();
+                            (eta, gamma) = cfg.stage_stepsizes(n);
+                        }
+                        pending_reranks += 1;
+                    }
+                } else if cfg.rerank_per_round {
+                    active = fleet.active_prefix(n, true);
+                    pending_reranks += 1;
+                }
+            }
             // realize this round's system conditions (event-driven: the
             // process advances for every client, active or not), split
             // the cohort into arrivals vs dropouts vs deadline misses,
@@ -114,7 +181,16 @@ pub fn run_flanp(
                 }
             }
             let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
-            ctx.record(&state.w, n, stage, loss, gsq, ev.dropped, ev.missed)?;
+            ctx.record(
+                &state.w,
+                n,
+                stage,
+                loss,
+                gsq,
+                ev.dropped,
+                ev.missed,
+                std::mem::take(&mut pending_reranks),
+            )?;
 
             let done = if heuristic {
                 heur.is_initialized() && heur.stage_done(n, gsq)

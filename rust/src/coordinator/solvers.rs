@@ -1,7 +1,8 @@
 //! Benchmark solvers (Section 5): FedGATE, FedAvg, FedNova, FedProx, the
-//! partial-participation FedGATE variants and the FedBuff buffered-async
-//! solver — plus the shared run loop used by FLANP (`flanp.rs`) and the
-//! deadline-bounded round step shared by the semi-synchronous solvers.
+//! partial-participation FedGATE variants, the FedBuff buffered-async
+//! solver and the TiFL tier-scheduled solver — plus the shared run loop
+//! used by FLANP (`flanp.rs`) and the deadline-bounded round step shared
+//! by the semi-synchronous solvers.
 
 use super::config::{ExperimentConfig, SolverKind};
 use super::eval::EvalData;
@@ -72,7 +73,10 @@ impl<'a> RunContext<'a> {
     /// active-set objective stats already computed by the solver (NaN if
     /// unavailable this round); `dropped` / `missed` are the round's
     /// dropout and deadline-miss counts from the clock's
-    /// [`crate::fed::RoundEvent`].
+    /// [`crate::fed::RoundEvent`]; `reranks` counts the ranking
+    /// refreshes (estimate re-ranks / tier-cache re-tiers) charged to
+    /// this round (0 for the fixed-cohort solvers).
+    #[allow(clippy::too_many_arguments)]
     pub fn record(
         &mut self,
         w: &[f32],
@@ -82,6 +86,7 @@ impl<'a> RunContext<'a> {
         grad_sq: f64,
         dropped: usize,
         missed: usize,
+        reranks: usize,
     ) -> Result<()> {
         let round = self.trace.rounds.len();
         let evaluate = round % self.cfg.eval_every.max(1) == 0;
@@ -109,6 +114,7 @@ impl<'a> RunContext<'a> {
             stage,
             dropped,
             missed,
+            reranks,
         });
         Ok(())
     }
@@ -211,6 +217,7 @@ pub fn run_solver(
             run_fedgate_partial(engine, fleet, cfg, k, true)
         }
         SolverKind::FedBuff { k } => run_fedbuff(engine, fleet, cfg, k),
+        SolverKind::Tifl => run_tifl(engine, fleet, cfg),
     }
 }
 
@@ -233,7 +240,7 @@ fn run_fedgate_full(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
-    ctx.record(&state.w, n, 0, l0, g0, 0, 0)?;
+    ctx.record(&state.w, n, 0, l0, g0, 0, 0, 0)?;
     loop {
         let (cond, participants) = fleet.realize_round(&active);
         let (arrived, ev) = deadline_round(
@@ -246,7 +253,7 @@ fn run_fedgate_full(
             )?;
         }
         let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
-        ctx.record(&state.w, n, 0, loss, gsq, ev.dropped, ev.missed)?;
+        ctx.record(&state.w, n, 0, loss, gsq, ev.dropped, ev.missed, 0)?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -282,7 +289,7 @@ fn run_model_average(
     let meta = engine.meta();
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
-    ctx.record(&w, n, 0, l0, g0, 0, 0)?;
+    ctx.record(&w, n, 0, l0, g0, 0, 0, 0)?;
     loop {
         let (cond, participants) = fleet.realize_round(&active);
         let mut acc = vec![0.0f64; p];
@@ -325,7 +332,7 @@ fn run_model_average(
         );
         fleet.observe_round(&participants, &cond);
         let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &w)?;
-        ctx.record(&w, n, 0, loss, gsq, ev.dropped, ev.missed)?;
+        ctx.record(&w, n, 0, loss, gsq, ev.dropped, ev.missed, 0)?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -356,7 +363,7 @@ fn run_fednova(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
-    ctx.record(&w, n, 0, l0, g0, 0, 0)?;
+    ctx.record(&w, n, 0, l0, g0, 0, 0, 0)?;
     loop {
         // Wang et al.'s deadline setup, re-derived each round from the
         // REALIZED speeds: the round window fits tau local steps of the
@@ -404,7 +411,7 @@ fn run_fednova(
         );
         fleet.observe_round(&participants, &cond);
         let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &w)?;
-        ctx.record(&w, n, 0, loss, gsq, ev.dropped, ev.missed)?;
+        ctx.record(&w, n, 0, loss, gsq, ev.dropped, ev.missed, 0)?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -437,7 +444,7 @@ fn run_fedgate_partial(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
-    ctx.record(&state.w, k, 0, l0, g0, 0, 0)?;
+    ctx.record(&state.w, k, 0, l0, g0, 0, 0, 0)?;
     loop {
         // chosen from the oracle ordering (the paper's baseline — only
         // FLANP gets the online estimator), then realized conditions
@@ -463,7 +470,87 @@ fn run_fedgate_partial(
         );
         fleet.observe_round(&participants, &cond);
         let (loss, gsq) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
-        ctx.record(&state.w, k, 0, loss, gsq, ev.dropped, ev.missed)?;
+        ctx.record(&state.w, k, 0, loss, gsq, ev.dropped, ev.missed, 0)?;
+        if gsq <= threshold {
+            ctx.trace.finished = true;
+            break;
+        }
+        if ctx.should_stop() {
+            break;
+        }
+    }
+    Ok(ctx.trace)
+}
+
+/// TiFL (Chai et al. 2020): tier-scheduled FedGATE. The fleet is
+/// clustered into latency tiers from the online speed estimates
+/// ([`crate::fed::TierScheduler`]); every round ONE whole tier trains —
+/// chosen by the scheduler's fairness credits, so fast tiers are
+/// scheduled proportionally more often while slow tiers still contribute
+/// their data at a guaranteed rate. Tier membership is cached and only
+/// recomputed when a client's estimate breaches its hysteresis band
+/// (each such re-tier is charged to the trace's `reranks` column).
+/// Because every round's cohort is a single tier of similar speeds, the
+/// straggler the server waits for is never much slower than the tier's
+/// typical member — the TiFL premise.
+///
+/// Honors the configured aggregation deadline policy exactly like the
+/// other synchronous cohort solvers, and deadline-censored observations
+/// can demote a client out of its tier through the same hysteresis path.
+///
+/// Stopping matches the benchmarks: the run finishes when the
+/// full-objective gradient meets the N-client statistical accuracy.
+fn run_tifl(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    cfg: &ExperimentConfig,
+) -> Result<Trace> {
+    let policy = cfg
+        .tiers
+        .clone()
+        .expect("config validation requires a tier policy for tifl");
+    fleet.ensure_tiers(&policy);
+    let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
+    let mut ctx = RunContext::new(engine, cfg, &eval);
+    let mut ddl = DeadlineController::new(cfg.deadline.clone());
+    let n = fleet.num_clients();
+    let all: Vec<usize> = (0..n).collect();
+    let mut state = GateState::new(init_params(engine, cfg.seed), n);
+    let mut bufs = RoundBuffers::new(engine, cfg.tau);
+    // stopping measured on the FULL objective's gradient (the comparison
+    // target is the same final accuracy as full participation)
+    let threshold = cfg.grad_threshold(n);
+
+    let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
+    ctx.record(&state.w, n, 0, l0, g0, 0, 0, 0)?;
+    loop {
+        // hysteresis-gated re-tier, then credit-based tier selection:
+        // one whole tier is this round's cohort
+        let reranks = fleet.refresh_tiers() as usize;
+        let tiers = fleet.tiers.as_mut().expect("tifl scheduler enabled above");
+        let tier = tiers.select_tier();
+        let active = tiers.tier_members(tier).to_vec();
+        let (cond, participants) = fleet.realize_round(&active);
+        let (arrived, ev) = deadline_round(
+            &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
+        );
+        if !arrived.is_empty() {
+            fedgate_round(
+                engine, fleet, &mut state, &arrived, cfg.tau, cfg.eta,
+                cfg.gamma, &mut bufs,
+            )?;
+        }
+        let (loss, gsq) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
+        ctx.record(
+            &state.w,
+            active.len(),
+            0,
+            loss,
+            gsq,
+            ev.dropped,
+            ev.missed,
+            reranks,
+        )?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -533,7 +620,7 @@ fn run_fedbuff(
     }
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &w)?;
-    ctx.record(&w, n, 0, l0, g0, 0, 0)?;
+    ctx.record(&w, n, 0, l0, g0, 0, 0, 0)?;
 
     // server buffer: staleness-weighted delta accumulator. Dropped
     // uploads are tracked per CLIENT (a fast unavailable client can
@@ -580,7 +667,7 @@ fn run_fedbuff(
             let dropped = dropped_since_flush.iter().filter(|&&d| d).count();
             let ev = ctx.clock.charge_until(t_i, k, dropped, 0);
             let (loss, gsq) = active_loss_gradsq(engine, fleet, &all, &w)?;
-            ctx.record(&w, k, 0, loss, gsq, ev.dropped, 0)?;
+            ctx.record(&w, k, 0, loss, gsq, ev.dropped, 0, 0)?;
             acc.fill(0.0);
             buffered = 0;
             dropped_since_flush.fill(false);
@@ -721,6 +808,54 @@ mod tests {
             * sorted_speed.iter().cloned().fold(0.0f64, f64::max);
         let dt = t.rounds[2].time - t.rounds[1].time;
         assert!((dt - per_round).abs() < 1e-9, "{dt} vs {per_round}");
+    }
+
+    #[test]
+    fn tifl_trains_one_whole_tier_per_round() {
+        let (e, mut fleet) = setup(8, 50);
+        let mut cfg = base_cfg(SolverKind::Tifl);
+        cfg.tiers = Some(crate::fed::TierPolicy::new(4));
+        cfg.max_rounds = 400;
+        let t = run_solver(&e, &mut fleet, &cfg).unwrap();
+        // every round's cohort is exactly one tier (8 clients / 4 tiers)
+        assert!(t.rounds[1..].iter().all(|r| r.participants == 2));
+        // rotating credits let every tier's data in: the model descends
+        assert!(t.last().unwrap().loss_full < t.rounds[0].loss_full);
+        // static scenario: the tier cache is never invalidated
+        assert_eq!(t.total_reranks(), 0);
+        assert_eq!(fleet.retier_events(), 0);
+    }
+
+    #[test]
+    fn tifl_rounds_are_tier_bound_not_fleet_bound() {
+        // the TiFL premise: a tier-scheduled round never waits for a
+        // client outside the selected tier, so the fastest-tier rounds
+        // cost at most tau * (2nd-fastest speed) while a full cohort
+        // round would pay the fleet's slowest member
+        let (e, mut fleet) = setup(8, 50);
+        let sorted = {
+            let mut s = fleet.speeds_of(fleet.fastest(8));
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s
+        };
+        let mut cfg = base_cfg(SolverKind::Tifl);
+        cfg.tiers = Some(crate::fed::TierPolicy::new(4));
+        cfg.max_rounds = 10;
+        cfg.c_stat = 1e-9; // timing-only run
+        let t = run_solver(&e, &mut fleet, &cfg).unwrap();
+        // round 1 selects the fastest tier {T_(1), T_(2)}
+        let dt = t.rounds[1].time - t.rounds[0].time;
+        assert!(
+            (dt - cfg.tau as f64 * sorted[1]).abs() < 1e-9,
+            "first tifl round {dt} != tau * 2nd-fastest {}",
+            cfg.tau as f64 * sorted[1]
+        );
+        // and no round ever costs more than the slowest tier's straggler
+        let max_cost = cfg.tau as f64 * sorted[7];
+        assert!(t
+            .rounds
+            .windows(2)
+            .all(|w| w[1].time - w[0].time <= max_cost + 1e-9));
     }
 
     #[test]

@@ -10,6 +10,7 @@
 use crate::data::{Dataset, Shard};
 use crate::fed::speed::sort_fastest_first;
 use crate::fed::system::{RoundConditions, SpeedEstimator, SystemModel, SystemState};
+use crate::fed::tiers::{TierPolicy, TierScheduler};
 use crate::util::Rng;
 
 /// Default EWMA smoothing for the online estimator; overridden from
@@ -28,6 +29,10 @@ pub struct ClientFleet {
     pub system: SystemState,
     /// online EWMA estimates of per-update times (TiFL-style)
     pub estimates: SpeedEstimator,
+    /// optional TiFL tier scheduler over the estimates (`fed::tiers`);
+    /// enabled by [`ClientFleet::ensure_tiers`] when the experiment uses
+    /// tier-cached ranking or the tifl solver
+    pub tiers: Option<TierScheduler>,
     rngs: Vec<Rng>,
 }
 
@@ -66,7 +71,16 @@ impl ClientFleet {
         // reproduces the oracle ranking bit-for-bit
         let probe = system.next_round();
         let estimates = SpeedEstimator::new(&probe.times, ewma_alpha);
-        ClientFleet { dataset, shards, speeds, order, system, estimates, rngs }
+        ClientFleet {
+            dataset,
+            shards,
+            speeds,
+            order,
+            system,
+            estimates,
+            tiers: None,
+            rngs,
+        }
     }
 
     pub fn num_clients(&self) -> usize {
@@ -104,6 +118,44 @@ impl ClientFleet {
         } else {
             self.order[..k].to_vec()
         }
+    }
+
+    /// Enable (or re-policy) the TiFL tier scheduler over the current
+    /// estimates. Idempotent for an unchanged policy, so the cached
+    /// membership — and the re-tier event count — survives repeated
+    /// calls from solver entry points.
+    pub fn ensure_tiers(&mut self, policy: &TierPolicy) {
+        let up_to_date =
+            self.tiers.as_ref().map(|t| t.policy() == policy).unwrap_or(false);
+        if !up_to_date {
+            self.tiers =
+                Some(TierScheduler::new(policy.clone(), &self.estimates));
+        }
+    }
+
+    /// Hysteresis-gated re-tier check against the current estimates;
+    /// true iff a re-tier happened. No-op (false) when tiers are off.
+    pub fn refresh_tiers(&mut self) -> bool {
+        match &mut self.tiers {
+            Some(t) => t.refresh(&self.estimates),
+            None => false,
+        }
+    }
+
+    /// Tier-granular active set: the fastest whole tiers covering at
+    /// least `n` clients, in the scheduler's cached fastest-first order
+    /// (FLANP stage sizes snap to tier boundaries). Requires
+    /// [`ClientFleet::ensure_tiers`] first.
+    pub fn tiered_prefix(&self, n: usize) -> Vec<usize> {
+        self.tiers
+            .as_ref()
+            .expect("tiered_prefix without ensure_tiers")
+            .prefix(n)
+    }
+
+    /// Re-tier events recorded by the scheduler (0 when tiers are off).
+    pub fn retier_events(&self) -> usize {
+        self.tiers.as_ref().map_or(0, |t| t.retier_events())
     }
 
     /// Feed the round's observed upload timings back into the estimator
@@ -295,6 +347,42 @@ mod tests {
         );
         assert_eq!(a.speeds, b.speeds);
         assert_eq!(a.order, b.order);
+    }
+
+    #[test]
+    fn tiered_prefix_matches_estimate_prefix_under_static_alignment() {
+        // static scenarios: the probe-primed estimates ARE the oracle
+        // speeds, so the cached tier ranking equals the live estimate
+        // ranking and aligned prefixes agree bit-for-bit
+        let mut f = fleet(8, 20, 4);
+        f.ensure_tiers(&TierPolicy::new(4));
+        assert_eq!(f.tiered_prefix(2), f.active_prefix(2, true));
+        assert_eq!(f.tiered_prefix(4), f.active_prefix(4, true));
+        // misaligned sizes snap UP to the next whole tier
+        assert_eq!(f.tiered_prefix(3).len(), 4);
+        assert!(!f.refresh_tiers(), "static estimates triggered a re-tier");
+        assert_eq!(f.retier_events(), 0);
+        // re-ensuring with the same policy keeps the cached scheduler
+        f.ensure_tiers(&TierPolicy::new(4));
+        assert_eq!(f.retier_events(), 0);
+    }
+
+    #[test]
+    fn drifted_estimates_retier_through_the_fleet() {
+        let mut f = fleet(6, 20, 4);
+        f.ensure_tiers(&TierPolicy::new(3));
+        let fastest = f.order[0];
+        let mut cond = f.next_round_conditions();
+        cond.times[fastest] *= 100.0;
+        let mut retiers = 0;
+        for _ in 0..30 {
+            f.observe_round(&[fastest], &cond);
+            retiers += f.refresh_tiers() as usize;
+        }
+        assert_eq!(retiers, f.retier_events());
+        assert!(retiers >= 1, "a 100x sustained slowdown never re-tiered");
+        let t = f.tiers.as_ref().unwrap();
+        assert_eq!(t.tier_of(fastest), t.num_tiers() - 1);
     }
 
     #[test]

@@ -32,6 +32,12 @@ pub struct RoundRecord {
     /// (0 under synchronous aggregation — the arrived-vs-missed split
     /// of the deadline policies in [`crate::fed::aggregation`])
     pub missed: usize,
+    /// ranking-maintenance events charged to this round: full estimate
+    /// re-ranks (1 per stage boundary under FLANP's default cadence, 1
+    /// per round under per-round re-ranking) or hysteresis-triggered
+    /// re-tiers of the [`crate::fed::TierScheduler`] cache (0 while the
+    /// cache holds)
+    pub reranks: usize,
 }
 
 /// A full run's trace plus identifying metadata.
@@ -77,6 +83,12 @@ impl Trace {
             .map(|r| r.time)
     }
 
+    /// Total ranking-maintenance events (estimate re-ranks / tier-cache
+    /// re-tiers) charged across the run.
+    pub fn total_reranks(&self) -> usize {
+        self.rounds.iter().map(|r| r.reranks).sum()
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("algo", self.algo.as_str().into()),
@@ -106,6 +118,7 @@ impl Trace {
                             ("stage", r.stage.into()),
                             ("dropped", r.dropped.into()),
                             ("missed", r.missed.into()),
+                            ("reranks", r.reranks.into()),
                         ])
                     })
                     .collect(),
@@ -116,11 +129,11 @@ impl Trace {
     /// CSV with a header row (one line per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage,dropped,missed\n",
+            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage,dropped,missed,reranks\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.time,
                 r.participants,
@@ -131,7 +144,8 @@ impl Trace {
                 r.accuracy,
                 r.stage,
                 r.dropped,
-                r.missed
+                r.missed,
+                r.reranks
             ));
         }
         s
@@ -169,6 +183,7 @@ mod tests {
             stage: 0,
             dropped: 0,
             missed: 0,
+            reranks: 0,
         }
     }
 
@@ -190,6 +205,18 @@ mod tests {
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("round,time"));
+        assert!(csv.lines().next().unwrap().ends_with(",reranks"));
+    }
+
+    #[test]
+    fn reranks_are_totaled_and_serialized() {
+        let mut t = Trace::new("x");
+        let mut r = rec(0, 1.0, 2.0);
+        r.reranks = 3;
+        t.push(r);
+        t.push(rec(1, 2.0, 1.0));
+        assert_eq!(t.total_reranks(), 3);
+        assert!(t.to_json().to_string().contains("\"reranks\":3"));
     }
 
     #[test]

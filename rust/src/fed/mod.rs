@@ -1,7 +1,7 @@
 //! Federated substrate: heterogeneous client fleet, system-heterogeneity
 //! scenarios (speed models + per-round dynamics + dropout), aggregation
-//! deadline policies, virtual wall-clock with round events, and
-//! per-round metric traces.
+//! deadline policies, TiFL-style tier scheduling, virtual wall-clock
+//! with round events, and per-round metric traces.
 
 pub mod aggregation;
 pub mod client;
@@ -9,6 +9,7 @@ pub mod clock;
 pub mod metrics;
 pub mod speed;
 pub mod system;
+pub mod tiers;
 
 pub use aggregation::{DeadlineController, DeadlinePolicy};
 pub use client::{ClientFleet, DEFAULT_EWMA_ALPHA};
@@ -16,3 +17,4 @@ pub use clock::{RoundEvent, VirtualClock};
 pub use metrics::{RoundRecord, Trace};
 pub use speed::SpeedModel;
 pub use system::{Dynamics, RoundConditions, SpeedEstimator, SystemModel, SystemState};
+pub use tiers::{TierPolicy, TierScheduler};

@@ -1,0 +1,492 @@
+//! TiFL-style tier scheduling (`fed::tiers`).
+//!
+//! Re-ranking every client every round is what the per-round estimate
+//! lookup in [`crate::fed::ClientFleet::active_prefix`] amounts to; TiFL
+//! (Chai et al., 2020) shows that grouping clients into latency **tiers**
+//! and scheduling whole tiers cuts both wall-clock and scheduling
+//! overhead at scale, because tier membership is *cached* and only
+//! revisited when a client's latency genuinely drifts. This module is
+//! that subsystem:
+//!
+//! * [`TierPolicy`] — the configuration: how many tiers `K` and the
+//!   hysteresis band `H` that cached membership must be breached by
+//!   before anything is recomputed. Parsed from the CLI with
+//!   [`TierPolicy::parse`] (grammar `tiers:K[:hysteresis:H]`, composing
+//!   with the scenario and deadline grammars of
+//!   [`crate::fed::SystemModel`] / [`crate::fed::DeadlinePolicy`]).
+//! * [`TierScheduler`] — the per-run state machine: clusters the fleet
+//!   into `K` equal-rank latency tiers from the online
+//!   [`SpeedEstimator`] (a quantile split of the estimate ranking),
+//!   caches the ranking and the tier membership across rounds and
+//!   stages, re-tiers **only** when a client's estimate drifts past `H x`
+//!   its tier's frozen estimate band, and selects one tier per round by
+//!   TiFL's fairness credits (smooth weighted round-robin: fast tiers
+//!   are scheduled proportionally more often, slow tiers still
+//!   contribute at a guaranteed rate instead of starving).
+//!
+//! Under a static scenario the estimator is an exact fixed point
+//! (see [`SpeedEstimator::observe`]), so the cached ranking equals the
+//! live estimate ranking bit-for-bit and the hysteresis check never
+//! fires: tier caching is a strict no-op relative to estimate-based
+//! ranking (proven in `tests/tiers.rs`). Deadline-censored observations
+//! ([`SpeedEstimator::observe_censored`]) move estimates through the
+//! same path as exact ones, so a deadline-missing client can be demoted
+//! out of its tier by the very same hysteresis trigger.
+//!
+//! ```
+//! use flanp::fed::TierPolicy;
+//!
+//! // spec grammar: tiers:K[:hysteresis:H]
+//! let p = TierPolicy::parse("tiers:5").unwrap();
+//! assert_eq!(p.tiers, 5);
+//! assert_eq!(p.hysteresis, flanp::fed::tiers::DEFAULT_HYSTERESIS);
+//! let q = TierPolicy::parse("tiers:4:hysteresis:2").unwrap();
+//! assert_eq!(q.hysteresis, 2.0);
+//! // every canonical spec re-parses to the same policy
+//! assert_eq!(TierPolicy::parse(&p.spec()).unwrap(), p);
+//! assert_eq!(TierPolicy::parse(&q.spec()).unwrap(), q);
+//! assert!(TierPolicy::parse("tiers:0").is_err());
+//! ```
+
+use crate::fed::speed::sort_fastest_first;
+use crate::fed::system::SpeedEstimator;
+
+/// Default hysteresis band multiplier: an estimate may drift up to 1.5x
+/// past its tier's frozen band before a re-tier is triggered.
+pub const DEFAULT_HYSTERESIS: f64 = 1.5;
+
+/// How the fleet is clustered into latency tiers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierPolicy {
+    /// number of tiers `K` (clamped to the fleet size at scheduling time)
+    pub tiers: usize,
+    /// hysteresis band multiplier `H >= 1`: a client triggers a re-tier
+    /// only when its estimate exceeds `H x` its tier's frozen upper band
+    /// (demotion) or falls below `1/H x` the frozen lower band
+    /// (promotion)
+    pub hysteresis: f64,
+}
+
+impl TierPolicy {
+    /// A `K`-tier policy with the default hysteresis band.
+    pub fn new(tiers: usize) -> Self {
+        TierPolicy { tiers, hysteresis: DEFAULT_HYSTERESIS }
+    }
+
+    /// Parse a tier spec. Grammar:
+    ///
+    /// ```text
+    ///   tiers:K[:hysteresis:H]
+    /// ```
+    ///
+    /// `K` is a positive tier count, `H >= 1` a hysteresis band
+    /// multiplier (default [`DEFAULT_HYSTERESIS`]).
+    ///
+    /// ```
+    /// use flanp::fed::TierPolicy;
+    /// assert_eq!(TierPolicy::parse("tiers:4").unwrap(), TierPolicy::new(4));
+    /// assert!(TierPolicy::parse("tiers:4:hysteresis:0.5").is_err());
+    /// assert!(TierPolicy::parse("tiers").is_err());
+    /// ```
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let toks: Vec<&str> = spec.split(':').collect();
+        let policy = match toks.as_slice() {
+            ["tiers", k] => {
+                let tiers = k.parse().map_err(|_| {
+                    format!("bad tier count '{k}' in tier spec '{spec}'")
+                })?;
+                TierPolicy::new(tiers)
+            }
+            ["tiers", k, "hysteresis", h] => {
+                let tiers = k.parse().map_err(|_| {
+                    format!("bad tier count '{k}' in tier spec '{spec}'")
+                })?;
+                let hysteresis = h.parse().map_err(|_| {
+                    format!("bad hysteresis '{h}' in tier spec '{spec}'")
+                })?;
+                TierPolicy { tiers, hysteresis }
+            }
+            _ => {
+                return Err(format!(
+                    "unknown tier spec '{spec}' \
+                     (expected tiers:K[:hysteresis:H])"
+                ))
+            }
+        };
+        policy.validate().map_err(|e| format!("{e} in tier spec '{spec}'"))?;
+        Ok(policy)
+    }
+
+    /// Canonical spec string; `parse(spec()) == self` for every policy.
+    /// The default hysteresis is omitted, mirroring how
+    /// [`crate::fed::SystemModel::spec`] drops the redundant `static:`.
+    pub fn spec(&self) -> String {
+        if self.hysteresis == DEFAULT_HYSTERESIS {
+            format!("tiers:{}", self.tiers)
+        } else {
+            format!("tiers:{}:hysteresis:{}", self.tiers, self.hysteresis)
+        }
+    }
+
+    /// Structural sanity check (configs can be built without `parse`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tiers == 0 {
+            return Err("tier count must be positive".into());
+        }
+        if !(self.hysteresis >= 1.0 && self.hysteresis.is_finite()) {
+            return Err(format!(
+                "hysteresis {} must be a finite multiplier >= 1",
+                self.hysteresis
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The per-run tier state machine: cached latency ranking, cached tier
+/// membership with hysteresis-gated re-tiering, and credit-based tier
+/// selection.
+///
+/// The scheduler is deterministic: the same policy and estimate stream
+/// always produce the same tierings, the same re-tier events and the
+/// same tier-selection sequence (no RNG anywhere).
+#[derive(Clone, Debug)]
+pub struct TierScheduler {
+    policy: TierPolicy,
+    /// cached fastest-first ranking of all clients (from the last tiering)
+    order: Vec<usize>,
+    /// client id -> tier index (0 = fastest tier)
+    tier_of: Vec<usize>,
+    /// exclusive end rank of each tier in `order`; the last entry is the
+    /// fleet size, so every bound is a whole-tier prefix length
+    bounds: Vec<usize>,
+    /// frozen per-tier estimate bands `[min, max]` at tiering time — the
+    /// reference the hysteresis check compares live estimates against
+    bands: Vec<(f64, f64)>,
+    /// fairness credits for tier selection (smooth weighted round-robin)
+    credits: Vec<f64>,
+    retier_events: usize,
+}
+
+impl TierScheduler {
+    /// Tier the fleet from the current estimates. The initial tiering is
+    /// TiFL's profiling step and is not counted as a re-tier event.
+    pub fn new(policy: TierPolicy, est: &SpeedEstimator) -> Self {
+        policy.validate().expect("invalid tier policy");
+        let n = est.estimates().len();
+        assert!(n > 0, "tiering an empty fleet");
+        let num_tiers = policy.tiers.min(n);
+        let mut s = TierScheduler {
+            policy,
+            order: Vec::new(),
+            tier_of: vec![0; n],
+            bounds: Vec::new(),
+            bands: Vec::new(),
+            credits: vec![0.0; num_tiers],
+            retier_events: 0,
+        };
+        s.tier(est);
+        s
+    }
+
+    pub fn policy(&self) -> &TierPolicy {
+        &self.policy
+    }
+
+    /// Number of tiers actually in use (`K` clamped to the fleet size).
+    pub fn num_tiers(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// The cached fastest-first ranking (valid as of the last tiering).
+    pub fn order(&self) -> &[usize] {
+        &self.order
+    }
+
+    /// Tier index of one client (0 = fastest tier).
+    pub fn tier_of(&self, client: usize) -> usize {
+        self.tier_of[client]
+    }
+
+    /// Client ids of one tier, fastest-first.
+    pub fn tier_members(&self, tier: usize) -> &[usize] {
+        let start = if tier == 0 { 0 } else { self.bounds[tier - 1] };
+        &self.order[start..self.bounds[tier]]
+    }
+
+    /// Re-tier events so far (the initial tiering is not counted).
+    pub fn retier_events(&self) -> usize {
+        self.retier_events
+    }
+
+    /// Recompute ranking, membership, boundaries and bands from the
+    /// current estimates: a quantile split of the estimate ranking into
+    /// `num_tiers` near-equal rank ranges.
+    fn tier(&mut self, est: &SpeedEstimator) {
+        let ests = est.estimates();
+        let n = ests.len();
+        let num_tiers = self.policy.tiers.min(n);
+        self.order = sort_fastest_first(ests);
+        self.bounds = (1..=num_tiers).map(|k| (k * n).div_ceil(num_tiers)).collect();
+        self.bands.clear();
+        let mut start = 0;
+        for (tier, &end) in self.bounds.iter().enumerate() {
+            self.bands.push((ests[self.order[start]], ests[self.order[end - 1]]));
+            for &c in &self.order[start..end] {
+                self.tier_of[c] = tier;
+            }
+            start = end;
+        }
+    }
+
+    /// Has any client's estimate drifted past the hysteresis band of its
+    /// cached tier? A client in the slowest tier cannot drift *down* out
+    /// of it, nor a fastest-tier client *up*, so those directions are
+    /// exempt — within-tier movement never invalidates the cache.
+    pub fn needs_retier(&self, est: &SpeedEstimator) -> bool {
+        let h = self.policy.hysteresis;
+        let last = self.bands.len() - 1;
+        self.tier_of.iter().enumerate().any(|(client, &tier)| {
+            let e = est.estimate(client);
+            let (lo, hi) = self.bands[tier];
+            (tier < last && e > hi * h) || (tier > 0 && e * h < lo)
+        })
+    }
+
+    /// The hysteresis gate: re-tier from the current estimates iff some
+    /// client breached its band; returns whether a re-tier happened.
+    /// Cached membership survives any amount of within-band drift.
+    pub fn refresh(&mut self, est: &SpeedEstimator) -> bool {
+        if self.needs_retier(est) {
+            self.tier(est);
+            self.retier_events += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Smallest whole-tier prefix length covering at least `n` clients
+    /// (FLANP stage sizes snap UP to tier boundaries).
+    pub fn snap(&self, n: usize) -> usize {
+        let n = n.max(1);
+        for &b in &self.bounds {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+
+    /// The fastest whole tiers covering at least `n` clients, in cached
+    /// fastest-first order.
+    pub fn prefix(&self, n: usize) -> Vec<usize> {
+        self.order[..self.snap(n)].to_vec()
+    }
+
+    /// Select the tier that trains this round by TiFL's fairness credits
+    /// (smooth weighted round-robin): every round every tier accrues
+    /// credit — faster tiers proportionally more — and the richest tier
+    /// is selected and pays the full weight sum. Tier `t` of `K` is thus
+    /// selected exactly `K - t` times per `K(K+1)/2` rounds: fast tiers
+    /// dominate, but slow tiers are guaranteed a known participation
+    /// rate instead of starving (their data still enters the model).
+    pub fn select_tier(&mut self) -> usize {
+        let num_tiers = self.credits.len();
+        let total = (num_tiers * (num_tiers + 1) / 2) as f64;
+        let mut sel = 0;
+        for t in 0..num_tiers {
+            self.credits[t] += (num_tiers - t) as f64;
+            if self.credits[t] > self.credits[sel] {
+                sel = t;
+            }
+        }
+        self.credits[sel] -= total;
+        sel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fed::speed::SpeedModel;
+    use crate::fed::system::{SystemModel, SystemState};
+    use crate::util::Rng;
+
+    #[test]
+    fn parse_roundtrips_every_variant() {
+        for spec in ["tiers:1", "tiers:4", "tiers:4:hysteresis:2", "tiers:8:hysteresis:1.25"] {
+            let p = TierPolicy::parse(spec).unwrap();
+            assert_eq!(p.spec(), spec);
+            assert_eq!(TierPolicy::parse(&p.spec()).unwrap(), p, "{spec}");
+        }
+        // the default hysteresis is canonicalized away
+        assert_eq!(TierPolicy::parse("tiers:4:hysteresis:1.5").unwrap().spec(), "tiers:4");
+    }
+
+    #[test]
+    fn parse_errors_name_the_full_spec() {
+        for bad in [
+            "tiers",                  // missing K
+            "tiers:0",                // zero tiers
+            "tiers:x",                // non-numeric K
+            "tiers:4:hysteresis",     // missing H
+            "tiers:4:hysteresis:0.5", // H < 1
+            "tiers:4:hysteresis:y",   // non-numeric H
+            "tiers:4:h:2",            // wrong keyword
+            "layers:4",               // unknown spec
+        ] {
+            let e = TierPolicy::parse(bad).unwrap_err();
+            assert!(e.contains(bad), "error '{e}' does not name '{bad}'");
+        }
+    }
+
+    #[test]
+    fn quantile_split_covers_the_fleet_in_rank_order() {
+        let est = SpeedEstimator::new(&[60.0, 10.0, 50.0, 20.0, 40.0, 30.0], 0.25);
+        let s = TierScheduler::new(TierPolicy::new(3), &est);
+        assert_eq!(s.num_tiers(), 3);
+        assert_eq!(s.order(), &[1, 3, 5, 4, 2, 0]);
+        assert_eq!(s.tier_members(0), &[1, 3]);
+        assert_eq!(s.tier_members(1), &[5, 4]);
+        assert_eq!(s.tier_members(2), &[2, 0]);
+        assert_eq!(s.tier_of(1), 0);
+        assert_eq!(s.tier_of(0), 2);
+        // uneven split: every tier non-empty, sizes differ by at most one
+        let s = TierScheduler::new(TierPolicy::new(4), &est);
+        let sizes: Vec<usize> = (0..4).map(|t| s.tier_members(t).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 6);
+        assert!(sizes.iter().all(|&z| z == 1 || z == 2), "{sizes:?}");
+    }
+
+    #[test]
+    fn tier_count_clamps_to_fleet_size() {
+        let est = SpeedEstimator::new(&[30.0, 10.0, 20.0], 0.25);
+        let s = TierScheduler::new(TierPolicy::new(10), &est);
+        assert_eq!(s.num_tiers(), 3);
+        assert!((0..3).all(|t| s.tier_members(t).len() == 1));
+    }
+
+    #[test]
+    fn snap_returns_whole_tier_prefixes() {
+        let est = SpeedEstimator::new(&[10.0, 20.0, 30.0, 40.0, 50.0, 60.0], 0.25);
+        let s = TierScheduler::new(TierPolicy::new(3), &est);
+        assert_eq!(s.snap(1), 2);
+        assert_eq!(s.snap(2), 2);
+        assert_eq!(s.snap(3), 4);
+        assert_eq!(s.snap(4), 4);
+        assert_eq!(s.snap(5), 6);
+        // n beyond the fleet clamps to the whole fleet
+        assert_eq!(s.snap(100), 6);
+        assert_eq!(s.prefix(3), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn static_estimates_never_retier() {
+        let prior = vec![50.0, 275.3, 120.0, 499.9];
+        let mut est = SpeedEstimator::new(&prior, 0.25);
+        let mut s = TierScheduler::new(TierPolicy::new(2), &est);
+        for _ in 0..100 {
+            for (i, &t) in prior.iter().enumerate() {
+                est.observe(i, t);
+            }
+            assert!(!s.refresh(&est), "static observations triggered a re-tier");
+        }
+        assert_eq!(s.retier_events(), 0);
+    }
+
+    #[test]
+    fn markov_oscillation_inside_the_band_triggers_zero_retiers() {
+        // hysteresis stability: a Markov-drift run whose slow factor F
+        // stays within the band (F <= H) oscillates estimates inside
+        // their tiers forever — the cache must never be invalidated
+        let model = SystemModel::parse("markov:1.4:0.3:0.3:uniform:50:500").unwrap();
+        let mut rng = Rng::new(9);
+        let base = SpeedModel::paper_uniform().draw(&mut rng, 24);
+        let mut state = SystemState::new(model, base, rng.fork(1));
+        // profiling probe primes the estimator, exactly as ClientFleet does
+        let probe = state.next_round();
+        let mut est = SpeedEstimator::new(&probe.times, 0.25);
+        let mut s =
+            TierScheduler::new(TierPolicy { tiers: 4, hysteresis: 1.5 }, &est);
+        for _ in 0..300 {
+            let cond = state.next_round();
+            for (i, &t) in cond.times.iter().enumerate() {
+                est.observe(i, t);
+            }
+            assert!(!s.refresh(&est), "within-band drift triggered a re-tier");
+        }
+        assert_eq!(s.retier_events(), 0);
+    }
+
+    #[test]
+    fn sustained_slowdown_triggers_exactly_one_demotion() {
+        // hysteresis stability, other direction: a fastest-tier client
+        // slows for good, crosses its band once, is demoted into the
+        // next tier — and the NEW band absorbs all further drift, so the
+        // whole episode costs exactly one re-tier event
+        let mut est =
+            SpeedEstimator::new(&[10.0, 20.0, 30.0, 40.0, 50.0, 60.0], 0.5);
+        let mut s =
+            TierScheduler::new(TierPolicy { tiers: 3, hysteresis: 1.5 }, &est);
+        assert_eq!(s.tier_of(0), 0);
+        let mut retiers = 0;
+        for _ in 0..50 {
+            est.observe(0, 35.0); // sustained slowdown toward 35
+            retiers += s.refresh(&est) as usize;
+        }
+        assert_eq!(retiers, 1, "hysteresis must charge exactly one re-tier");
+        assert_eq!(s.retier_events(), 1);
+        assert_eq!(s.tier_of(0), 1, "slowed client was not demoted");
+        // everyone else kept their tier
+        assert_eq!(s.tier_of(1), 0);
+        assert_eq!(s.tier_of(5), 2);
+    }
+
+    #[test]
+    fn censored_observations_promote_through_the_same_path() {
+        // deadline interop: a deadline-missing client only ever reports
+        // censored lower bounds, which still climb the estimate past the
+        // band and demote it out of its tier
+        let mut est = SpeedEstimator::new(&[10.0, 20.0, 30.0, 40.0], 0.5);
+        let mut s =
+            TierScheduler::new(TierPolicy { tiers: 2, hysteresis: 1.5 }, &est);
+        assert_eq!(s.tier_of(0), 0);
+        let mut retiers = 0;
+        for _ in 0..20 {
+            est.observe_censored(0, 35.0);
+            retiers += s.refresh(&est) as usize;
+        }
+        assert_eq!(retiers, 1);
+        assert_eq!(s.tier_of(0), 1, "censored drift did not demote the client");
+    }
+
+    #[test]
+    fn credit_selection_is_fair_and_weighted() {
+        let est = SpeedEstimator::new(&[10.0, 20.0, 30.0, 40.0], 0.25);
+        let mut s = TierScheduler::new(TierPolicy::new(4), &est);
+        // over one full credit cycle of K(K+1)/2 rounds, tier t is
+        // selected exactly K - t times: fast tiers dominate, the slowest
+        // tier still participates (no starvation)
+        let mut counts = [0usize; 4];
+        for _ in 0..10 {
+            counts[s.select_tier()] += 1;
+        }
+        assert_eq!(counts, [4, 3, 2, 1]);
+        // the schedule is periodic: a second cycle repeats the shares
+        for _ in 0..10 {
+            counts[s.select_tier()] += 1;
+        }
+        assert_eq!(counts, [8, 6, 4, 2]);
+    }
+
+    #[test]
+    fn selection_is_deterministic() {
+        let est = SpeedEstimator::new(&[10.0, 20.0, 30.0], 0.25);
+        let mut a = TierScheduler::new(TierPolicy::new(3), &est);
+        let mut b = TierScheduler::new(TierPolicy::new(3), &est);
+        for _ in 0..30 {
+            assert_eq!(a.select_tier(), b.select_tier());
+        }
+    }
+}

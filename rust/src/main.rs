@@ -9,7 +9,7 @@
 use anyhow::{Context, Result};
 use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
 use flanp::engine::Manifest;
-use flanp::fed::{DeadlinePolicy, SystemModel};
+use flanp::fed::{DeadlinePolicy, SystemModel, TierPolicy};
 use flanp::setup;
 use flanp::util::cli::Args;
 use std::path::Path;
@@ -24,8 +24,9 @@ USAGE:
 
 OPTIONS (run):
   --solver S        flanp | flanp-heuristic | fedgate | fedavg | fednova |
-                    fedprox | fedgate-randK | fedgate-fastK | fedbuffK
-                    (fedbuffK = buffered-async, flush every K uploads)
+                    fedprox | fedgate-randK | fedgate-fastK | fedbuffK | tifl
+                    (fedbuffK = buffered-async, flush every K uploads;
+                    tifl = tier-scheduled FedGATE, needs --tiers)
                                                        [flanp]
   --model M         manifest model name                [linreg_d25]
   --engine E        hlo | native                       [hlo]
@@ -56,10 +57,22 @@ OPTIONS (run):
                                    cohort's estimated speeds, Q in (0,1]
                     adaptive:F     self-tuning deadline targeting arrival
                                    fraction F in (0,1]
-                    (applies to flanp | flanp-heuristic | fedgate)
+                    (applies to flanp | flanp-heuristic | fedgate | tifl)
+  --tiers SPEC      TiFL tier scheduling               [off]
+                    tiers:K[:hysteresis:H]  cluster clients into K latency
+                    tiers from the online speed estimates; membership is
+                    cached and re-tiered only when an estimate drifts past
+                    H x its tier's band (H >= 1, default 1.5). FLANP stage
+                    sizes snap to tier boundaries; required by the tifl
+                    solver. Re-tier events land in the trace's reranks
+                    column.
   --ewma F          EWMA alpha of the online speed estimator [0.25]
   --oracle-ranking  rank FLANP prefixes by oracle speeds instead of the
                     online estimates
+  --rerank-every-round
+                    re-rank the FLANP prefix from the estimates every
+                    round instead of at stage boundaries (the per-round
+                    individual re-ranking baseline; conflicts with --tiers)
   --seed N          PRNG seed                          [1]
   --max-rounds R    round budget                       [400]
   --eval-rows N     rows for full-objective eval (0=all) [2000]
@@ -131,10 +144,16 @@ fn cmd_run(args: &mut Args) -> Result<()> {
         .map_err(|e| anyhow::anyhow!(e))?;
     let deadline = DeadlinePolicy::parse(&args.flag_str("deadline", "sync"))
         .map_err(|e| anyhow::anyhow!(e))?;
+    let tiers = args
+        .flag_opt("tiers")
+        .map(|s| TierPolicy::parse(&s))
+        .transpose()
+        .map_err(|e| anyhow::anyhow!(e))?;
     let ewma = args
         .flag_f64("ewma", flanp::fed::DEFAULT_EWMA_ALPHA)
         .map_err(|e| anyhow::anyhow!(e))?;
     let oracle_ranking = args.switch("oracle-ranking");
+    let rerank_per_round = args.switch("rerank-every-round");
     let seed = args.flag_usize("seed", 1).map_err(|e| anyhow::anyhow!(e))? as u64;
     let max_rounds =
         args.flag_usize("max-rounds", 400).map_err(|e| anyhow::anyhow!(e))?;
@@ -159,7 +178,9 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     cfg.c_stat = c_stat;
     cfg.system = system;
     cfg.deadline = deadline;
+    cfg.tiers = tiers;
     cfg.estimate_speeds = !oracle_ranking;
+    cfg.rerank_per_round = rerank_per_round;
     cfg.ewma_alpha = ewma;
     cfg.seed = seed;
     cfg.max_rounds = max_rounds;
@@ -173,7 +194,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     if !quiet {
         println!(
             "flanp run: solver={} model={} engine={} N={} s={} tau={} eta={} \
-             gamma={} system={} deadline={} ranking={}",
+             gamma={} system={} deadline={} tiers={} ranking={}",
             cfg.solver.name(),
             model,
             engine_kind,
@@ -184,7 +205,12 @@ fn cmd_run(args: &mut Args) -> Result<()> {
             gamma,
             cfg.system.spec(),
             cfg.deadline.spec(),
-            if cfg.estimate_speeds { "estimated" } else { "oracle" },
+            cfg.tiers.as_ref().map(|t| t.spec()).unwrap_or_else(|| "off".into()),
+            if cfg.estimate_speeds {
+                if cfg.rerank_per_round { "per-round" } else { "estimated" }
+            } else {
+                "oracle"
+            },
         );
     }
     let t0 = std::time::Instant::now();
@@ -194,7 +220,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     let last = trace.last().context("empty trace")?;
     println!(
         "done: rounds={} virtual_time={:.1} loss_full={:.6} grad^2={:.3e} \
-         dist={:.4} acc={:.4} finished={} ({} stages) [{:.2?} real]",
+         dist={:.4} acc={:.4} finished={} ({} stages, {} reranks) [{:.2?} real]",
         last.round,
         trace.total_time,
         last.loss_full,
@@ -203,6 +229,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
         last.accuracy,
         trace.finished,
         trace.stage_transitions.len().max(1),
+        trace.total_reranks(),
         wall
     );
     if let Some(p) = trace_path {

@@ -108,13 +108,17 @@ pub fn build_fleet(
     };
     let shards =
         shard::partition_fixed_s(&mut rng, &dataset, cfg.num_clients, cfg.s);
-    Ok(ClientFleet::with_alpha(
+    let mut fleet = ClientFleet::with_alpha(
         dataset,
         shards,
         &cfg.system,
         cfg.ewma_alpha,
         &mut rng,
-    ))
+    );
+    if let Some(policy) = &cfg.tiers {
+        fleet.ensure_tiers(policy);
+    }
+    Ok(fleet)
 }
 
 #[cfg(test)]

@@ -1,0 +1,181 @@
+//! fed::tiers acceptance + regression tests.
+//!
+//! The regression tests prove tier caching is a strict superset of the
+//! estimate-based ranking it replaces: under a static scenario the
+//! exact-fixed-point EWMA keeps the cached tier ranking bit-identical
+//! to the live estimate ranking, so a tiered FLANP run whose tier
+//! boundaries align with the stage doubling reproduces the plain run's
+//! prefix sequence, losses and wall-clock to the bit — with zero
+//! re-tier events. The acceptance test is the ISSUE's headline: under
+//! Markov drift, tier-cached FLANP reaches the statistical-accuracy
+//! stop with <= 10% of the re-rank events of per-round individual
+//! re-ranking while its wall-clock stays within 5%.
+
+use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::fed::{SystemModel, TierPolicy, Trace};
+use flanp::setup;
+
+fn base_cfg(solver: SolverKind, n: usize, s: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(solver, "linreg_d25", n, s);
+    cfg.tau = 10;
+    cfg.eta = 0.05;
+    cfg.n0 = 2;
+    cfg.mu = 0.5;
+    cfg.c_stat = 0.5;
+    cfg.max_rounds = 2000;
+    cfg.eval_every = 5;
+    cfg.eval_rows = 500;
+    cfg.seed = 3;
+    cfg
+}
+
+fn run(cfg: &ExperimentConfig) -> Trace {
+    let engine = setup::native_from_name(&cfg.model).unwrap();
+    let mut fleet = setup::build_fleet(engine.meta(), cfg, 0.1, 0.0).unwrap();
+    run_solver(&engine, &mut fleet, cfg).unwrap()
+}
+
+#[test]
+fn static_tier_cached_ranking_is_bit_identical_to_estimate_ranking() {
+    // ISSUE acceptance: under a static scenario the tier-cached FLANP
+    // ranking reproduces the estimate-based ranking exactly — same
+    // prefix sequence, same wall-clock, same losses, to the bit. With
+    // tiers:8 over 16 clients the tier boundaries (2, 4, 6, ..., 16)
+    // contain every doubling stage size, so snapping is the identity
+    // and any divergence would be a real tiering bug.
+    let plain = base_cfg(SolverKind::Flanp, 16, 50);
+    let mut tiered = plain.clone();
+    tiered.tiers = Some(TierPolicy::parse("tiers:8").unwrap());
+    let (t_plain, t_tiered) = (run(&plain), run(&tiered));
+    assert!(t_plain.finished && t_tiered.finished);
+    assert_eq!(t_plain.stage_transitions, t_tiered.stage_transitions);
+    assert_eq!(t_plain.total_time, t_tiered.total_time);
+    assert_eq!(t_plain.rounds.len(), t_tiered.rounds.len());
+    for (a, b) in t_plain.rounds.iter().zip(&t_tiered.rounds) {
+        assert_eq!(a.time, b.time, "round {}", a.round);
+        assert_eq!(a.participants, b.participants, "round {}", a.round);
+        assert_eq!(a.loss_full, b.loss_full, "round {}", a.round);
+        assert_eq!(a.grad_norm_sq, b.grad_norm_sq, "round {}", a.round);
+        assert_eq!(a.stage, b.stage, "round {}", a.round);
+    }
+    // static estimates are an exact fixed point: the cache never re-tiers
+    assert_eq!(t_tiered.total_reranks(), 0);
+}
+
+#[test]
+fn stages_snap_to_whole_tier_boundaries() {
+    // tiers:3 over 12 clients puts boundaries at 4, 8, 12: the n0 = 2
+    // opening stage must admit the whole fastest tier, and doubling
+    // lands on tier boundaries from there
+    let mut cfg = base_cfg(SolverKind::Flanp, 12, 50);
+    cfg.tiers = Some(TierPolicy::parse("tiers:3").unwrap());
+    let t = run(&cfg);
+    assert!(t.finished);
+    let ns: Vec<usize> = t.stage_transitions.iter().map(|&(_, n)| n).collect();
+    assert_eq!(ns, vec![4, 8, 12], "stages did not admit whole tiers");
+}
+
+#[test]
+fn tiered_ranking_cuts_rerank_churn_under_markov_drift() {
+    // ISSUE acceptance: under Markov drift, tier-cached FLANP reaches
+    // the statistical-accuracy stop with <= 10% of the re-rank/re-tier
+    // events of per-round individual re-ranking, while its wall-clock
+    // stays within 5%. The drift (slow factor 1.5) sits inside the
+    // hysteresis band (H = 2), so the cache absorbs every oscillation
+    // that per-round re-ranking pays a full re-rank for, every round.
+    let system =
+        SystemModel::parse("markov:1.5:0.05:0.5:uniform:50:500").unwrap();
+    let mut perround = base_cfg(SolverKind::Flanp, 16, 50);
+    perround.system = system.clone();
+    perround.rerank_per_round = true;
+    let mut tiered = base_cfg(SolverKind::Flanp, 16, 50);
+    tiered.system = system;
+    tiered.tiers = Some(TierPolicy::parse("tiers:8:hysteresis:2").unwrap());
+    let (t_pr, t_ti) = (run(&perround), run(&tiered));
+    assert!(t_pr.finished, "per-round flanp unfinished under markov drift");
+    assert!(t_ti.finished, "tiered flanp unfinished under markov drift");
+    // per-round individual re-ranking pays one re-rank EVERY round...
+    let (e_pr, e_ti) = (t_pr.total_reranks(), t_ti.total_reranks());
+    assert_eq!(
+        e_pr,
+        t_pr.rounds.len() - 1,
+        "per-round mode must re-rank every round"
+    );
+    // ...while the tier cache re-tiers at most 10% as often
+    assert!(
+        e_ti * 10 <= e_pr,
+        "tiered re-tiers {e_ti} !<= 10% of per-round re-ranks {e_pr}"
+    );
+    // and pays at most 5% wall-clock for the cached (possibly stale)
+    // membership
+    assert!(
+        t_ti.total_time <= 1.05 * t_pr.total_time,
+        "tiered wall-clock {} not within 5% of per-round {}",
+        t_ti.total_time,
+        t_pr.total_time
+    );
+}
+
+#[test]
+fn within_band_markov_drift_never_invalidates_the_cache() {
+    // hysteresis stability end to end: drift whose slow factor stays
+    // inside the band (F = 1.4 <= H = 1.5) oscillates every estimate
+    // inside its tier, and a full FLANP run records zero re-tiers
+    let mut cfg = base_cfg(SolverKind::Flanp, 16, 50);
+    cfg.system =
+        SystemModel::parse("markov:1.4:0.3:0.3:uniform:50:500").unwrap();
+    cfg.tiers = Some(TierPolicy::parse("tiers:4:hysteresis:1.5").unwrap());
+    let t = run(&cfg);
+    assert!(t.finished);
+    assert_eq!(
+        t.total_reranks(),
+        0,
+        "within-band oscillation invalidated the tier cache"
+    );
+}
+
+#[test]
+fn tifl_solver_runs_the_scenario_grid() {
+    // the credit-scheduled tifl solver descends under every scenario
+    // class and its rounds never wait for a client outside the selected
+    // tier (per-round participant count == one tier)
+    for spec in [
+        "uniform:50:500",
+        "jitter:0.3:uniform:50:500",
+        "markov:4:0.1:0.5:uniform:50:500",
+    ] {
+        let mut cfg = base_cfg(SolverKind::Tifl, 12, 50);
+        cfg.system = SystemModel::parse(spec).unwrap();
+        cfg.tiers = Some(TierPolicy::parse("tiers:4").unwrap());
+        cfg.max_rounds = 600;
+        let t = run(&cfg);
+        assert!(
+            t.last().unwrap().loss_full < t.rounds[0].loss_full,
+            "tifl did not descend under {spec}"
+        );
+        // 12 clients / 4 tiers: every round trains exactly one 3-client tier
+        assert!(
+            t.rounds[1..].iter().all(|r| r.participants == 3),
+            "tifl round trained more than one tier under {spec}"
+        );
+    }
+}
+
+#[test]
+fn tier_policy_flows_through_config_validation() {
+    let mut cfg = base_cfg(SolverKind::Flanp, 8, 50);
+    cfg.tiers = Some(TierPolicy::parse("tiers:4:hysteresis:2").unwrap());
+    assert!(cfg.validate(10).is_ok());
+    // oracle ranking contradicts estimate-driven tiering
+    cfg.estimate_speeds = false;
+    assert!(cfg.validate(10).is_err());
+    cfg.estimate_speeds = true;
+    // the two ranking cadences are mutually exclusive
+    cfg.rerank_per_round = true;
+    assert!(cfg.validate(10).is_err());
+    cfg.rerank_per_round = false;
+    // tifl without a tier policy is rejected
+    cfg.solver = SolverKind::Tifl;
+    cfg.tiers = None;
+    assert!(cfg.validate(10).is_err());
+}
