@@ -35,6 +35,11 @@ EXPERIMENTS:
                     vs oracle ranking, plus the tifl solver, under the
                     same four scenarios — reports wall-clock AND the
                     re-rank/re-tier events each cadence pays
+  avail             FLANP (stage/tiered) vs FedGATE vs FedBuff vs TiFL
+                    under correlated availability: i.i.d. (uncorrelated
+                    control), diurnal rotation, clustered outages, and a
+                    recorded Markov trace replayed via trace:FILE —
+                    the Hard-et-al. "winner flips" sweep
   all               every figure/table/ablation above
 
 OPTIONS:
@@ -60,9 +65,17 @@ Deadline policy specs used by the async sweep (and `flanp run
 --deadline`): sync | fixed:T | quantile:Q | adaptive:F.
 
 Tier specs used by the tiers sweep (and `flanp run --tiers`):
-tiers:K[:hysteresis:H] — K latency tiers clustered from the online
-speed estimates, membership cached until an estimate drifts past H x
-its tier's band (H >= 1, default 1.5).
+tiers:K[:split:quantile|kmeans][:hysteresis:H] — K latency tiers
+clustered from the online speed estimates (equal-rank quantiles or 1-D
+k-means boundaries), membership cached until an estimate drifts past
+H x its tier's band (H >= 1, default 1.5).
+
+Availability specs used by the avail sweep (and every `--speed`):
+avail:iid:P: | avail:diurnal:PERIOD:DUTY:SPREAD: | avail:cluster:C:PF:PR:
+prefixes compose with every base scenario; trace:FILE[:wrap|:hold]
+replays a CSV recorded with `flanp run --record-trace` (offline clients
+are observable at selection time — skipped, never charged, unlike
+drop: dropouts).
 
 Measured \"time\" is the simulated wall-clock of the paper's timing
 model (round cost = tau * max participant T_i; deadline rounds cost
@@ -90,7 +103,7 @@ fn main() {
 const EXPS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6a", "fig6b", "fig7",
     "fig8", "fig9", "table1", "table2", "ablate", "scenarios", "async",
-    "tiers", "all", "help",
+    "tiers", "avail", "all", "help",
 ];
 
 fn real_main() -> Result<()> {
@@ -138,6 +151,7 @@ fn real_main() -> Result<()> {
         "scenarios" => scenarios(&opts)?,
         "async" => async_sweep(&opts)?,
         "tiers" => tiers_sweep(&opts)?,
+        "avail" => avail_sweep(&opts)?,
         "all" => {
             fig1(&opts)?;
             fig2(&opts)?;
@@ -799,6 +813,118 @@ fn tiers_sweep(opts: &BenchOpts) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Avail — correlated availability (fed::traces): i.i.d. control vs
+// diurnal rotation vs clustered outages vs a replayed recorded trace
+// ---------------------------------------------------------------------------
+
+fn avail_sweep(opts: &BenchOpts) -> Result<()> {
+    // each row runs its OWN spec; a global override would silently turn
+    // the sweep into identical, mislabeled runs
+    anyhow::ensure!(
+        opts.system.is_none(),
+        "--speed conflicts with the avail sweep (it runs a fixed scenario grid)"
+    );
+    println!(
+        "=== Avail: correlated availability vs the uncorrelated control ==="
+    );
+    let (n, s, rounds) = if opts.quick { (12, 50, 1500) } else { (32, 100, 6000) };
+
+    // record a Markov reference run first, so the grid includes a
+    // replayed measured trace: every synthetic scenario is a replayable
+    // fixture (record -> replay is bit-identical; see tests/traces.rs)
+    let recorded = opts.out.join("avail_recorded_markov.csv");
+    {
+        let mut cfg =
+            ExperimentConfig::new(SolverKind::FedGate, "linreg_d25", n, s);
+        cfg.eta = 0.05;
+        cfg.tau = 10;
+        cfg.mu = 0.5;
+        cfg.c_stat = 0.5;
+        cfg.system = SystemModel::parse("markov:4:0.1:0.5:uniform:50:500")
+            .map_err(|e| anyhow::anyhow!(e))?;
+        cfg.seed = opts.seed;
+        cfg.max_rounds = rounds;
+        cfg.eval_every = 5;
+        cfg.eval_rows = 500;
+        cfg.record_trace = true;
+        let engine = setup::build_engine(
+            &opts.engine,
+            &cfg.model,
+            &setup::default_artifacts_dir(),
+        )?;
+        let mut fleet = setup::build_fleet(engine.meta(), &cfg, 0.1, 0.0)?;
+        run_solver(engine.as_ref(), &mut fleet, &cfg)?;
+        fleet
+            .write_recorded_trace(&recorded)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "  recorded {} realized rounds to {}",
+            fleet.recorded_trace().map_or(0, |d| d.num_rounds()),
+            recorded.display()
+        );
+    }
+
+    // the diurnal row rotates a 25%-duty online window around the fleet
+    // (spread 1); iid is the same marginal availability, uncorrelated
+    let specs: Vec<(&str, String)> = vec![
+        ("iid", "avail:iid:0.25:uniform:50:500".into()),
+        ("diurnal", "avail:diurnal:40000:0.25:1:uniform:50:500".into()),
+        ("clustered", "avail:cluster:4:0.1:0.3:uniform:50:500".into()),
+        ("replayed", format!("trace:{}", recorded.display())),
+    ];
+    let policy = TierPolicy::parse("tiers:4").map_err(|e| anyhow::anyhow!(e))?;
+    // (label, solver, tier policy on)
+    let variants: Vec<(&str, SolverKind, bool)> = vec![
+        ("flanp-stage", SolverKind::Flanp, false),
+        ("flanp-tiered", SolverKind::Flanp, true),
+        ("fedgate", SolverKind::FedGate, false),
+        ("fedbuff", SolverKind::FedBuff { k: (n / 4).max(2) }, false),
+        ("tifl", SolverKind::Tifl, true),
+    ];
+    for (label, spec) in &specs {
+        let system =
+            SystemModel::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+        println!("  -- scenario {label} ({spec}) --");
+        for (name, solver, tiered) in &variants {
+            let mut cfg =
+                ExperimentConfig::new(solver.clone(), "linreg_d25", n, s);
+            cfg.eta = 0.05;
+            cfg.tau = 10;
+            cfg.n0 = 2;
+            cfg.mu = 0.5;
+            cfg.c_stat = 0.5;
+            cfg.system = system.clone();
+            cfg.tiers = if *tiered { Some(policy.clone()) } else { None };
+            cfg.seed = opts.seed;
+            // fedbuff "rounds" are buffer flushes and tifl trains one
+            // tier per round: both need proportionally larger budgets
+            // for a fair time-to-accuracy comparison
+            cfg.max_rounds = match solver {
+                SolverKind::FedBuff { .. } => rounds * 10,
+                SolverKind::Tifl => rounds * 4,
+                _ => rounds,
+            };
+            cfg.eval_every = 5;
+            cfg.eval_rows = 500;
+            let trace = run_one(opts, &cfg, &format!("avail_{label}_{name}"))?;
+            let min_avail = trace.min_available().unwrap_or(0);
+            println!(
+                "  {name:<14} time={:<12.1} rounds={:<5} min-avail={min_avail:<3} \
+                 finished={}",
+                trace.total_time,
+                trace.rounds.len().saturating_sub(1),
+                trace.finished,
+            );
+        }
+    }
+    println!(
+        "  (the ranking under diurnal vs iid is the Hard-et-al. effect: \
+         correlated availability changes the winner)"
+    );
     Ok(())
 }
 

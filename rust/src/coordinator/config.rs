@@ -139,6 +139,11 @@ pub struct ExperimentConfig {
     pub rerank_per_round: bool,
     /// EWMA smoothing of the online speed estimator, in (0, 1]
     pub ewma_alpha: f64,
+    /// Record every realized round (probe included) of the
+    /// heterogeneity process for trace export (`fed::traces`):
+    /// `ClientFleet::write_recorded_trace` / `flanp run --record-trace`
+    /// turn the run into a CSV replayable via `--speed trace:FILE`.
+    pub record_trace: bool,
     pub seed: u64,
     pub max_rounds: usize,
     /// virtual-time budget (0 = unlimited)
@@ -195,6 +200,7 @@ impl ExperimentConfig {
             tiers: None,
             rerank_per_round: false,
             ewma_alpha: crate::fed::DEFAULT_EWMA_ALPHA,
+            record_trace: false,
             seed: 1,
             max_rounds: 400,
             max_time: 0.0,
@@ -261,19 +267,32 @@ impl ExperimentConfig {
             return Err("stepsizes must be positive".into());
         }
         self.system.validate()?;
+        if let Some(tr) = &self.system.trace {
+            if tr.data.num_clients() != self.num_clients {
+                return Err(format!(
+                    "trace '{}' replays {} clients but the experiment has {}",
+                    tr.path,
+                    tr.data.num_clients(),
+                    self.num_clients
+                ));
+            }
+        }
         self.deadline.validate()?;
+        // every synchronous cohort solver now routes through the shared
+        // deadline_round step; only the async (fedbuff) and the
+        // oracle-selection partial baselines have no cohort deadline
         if self.deadline != DeadlinePolicy::Sync
-            && !matches!(
+            && matches!(
                 self.solver,
-                SolverKind::Flanp
-                    | SolverKind::FlanpHeuristic
-                    | SolverKind::FedGate
-                    | SolverKind::Tifl
+                SolverKind::FedBuff { .. }
+                    | SolverKind::FedGatePartialRandom { .. }
+                    | SolverKind::FedGatePartialFastest { .. }
             )
         {
             return Err(format!(
                 "deadline policy '{}' applies to the synchronous cohort \
-                 solvers (flanp | flanp-heuristic | fedgate | tifl), not {}",
+                 solvers (flanp | flanp-heuristic | fedgate | fedavg | \
+                 fedprox | fednova | tifl), not {}",
                 self.deadline.spec(),
                 self.solver.name()
             ));
@@ -399,6 +418,34 @@ mod tests {
         cfg.system =
             SystemModel::parse("drop:0.05:markov:4:0.1:0.5:uniform:50:500").unwrap();
         assert!(cfg.validate(10).is_ok());
+        cfg.system = SystemModel::parse(
+            "avail:diurnal:2000:0.5:1:drop:0.05:uniform:50:500",
+        )
+        .unwrap();
+        assert!(cfg.validate(10).is_ok());
+        // malformed availability models are rejected
+        cfg.system.avail =
+            Some(crate::fed::AvailabilityModel::Iid { p: 0.0 });
+        assert!(cfg.validate(10).is_err());
+    }
+
+    #[test]
+    fn trace_configs_validate_the_fleet_width() {
+        use crate::fed::{TraceData, TraceMode, TraceReplay};
+        let mut data = TraceData::empty(4);
+        data.push_round(vec![10.0; 4], vec![true; 4]);
+        let replay = TraceReplay::from_data("mem", data, TraceMode::Hold);
+        let mut cfg = ExperimentConfig::new(SolverKind::Flanp, "m", 4, 100);
+        cfg.system = SystemModel::from_trace(replay);
+        assert!(cfg.validate(10).is_ok());
+        // a 10-client experiment cannot replay a 4-client trace
+        cfg.num_clients = 10;
+        let e = cfg.validate(10).unwrap_err();
+        assert!(e.contains("mem") && e.contains("4"), "{e}");
+        // trace replay composes with nothing else
+        cfg.num_clients = 4;
+        cfg.system.p_drop = 0.1;
+        assert!(cfg.validate(10).is_err());
     }
 
     #[test]
@@ -428,12 +475,22 @@ mod tests {
         assert!(cfg.validate(10).is_ok());
         cfg.solver = SolverKind::FedGate;
         assert!(cfg.validate(10).is_ok());
-        // asynchronous / averaging solvers have no cohort deadline
+        // every synchronous cohort solver takes a deadline now (PR 3's
+        // ROADMAP follow-on routed FedAvg/FedProx/FedNova through the
+        // shared deadline_round step)...
+        for solver in
+            [SolverKind::FedAvg, SolverKind::FedProx, SolverKind::FedNova]
+        {
+            cfg.solver = solver;
+            assert!(cfg.validate(10).is_ok());
+        }
+        // ...while the async and oracle-selection baselines still reject
         cfg.solver = SolverKind::FedBuff { k: 4 };
         assert!(cfg.validate(10).is_err());
-        cfg.solver = SolverKind::FedAvg;
+        cfg.solver = SolverKind::FedGatePartialRandom { k: 3 };
         assert!(cfg.validate(10).is_err());
         cfg.deadline = DeadlinePolicy::Sync;
+        cfg.solver = SolverKind::FedAvg;
         assert!(cfg.validate(10).is_ok());
         // malformed policies are rejected regardless of solver
         cfg.solver = SolverKind::Flanp;
@@ -490,9 +547,9 @@ mod tests {
         // malformed tier policies are rejected regardless of solver
         cfg.estimate_speeds = true;
         cfg.rerank_per_round = false;
-        cfg.tiers = Some(TierPolicy { tiers: 0, hysteresis: 1.5 });
+        cfg.tiers = Some(TierPolicy { tiers: 0, ..TierPolicy::new(4) });
         assert!(cfg.validate(10).is_err());
-        cfg.tiers = Some(TierPolicy { tiers: 4, hysteresis: 0.9 });
+        cfg.tiers = Some(TierPolicy { hysteresis: 0.9, ..TierPolicy::new(4) });
         assert!(cfg.validate(10).is_err());
     }
 }

@@ -118,10 +118,17 @@ pub fn run_flanp(
                 0,
                 0,
                 std::mem::take(&mut pending_reranks),
+                fleet.num_clients(),
             )?;
         }
 
         let mut first_round_of_stage = true;
+        // cached (loss_active, grad^2) for the CURRENT (w, active) pair:
+        // wait/empty rounds leave both unchanged, so re-evaluating the
+        // objective (the dominant host cost under low availability)
+        // would recompute the exact same numbers. Invalidated whenever
+        // the active set changes.
+        let mut stats: Option<(f64, f64)> = None;
         loop {
             // between-round ranking maintenance (the stage setup above
             // already ranked the first round): tiered runs ride the
@@ -139,20 +146,27 @@ pub fn run_flanp(
                             (eta, gamma) = cfg.stage_stepsizes(n);
                         }
                         pending_reranks += 1;
+                        stats = None; // active changed
                     }
                 } else if cfg.rerank_per_round {
                     active = fleet.active_prefix(n, true);
                     pending_reranks += 1;
+                    stats = None; // active changed
                 }
             }
             // realize this round's system conditions (event-driven: the
             // process advances for every client, active or not), split
-            // the cohort into arrivals vs dropouts vs deadline misses,
-            // charge the clock and update the speed estimates. Only the
-            // arrived clients' updates are aggregated; under the Sync
-            // policy this is the whole available cohort, bit-identically
-            // to the seed's synchronous rounds.
-            let (cond, participants) = fleet.realize_round(&active);
+            // the cohort into arrivals vs offline clients vs dropouts vs
+            // deadline misses, charge the clock and update the speed
+            // estimates. Offline prefix members are SKIPPED, not waited
+            // for (deadline_round charges only the online cohort; a
+            // fully-offline prefix waits for its next availability
+            // window). Only the arrived clients' updates are aggregated;
+            // under the Sync policy with everyone online this is the
+            // whole available cohort, bit-identically to the seed's
+            // synchronous rounds.
+            let (cond, participants) =
+                fleet.realize_round(&active, ctx.clock.now());
             let (arrived, ev) = deadline_round(
                 &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
                 cfg.tau,
@@ -180,7 +194,11 @@ pub fn run_flanp(
                     }
                 }
             }
-            let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
+            let (loss, gsq) = match stats {
+                Some(s) if arrived.is_empty() => s,
+                _ => active_loss_gradsq(engine, fleet, &active, &state.w)?,
+            };
+            stats = Some((loss, gsq));
             ctx.record(
                 &state.w,
                 n,
@@ -190,6 +208,7 @@ pub fn run_flanp(
                 ev.dropped,
                 ev.missed,
                 std::mem::take(&mut pending_reranks),
+                cond.online_count(),
             )?;
 
             let done = if heuristic {

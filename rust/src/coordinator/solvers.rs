@@ -11,8 +11,8 @@ use super::gate::{
 };
 use crate::engine::{Engine, ModelKind};
 use crate::fed::{
-    ClientFleet, DeadlineController, RoundConditions, RoundEvent, RoundRecord,
-    Trace, VirtualClock,
+    ClientFleet, DeadlineController, DeadlinePolicy, RoundConditions,
+    RoundEvent, RoundRecord, Trace, VirtualClock,
 };
 use crate::util::{linalg, Rng};
 use anyhow::Result;
@@ -75,7 +75,10 @@ impl<'a> RunContext<'a> {
     /// dropout and deadline-miss counts from the clock's
     /// [`crate::fed::RoundEvent`]; `reranks` counts the ranking
     /// refreshes (estimate re-ranks / tier-cache re-tiers) charged to
-    /// this round (0 for the fixed-cohort solvers).
+    /// this round (0 for the fixed-cohort solvers); `available` is the
+    /// fleet-wide observably-online count from the round's realized
+    /// conditions (`RoundConditions::online_count`; the fleet size for
+    /// the initial pre-training row).
     #[allow(clippy::too_many_arguments)]
     pub fn record(
         &mut self,
@@ -87,6 +90,7 @@ impl<'a> RunContext<'a> {
         dropped: usize,
         missed: usize,
         reranks: usize,
+        available: usize,
     ) -> Result<()> {
         let round = self.trace.rounds.len();
         let evaluate = round % self.cfg.eval_every.max(1) == 0;
@@ -115,6 +119,7 @@ impl<'a> RunContext<'a> {
             dropped,
             missed,
             reranks,
+            available,
         });
         Ok(())
     }
@@ -147,18 +152,30 @@ impl<'a> RunContext<'a> {
     }
 }
 
-/// One deadline-bounded synchronous round step, shared by FLANP and
-/// benchmark FedGATE: compute the cohort's deadline from the *estimated*
-/// speeds, split the realized arrivals from the deadline misses, charge
-/// the clock (`min(deadline, slowest cohort member)` — a partial round
-/// charges only the deadline), and feed exact / censored observations
-/// back into the speed estimator. Returns the clients whose update
-/// actually arrived (the only ones the caller may aggregate) and the
-/// charged [`RoundEvent`].
+/// One deadline-bounded synchronous round step, shared by every
+/// synchronous cohort solver (FLANP, benchmark FedGATE, FedAvg/FedProx
+/// via [`run_solver`], TiFL): compute the cohort's deadline from the
+/// *estimated* speeds, split the realized arrivals from the deadline
+/// misses, charge the clock (`min(deadline, slowest ONLINE cohort
+/// member)` — a partial round charges only the deadline), and feed
+/// exact / censored observations back into the speed estimator. Returns
+/// the clients whose update actually arrived (the only ones the caller
+/// may aggregate) and the charged [`RoundEvent`].
 ///
-/// Under [`crate::fed::DeadlinePolicy::Sync`] the deadline is `+inf`:
-/// every available client arrives, no censored observations are made and
-/// the charged cost is bit-identical to the synchronous path.
+/// Availability is handled here, once, for everyone: offline clients
+/// (`!cond.online[i]` — the `avail:`/`trace:` scenarios of
+/// `fed::traces`) are observable at selection time and are SKIPPED —
+/// they never hold the round open, are never charged to the clock, and
+/// are never fed to the speed estimator (neither exact nor censored
+/// observations: a client that never ran teaches nothing). When the
+/// whole cohort is offline the server waits instead of training:
+/// deterministic (diurnal) outages advance the clock straight to the
+/// cohort's next window; stochastic ones charge an idle tick and retry.
+///
+/// Under [`crate::fed::DeadlinePolicy::Sync`] with every client online
+/// the deadline is `+inf`: every available client arrives, no censored
+/// observations are made and the charged cost is bit-identical to the
+/// synchronous path.
 pub(crate) fn deadline_round(
     ctx: &mut RunContext,
     fleet: &mut ClientFleet,
@@ -168,30 +185,149 @@ pub(crate) fn deadline_round(
     participants: &[usize],
     updates: usize,
 ) -> (Vec<usize>, RoundEvent) {
-    let est: Vec<f64> =
-        active.iter().map(|&i| fleet.estimates.estimate(i)).collect();
-    let deadline = ddl.round_deadline(&est, updates);
-    let (arrived, late): (Vec<usize>, Vec<usize>) = participants
-        .iter()
-        .copied()
-        .partition(|&i| updates as f64 * cond.times[i] <= deadline);
-    let times: Vec<f64> = active.iter().map(|&i| cond.times[i]).collect();
-    let ev = ctx.clock.charge_round_deadline(
+    deadline_round_impl(ctx, fleet, ddl, active, cond, participants, updates, None)
+}
+
+/// Heterogeneous-step variant of [`deadline_round`] (FedNova): client
+/// `i` performs `taus[i]` local updates. The deadline budget is priced
+/// over each client's projected TOTAL `taus[i] * est_i` (reducing to
+/// the homogeneous formula when taus are uniform), and
+/// censored-observation floors use each late client's OWN `taus[i]`
+/// (the only bound its miss implies).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn deadline_round_hetero(
+    ctx: &mut RunContext,
+    fleet: &mut ClientFleet,
+    ddl: &mut DeadlineController,
+    active: &[usize],
+    cond: &RoundConditions,
+    participants: &[usize],
+    updates: usize,
+    taus: &[usize],
+) -> (Vec<usize>, RoundEvent) {
+    deadline_round_impl(
+        ctx,
+        fleet,
+        ddl,
         active,
-        &times,
+        cond,
+        participants,
         updates,
-        deadline,
-        active.len() - participants.len(),
-        late.len(),
-    );
+        Some(taus),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn deadline_round_impl(
+    ctx: &mut RunContext,
+    fleet: &mut ClientFleet,
+    ddl: &mut DeadlineController,
+    active: &[usize],
+    cond: &RoundConditions,
+    participants: &[usize],
+    updates: usize,
+    taus: Option<&[usize]>,
+) -> (Vec<usize>, RoundEvent) {
+    // the clock may only charge the observably-online cohort members
+    let present = cond.online_of(active);
+    if present.is_empty() {
+        let now = ctx.clock.now();
+        let wake = fleet
+            .system
+            .model()
+            .avail
+            .as_ref()
+            .and_then(|a| a.next_online_time(now, active, fleet.num_clients()))
+            .unwrap_or(now);
+        let ev = ctx.clock.charge_wait(wake);
+        return (Vec::new(), ev);
+    }
+    // deadline budget per client: its estimated PER-UPDATE time, scaled
+    // on the heterogeneous path by its own local-update count so the
+    // controller's `updates * quantile` arithmetic prices each client's
+    // projected TOTAL `taus[i] * est_i`. Without the scaling a quantile
+    // deadline under FedNova — where every uncapped client finishes
+    // near the common window `tau * max_t` — would reject nearly the
+    // whole cohort every round.
+    let est: Vec<f64> = match taus {
+        None => {
+            present.iter().map(|&i| fleet.estimates.estimate(i)).collect()
+        }
+        Some(t) => present
+            .iter()
+            .map(|&i| {
+                fleet.estimates.estimate(i) * t[i] as f64 / updates as f64
+            })
+            .collect(),
+    };
+    let deadline = ddl.round_deadline(&est, updates);
+    let total = |i: usize| match taus {
+        Some(t) => t[i] as f64 * cond.times[i],
+        None => updates as f64 * cond.times[i],
+    };
+    let (arrived, late): (Vec<usize>, Vec<usize>) =
+        participants.iter().copied().partition(|&i| total(i) <= deadline);
+    let times: Vec<f64> = present.iter().map(|&i| cond.times[i]).collect();
+    let dropped = present.len() - participants.len();
+    let ev = match taus {
+        None => ctx.clock.charge_round_deadline(
+            &present,
+            &times,
+            updates,
+            deadline,
+            dropped,
+            late.len(),
+        ),
+        Some(t) => {
+            let tp: Vec<usize> = present.iter().map(|&i| t[i]).collect();
+            ctx.clock.charge_round_hetero_deadline(
+                &present,
+                &times,
+                &tp,
+                deadline,
+                dropped,
+                late.len(),
+            )
+        }
+    };
     fleet.observe_round(&arrived, cond);
-    fleet.observe_censored(&late, deadline / updates as f64);
+    // a late client's only information is `times[i] > deadline / (ITS
+    // OWN local-update count)`: under heterogeneous taus the nominal
+    // floor would overstate a 2*tau client's bound by 2x and inflate
+    // fast clients' estimates
+    for &i in &late {
+        let u = match taus {
+            Some(t) => t[i],
+            None => updates,
+        };
+        fleet.observe_censored(&[i], deadline / u as f64);
+    }
     // the adaptive policy tunes on the deadline-CONTROLLABLE outcome:
-    // arrivals out of the available participants. Dropped clients can
-    // never arrive by any deadline, so counting them would pin the
-    // scale at its ceiling under heavy dropout (degenerating to sync).
+    // arrivals out of the available participants. Dropped (and offline)
+    // clients can never arrive by any deadline, so counting them would
+    // pin the scale at its ceiling under heavy dropout (degenerating to
+    // sync).
     ddl.observe_round(arrived.len(), participants.len());
     (arrived, ev)
+}
+
+/// Round stats with the empty-arrival fast path, shared by the
+/// fixed-eval-set solver loops: an empty (wait / all-dropped / deadline-
+/// starved) round leaves the model unchanged, so the cached
+/// `(loss, grad^2)` pair is exact and the objective — the dominant host
+/// cost under low availability — is not recomputed. FLANP keeps its own
+/// variant because its eval set (the active prefix) can change between
+/// rounds.
+fn round_stats(
+    arrived_empty: bool,
+    cached: (f64, f64),
+    fresh: impl FnOnce() -> Result<(f64, f64)>,
+) -> Result<(f64, f64)> {
+    if arrived_empty {
+        Ok(cached)
+    } else {
+        fresh()
+    }
 }
 
 /// Entry point: dispatch a config to its solver. FLANP variants live in
@@ -240,9 +376,13 @@ fn run_fedgate_full(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
-    ctx.record(&state.w, n, 0, l0, g0, 0, 0, 0)?;
+    ctx.record(&state.w, n, 0, l0, g0, 0, 0, 0, n)?;
+    // cached stats for the fixed eval set: an empty (wait/all-dropped)
+    // round leaves w unchanged, so the objective need not be recomputed
+    let mut stats = (l0, g0);
     loop {
-        let (cond, participants) = fleet.realize_round(&active);
+        let (cond, participants) =
+            fleet.realize_round(&active, ctx.clock.now());
         let (arrived, ev) = deadline_round(
             &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
         );
@@ -252,8 +392,21 @@ fn run_fedgate_full(
                 cfg.gamma, &mut bufs,
             )?;
         }
-        let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
-        ctx.record(&state.w, n, 0, loss, gsq, ev.dropped, ev.missed, 0)?;
+        let (loss, gsq) = round_stats(arrived.is_empty(), stats, || {
+            active_loss_gradsq(engine, fleet, &active, &state.w)
+        })?;
+        stats = (loss, gsq);
+        ctx.record(
+            &state.w,
+            n,
+            0,
+            loss,
+            gsq,
+            ev.dropped,
+            ev.missed,
+            0,
+            cond.online_count(),
+        )?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -270,7 +423,12 @@ enum Local {
     Prox,
 }
 
-/// FedAvg / FedProx: tau local steps then model averaging.
+/// FedAvg / FedProx: tau local steps then model averaging. Routed
+/// through the shared [`deadline_round`] step (ROADMAP follow-on from
+/// PR 3), so both honor the configured aggregation deadline policy and
+/// skip offline clients; at `deadline = +inf` with every client online
+/// the rounds are bit-identical to the purely synchronous path (see
+/// `rust/tests/deadline.rs`).
 fn run_model_average(
     engine: &dyn Engine,
     fleet: &mut ClientFleet,
@@ -279,6 +437,7 @@ fn run_model_average(
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
+    let mut ddl = DeadlineController::new(cfg.deadline.clone());
     let n = fleet.num_clients();
     let active: Vec<usize> = (0..n).collect();
     let p = engine.meta().param_count;
@@ -289,11 +448,18 @@ fn run_model_average(
     let meta = engine.meta();
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
-    ctx.record(&w, n, 0, l0, g0, 0, 0, 0)?;
+    ctx.record(&w, n, 0, l0, g0, 0, 0, 0, n)?;
+    // cached stats for the fixed eval set: an empty (wait/all-dropped)
+    // round leaves w unchanged, so the objective need not be recomputed
+    let mut stats = (l0, g0);
     loop {
-        let (cond, participants) = fleet.realize_round(&active);
+        let (cond, participants) =
+            fleet.realize_round(&active, ctx.clock.now());
+        let (arrived, ev) = deadline_round(
+            &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
+        );
         let mut acc = vec![0.0f64; p];
-        for &i in &participants {
+        for &i in &arrived {
             let wi = match local {
                 Local::Sgd => {
                     local_round(engine, fleet, i, &w, &zero_delta, cfg.tau, cfg.eta, &mut bufs)?
@@ -321,18 +487,24 @@ fn run_model_average(
             };
             linalg::accumulate(&mut acc, &wi);
         }
-        if !participants.is_empty() {
-            w = linalg::mean_of(&acc, participants.len());
+        if !arrived.is_empty() {
+            w = linalg::mean_of(&acc, arrived.len());
         }
-        let ev = ctx.clock.charge_round(
-            &active,
-            &cond.times,
-            cfg.tau,
-            active.len() - participants.len(),
-        );
-        fleet.observe_round(&participants, &cond);
-        let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &w)?;
-        ctx.record(&w, n, 0, loss, gsq, ev.dropped, ev.missed, 0)?;
+        let (loss, gsq) = round_stats(arrived.is_empty(), stats, || {
+            active_loss_gradsq(engine, fleet, &active, &w)
+        })?;
+        stats = (loss, gsq);
+        ctx.record(
+            &w,
+            n,
+            0,
+            loss,
+            gsq,
+            ev.dropped,
+            ev.missed,
+            0,
+            cond.online_count(),
+        )?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -345,7 +517,11 @@ fn run_model_average(
 }
 
 /// FedNova (Wang et al., 2020): heterogeneous local-step counts tau_i
-/// sized to a common time window, normalized aggregation.
+/// sized to a common time window, normalized aggregation. Routed through
+/// the shared [`deadline_round_hetero`] step, so FedNova honors the
+/// configured aggregation deadline policy and skips offline clients;
+/// `deadline = +inf` with everyone online is bit-identical to the
+/// synchronous path.
 fn run_fednova(
     engine: &dyn Engine,
     fleet: &mut ClientFleet,
@@ -353,6 +529,7 @@ fn run_fednova(
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
+    let mut ddl = DeadlineController::new(cfg.deadline.clone());
     let n = fleet.num_clients();
     let active: Vec<usize> = (0..n).collect();
     let p = engine.meta().param_count;
@@ -363,33 +540,46 @@ fn run_fednova(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
-    ctx.record(&w, n, 0, l0, g0, 0, 0, 0)?;
+    ctx.record(&w, n, 0, l0, g0, 0, 0, 0, n)?;
+    // cached stats for the fixed eval set: an empty (wait/all-dropped)
+    // round leaves w unchanged, so the objective need not be recomputed
+    let mut stats = (l0, g0);
     loop {
         // Wang et al.'s deadline setup, re-derived each round from the
         // REALIZED speeds: the round window fits tau local steps of the
-        // slowest client (every client trains for the same wall-clock
-        // window; the server normalizes the heterogeneous tau_i).
+        // slowest ONLINE client (every online client trains for the same
+        // wall-clock window; the server normalizes the heterogeneous
+        // tau_i; offline clients neither size the window nor train).
         // tau_i is capped at 2*tau: with i.i.d. synthetic shards the
         // local drift that penalizes huge tau_i in real federations is
         // mild, so an uncapped window would overstate FedNova
         // (DESIGN.md §6). Under a static scenario every round derives
         // the seed's original constants.
-        let (cond, participants) = fleet.realize_round(&active);
-        let max_t = cond.times.iter().cloned().fold(0.0f64, f64::max);
+        let (cond, participants) =
+            fleet.realize_round(&active, ctx.clock.now());
+        let present = cond.online_of(&active);
+        let max_t = present
+            .iter()
+            .map(|&i| cond.times[i])
+            .fold(0.0f64, f64::max);
         let window = cfg.tau as f64 * max_t;
         let taus: Vec<usize> = cond
             .times
             .iter()
             .map(|t| ((window / t).floor() as usize).clamp(1, 2 * cfg.tau))
             .collect();
+        let (arrived, ev) = deadline_round_hetero(
+            &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
+            cfg.tau, &taus,
+        );
 
-        if !participants.is_empty() {
-            let tau_eff = participants.iter().map(|&i| taus[i]).sum::<usize>()
+        if !arrived.is_empty() {
+            let tau_eff = arrived.iter().map(|&i| taus[i]).sum::<usize>()
                 as f64
-                / participants.len() as f64;
+                / arrived.len() as f64;
             // normalized update: d_i = (w - w_i) / (eta * tau_i)
             let mut acc = vec![0.0f64; p];
-            for &i in &participants {
+            for &i in &arrived {
                 let wi = local_round(
                     engine, fleet, i, &w, &zero_delta, taus[i], cfg.eta,
                     &mut bufs,
@@ -399,19 +589,25 @@ fn run_fednova(
                     w.iter().zip(&wi).map(|(a, b)| (a - b) * inv).collect();
                 linalg::accumulate(&mut acc, &di);
             }
-            let d_avg = linalg::mean_of(&acc, participants.len());
+            let d_avg = linalg::mean_of(&acc, arrived.len());
             // w <- w - eta * tau_eff * mean_i d_i
             linalg::axpy(-(cfg.eta * tau_eff as f32), &d_avg, &mut w);
         }
-        let ev = ctx.clock.charge_round_hetero(
-            &active,
-            &cond.times,
-            &taus,
-            active.len() - participants.len(),
-        );
-        fleet.observe_round(&participants, &cond);
-        let (loss, gsq) = active_loss_gradsq(engine, fleet, &active, &w)?;
-        ctx.record(&w, n, 0, loss, gsq, ev.dropped, ev.missed, 0)?;
+        let (loss, gsq) = round_stats(arrived.is_empty(), stats, || {
+            active_loss_gradsq(engine, fleet, &active, &w)
+        })?;
+        stats = (loss, gsq);
+        ctx.record(
+            &w,
+            n,
+            0,
+            loss,
+            gsq,
+            ev.dropped,
+            ev.missed,
+            0,
+            cond.online_count(),
+        )?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -443,8 +639,14 @@ fn run_fedgate_partial(
     let all: Vec<usize> = (0..n).collect();
     let threshold = cfg.grad_threshold(n);
 
+    // the partial baselines keep oracle selection and synchronous
+    // aggregation, but share the availability handling (skip, never
+    // charge, offline clients) of the common round step
+    let mut ddl = DeadlineController::new(DeadlinePolicy::Sync);
     let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
-    ctx.record(&state.w, k, 0, l0, g0, 0, 0, 0)?;
+    ctx.record(&state.w, k, 0, l0, g0, 0, 0, 0, n)?;
+    // cached stats for the fixed (full-objective) eval set
+    let mut stats = (l0, g0);
     loop {
         // chosen from the oracle ordering (the paper's baseline — only
         // FLANP gets the online estimator), then realized conditions
@@ -454,23 +656,32 @@ fn run_fedgate_partial(
         } else {
             rng.sample_indices(n, k)
         };
-        let (cond, participants) = fleet.realize_round(&active);
-        if !participants.is_empty() {
+        let (cond, participants) =
+            fleet.realize_round(&active, ctx.clock.now());
+        let (arrived, ev) = deadline_round(
+            &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
+        );
+        if !arrived.is_empty() {
             fedgate_round(
-                engine, fleet, &mut state, &participants, cfg.tau, cfg.eta,
+                engine, fleet, &mut state, &arrived, cfg.tau, cfg.eta,
                 cfg.gamma, &mut bufs,
             )?;
         }
-        let times: Vec<f64> = active.iter().map(|&i| cond.times[i]).collect();
-        let ev = ctx.clock.charge_round(
-            &active,
-            &times,
-            cfg.tau,
-            active.len() - participants.len(),
-        );
-        fleet.observe_round(&participants, &cond);
-        let (loss, gsq) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
-        ctx.record(&state.w, k, 0, loss, gsq, ev.dropped, ev.missed, 0)?;
+        let (loss, gsq) = round_stats(arrived.is_empty(), stats, || {
+            active_loss_gradsq(engine, fleet, &all, &state.w)
+        })?;
+        stats = (loss, gsq);
+        ctx.record(
+            &state.w,
+            k,
+            0,
+            loss,
+            gsq,
+            ev.dropped,
+            ev.missed,
+            0,
+            cond.online_count(),
+        )?;
         if gsq <= threshold {
             ctx.trace.finished = true;
             break;
@@ -522,15 +733,20 @@ fn run_tifl(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
-    ctx.record(&state.w, n, 0, l0, g0, 0, 0, 0)?;
+    ctx.record(&state.w, n, 0, l0, g0, 0, 0, 0, n)?;
+    // cached stats for the fixed (full-objective) eval set
+    let mut stats = (l0, g0);
     loop {
         // hysteresis-gated re-tier, then credit-based tier selection:
-        // one whole tier is this round's cohort
+        // one whole tier is this round's cohort. A fully-offline tier
+        // becomes a wait/idle round in deadline_round (its online
+        // members are the only ones trained or charged).
         let reranks = fleet.refresh_tiers() as usize;
         let tiers = fleet.tiers.as_mut().expect("tifl scheduler enabled above");
         let tier = tiers.select_tier();
         let active = tiers.tier_members(tier).to_vec();
-        let (cond, participants) = fleet.realize_round(&active);
+        let (cond, participants) =
+            fleet.realize_round(&active, ctx.clock.now());
         let (arrived, ev) = deadline_round(
             &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
         );
@@ -540,7 +756,10 @@ fn run_tifl(
                 cfg.gamma, &mut bufs,
             )?;
         }
-        let (loss, gsq) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
+        let (loss, gsq) = round_stats(arrived.is_empty(), stats, || {
+            active_loss_gradsq(engine, fleet, &all, &state.w)
+        })?;
+        stats = (loss, gsq);
         ctx.record(
             &state.w,
             active.len(),
@@ -550,6 +769,7 @@ fn run_tifl(
             ev.dropped,
             ev.missed,
             reranks,
+            cond.online_count(),
         )?;
         if gsq <= threshold {
             ctx.trace.finished = true;
@@ -612,15 +832,17 @@ fn run_fedbuff(
     let mut avail = vec![true; n];
     let mut version = 0usize;
 
+    // an attempt produces an upload only when the client is both online
+    // (observable availability, fed::traces) and not silently dropped
     let mut cond = fleet.next_round_conditions();
     for i in 0..n {
         attempt_time[i] = cond.times[i];
-        avail[i] = cond.available[i];
+        avail[i] = cond.available[i] && cond.online[i];
         finish[i] = cfg.tau as f64 * cond.times[i];
     }
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &w)?;
-    ctx.record(&w, n, 0, l0, g0, 0, 0, 0)?;
+    ctx.record(&w, n, 0, l0, g0, 0, 0, 0, n)?;
 
     // server buffer: staleness-weighted delta accumulator. Dropped
     // uploads are tracked per CLIENT (a fast unavailable client can
@@ -667,12 +889,23 @@ fn run_fedbuff(
             let dropped = dropped_since_flush.iter().filter(|&&d| d).count();
             let ev = ctx.clock.charge_until(t_i, k, dropped, 0);
             let (loss, gsq) = active_loss_gradsq(engine, fleet, &all, &w)?;
-            ctx.record(&w, k, 0, loss, gsq, ev.dropped, 0, 0)?;
+            ctx.record(
+                &w,
+                k,
+                0,
+                loss,
+                gsq,
+                ev.dropped,
+                0,
+                0,
+                cond.online_count(),
+            )?;
             acc.fill(0.0);
             buffered = 0;
             dropped_since_flush.fill(false);
-            // the heterogeneity process advances once per flush
-            cond = fleet.next_round_conditions();
+            // the heterogeneity process advances once per flush, at the
+            // flush's virtual time (diurnal windows are time-based)
+            cond = fleet.next_round_conditions_at(ctx.clock.now());
             if gsq <= threshold {
                 ctx.trace.finished = true;
                 break;
@@ -686,8 +919,21 @@ fn run_fedbuff(
         start_w[i].copy_from_slice(&w);
         start_version[i] = version;
         attempt_time[i] = cond.times[i];
-        avail[i] = cond.available[i];
+        avail[i] = cond.available[i] && cond.online[i];
         finish[i] = t_i + cfg.tau as f64 * cond.times[i];
+        // all-offline guard (fed::traces): when every client's current
+        // attempt is doomed, no upload can ever fill the buffer — and
+        // conditions are normally only re-realized on flushes, so the
+        // loop would spin to max_attempts. Re-realize at this
+        // completion's event time instead: completion times keep
+        // growing, so time-based availability windows eventually reopen
+        // and the relaunched client sees them.
+        if avail.iter().all(|&a| !a) {
+            cond = fleet.next_round_conditions_at(t_i);
+            attempt_time[i] = cond.times[i];
+            avail[i] = cond.available[i] && cond.online[i];
+            finish[i] = t_i + cfg.tau as f64 * cond.times[i];
+        }
         if attempts >= max_attempts {
             break;
         }

@@ -55,8 +55,27 @@ impl ClientFleet {
         ewma_alpha: f64,
         rng: &mut Rng,
     ) -> Self {
+        Self::with_options(dataset, shards, system_model, ewma_alpha, false, rng)
+    }
+
+    /// Like [`ClientFleet::with_alpha`], optionally recording every
+    /// realized round for trace export (`ExperimentConfig::record_trace`
+    /// / `flanp run --record-trace`). Recording starts BEFORE the
+    /// profiling probe, so the exported trace's round 0 is the probe and
+    /// a replay primes the speed estimator exactly as this run did.
+    pub fn with_options(
+        dataset: Dataset,
+        shards: Vec<Shard>,
+        system_model: &SystemModel,
+        ewma_alpha: f64,
+        record_trace: bool,
+        rng: &mut Rng,
+    ) -> Self {
         let n = shards.len();
-        let speeds = system_model.base.draw(rng, n);
+        // every scenario consumes the same base-draw RNG budget (see
+        // SpeedModel::draw), and trace replays take the recorded probe
+        // as their base — so the forks below never depend on the model
+        let speeds = system_model.draw_base(rng, n);
         let order = sort_fastest_first(&speeds);
         let rngs: Vec<Rng> = (0..n).map(|i| rng.fork(i as u64)).collect();
         // the system stream is forked AFTER the per-client minibatch
@@ -65,6 +84,9 @@ impl ClientFleet {
         let sys_rng = rng.fork(n as u64);
         let mut system =
             SystemState::new(system_model.clone(), speeds.clone(), sys_rng);
+        if record_trace {
+            system.enable_recording();
+        }
         // profiling probe (TiFL tiering): one realized observation primes
         // the estimator before any round is charged; under static
         // dynamics this is exactly T_i, so estimate-based ranking
@@ -87,24 +109,72 @@ impl ClientFleet {
         self.shards.len()
     }
 
-    /// Realize the next round's conditions for every client. The process
-    /// advances globally (all clients, every round), so realized
-    /// trajectories are independent of which clients are active.
+    /// Realize the next round's conditions for every client at virtual
+    /// time 0 (kept for tests and scenarios without time-based
+    /// availability). The process advances globally (all clients, every
+    /// round), so realized trajectories are independent of which
+    /// clients are active.
     pub fn next_round_conditions(&mut self) -> RoundConditions {
         self.system.next_round()
     }
 
+    /// Realize the next round's conditions at virtual time `now`
+    /// (diurnal availability windows are time-based).
+    pub fn next_round_conditions_at(&mut self, now: f64) -> RoundConditions {
+        self.system.next_round_at(now)
+    }
+
     /// One round's shared orchestration step for every solver: realize
-    /// the next conditions and split the intended cohort into the
-    /// clients whose upload arrives (`participants`) vs dropouts. The
-    /// caller charges the clock over the WHOLE cohort (dropouts hold
-    /// the round open until the deadline) and aggregates only the
-    /// participants.
-    pub fn realize_round(&mut self, active: &[usize]) -> (RoundConditions, Vec<usize>) {
-        let cond = self.next_round_conditions();
-        let participants: Vec<usize> =
-            active.iter().copied().filter(|&i| cond.available[i]).collect();
+    /// the next conditions at virtual time `now` and split the intended
+    /// cohort into the clients whose upload arrives (`participants`) vs
+    /// offline clients and dropouts. Offline clients
+    /// (`!cond.online[i]`) are observable at selection time and must be
+    /// SKIPPED — never charged; silent dropouts hold the round open
+    /// until the deadline. The caller charges the clock over the ONLINE
+    /// cohort (`cond.online_of(active)`, which
+    /// `coordinator::solvers::deadline_round` does) and aggregates only
+    /// the participants.
+    pub fn realize_round(
+        &mut self,
+        active: &[usize],
+        now: f64,
+    ) -> (RoundConditions, Vec<usize>) {
+        let cond = self.next_round_conditions_at(now);
+        let participants: Vec<usize> = active
+            .iter()
+            .copied()
+            .filter(|&i| cond.online[i] && cond.available[i])
+            .collect();
         (cond, participants)
+    }
+
+    /// Start recording every realized round for trace export. Prefer
+    /// [`ClientFleet::with_options`] (recording from the probe onward);
+    /// enabling mid-run yields a trace whose round 0 is NOT the probe.
+    pub fn enable_recording(&mut self) {
+        self.system.enable_recording();
+    }
+
+    /// The realized trace recorded so far (None unless recording was
+    /// enabled).
+    pub fn recorded_trace(&self) -> Option<&crate::fed::traces::TraceData> {
+        self.system.recorder().map(|r| r.data())
+    }
+
+    /// Write the recorded trace CSV (replayable via
+    /// `--speed trace:PATH`).
+    pub fn write_recorded_trace(
+        &self,
+        path: &std::path::Path,
+    ) -> Result<(), String> {
+        let data = self.recorded_trace().ok_or_else(|| {
+            "trace recording was not enabled for this run \
+             (set ExperimentConfig::record_trace)"
+                .to_string()
+        })?;
+        data.write_csv(path).map_err(|e| {
+            format!("cannot write trace '{}': {e}", path.display())
+        })
     }
 
     /// Active set for a stage of k clients: ranked by the online speed
@@ -332,6 +402,59 @@ mod tests {
         );
         // oracle ranking is unaffected
         assert!(f.active_prefix(3, false).contains(&fastest));
+    }
+
+    #[test]
+    fn realize_round_skips_offline_clients() {
+        let sys = SystemModel::parse("avail:diurnal:100:0.5:1:uniform:50:500")
+            .unwrap();
+        let mut f = fleet_sys(4, 20, 4, &sys);
+        // phases 0, 0.25, 0.5, 0.75 at duty 0.5: clients 0, 1 online at
+        // t = 0; the offline clients are skipped, not dropped
+        let (cond, participants) = f.realize_round(&[0, 1, 2, 3], 0.0);
+        assert_eq!(cond.online, vec![true, true, false, false]);
+        assert_eq!(participants, vec![0, 1]);
+        assert!(cond.available.iter().all(|&a| a));
+        assert_eq!(cond.online_of(&[0, 1, 2, 3]), vec![0, 1]);
+        // half a period later the window rotates
+        let (cond, participants) = f.realize_round(&[0, 1, 2, 3], 50.0);
+        assert_eq!(cond.online, vec![false, false, true, true]);
+        assert_eq!(participants, vec![2, 3]);
+    }
+
+    #[test]
+    fn recorded_trace_round_zero_is_the_probe() {
+        let n_clients = 3;
+        let s = 10;
+        let d = 4;
+        let nrows = n_clients * s;
+        let mut rng = Rng::new(1);
+        let mut x = vec![0.0f32; nrows * d];
+        rng.fill_normal(&mut x, 1.0);
+        let y = Labels::Class((0..nrows).map(|i| (i % 3) as u32).collect(), 3);
+        let ds = Dataset::new(x, y, d);
+        let shards = shard::partition_iid(&mut rng, &ds, n_clients);
+        let mut f = ClientFleet::with_options(
+            ds,
+            shards,
+            &SpeedModel::paper_uniform().into(),
+            DEFAULT_EWMA_ALPHA,
+            true,
+            &mut rng,
+        );
+        // the construction probe is already recorded as round 0, and
+        // under static dynamics it equals the base speeds exactly
+        let rec = f.recorded_trace().unwrap();
+        assert_eq!(rec.num_rounds(), 1);
+        let (t0, a0) = rec.round(0);
+        assert_eq!(t0, &f.speeds[..]);
+        assert!(a0.iter().all(|&a| a));
+        f.next_round_conditions();
+        assert_eq!(f.recorded_trace().unwrap().num_rounds(), 2);
+        // a non-recording fleet exposes no trace
+        let g = fleet(3, 10, 4);
+        assert!(g.recorded_trace().is_none());
+        assert!(g.write_recorded_trace(std::path::Path::new("/tmp/x")).is_err());
     }
 
     #[test]

@@ -240,6 +240,18 @@ impl VirtualClock {
         )
     }
 
+    /// Charge an availability wait: nobody in the round's cohort was
+    /// observably online, so the server idles — no participants, nothing
+    /// dropped or missed — until `t`, the cohort's next availability
+    /// window. With an unknown wake time (stochastic outages) callers
+    /// pass `t <= now`: the round becomes an idle tick (communication
+    /// overhead only) and the next realization retries. Offline clients
+    /// are never charged as stragglers — unavailability is observable at
+    /// selection time, unlike dropout (see `fed::traces`).
+    pub fn charge_wait(&mut self, t: f64) -> RoundEvent {
+        self.charge_until(t, 0, 0, 0)
+    }
+
     /// Advance the clock to the absolute time `t` and record the
     /// interval as one event (buffered-async aggregation: the server
     /// flushes its buffer at the K-th arrival). `t` earlier than `now`
@@ -483,6 +495,21 @@ mod tests {
         let ev = c.charge_until(55.5, 1, 0, 0);
         assert_eq!(ev.cost, 0.0);
         assert_eq!(c.now(), 55.5);
+    }
+
+    #[test]
+    fn charge_wait_is_an_idle_event() {
+        let mut c = VirtualClock::new();
+        let ev = c.charge_wait(25.0);
+        assert_eq!(ev.cost, 25.0);
+        assert_eq!(ev.participants, 0);
+        assert_eq!(ev.dropped + ev.missed, 0);
+        assert_eq!(ev.slowest, None, "a wait has no straggler");
+        assert_eq!(c.now(), 25.0);
+        // unknown wake time (t <= now): a free idle tick without comm
+        let ev = c.charge_wait(10.0);
+        assert_eq!(ev.cost, 0.0);
+        assert_eq!(c.now(), 25.0);
     }
 
     #[test]

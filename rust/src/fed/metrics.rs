@@ -38,6 +38,11 @@ pub struct RoundRecord {
     /// re-tiers of the [`crate::fed::TierScheduler`] cache (0 while the
     /// cache holds)
     pub reranks: usize,
+    /// observably-online clients fleet-wide this round (the `avail:` /
+    /// `trace:` scenarios of `fed::traces`; equals the fleet size
+    /// otherwise). Mirrors the per-client `available` column of the
+    /// recorded trace CSV.
+    pub available: usize,
 }
 
 /// A full run's trace plus identifying metadata.
@@ -89,6 +94,13 @@ impl Trace {
         self.rounds.iter().map(|r| r.reranks).sum()
     }
 
+    /// Smallest fleet-wide online count seen across the run's rounds
+    /// (the severity of the worst availability trough; `None` on an
+    /// empty trace).
+    pub fn min_available(&self) -> Option<usize> {
+        self.rounds.iter().map(|r| r.available).min()
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("algo", self.algo.as_str().into()),
@@ -119,6 +131,7 @@ impl Trace {
                             ("dropped", r.dropped.into()),
                             ("missed", r.missed.into()),
                             ("reranks", r.reranks.into()),
+                            ("available", r.available.into()),
                         ])
                     })
                     .collect(),
@@ -129,11 +142,11 @@ impl Trace {
     /// CSV with a header row (one line per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage,dropped,missed,reranks\n",
+            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage,dropped,missed,reranks,available\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.time,
                 r.participants,
@@ -145,7 +158,8 @@ impl Trace {
                 r.stage,
                 r.dropped,
                 r.missed,
-                r.reranks
+                r.reranks,
+                r.available
             ));
         }
         s
@@ -184,6 +198,7 @@ mod tests {
             dropped: 0,
             missed: 0,
             reranks: 0,
+            available: 4,
         }
     }
 
@@ -205,7 +220,7 @@ mod tests {
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("round,time"));
-        assert!(csv.lines().next().unwrap().ends_with(",reranks"));
+        assert!(csv.lines().next().unwrap().ends_with(",available"));
     }
 
     #[test]
@@ -217,6 +232,20 @@ mod tests {
         t.push(rec(1, 2.0, 1.0));
         assert_eq!(t.total_reranks(), 3);
         assert!(t.to_json().to_string().contains("\"reranks\":3"));
+    }
+
+    #[test]
+    fn available_column_is_totaled_and_serialized() {
+        let mut t = Trace::new("x");
+        let mut r = rec(0, 1.0, 2.0);
+        r.available = 7;
+        t.push(r);
+        t.push(rec(1, 2.0, 1.0));
+        assert_eq!(t.min_available(), Some(4));
+        assert!(t.to_json().to_string().contains("\"available\":7"));
+        let csv = t.to_csv();
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.ends_with(",7"), "row '{row}' lacks the available column");
     }
 
     #[test]

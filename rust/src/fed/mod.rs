@@ -1,7 +1,8 @@
 //! Federated substrate: heterogeneous client fleet, system-heterogeneity
-//! scenarios (speed models + per-round dynamics + dropout), aggregation
-//! deadline policies, TiFL-style tier scheduling, virtual wall-clock
-//! with round events, and per-round metric traces.
+//! scenarios (speed models + per-round dynamics + dropout + correlated
+//! availability), trace recording/replay, aggregation deadline policies,
+//! TiFL-style tier scheduling, virtual wall-clock with round events, and
+//! per-round metric traces.
 
 pub mod aggregation;
 pub mod client;
@@ -10,6 +11,7 @@ pub mod metrics;
 pub mod speed;
 pub mod system;
 pub mod tiers;
+pub mod traces;
 
 pub use aggregation::{DeadlineController, DeadlinePolicy};
 pub use client::{ClientFleet, DEFAULT_EWMA_ALPHA};
@@ -17,4 +19,7 @@ pub use clock::{RoundEvent, VirtualClock};
 pub use metrics::{RoundRecord, Trace};
 pub use speed::SpeedModel;
 pub use system::{Dynamics, RoundConditions, SpeedEstimator, SystemModel, SystemState};
-pub use tiers::{TierPolicy, TierScheduler};
+pub use tiers::{TierPolicy, TierScheduler, TierSplit};
+pub use traces::{
+    AvailabilityModel, TraceData, TraceMode, TraceRecorder, TraceReplay,
+};

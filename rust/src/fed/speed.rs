@@ -24,13 +24,26 @@ impl SpeedModel {
         SpeedModel::Uniform { lo: 50.0, hi: 500.0 }
     }
 
-    /// Draw T_1..T_N (unsorted).
+    /// Draw T_1..T_N (unsorted). Every model consumes exactly one
+    /// uniform draw per client — including `Homogeneous`, which ignores
+    /// its draw — so the RNG position after the base draw is identical
+    /// for every scenario. Downstream forks (the per-client minibatch
+    /// streams) therefore never depend on the speed model, and a trace
+    /// replay (`fed::traces`) reproduces a recorded run's data streams
+    /// exactly regardless of what base model was recorded.
     pub fn draw(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
         (0..n)
-            .map(|_| match self {
-                SpeedModel::Uniform { lo, hi } => rng.uniform(*lo, *hi),
-                SpeedModel::Exponential { lambda } => rng.exponential(*lambda),
-                SpeedModel::Homogeneous { t } => *t,
+            .map(|_| {
+                let u = rng.next_f64();
+                match self {
+                    // identical to rng.uniform(lo, hi)
+                    SpeedModel::Uniform { lo, hi } => lo + (hi - lo) * u,
+                    // identical to rng.exponential(lambda)
+                    SpeedModel::Exponential { lambda } => {
+                        -(1.0 - u).ln() / lambda
+                    }
+                    SpeedModel::Homogeneous { t } => *t,
+                }
             })
             .collect()
     }

@@ -20,13 +20,17 @@
 //! the base draw bit-for-bit, so the event-driven clock reproduces the
 //! seed's traces exactly (see `tests/system.rs`).
 //!
-//! Scenario specs compose a dropout prefix, a dynamics prefix and a base
-//! speed model (full grammar in `docs/scenarios.md`):
+//! Scenario specs compose an availability prefix
+//! ([`crate::fed::AvailabilityModel`], `fed::traces`), a dropout prefix,
+//! a dynamics prefix and a base speed model — or replay a recorded trace
+//! wholesale (full grammar in `docs/scenarios.md`):
 //!
 //! ```
-//! use flanp::fed::{Dynamics, SystemModel};
+//! use flanp::fed::{AvailabilityModel, Dynamics, SystemModel};
 //!
+//! // [avail:iid:P:|avail:diurnal:PERIOD:DUTY:SPREAD:|avail:cluster:C:PF:PR:]
 //! // [drop:P:][static:|jitter:SIGMA:|markov:F:PS:PR:]BASE
+//! // or: trace:FILE[:wrap|:hold]
 //! let m = SystemModel::parse("drop:0.05:markov:4:0.1:0.5:uniform:50:500").unwrap();
 //! assert_eq!(m.p_drop, 0.05);
 //! assert_eq!(
@@ -37,9 +41,16 @@
 //! assert!(SystemModel::parse("uniform:50:500").unwrap().is_static());
 //! // the canonical spec string roundtrips
 //! assert_eq!(SystemModel::parse(&m.spec()).unwrap(), m);
+//! // availability prefixes compose with every base scenario
+//! let a = SystemModel::parse("avail:diurnal:2000:0.5:1:uniform:50:500").unwrap();
+//! assert!(matches!(a.avail, Some(AvailabilityModel::Diurnal { .. })));
+//! assert_eq!(SystemModel::parse(&a.spec()).unwrap(), a);
 //! ```
 
 use crate::fed::speed::{sort_fastest_first, SpeedModel};
+use crate::fed::traces::{
+    AvailabilityModel, TraceMode, TraceRecorder, TraceReplay,
+};
 use crate::util::Rng;
 
 /// Per-round speed dynamics layered on top of the base draw.
@@ -70,11 +81,27 @@ pub struct SystemModel {
     /// still holds the round open until the deadline (the server waits),
     /// but its update never arrives.
     pub p_drop: f64,
+    /// correlated-availability process (`fed::traces`). Unlike `p_drop`,
+    /// unavailability is OBSERVABLE at selection time: offline clients
+    /// are skipped — never waited for, never charged, never fed to the
+    /// speed estimator. `None` = every client always online.
+    pub avail: Option<AvailabilityModel>,
+    /// trace replay (`trace:FILE[:wrap|:hold]`): when set, realized
+    /// times and availability come verbatim from the recorded trace; the
+    /// other fields must stay at their defaults (a trace is a complete
+    /// scenario on its own).
+    pub trace: Option<TraceReplay>,
 }
 
 impl From<SpeedModel> for SystemModel {
     fn from(base: SpeedModel) -> Self {
-        SystemModel { base, dynamics: Dynamics::Static, p_drop: 0.0 }
+        SystemModel {
+            base,
+            dynamics: Dynamics::Static,
+            p_drop: 0.0,
+            avail: None,
+            trace: None,
+        }
     }
 }
 
@@ -85,21 +112,68 @@ impl SystemModel {
     }
 
     pub fn is_static(&self) -> bool {
-        self.dynamics == Dynamics::Static && self.p_drop == 0.0
+        self.dynamics == Dynamics::Static
+            && self.p_drop == 0.0
+            && self.avail.is_none()
+            && self.trace.is_none()
+    }
+
+    /// Build a trace-replay scenario (the base/dynamics fields are inert
+    /// placeholders: every realized round comes from the trace).
+    pub fn from_trace(replay: TraceReplay) -> Self {
+        SystemModel {
+            base: SpeedModel::Homogeneous { t: 1.0 },
+            dynamics: Dynamics::Static,
+            p_drop: 0.0,
+            avail: None,
+            trace: Some(replay),
+        }
     }
 
     /// Parse a scenario spec. Grammar (prefixes compose, base spec last):
     ///
     /// ```text
+    ///   [avail:iid:P: | avail:diurnal:PERIOD:DUTY:SPREAD: |
+    ///    avail:cluster:C:PF:PR:]
     ///   [drop:P:] [static: | jitter:SIGMA: | markov:F:PS:PR:] BASE
     ///   BASE = uniform:lo:hi | exp:lambda | homog:t
+    ///
+    ///   or, standalone:  trace:FILE[:wrap|:hold]
     /// ```
     ///
     /// Plain base specs (`uniform:50:500`) parse as static scenarios, so
     /// every seed-era `--speed` value keeps working unchanged. Examples:
-    /// `jitter:0.3:uniform:50:500`, `drop:0.05:markov:4:0.1:0.5:exp:0.01`.
+    /// `jitter:0.3:uniform:50:500`, `drop:0.05:markov:4:0.1:0.5:exp:0.01`,
+    /// `avail:diurnal:2000:0.5:1:uniform:50:500`. A `trace:` spec loads
+    /// the CSV eagerly, so parse errors carry the file name and line.
     pub fn parse(spec: &str) -> Result<Self, String> {
         let toks: Vec<&str> = spec.split(':').collect();
+        // trace replay is a complete scenario on its own: the CSV carries
+        // both the realized times and the availability, so no prefix or
+        // base composes with it
+        if toks.first() == Some(&"trace") {
+            let mut rest = &toks[1..];
+            let mode = match rest.last().copied() {
+                Some("wrap") => {
+                    rest = &rest[..rest.len() - 1];
+                    TraceMode::Wrap
+                }
+                Some("hold") => {
+                    rest = &rest[..rest.len() - 1];
+                    TraceMode::Hold
+                }
+                _ => TraceMode::Hold,
+            };
+            let path = rest.join(":");
+            if path.is_empty() {
+                return Err(format!(
+                    "missing trace file in system spec '{spec}'"
+                ));
+            }
+            return Ok(SystemModel::from_trace(TraceReplay::load(
+                &path, mode,
+            )?));
+        }
         let mut i = 0;
         let num = |what: &str, tok: Option<&&str>| -> Result<f64, String> {
             let tok = tok.ok_or_else(|| {
@@ -110,6 +184,13 @@ impl SystemModel {
             })
         };
 
+        let mut avail = None;
+        if toks.get(i) == Some(&"avail") {
+            let (model, used) =
+                AvailabilityModel::parse_tokens(&toks[i + 1..], spec)?;
+            avail = Some(model);
+            i += 1 + used;
+        }
         let mut p_drop = 0.0;
         if toks.get(i) == Some(&"drop") {
             p_drop = num("drop probability", toks.get(i + 1))?;
@@ -157,12 +238,19 @@ impl SystemModel {
             _ => Dynamics::Static,
         };
         let base = SpeedModel::parse(&toks[i..].join(":"))?;
-        Ok(SystemModel { base, dynamics, p_drop })
+        Ok(SystemModel { base, dynamics, p_drop, avail, trace: None })
     }
 
     /// Canonical spec string; `parse(spec()) == self` for every scenario.
     pub fn spec(&self) -> String {
+        if let Some(tr) = &self.trace {
+            return tr.spec();
+        }
         let mut s = String::new();
+        if let Some(a) = &self.avail {
+            s.push_str(&a.spec());
+            s.push(':');
+        }
         if self.p_drop > 0.0 {
             s.push_str(&format!("drop:{}:", self.p_drop));
         }
@@ -179,6 +267,40 @@ impl SystemModel {
 
     /// Structural sanity check (configs can be built without `parse`).
     pub fn validate(&self) -> Result<(), String> {
+        if let Some(tr) = &self.trace {
+            if tr.data.num_rounds() == 0 {
+                return Err(format!("trace '{}' has no rounds", tr.path));
+            }
+            // a hold replay pins past-the-end rounds to the final trace
+            // round forever: if that round has nobody available, every
+            // solver would spin free idle rounds to its budget with the
+            // clock frozen — reject the degenerate fixture up front
+            if tr.mode == TraceMode::Hold {
+                let (_, avail) = tr.data.round(tr.data.num_rounds() - 1);
+                if avail.iter().all(|&a| !a) {
+                    return Err(format!(
+                        "trace '{}' ends with an all-offline round: a hold \
+                         replay would idle forever once past the end \
+                         (replay with :wrap or extend the trace)",
+                        tr.path
+                    ));
+                }
+            }
+            if self.p_drop != 0.0
+                || self.dynamics != Dynamics::Static
+                || self.avail.is_some()
+            {
+                return Err(
+                    "trace replay is a complete scenario: it does not \
+                     compose with drop/dynamics/avail prefixes"
+                        .into(),
+                );
+            }
+            return Ok(());
+        }
+        if let Some(a) = &self.avail {
+            a.validate()?;
+        }
         if !(0.0..1.0).contains(&self.p_drop) {
             return Err(format!("p_drop {} outside [0, 1)", self.p_drop));
         }
@@ -202,6 +324,31 @@ impl SystemModel {
         }
         Ok(())
     }
+
+    /// The oracle base draw `T_i`. Every scenario consumes exactly the
+    /// same RNG budget here (one draw per client — see
+    /// [`SpeedModel::draw`]), so downstream stream positions (the
+    /// per-client minibatch forks) are identical across scenarios;
+    /// trace replays depend on this for bit-identical record→replay.
+    /// Trace scenarios return round 0 of the trace (the recorded
+    /// profiling probe) as the base.
+    pub fn draw_base(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        let drawn = self.base.draw(rng, n);
+        match &self.trace {
+            Some(tr) => {
+                let (times, _) = tr.data.round(0);
+                assert_eq!(
+                    times.len(),
+                    n,
+                    "trace '{}' replays {} clients, fleet has {n}",
+                    tr.path,
+                    times.len()
+                );
+                times.to_vec()
+            }
+            None => drawn,
+        }
+    }
 }
 
 /// One round's realized conditions for EVERY client (indexed by id).
@@ -209,8 +356,28 @@ impl SystemModel {
 pub struct RoundConditions {
     /// realized per-update compute time this round
     pub times: Vec<f64>,
-    /// false when the client drops out of this round
+    /// false when the client silently drops out of this round (the
+    /// `drop:` process): NOT observable at selection time — it holds a
+    /// synchronous round open and its update never arrives
     pub available: Vec<bool>,
+    /// false when the client is offline this round (`avail:` models and
+    /// the trace `available` column): observable at selection time, so
+    /// solvers skip it — it is never waited for, never charged to the
+    /// clock and never fed to the speed estimator
+    pub online: Vec<bool>,
+}
+
+impl RoundConditions {
+    /// Clients of `ids` that are observably online this round.
+    pub fn online_of(&self, ids: &[usize]) -> Vec<usize> {
+        ids.iter().copied().filter(|&i| self.online[i]).collect()
+    }
+
+    /// Fleet-wide count of observably-online clients (the per-round
+    /// `available` trace column).
+    pub fn online_count(&self) -> usize {
+        self.online.iter().filter(|&&o| o).count()
+    }
 }
 
 /// The realized heterogeneity process. Advances once per communication
@@ -223,14 +390,29 @@ pub struct SystemState {
     base: Vec<f64>,
     /// Markov slow-state flags (all clients start fast)
     slow: Vec<bool>,
+    /// per-cluster Markov outage states (`avail:cluster`, else empty)
+    cluster_down: Vec<bool>,
     rng: Rng,
     rounds_realized: usize,
+    /// when set, every realized round (probe included) is appended for
+    /// trace export (`--record-trace`)
+    recorder: Option<TraceRecorder>,
 }
 
 impl SystemState {
     pub fn new(model: SystemModel, base: Vec<f64>, rng: Rng) -> Self {
         let n = base.len();
-        SystemState { model, base, slow: vec![false; n], rng, rounds_realized: 0 }
+        let clusters =
+            model.avail.as_ref().map_or(0, |a| a.num_clusters());
+        SystemState {
+            model,
+            base,
+            slow: vec![false; n],
+            cluster_down: vec![false; clusters],
+            rng,
+            rounds_realized: 0,
+            recorder: None,
+        }
     }
 
     pub fn model(&self) -> &SystemModel {
@@ -245,39 +427,93 @@ impl SystemState {
         self.rounds_realized
     }
 
-    /// Realize the next round. Static scenarios consume no randomness and
-    /// return the base draw unchanged (bit-for-bit seed parity).
+    /// Start recording every realized round (including the construction
+    /// probe) for trace export. Must be enabled BEFORE the probe so a
+    /// replayed trace primes the speed estimator exactly as the recorded
+    /// run did. Idempotent.
+    pub fn enable_recording(&mut self) {
+        if self.recorder.is_none() {
+            self.recorder = Some(TraceRecorder::new(self.base.len()));
+        }
+    }
+
+    /// The recorded trace so far (None unless recording was enabled).
+    pub fn recorder(&self) -> Option<&TraceRecorder> {
+        self.recorder.as_ref()
+    }
+
+    /// Realize the next round at time 0 (scenarios without a time-based
+    /// availability model ignore the timestamp entirely).
     pub fn next_round(&mut self) -> RoundConditions {
+        self.next_round_at(0.0)
+    }
+
+    /// Realize the next round at virtual time `now` (diurnal
+    /// availability windows are time-based; everything else ignores
+    /// `now`). Static scenarios consume no randomness and return the
+    /// base draw unchanged (bit-for-bit seed parity). Trace scenarios
+    /// replay the recorded round verbatim, with the trace's
+    /// availability observable (`online`) and no silent dropout.
+    pub fn next_round_at(&mut self, now: f64) -> RoundConditions {
+        let idx = self.rounds_realized;
         self.rounds_realized += 1;
         let n = self.base.len();
-        let mut times = Vec::with_capacity(n);
-        match self.model.dynamics {
-            Dynamics::Static => times.extend_from_slice(&self.base),
-            Dynamics::Jitter { sigma } => {
-                for i in 0..n {
-                    let factor = (sigma * self.rng.normal()).exp();
-                    times.push(self.base[i] * factor);
-                }
+        let cond = if let Some(tr) = &self.model.trace {
+            let (times, avail) = tr.data.round(tr.round_index(idx));
+            debug_assert_eq!(times.len(), n);
+            RoundConditions {
+                times: times.to_vec(),
+                available: vec![true; n],
+                online: avail.to_vec(),
             }
-            Dynamics::Markov { slow_factor, p_slow, p_recover } => {
-                for i in 0..n {
-                    let u = self.rng.next_f64();
-                    self.slow[i] =
-                        if self.slow[i] { u >= p_recover } else { u < p_slow };
-                    times.push(if self.slow[i] {
-                        self.base[i] * slow_factor
-                    } else {
-                        self.base[i]
-                    });
-                }
-            }
-        }
-        let available = if self.model.p_drop > 0.0 {
-            (0..n).map(|_| self.rng.next_f64() >= self.model.p_drop).collect()
         } else {
-            vec![true; n]
+            let mut times = Vec::with_capacity(n);
+            match self.model.dynamics {
+                Dynamics::Static => times.extend_from_slice(&self.base),
+                Dynamics::Jitter { sigma } => {
+                    for i in 0..n {
+                        let factor = (sigma * self.rng.normal()).exp();
+                        times.push(self.base[i] * factor);
+                    }
+                }
+                Dynamics::Markov { slow_factor, p_slow, p_recover } => {
+                    for i in 0..n {
+                        let u = self.rng.next_f64();
+                        self.slow[i] = if self.slow[i] {
+                            u >= p_recover
+                        } else {
+                            u < p_slow
+                        };
+                        times.push(if self.slow[i] {
+                            self.base[i] * slow_factor
+                        } else {
+                            self.base[i]
+                        });
+                    }
+                }
+            }
+            let available = if self.model.p_drop > 0.0 {
+                (0..n)
+                    .map(|_| self.rng.next_f64() >= self.model.p_drop)
+                    .collect()
+            } else {
+                vec![true; n]
+            };
+            let online = match &self.model.avail {
+                None => vec![true; n],
+                Some(a) => a.realize(
+                    now,
+                    n,
+                    &mut self.cluster_down,
+                    &mut self.rng,
+                ),
+            };
+            RoundConditions { times, available, online }
         };
-        RoundConditions { times, available }
+        if let Some(rec) = &mut self.recorder {
+            rec.record(&cond);
+        }
+        cond
     }
 }
 
@@ -370,6 +606,10 @@ mod tests {
             "drop:0.05:uniform:50:500",
             "drop:0.05:jitter:0.2:homog:100",
             "drop:0.1:markov:2:0.2:0.4:uniform:50:500",
+            "avail:iid:0.6:uniform:50:500",
+            "avail:diurnal:2000:0.5:1:uniform:50:500",
+            "avail:cluster:4:0.1:0.5:exp:0.01",
+            "avail:diurnal:2000:0.25:0.5:drop:0.05:markov:4:0.1:0.5:homog:100",
         ] {
             let m = sys(spec);
             assert_eq!(SystemModel::parse(&m.spec()).unwrap(), m, "spec {spec}");
@@ -387,6 +627,10 @@ mod tests {
             "drop:1.5:homog:10",
             "markov:0.5:0.1:0.1:homog:10", // slow factor < 1
             "warp:9",
+            "avail:weekly:3:uniform:50:500", // unknown availability model
+            "avail:iid:1.5:uniform:50:500",  // probability out of range
+            "avail:diurnal:0:0.5:1:homog:10", // non-positive period
+            "avail:cluster:0:0.1:0.5:homog:10", // zero clusters
         ] {
             let e = SystemModel::parse(bad).unwrap_err();
             assert!(e.contains(bad) || e.contains("speed"), "error '{e}' for '{bad}'");
@@ -394,6 +638,10 @@ mod tests {
         // base-layer errors carry the base spec
         let e = SystemModel::parse("jitter:0.1:uniform:a:500").unwrap_err();
         assert!(e.contains("uniform:a:500"), "{e}");
+        // a missing trace file names the path
+        let e = SystemModel::parse("trace:/no/such/file.csv").unwrap_err();
+        assert!(e.contains("/no/such/file.csv"), "{e}");
+        assert!(SystemModel::parse("trace:").is_err());
     }
 
     #[test]
@@ -475,7 +723,112 @@ mod tests {
             let (ca, cb) = (a.next_round(), b.next_round());
             assert_eq!(ca.times, cb.times);
             assert_eq!(ca.available, cb.available);
+            assert_eq!(ca.online, cb.online);
         }
+    }
+
+    #[test]
+    fn scenarios_without_avail_are_always_online() {
+        let mut st = SystemState::new(
+            sys("drop:0.3:jitter:0.2:uniform:50:500"),
+            vec![100.0, 200.0],
+            Rng::new(5),
+        );
+        for _ in 0..20 {
+            let c = st.next_round();
+            assert!(c.online.iter().all(|&o| o), "dropout leaked into online");
+        }
+    }
+
+    #[test]
+    fn diurnal_online_flags_follow_the_clock_not_the_round() {
+        let mut st = SystemState::new(
+            sys("avail:diurnal:100:0.5:1:homog:10"),
+            vec![10.0; 4],
+            Rng::new(5),
+        );
+        // phases 0, 0.25, 0.5, 0.75 at duty 0.5
+        let c = st.next_round_at(0.0);
+        assert_eq!(c.online, vec![true, true, false, false]);
+        assert_eq!(c.online_count(), 2);
+        assert_eq!(c.online_of(&[0, 2, 3]), vec![0]);
+        let c = st.next_round_at(50.0);
+        assert_eq!(c.online, vec![false, false, true, true]);
+        // dropout stays independent of availability
+        assert!(c.available.iter().all(|&a| a));
+    }
+
+    #[test]
+    fn trace_models_replay_verbatim_and_extend_by_hold() {
+        use crate::fed::traces::{TraceData, TraceMode, TraceReplay};
+        let mut data = TraceData::empty(2);
+        data.push_round(vec![10.0, 20.0], vec![true, true]);
+        data.push_round(vec![11.0, 21.0], vec![true, false]);
+        let model = SystemModel::from_trace(TraceReplay::from_data(
+            "mem",
+            data,
+            TraceMode::Hold,
+        ));
+        assert!(!model.is_static());
+        assert!(model.validate().is_ok());
+        // the base draw is the trace's round 0 (probe) measurement
+        let mut rng = Rng::new(9);
+        assert_eq!(model.draw_base(&mut rng, 2), vec![10.0, 20.0]);
+        let mut st =
+            SystemState::new(model, vec![10.0, 20.0], Rng::new(9));
+        let c0 = st.next_round();
+        assert_eq!(c0.times, vec![10.0, 20.0]);
+        assert_eq!(c0.online, vec![true, true]);
+        let c1 = st.next_round();
+        assert_eq!(c1.times, vec![11.0, 21.0]);
+        assert_eq!(c1.online, vec![true, false]);
+        // trace availability is observable, never a silent dropout
+        assert!(c1.available.iter().all(|&a| a));
+        // past the end, hold repeats the final round
+        let c2 = st.next_round();
+        assert_eq!(c2.times, c1.times);
+        assert_eq!(c2.online, c1.online);
+    }
+
+    #[test]
+    fn hold_replay_rejects_an_all_offline_tail() {
+        use crate::fed::traces::{TraceData, TraceMode, TraceReplay};
+        let mut data = TraceData::empty(2);
+        data.push_round(vec![10.0, 20.0], vec![true, true]);
+        data.push_round(vec![10.0, 20.0], vec![false, false]);
+        let hold = SystemModel::from_trace(TraceReplay::from_data(
+            "mem",
+            data.clone(),
+            TraceMode::Hold,
+        ));
+        let e = hold.validate().unwrap_err();
+        assert!(e.contains("all-offline"), "{e}");
+        // wrap cycles back to the online round: fine
+        let wrap = SystemModel::from_trace(TraceReplay::from_data(
+            "mem",
+            data,
+            TraceMode::Wrap,
+        ));
+        assert!(wrap.validate().is_ok());
+    }
+
+    #[test]
+    fn recording_captures_probe_and_every_round() {
+        let mut st = SystemState::new(
+            sys("markov:4:0.3:0.3:homog:100"),
+            vec![100.0; 3],
+            Rng::new(3),
+        );
+        st.enable_recording();
+        let probe = st.next_round();
+        for _ in 0..5 {
+            st.next_round();
+        }
+        let rec = st.recorder().unwrap();
+        assert_eq!(rec.rounds_recorded(), 6);
+        let (t0, a0) = rec.data().round(0);
+        assert_eq!(t0, &probe.times[..]);
+        assert!(a0.iter().all(|&a| a));
     }
 
     #[test]

@@ -11,9 +11,12 @@
 //! * [`TierPolicy`] — the configuration: how many tiers `K` and the
 //!   hysteresis band `H` that cached membership must be breached by
 //!   before anything is recomputed. Parsed from the CLI with
-//!   [`TierPolicy::parse`] (grammar `tiers:K[:hysteresis:H]`, composing
-//!   with the scenario and deadline grammars of
-//!   [`crate::fed::SystemModel`] / [`crate::fed::DeadlinePolicy`]).
+//!   [`TierPolicy::parse`] (grammar
+//!   `tiers:K[:split:quantile|kmeans][:hysteresis:H]`, composing with
+//!   the scenario and deadline grammars of [`crate::fed::SystemModel`] /
+//!   [`crate::fed::DeadlinePolicy`]). The split clause picks boundary
+//!   placement: equal-rank quantiles (default) or a 1-D k-means that
+//!   adapts to clustered latency distributions ([`TierSplit`]).
 //! * [`TierScheduler`] — the per-run state machine: clusters the fleet
 //!   into `K` equal-rank latency tiers from the online
 //!   [`SpeedEstimator`] (a quantile split of the estimate ranking),
@@ -34,18 +37,25 @@
 //! out of its tier by the very same hysteresis trigger.
 //!
 //! ```
-//! use flanp::fed::TierPolicy;
+//! use flanp::fed::{TierPolicy, TierSplit};
 //!
-//! // spec grammar: tiers:K[:hysteresis:H]
+//! // spec grammar: tiers:K[:split:quantile|kmeans][:hysteresis:H]
 //! let p = TierPolicy::parse("tiers:5").unwrap();
 //! assert_eq!(p.tiers, 5);
 //! assert_eq!(p.hysteresis, flanp::fed::tiers::DEFAULT_HYSTERESIS);
+//! assert_eq!(p.split, TierSplit::Quantile);
 //! let q = TierPolicy::parse("tiers:4:hysteresis:2").unwrap();
 //! assert_eq!(q.hysteresis, 2.0);
+//! // the 1-D k-means split adapts boundaries to clustered latencies
+//! let k = TierPolicy::parse("tiers:3:split:kmeans").unwrap();
+//! assert_eq!(k.split, TierSplit::KMeans);
 //! // every canonical spec re-parses to the same policy
 //! assert_eq!(TierPolicy::parse(&p.spec()).unwrap(), p);
 //! assert_eq!(TierPolicy::parse(&q.spec()).unwrap(), q);
+//! assert_eq!(TierPolicy::parse(&k.spec()).unwrap(), k);
+//! assert_eq!(k.spec(), "tiers:3:split:kmeans");
 //! assert!(TierPolicy::parse("tiers:0").is_err());
+//! assert!(TierPolicy::parse("tiers:3:split:dbscan").is_err());
 //! ```
 
 use crate::fed::speed::sort_fastest_first;
@@ -54,6 +64,20 @@ use crate::fed::system::SpeedEstimator;
 /// Default hysteresis band multiplier: an estimate may drift up to 1.5x
 /// past its tier's frozen band before a re-tier is triggered.
 pub const DEFAULT_HYSTERESIS: f64 = 1.5;
+
+/// How tier boundaries are placed on the estimate ranking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TierSplit {
+    /// Equal-rank quantile split (TiFL's default): tier sizes differ by
+    /// at most one regardless of the latency distribution.
+    #[default]
+    Quantile,
+    /// 1-D k-means (Lloyd's) over the estimates: boundaries settle into
+    /// the gaps of a clustered latency distribution — a fleet of "fast
+    /// datacenter / mid-tier phone / slow straggler" groups tiers along
+    /// those modes instead of splitting a mode down the middle.
+    KMeans,
+}
 
 /// How the fleet is clustered into latency tiers.
 #[derive(Clone, Debug, PartialEq)]
@@ -65,67 +89,97 @@ pub struct TierPolicy {
     /// (demotion) or falls below `1/H x` the frozen lower band
     /// (promotion)
     pub hysteresis: f64,
+    /// where the tier boundaries go (quantile ranks vs 1-D k-means)
+    pub split: TierSplit,
 }
 
 impl TierPolicy {
-    /// A `K`-tier policy with the default hysteresis band.
+    /// A `K`-tier policy with the default hysteresis band and split.
     pub fn new(tiers: usize) -> Self {
-        TierPolicy { tiers, hysteresis: DEFAULT_HYSTERESIS }
+        TierPolicy {
+            tiers,
+            hysteresis: DEFAULT_HYSTERESIS,
+            split: TierSplit::Quantile,
+        }
     }
 
     /// Parse a tier spec. Grammar:
     ///
     /// ```text
-    ///   tiers:K[:hysteresis:H]
+    ///   tiers:K[:split:quantile|kmeans][:hysteresis:H]
     /// ```
     ///
     /// `K` is a positive tier count, `H >= 1` a hysteresis band
-    /// multiplier (default [`DEFAULT_HYSTERESIS`]).
+    /// multiplier (default [`DEFAULT_HYSTERESIS`]); the `split` clause
+    /// selects boundary placement (default `quantile`).
     ///
     /// ```
-    /// use flanp::fed::TierPolicy;
+    /// use flanp::fed::{TierPolicy, TierSplit};
     /// assert_eq!(TierPolicy::parse("tiers:4").unwrap(), TierPolicy::new(4));
+    /// let p = TierPolicy::parse("tiers:4:split:kmeans:hysteresis:2").unwrap();
+    /// assert_eq!((p.split, p.hysteresis), (TierSplit::KMeans, 2.0));
+    /// assert_eq!(TierPolicy::parse(&p.spec()).unwrap(), p);
     /// assert!(TierPolicy::parse("tiers:4:hysteresis:0.5").is_err());
     /// assert!(TierPolicy::parse("tiers").is_err());
     /// ```
     pub fn parse(spec: &str) -> Result<Self, String> {
         let toks: Vec<&str> = spec.split(':').collect();
-        let policy = match toks.as_slice() {
-            ["tiers", k] => {
-                let tiers = k.parse().map_err(|_| {
-                    format!("bad tier count '{k}' in tier spec '{spec}'")
-                })?;
-                TierPolicy::new(tiers)
+        if toks.first() != Some(&"tiers") || toks.len() < 2 {
+            return Err(format!(
+                "unknown tier spec '{spec}' \
+                 (expected tiers:K[:split:quantile|kmeans][:hysteresis:H])"
+            ));
+        }
+        let tiers = toks[1].parse().map_err(|_| {
+            format!("bad tier count '{}' in tier spec '{spec}'", toks[1])
+        })?;
+        let mut policy = TierPolicy::new(tiers);
+        let mut rest = &toks[2..];
+        while !rest.is_empty() {
+            match rest {
+                ["hysteresis", h, tail @ ..] => {
+                    policy.hysteresis = h.parse().map_err(|_| {
+                        format!("bad hysteresis '{h}' in tier spec '{spec}'")
+                    })?;
+                    rest = tail;
+                }
+                ["split", s, tail @ ..] => {
+                    policy.split = match *s {
+                        "quantile" => TierSplit::Quantile,
+                        "kmeans" => TierSplit::KMeans,
+                        other => {
+                            return Err(format!(
+                                "bad split '{other}' in tier spec '{spec}' \
+                                 (expected quantile | kmeans)"
+                            ))
+                        }
+                    };
+                    rest = tail;
+                }
+                _ => {
+                    return Err(format!(
+                        "unknown tier spec '{spec}' (expected \
+                         tiers:K[:split:quantile|kmeans][:hysteresis:H])"
+                    ))
+                }
             }
-            ["tiers", k, "hysteresis", h] => {
-                let tiers = k.parse().map_err(|_| {
-                    format!("bad tier count '{k}' in tier spec '{spec}'")
-                })?;
-                let hysteresis = h.parse().map_err(|_| {
-                    format!("bad hysteresis '{h}' in tier spec '{spec}'")
-                })?;
-                TierPolicy { tiers, hysteresis }
-            }
-            _ => {
-                return Err(format!(
-                    "unknown tier spec '{spec}' \
-                     (expected tiers:K[:hysteresis:H])"
-                ))
-            }
-        };
+        }
         policy.validate().map_err(|e| format!("{e} in tier spec '{spec}'"))?;
         Ok(policy)
     }
 
     /// Canonical spec string; `parse(spec()) == self` for every policy.
-    /// The default hysteresis is omitted, mirroring how
+    /// The default hysteresis and split are omitted, mirroring how
     /// [`crate::fed::SystemModel::spec`] drops the redundant `static:`.
     pub fn spec(&self) -> String {
-        if self.hysteresis == DEFAULT_HYSTERESIS {
-            format!("tiers:{}", self.tiers)
-        } else {
-            format!("tiers:{}:hysteresis:{}", self.tiers, self.hysteresis)
+        let mut s = format!("tiers:{}", self.tiers);
+        if self.split != TierSplit::Quantile {
+            s.push_str(":split:kmeans");
         }
+        if self.hysteresis != DEFAULT_HYSTERESIS {
+            s.push_str(&format!(":hysteresis:{}", self.hysteresis));
+        }
+        s
     }
 
     /// Structural sanity check (configs can be built without `parse`).
@@ -221,13 +275,24 @@ impl TierScheduler {
 
     /// Recompute ranking, membership, boundaries and bands from the
     /// current estimates: a quantile split of the estimate ranking into
-    /// `num_tiers` near-equal rank ranges.
+    /// `num_tiers` near-equal rank ranges, or a 1-D k-means split whose
+    /// boundaries settle into the gaps of a clustered distribution
+    /// ([`TierSplit`]).
     fn tier(&mut self, est: &SpeedEstimator) {
         let ests = est.estimates();
         let n = ests.len();
         let num_tiers = self.policy.tiers.min(n);
         self.order = sort_fastest_first(ests);
-        self.bounds = (1..=num_tiers).map(|k| (k * n).div_ceil(num_tiers)).collect();
+        self.bounds = match self.policy.split {
+            TierSplit::Quantile => {
+                (1..=num_tiers).map(|k| (k * n).div_ceil(num_tiers)).collect()
+            }
+            TierSplit::KMeans => {
+                let sorted: Vec<f64> =
+                    self.order.iter().map(|&c| ests[c]).collect();
+                kmeans_bounds(&sorted, num_tiers)
+            }
+        };
         self.bands.clear();
         let mut start = 0;
         for (tier, &end) in self.bounds.iter().enumerate() {
@@ -306,6 +371,46 @@ impl TierScheduler {
     }
 }
 
+/// 1-D k-means (Lloyd's) over the sorted estimates, returned as the same
+/// exclusive-end rank bounds the quantile split produces. Optimal 1-D
+/// clusters are contiguous in sorted order, so the assignment step
+/// reduces to moving each of the `k - 1` interior boundaries to the
+/// midpoint between the adjacent cluster means. Deterministic:
+/// quantile-split initialization, a fixed iteration cap, and boundaries
+/// clamped so every tier keeps at least one client.
+fn kmeans_bounds(sorted: &[f64], k: usize) -> Vec<usize> {
+    let n = sorted.len();
+    debug_assert!(k >= 1 && k <= n);
+    let mut bounds: Vec<usize> =
+        (1..=k).map(|j| (j * n).div_ceil(k)).collect();
+    for _ in 0..64 {
+        // cluster means from the current boundaries
+        let mut means = Vec::with_capacity(k);
+        let mut start = 0;
+        for &end in &bounds {
+            let m =
+                sorted[start..end].iter().sum::<f64>() / (end - start) as f64;
+            means.push(m);
+            start = end;
+        }
+        // Lloyd assignment in 1-D: each interior boundary moves to the
+        // first rank past the midpoint of the adjacent cluster means
+        let mut next = bounds.clone();
+        for j in 0..k - 1 {
+            let mid = 0.5 * (means[j] + means[j + 1]);
+            let cut = sorted.partition_point(|&v| v <= mid);
+            let lo = if j == 0 { 1 } else { next[j - 1] + 1 };
+            let hi = n - (k - 1 - j);
+            next[j] = cut.clamp(lo, hi);
+        }
+        if next == bounds {
+            break;
+        }
+        bounds = next;
+    }
+    bounds
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -315,7 +420,14 @@ mod tests {
 
     #[test]
     fn parse_roundtrips_every_variant() {
-        for spec in ["tiers:1", "tiers:4", "tiers:4:hysteresis:2", "tiers:8:hysteresis:1.25"] {
+        for spec in [
+            "tiers:1",
+            "tiers:4",
+            "tiers:4:hysteresis:2",
+            "tiers:8:hysteresis:1.25",
+            "tiers:4:split:kmeans",
+            "tiers:3:split:kmeans:hysteresis:2",
+        ] {
             let p = TierPolicy::parse(spec).unwrap();
             assert_eq!(p.spec(), spec);
             assert_eq!(TierPolicy::parse(&p.spec()).unwrap(), p, "{spec}");
@@ -334,6 +446,8 @@ mod tests {
             "tiers:4:hysteresis:0.5", // H < 1
             "tiers:4:hysteresis:y",   // non-numeric H
             "tiers:4:h:2",            // wrong keyword
+            "tiers:4:split",          // missing split kind
+            "tiers:4:split:dbscan",   // unknown split kind
             "layers:4",               // unknown spec
         ] {
             let e = TierPolicy::parse(bad).unwrap_err();
@@ -357,6 +471,55 @@ mod tests {
         let sizes: Vec<usize> = (0..4).map(|t| s.tier_members(t).len()).collect();
         assert_eq!(sizes.iter().sum::<usize>(), 6);
         assert!(sizes.iter().all(|&z| z == 1 || z == 2), "{sizes:?}");
+    }
+
+    #[test]
+    fn kmeans_split_settles_into_latency_gaps() {
+        // clustered fleet, three latency modes: the quantile split cuts
+        // the fast mode down the middle; k-means puts both boundaries in
+        // the gaps between modes
+        let est = SpeedEstimator::new(
+            &[10.0, 11.0, 12.0, 100.0, 101.0, 1000.0],
+            0.25,
+        );
+        let q = TierScheduler::new(TierPolicy::new(3), &est);
+        assert_eq!(q.tier_members(0), &[0, 1], "quantile splits the mode");
+        let mut policy = TierPolicy::new(3);
+        policy.split = TierSplit::KMeans;
+        let s = TierScheduler::new(policy, &est);
+        assert_eq!(s.tier_members(0), &[0, 1, 2]);
+        assert_eq!(s.tier_members(1), &[3, 4]);
+        assert_eq!(s.tier_members(2), &[5]);
+        assert_eq!(s.tier_of(5), 2);
+    }
+
+    #[test]
+    fn kmeans_split_keeps_every_tier_nonempty() {
+        // degenerate fleet: identical estimates collapse every midpoint;
+        // boundary clamping must still leave one client per tier
+        let est = SpeedEstimator::new(&[5.0; 6], 0.25);
+        let mut policy = TierPolicy::new(3);
+        policy.split = TierSplit::KMeans;
+        let s = TierScheduler::new(policy, &est);
+        let sizes: Vec<usize> =
+            (0..3).map(|t| s.tier_members(t).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 6);
+        assert!(sizes.iter().all(|&z| z >= 1), "{sizes:?}");
+    }
+
+    #[test]
+    fn kmeans_matches_quantile_on_evenly_spread_estimates() {
+        let est = SpeedEstimator::new(
+            &[10.0, 20.0, 30.0, 40.0, 50.0, 60.0],
+            0.25,
+        );
+        let q = TierScheduler::new(TierPolicy::new(3), &est);
+        let mut policy = TierPolicy::new(3);
+        policy.split = TierSplit::KMeans;
+        let k = TierScheduler::new(policy, &est);
+        for t in 0..3 {
+            assert_eq!(q.tier_members(t), k.tier_members(t), "tier {t}");
+        }
     }
 
     #[test]
@@ -407,8 +570,8 @@ mod tests {
         // profiling probe primes the estimator, exactly as ClientFleet does
         let probe = state.next_round();
         let mut est = SpeedEstimator::new(&probe.times, 0.25);
-        let mut s =
-            TierScheduler::new(TierPolicy { tiers: 4, hysteresis: 1.5 }, &est);
+        // default policy: hysteresis 1.5, quantile split
+        let mut s = TierScheduler::new(TierPolicy::new(4), &est);
         for _ in 0..300 {
             let cond = state.next_round();
             for (i, &t) in cond.times.iter().enumerate() {
@@ -427,8 +590,8 @@ mod tests {
         // whole episode costs exactly one re-tier event
         let mut est =
             SpeedEstimator::new(&[10.0, 20.0, 30.0, 40.0, 50.0, 60.0], 0.5);
-        let mut s =
-            TierScheduler::new(TierPolicy { tiers: 3, hysteresis: 1.5 }, &est);
+        // default policy: hysteresis 1.5, quantile split
+        let mut s = TierScheduler::new(TierPolicy::new(3), &est);
         assert_eq!(s.tier_of(0), 0);
         let mut retiers = 0;
         for _ in 0..50 {
@@ -449,8 +612,8 @@ mod tests {
         // censored lower bounds, which still climb the estimate past the
         // band and demote it out of its tier
         let mut est = SpeedEstimator::new(&[10.0, 20.0, 30.0, 40.0], 0.5);
-        let mut s =
-            TierScheduler::new(TierPolicy { tiers: 2, hysteresis: 1.5 }, &est);
+        // default policy: hysteresis 1.5, quantile split
+        let mut s = TierScheduler::new(TierPolicy::new(2), &est);
         assert_eq!(s.tier_of(0), 0);
         let mut retiers = 0;
         for _ in 0..20 {

@@ -1,0 +1,806 @@
+//! Trace replay & correlated availability (`fed::traces`).
+//!
+//! Every scenario so far is i.i.d.-synthetic: static / jitter / Markov
+//! speed dynamics and independent per-round dropout. Two things real
+//! federations have that those scenarios cannot express:
+//!
+//! * **Measured traces.** Production FL systems (TiFL, Chai et al.) tune
+//!   against recorded per-client latency traces, not distributions.
+//!   [`TraceData`] is that artifact: a per-client, per-round CSV of
+//!   realized latencies and availability, replayed through the
+//!   `trace:FILE[:wrap|:hold]` scenario spec and exported from ANY run
+//!   by [`TraceRecorder`] — so every synthetic scenario doubles as a
+//!   replayable fixture, and record→replay is bit-identical (see
+//!   `rust/tests/traces.rs`).
+//! * **Correlated availability.** Hard et al. (*Learning from straggler
+//!   clients in federated learning*, 2024) show diurnal cycles and
+//!   clustered outages — clients going offline *together* — can flip
+//!   which algorithm wins. [`AvailabilityModel`] composes an `avail:`
+//!   prefix with every existing base scenario: i.i.d. observable
+//!   availability (the uncorrelated control), phase-staggered diurnal
+//!   on/off windows, and clustered two-state Markov outages.
+//!
+//! Unavailability is **observable at selection time** — the opposite of
+//! the `drop:` process, whose silent dropouts hold a synchronous round
+//! open. The synchronous cohort solvers skip an offline client: it is
+//! never waited for by the clock, never fed to the speed estimator, and
+//! never counted as a dropout (see
+//! `coordinator::solvers::deadline_round`). FedBuff has no round
+//! cohort; its asynchronous attempts simply fail while offline (counted
+//! per-client in `dropped`) and the client re-polls.
+//!
+//! ## Trace CSV schema
+//!
+//! ```text
+//! round,client,time,available
+//! 0,0,110.5,1
+//! 0,1,420.25,0
+//! ...
+//! ```
+//!
+//! Rows are round-major with clients ascending; every round lists every
+//! client. Round 0 is the construction-time profiling probe (the TiFL
+//! tiering measurement that primes the speed estimator), so a replayed
+//! trace primes the estimator exactly as the recorded run did. Parse
+//! errors always carry the source name and 1-based line number.
+
+use crate::fed::system::RoundConditions;
+use crate::util::Rng;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+
+/// The exact header row of the trace CSV schema.
+pub const TRACE_CSV_HEADER: &str = "round,client,time,available";
+
+/// A measured (or recorded) per-client, per-round latency/availability
+/// trace. Construct from CSV via [`TraceData::parse_csv`] /
+/// [`TraceData::load`], or incrementally via [`TraceRecorder`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceData {
+    num_clients: usize,
+    /// `rounds[r] = (times, available)`, each of length `num_clients`
+    rounds: Vec<(Vec<f64>, Vec<bool>)>,
+}
+
+impl TraceData {
+    /// An empty trace over a fixed fleet size (the recorder's seed).
+    pub fn empty(num_clients: usize) -> Self {
+        assert!(num_clients > 0, "trace over an empty fleet");
+        TraceData { num_clients, rounds: Vec::new() }
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.num_clients
+    }
+
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// One round's `(times, available)` rows (panics out of range —
+    /// wrap/hold extension lives in [`TraceReplay::round_index`]).
+    pub fn round(&self, r: usize) -> (&[f64], &[bool]) {
+        let (t, a) = &self.rounds[r];
+        (t, a)
+    }
+
+    /// Append one realized round (lengths must match the fleet).
+    pub fn push_round(&mut self, times: Vec<f64>, available: Vec<bool>) {
+        assert_eq!(times.len(), self.num_clients, "trace round width");
+        assert_eq!(available.len(), self.num_clients, "trace round width");
+        self.rounds.push((times, available));
+    }
+
+    /// Parse the CSV schema above. `source` names the origin (file path
+    /// or label) so every error reads `source:line: message`.
+    pub fn parse_csv(text: &str, source: &str) -> Result<Self, String> {
+        let mut lines = text.lines().enumerate();
+        let header = match lines.next() {
+            Some((_, h)) => h,
+            None => {
+                return Err(format!(
+                    "{source}:1: empty trace (expected header \
+                     '{TRACE_CSV_HEADER}')"
+                ))
+            }
+        };
+        if header.trim() != TRACE_CSV_HEADER {
+            return Err(format!(
+                "{source}:1: bad trace header '{}' (expected \
+                 '{TRACE_CSV_HEADER}')",
+                header.trim()
+            ));
+        }
+        let mut rounds: Vec<(Vec<f64>, Vec<bool>)> = Vec::new();
+        let mut last_line = 1usize;
+        for (idx, line) in lines {
+            let lineno = idx + 1;
+            last_line = lineno;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split(',').collect();
+            if cols.len() != 4 {
+                return Err(format!(
+                    "{source}:{lineno}: expected 4 columns \
+                     '{TRACE_CSV_HEADER}', got {}",
+                    cols.len()
+                ));
+            }
+            let round: usize = cols[0].trim().parse().map_err(|_| {
+                format!("{source}:{lineno}: bad round '{}'", cols[0].trim())
+            })?;
+            let client: usize = cols[1].trim().parse().map_err(|_| {
+                format!("{source}:{lineno}: bad client '{}'", cols[1].trim())
+            })?;
+            let time: f64 = cols[2].trim().parse().map_err(|_| {
+                format!("{source}:{lineno}: bad time '{}'", cols[2].trim())
+            })?;
+            if !(time.is_finite() && time > 0.0) {
+                return Err(format!(
+                    "{source}:{lineno}: time {time} must be finite and \
+                     positive"
+                ));
+            }
+            let available = match cols[3].trim() {
+                "0" => false,
+                "1" => true,
+                other => {
+                    return Err(format!(
+                        "{source}:{lineno}: bad available flag '{other}' \
+                         (expected 0 or 1)"
+                    ))
+                }
+            };
+            // strict round-major, client-ascending ordering: a new round
+            // may only open once the previous one listed every client
+            if round == rounds.len() && client == 0 {
+                if let Some((prev, _)) = rounds.last() {
+                    if prev.len() != rounds[0].0.len() {
+                        return Err(format!(
+                            "{source}:{lineno}: round {} listed {} clients, \
+                             expected {}",
+                            rounds.len() - 1,
+                            prev.len(),
+                            rounds[0].0.len()
+                        ));
+                    }
+                }
+                rounds.push((Vec::new(), Vec::new()));
+            }
+            if round + 1 != rounds.len() {
+                return Err(format!(
+                    "{source}:{lineno}: round {round} out of order \
+                     (expected {})",
+                    rounds.len().saturating_sub(1)
+                ));
+            }
+            let width = rounds[0].0.len();
+            let first_round = rounds.len() == 1;
+            let cur_len = rounds.last().unwrap().0.len();
+            if client != cur_len {
+                return Err(format!(
+                    "{source}:{lineno}: client {client} out of order \
+                     (expected {cur_len})"
+                ));
+            }
+            if !first_round && client >= width {
+                return Err(format!(
+                    "{source}:{lineno}: client {client} exceeds the trace \
+                     width {width}"
+                ));
+            }
+            let last = rounds.last_mut().unwrap();
+            last.0.push(time);
+            last.1.push(available);
+        }
+        if rounds.is_empty() {
+            return Err(format!(
+                "{source}:{last_line}: trace has no rounds"
+            ));
+        }
+        let num_clients = rounds[0].0.len();
+        if let Some((t, _)) = rounds.last() {
+            if t.len() != num_clients {
+                return Err(format!(
+                    "{source}:{last_line}: round {} listed {} clients, \
+                     expected {num_clients}",
+                    rounds.len() - 1,
+                    t.len()
+                ));
+            }
+        }
+        Ok(TraceData { num_clients, rounds })
+    }
+
+    /// Load from a CSV file; errors carry the path (and line, once the
+    /// file is readable).
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            format!("cannot read trace '{}': {e}", path.display())
+        })?;
+        Self::parse_csv(&text, &path.display().to_string())
+    }
+
+    /// Serialize to the CSV schema; `parse_csv(to_csv()) == self` for
+    /// every trace (f64 `Display` round-trips exactly).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(TRACE_CSV_HEADER);
+        s.push('\n');
+        for (r, (times, avails)) in self.rounds.iter().enumerate() {
+            for (c, (t, a)) in times.iter().zip(avails).enumerate() {
+                s.push_str(&format!("{r},{c},{t},{}\n", *a as u8));
+            }
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// What a replay does once the run outlives the trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TraceMode {
+    /// repeat the final round forever (the default)
+    #[default]
+    Hold,
+    /// cycle back to round 0
+    Wrap,
+}
+
+/// A trace wired into the scenario grammar: `trace:FILE[:wrap|:hold]`.
+/// A trace is a complete scenario on its own — it carries both the
+/// realized per-round times and the availability, so no `drop:` /
+/// dynamics / `avail:` prefix composes with it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceReplay {
+    /// display path (or label) used by `spec()` and error messages
+    pub path: String,
+    pub mode: TraceMode,
+    pub data: Arc<TraceData>,
+}
+
+impl TraceReplay {
+    pub fn load(path: &str, mode: TraceMode) -> Result<Self, String> {
+        let data = TraceData::load(Path::new(path))?;
+        Ok(TraceReplay { path: path.to_string(), mode, data: Arc::new(data) })
+    }
+
+    /// Wrap an in-memory trace (record→replay without touching disk).
+    pub fn from_data(label: &str, data: TraceData, mode: TraceMode) -> Self {
+        assert!(data.num_rounds() > 0, "replaying an empty trace");
+        TraceReplay { path: label.to_string(), mode, data: Arc::new(data) }
+    }
+
+    /// Map a realized-round index onto the trace under wrap/hold.
+    pub fn round_index(&self, realized: usize) -> usize {
+        let len = self.data.num_rounds();
+        match self.mode {
+            TraceMode::Wrap => realized % len,
+            TraceMode::Hold => realized.min(len - 1),
+        }
+    }
+
+    /// Canonical spec string (the default `hold` mode is omitted).
+    pub fn spec(&self) -> String {
+        match self.mode {
+            TraceMode::Hold => format!("trace:{}", self.path),
+            TraceMode::Wrap => format!("trace:{}:wrap", self.path),
+        }
+    }
+}
+
+/// Records every realized round of a run (including the construction
+/// probe) into a [`TraceData`], so any scenario becomes a replayable
+/// fixture. Enabled via `ExperimentConfig::record_trace` /
+/// `flanp run --record-trace`; the recorded availability bit is
+/// `online && available` — a replay makes ALL unavailability observable
+/// at selection time, which is exactly what a measured trace gives a
+/// real scheduler. Three caveats bound the bit-identity guarantee:
+/// replaying a `drop:` scenario is not bit-identical (its silent
+/// dropouts become observable); a recorded `avail:diurnal` wait replays
+/// as a free idle tick (the trace does not carry the window schedule);
+/// and ORACLE-ranked runs (`--oracle-ranking`, `fedgate-fastK`) can
+/// diverge under jitter/Markov, because the replayed fleet's base
+/// speeds — and hence its oracle ordering — are the recorded round-0
+/// probe times, not the recorded base draw. The roundtrip IS
+/// bit-identical for estimate-ranked runs (the default) under static,
+/// jitter, markov, avail:iid and avail:cluster scenarios.
+#[derive(Clone, Debug)]
+pub struct TraceRecorder {
+    data: TraceData,
+}
+
+impl TraceRecorder {
+    pub fn new(num_clients: usize) -> Self {
+        TraceRecorder { data: TraceData::empty(num_clients) }
+    }
+
+    /// Append one realized round.
+    pub fn record(&mut self, cond: &RoundConditions) {
+        let available: Vec<bool> = cond
+            .online
+            .iter()
+            .zip(&cond.available)
+            .map(|(&o, &a)| o && a)
+            .collect();
+        self.data.push_round(cond.times.clone(), available);
+    }
+
+    pub fn rounds_recorded(&self) -> usize {
+        self.data.num_rounds()
+    }
+
+    pub fn data(&self) -> &TraceData {
+        &self.data
+    }
+}
+
+/// A correlated-availability process, layered over any base scenario via
+/// the `avail:` spec prefix. Unavailability is observable at selection
+/// time (unlike `drop:`): offline clients are skipped, never charged to
+/// the clock and never fed to the speed estimator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AvailabilityModel {
+    /// `avail:iid:P:` — each client is online i.i.d. with probability
+    /// `P` per round: the *uncorrelated* control every correlated
+    /// scenario is compared against (same marginal availability, zero
+    /// correlation).
+    Iid { p: f64 },
+    /// `avail:diurnal:PERIOD:DUTY:SPREAD:` — deterministic time-based
+    /// on/off windows: client `i` of `n` is online while
+    /// `frac(now/PERIOD + SPREAD * i/n) < DUTY`. `SPREAD = 0` puts the
+    /// whole fleet on one shared window (perfectly correlated outages);
+    /// `SPREAD = 1` staggers phases uniformly (a rotating online
+    /// cohort). `PERIOD` is in virtual-clock units.
+    Diurnal { period: f64, duty: f64, spread: f64 },
+    /// `avail:cluster:C:PF:PR:` — `C` contiguous-id clusters, each with
+    /// its own two-state Markov outage chain (up→down w.p. `PF`,
+    /// down→up w.p. `PR` per round). Co-located clients fail together.
+    Cluster { clusters: usize, p_fail: f64, p_recover: f64 },
+}
+
+impl AvailabilityModel {
+    /// Parse the tokens following the `avail:` keyword; returns the
+    /// model and how many tokens were consumed. `spec` is the full
+    /// system spec, quoted in every error.
+    pub(crate) fn parse_tokens(
+        toks: &[&str],
+        spec: &str,
+    ) -> Result<(Self, usize), String> {
+        let num = |what: &str, tok: Option<&&str>| -> Result<f64, String> {
+            let tok = tok.ok_or_else(|| {
+                format!("missing {what} in system spec '{spec}'")
+            })?;
+            tok.parse().map_err(|_| {
+                format!("bad {what} '{tok}' in system spec '{spec}'")
+            })
+        };
+        let (model, used) = match toks.first().copied() {
+            Some("iid") => (
+                AvailabilityModel::Iid {
+                    p: num("iid availability", toks.get(1))?,
+                },
+                2,
+            ),
+            Some("diurnal") => (
+                AvailabilityModel::Diurnal {
+                    period: num("diurnal period", toks.get(1))?,
+                    duty: num("diurnal duty", toks.get(2))?,
+                    spread: num("diurnal spread", toks.get(3))?,
+                },
+                4,
+            ),
+            Some("cluster") => {
+                let ctok = toks.get(1).ok_or_else(|| {
+                    format!("missing cluster count in system spec '{spec}'")
+                })?;
+                let clusters: usize = ctok.parse().map_err(|_| {
+                    format!(
+                        "bad cluster count '{ctok}' in system spec '{spec}'"
+                    )
+                })?;
+                (
+                    AvailabilityModel::Cluster {
+                        clusters,
+                        p_fail: num("cluster p_fail", toks.get(2))?,
+                        p_recover: num("cluster p_recover", toks.get(3))?,
+                    },
+                    4,
+                )
+            }
+            _ => {
+                return Err(format!(
+                    "unknown availability model after 'avail:' in system \
+                     spec '{spec}' (expected iid:P | \
+                     diurnal:PERIOD:DUTY:SPREAD | cluster:C:PF:PR)"
+                ))
+            }
+        };
+        model
+            .validate()
+            .map_err(|e| format!("{e} in system spec '{spec}'"))?;
+        Ok((model, used))
+    }
+
+    /// Canonical spec fragment (no trailing colon):
+    /// `avail:diurnal:2000:0.5:1` etc.
+    pub fn spec(&self) -> String {
+        match self {
+            AvailabilityModel::Iid { p } => format!("avail:iid:{p}"),
+            AvailabilityModel::Diurnal { period, duty, spread } => {
+                format!("avail:diurnal:{period}:{duty}:{spread}")
+            }
+            AvailabilityModel::Cluster { clusters, p_fail, p_recover } => {
+                format!("avail:cluster:{clusters}:{p_fail}:{p_recover}")
+            }
+        }
+    }
+
+    /// Structural sanity check (configs can be built without `parse`).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            AvailabilityModel::Iid { p } => {
+                if !(p > 0.0 && p <= 1.0) {
+                    return Err(format!(
+                        "iid availability {p} outside (0, 1]"
+                    ));
+                }
+            }
+            AvailabilityModel::Diurnal { period, duty, spread } => {
+                if !(period.is_finite() && period > 0.0) {
+                    return Err(format!(
+                        "diurnal period {period} must be finite and positive"
+                    ));
+                }
+                if !(duty > 0.0 && duty <= 1.0) {
+                    return Err(format!("diurnal duty {duty} outside (0, 1]"));
+                }
+                if !(0.0..=1.0).contains(&spread) {
+                    return Err(format!(
+                        "diurnal spread {spread} outside [0, 1]"
+                    ));
+                }
+            }
+            AvailabilityModel::Cluster { clusters, p_fail, p_recover } => {
+                if clusters == 0 {
+                    return Err("cluster count must be positive".into());
+                }
+                for (name, p) in
+                    [("p_fail", p_fail), ("p_recover", p_recover)]
+                {
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!(
+                            "cluster {name} {p} outside [0, 1]"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Markov states needed by the cluster variant (0 otherwise).
+    pub(crate) fn num_clusters(&self) -> usize {
+        match self {
+            AvailabilityModel::Cluster { clusters, .. } => *clusters,
+            _ => 0,
+        }
+    }
+
+    fn phase(spread: f64, i: usize, n: usize) -> f64 {
+        spread * i as f64 / n as f64
+    }
+
+    /// Contiguous-id cluster assignment (co-located clients adjacent).
+    pub(crate) fn cluster_of(i: usize, n: usize, clusters: usize) -> usize {
+        (i * clusters / n).min(clusters - 1)
+    }
+
+    /// Realize one round's online flags for `n` clients at virtual time
+    /// `now`. `cluster_down` holds the per-cluster Markov states across
+    /// rounds; only the cluster (and iid) variants consume randomness.
+    pub(crate) fn realize(
+        &self,
+        now: f64,
+        n: usize,
+        cluster_down: &mut [bool],
+        rng: &mut Rng,
+    ) -> Vec<bool> {
+        match self {
+            AvailabilityModel::Iid { p } => {
+                (0..n).map(|_| rng.next_f64() < *p).collect()
+            }
+            AvailabilityModel::Diurnal { period, duty, spread } => (0..n)
+                .map(|i| {
+                    (now / period + Self::phase(*spread, i, n)).fract() < *duty
+                })
+                .collect(),
+            AvailabilityModel::Cluster { clusters, p_fail, p_recover } => {
+                for down in cluster_down.iter_mut() {
+                    let u = rng.next_f64();
+                    *down = if *down { u >= *p_recover } else { u < *p_fail };
+                }
+                (0..n)
+                    .map(|i| !cluster_down[Self::cluster_of(i, n, *clusters)])
+                    .collect()
+            }
+        }
+    }
+
+    /// When every member of `cohort` is offline: the next virtual time
+    /// at which one of them comes back online, if the model knows it.
+    /// Diurnal windows are deterministic, so the clock can jump straight
+    /// to the cohort's next window; stochastic outages (iid / cluster)
+    /// return `None` — the round becomes an idle tick and the next
+    /// realization retries.
+    pub fn next_online_time(
+        &self,
+        now: f64,
+        cohort: &[usize],
+        n: usize,
+    ) -> Option<f64> {
+        match self {
+            AvailabilityModel::Diurnal { period, spread, .. } => {
+                let mut wake = f64::INFINITY;
+                for &i in cohort {
+                    let x =
+                        (now / period + Self::phase(*spread, i, n)).fract();
+                    // client i's window reopens when its phase wraps to 0
+                    wake = wake.min(now + (1.0 - x) * period);
+                }
+                if wake.is_finite() {
+                    // nudge past the boundary so the realization at the
+                    // wake time is unambiguously inside the window
+                    Some(wake + period * 1e-6)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_trace() -> TraceData {
+        let mut t = TraceData::empty(3);
+        t.push_round(vec![10.0, 20.5, 30.0], vec![true, true, true]);
+        t.push_round(vec![11.0, 21.0, 31.25], vec![true, false, true]);
+        t
+    }
+
+    #[test]
+    fn csv_roundtrips_bit_for_bit() {
+        let t = small_trace();
+        let csv = t.to_csv();
+        assert!(csv.starts_with(TRACE_CSV_HEADER));
+        let parsed = TraceData::parse_csv(&csv, "mem").unwrap();
+        assert_eq!(parsed, t);
+        // and a second serialize is byte-identical
+        assert_eq!(parsed.to_csv(), csv);
+    }
+
+    #[test]
+    fn parse_errors_carry_source_and_line() {
+        let cases: Vec<(&str, &str)> = vec![
+            ("", "t.csv:1:"),
+            ("round,client,latency,avail\n", "t.csv:1:"),
+            // bad time on line 3
+            ("round,client,time,available\n0,0,10,1\n0,1,x,1\n", "t.csv:3:"),
+            // non-positive time
+            ("round,client,time,available\n0,0,-5,1\n", "t.csv:2:"),
+            // bad availability flag
+            ("round,client,time,available\n0,0,10,yes\n", "t.csv:2:"),
+            // wrong column count
+            ("round,client,time,available\n0,0,10\n", "t.csv:2:"),
+            // client out of order
+            ("round,client,time,available\n0,1,10,1\n", "t.csv:2:"),
+            // round out of order
+            ("round,client,time,available\n0,0,10,1\n2,0,10,1\n", "t.csv:3:"),
+            // header only: no rounds
+            ("round,client,time,available\n", "t.csv:1:"),
+            // ragged final round
+            (
+                "round,client,time,available\n0,0,10,1\n0,1,20,1\n1,0,10,1\n",
+                "t.csv:4:",
+            ),
+        ];
+        for (text, want) in cases {
+            let e = TraceData::parse_csv(text, "t.csv").unwrap_err();
+            assert!(
+                e.starts_with(want),
+                "error '{e}' does not start with '{want}'"
+            );
+        }
+    }
+
+    #[test]
+    fn wrap_and_hold_extend_the_trace() {
+        let t = small_trace();
+        let hold = TraceReplay::from_data("mem", t.clone(), TraceMode::Hold);
+        let wrap = TraceReplay::from_data("mem", t, TraceMode::Wrap);
+        assert_eq!(hold.round_index(0), 0);
+        assert_eq!(hold.round_index(1), 1);
+        assert_eq!(hold.round_index(7), 1, "hold repeats the last round");
+        assert_eq!(wrap.round_index(7), 1);
+        assert_eq!(wrap.round_index(8), 0, "wrap cycles back to round 0");
+        // canonical specs: hold (the default) is omitted
+        assert_eq!(hold.spec(), "trace:mem");
+        assert_eq!(wrap.spec(), "trace:mem:wrap");
+    }
+
+    #[test]
+    fn recorder_roundtrips_through_csv() {
+        let mut rec = TraceRecorder::new(2);
+        rec.record(&RoundConditions {
+            times: vec![5.0, 7.5],
+            available: vec![true, true],
+            online: vec![true, false],
+        });
+        rec.record(&RoundConditions {
+            times: vec![5.5, 7.0],
+            available: vec![false, true],
+            online: vec![true, true],
+        });
+        assert_eq!(rec.rounds_recorded(), 2);
+        // recorded availability merges dropout and offline
+        let (_, a0) = rec.data().round(0);
+        assert_eq!(a0, &[true, false]);
+        let (_, a1) = rec.data().round(1);
+        assert_eq!(a1, &[false, true]);
+        let parsed =
+            TraceData::parse_csv(&rec.data().to_csv(), "mem").unwrap();
+        assert_eq!(&parsed, rec.data());
+    }
+
+    #[test]
+    fn diurnal_windows_are_deterministic_and_phase_staggered() {
+        let m = AvailabilityModel::Diurnal {
+            period: 100.0,
+            duty: 0.5,
+            spread: 1.0,
+        };
+        let mut down = Vec::new();
+        let mut rng = Rng::new(1);
+        // 4 clients, phases 0, 0.25, 0.5, 0.75: at t = 0 clients 0 and 1
+        // are inside their windows (0 and 0.25 < 0.5), 2 and 3 are not
+        let on = m.realize(0.0, 4, &mut down, &mut rng);
+        assert_eq!(on, vec![true, true, false, false]);
+        // half a period later the window has rotated
+        let on = m.realize(50.0, 4, &mut down, &mut rng);
+        assert_eq!(on, vec![false, false, true, true]);
+        // deterministic: no randomness consumed
+        let mut rng2 = Rng::new(1);
+        assert_eq!(rng.next_u64(), rng2.next_u64());
+    }
+
+    #[test]
+    fn diurnal_spread_zero_is_one_shared_window() {
+        let m = AvailabilityModel::Diurnal {
+            period: 10.0,
+            duty: 0.3,
+            spread: 0.0,
+        };
+        let mut down = Vec::new();
+        let mut rng = Rng::new(2);
+        for step in 0..30 {
+            let now = step as f64;
+            let on = m.realize(now, 8, &mut down, &mut rng);
+            assert!(
+                on.iter().all(|&o| o == on[0]),
+                "spread 0 must switch the whole fleet together"
+            );
+        }
+    }
+
+    #[test]
+    fn diurnal_next_online_time_lands_inside_the_window() {
+        let m = AvailabilityModel::Diurnal {
+            period: 100.0,
+            duty: 0.25,
+            spread: 1.0,
+        };
+        let mut down = Vec::new();
+        let mut rng = Rng::new(3);
+        // at t = 30, client 0 (phase 0) is offline (0.30 >= 0.25)
+        let on = m.realize(30.0, 4, &mut down, &mut rng);
+        assert!(!on[0]);
+        let wake = m.next_online_time(30.0, &[0], 4).unwrap();
+        assert!(wake > 30.0);
+        let on = m.realize(wake, 4, &mut down, &mut rng);
+        assert!(on[0], "client 0 still offline at its wake time {wake}");
+        // stochastic models advertise no wake time
+        let iid = AvailabilityModel::Iid { p: 0.5 };
+        assert_eq!(iid.next_online_time(30.0, &[0], 4), None);
+    }
+
+    #[test]
+    fn cluster_members_fail_together() {
+        let m = AvailabilityModel::Cluster {
+            clusters: 2,
+            p_fail: 0.4,
+            p_recover: 0.4,
+        };
+        let mut down = vec![false; 2];
+        let mut rng = Rng::new(7);
+        let mut saw_outage = false;
+        for _ in 0..100 {
+            let on = m.realize(0.0, 8, &mut down, &mut rng);
+            // contiguous halves share one state each
+            assert!(on[..4].iter().all(|&o| o == on[0]));
+            assert!(on[4..].iter().all(|&o| o == on[4]));
+            saw_outage |= !on[0] || !on[4];
+        }
+        assert!(saw_outage, "no cluster outage in 100 rounds at p = 0.4");
+    }
+
+    #[test]
+    fn iid_availability_matches_probability() {
+        let m = AvailabilityModel::Iid { p: 0.7 };
+        let mut down = Vec::new();
+        let mut rng = Rng::new(11);
+        let mut online = 0usize;
+        let rounds = 200;
+        for _ in 0..rounds {
+            let on = m.realize(0.0, 50, &mut down, &mut rng);
+            online += on.iter().filter(|&&o| o).count();
+        }
+        let rate = online as f64 / (rounds * 50) as f64;
+        assert!((rate - 0.7).abs() < 0.02, "iid online rate {rate}");
+    }
+
+    #[test]
+    fn availability_validation_rejects_bad_parameters() {
+        assert!(AvailabilityModel::Iid { p: 0.0 }.validate().is_err());
+        assert!(AvailabilityModel::Iid { p: 1.0 }.validate().is_ok());
+        assert!(AvailabilityModel::Diurnal {
+            period: 0.0,
+            duty: 0.5,
+            spread: 0.5
+        }
+        .validate()
+        .is_err());
+        assert!(AvailabilityModel::Diurnal {
+            period: 100.0,
+            duty: 0.5,
+            spread: 1.5
+        }
+        .validate()
+        .is_err());
+        assert!(AvailabilityModel::Cluster {
+            clusters: 0,
+            p_fail: 0.1,
+            p_recover: 0.5
+        }
+        .validate()
+        .is_err());
+        assert!(AvailabilityModel::Cluster {
+            clusters: 4,
+            p_fail: 1.5,
+            p_recover: 0.5
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn cluster_assignment_is_contiguous_and_total() {
+        for (n, c) in [(8, 2), (7, 3), (3, 5), (16, 4)] {
+            let mut prev = 0usize;
+            for i in 0..n {
+                let k = AvailabilityModel::cluster_of(i, n, c);
+                assert!(k < c, "cluster {k} out of range for C = {c}");
+                assert!(k >= prev, "cluster ids must be non-decreasing");
+                prev = k;
+            }
+        }
+    }
+}

@@ -38,8 +38,20 @@ OPTIONS (run):
   --tau T           local updates per round            [artifact tau]
   --mu F --c F      statistical-accuracy constants     [0.01, 1.0]
   --speed SPEC      system-heterogeneity scenario      [uniform:50:500]
-                    grammar: [drop:P:][static:|jitter:SIGMA:|markov:F:PS:PR:]BASE
-                    prefixes (composable, dropout first):
+                    grammar:
+                      [avail:...:][drop:P:][static:|jitter:SIGMA:|markov:F:PS:PR:]BASE
+                      or standalone: trace:FILE[:wrap|:hold]
+                    prefixes (composable, availability first, dropout next):
+                      avail:iid:P:       each client online i.i.d. w.p. P per
+                                         round (the uncorrelated control)
+                      avail:diurnal:PERIOD:DUTY:SPREAD:
+                                         time-based on/off windows: online
+                                         while frac(now/PERIOD + SPREAD*i/n)
+                                         < DUTY (SPREAD 0 = one shared
+                                         window, 1 = rotating cohort)
+                      avail:cluster:C:PF:PR:
+                                         C co-located clusters share Markov
+                                         outages (up->down PF, down->up PR)
                       drop:P:            P in [0,1): per-round client dropout
                       static:            no per-round dynamics (default)
                       jitter:SIGMA:      log-normal per-round speed jitter
@@ -47,8 +59,14 @@ OPTIONS (run):
                                          base, fast->slow PS, slow->fast PR)
                     BASE = uniform:lo:hi | exp:lambda | homog:t
                     e.g. jitter:0.3:uniform:50:500 (per-round log-normal
-                    jitter), markov:4:0.1:0.5:exp:0.004 (fast/slow Markov
-                    drift), drop:0.05:uniform:50:500 (5% round dropouts)
+                    jitter), avail:diurnal:40000:0.25:1:uniform:50:500
+                    (rotating diurnal windows), drop:0.05:uniform:50:500
+                    (5% round dropouts). Offline (avail:/trace:) clients
+                    are observable at selection time: skipped, never
+                    charged — unlike drop: dropouts, which hold the round
+                    open. trace:FILE replays a recorded per-round CSV
+                    (wrap cycles, hold repeats the last round; see
+                    --record-trace)
   --deadline SPEC   aggregation deadline policy        [sync]
                     sync           wait for the slowest cohort member
                     fixed:T        aggregate whatever arrived by round
@@ -59,13 +77,16 @@ OPTIONS (run):
                                    fraction F in (0,1]
                     (applies to flanp | flanp-heuristic | fedgate | tifl)
   --tiers SPEC      TiFL tier scheduling               [off]
-                    tiers:K[:hysteresis:H]  cluster clients into K latency
-                    tiers from the online speed estimates; membership is
-                    cached and re-tiered only when an estimate drifts past
-                    H x its tier's band (H >= 1, default 1.5). FLANP stage
-                    sizes snap to tier boundaries; required by the tifl
-                    solver. Re-tier events land in the trace's reranks
-                    column.
+                    tiers:K[:split:quantile|kmeans][:hysteresis:H]
+                    cluster clients into K latency tiers from the online
+                    speed estimates; membership is cached and re-tiered
+                    only when an estimate drifts past H x its tier's band
+                    (H >= 1, default 1.5). split:kmeans places boundaries
+                    by 1-D k-means (gaps of a clustered latency
+                    distribution) instead of equal-rank quantiles. FLANP
+                    stage sizes snap to tier boundaries; required by the
+                    tifl solver. Re-tier events land in the trace's
+                    reranks column.
   --ewma F          EWMA alpha of the online speed estimator [0.25]
   --oracle-ranking  rank FLANP prefixes by oracle speeds instead of the
                     online estimates
@@ -77,6 +98,9 @@ OPTIONS (run):
   --max-rounds R    round budget                       [400]
   --eval-rows N     rows for full-objective eval (0=all) [2000]
   --trace PATH      write per-round CSV trace
+  --record-trace P  record the realized per-client latency/availability
+                    trace (round 0 = the profiling probe) and write it to
+                    P — replayable via --speed trace:P
   --noise F         linreg label noise                 [0.1]
   --separation F    mixture class separation (classification data)
   --quiet           suppress the configuration line
@@ -160,6 +184,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     let eval_rows =
         args.flag_usize("eval-rows", 2000).map_err(|e| anyhow::anyhow!(e))?;
     let trace_path = args.flag_opt("trace");
+    let record_trace = args.flag_opt("record-trace");
     let noise = args.flag_f64("noise", 0.1).map_err(|e| anyhow::anyhow!(e))?;
     let separation =
         args.flag_f64("separation", 0.0).map_err(|e| anyhow::anyhow!(e))?;
@@ -185,6 +210,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     cfg.seed = seed;
     cfg.max_rounds = max_rounds;
     cfg.eval_rows = eval_rows;
+    cfg.record_trace = record_trace.is_some();
     // validate before the fleet is built: bad flags (e.g. --ewma 0) must
     // surface as config errors, not construction-time assertions
     cfg.validate(meta.batch).map_err(|e| anyhow::anyhow!(e))?;
@@ -235,6 +261,14 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     if let Some(p) = trace_path {
         trace.write_csv(Path::new(&p))?;
         println!("trace written to {p}");
+    }
+    if let Some(p) = record_trace {
+        fleet
+            .write_recorded_trace(Path::new(&p))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "realized system trace written to {p} (replay with --speed trace:{p})"
+        );
     }
     Ok(())
 }

@@ -108,11 +108,12 @@ pub fn build_fleet(
     };
     let shards =
         shard::partition_fixed_s(&mut rng, &dataset, cfg.num_clients, cfg.s);
-    let mut fleet = ClientFleet::with_alpha(
+    let mut fleet = ClientFleet::with_options(
         dataset,
         shards,
         &cfg.system,
         cfg.ewma_alpha,
+        cfg.record_trace,
         &mut rng,
     );
     if let Some(policy) = &cfg.tiers {

@@ -254,3 +254,39 @@ fn deadline_policy_flows_through_config_validation() {
     cfg.deadline = DeadlinePolicy::parse("fixed:1000").unwrap();
     assert!(cfg.validate(10).is_err());
 }
+
+#[test]
+fn infinite_deadline_is_sync_for_the_averaging_solvers_too() {
+    // ROADMAP follow-on from PR 3 (this PR's satellite): FedAvg, FedProx
+    // and FedNova now route through the shared deadline_round step;
+    // deadline = +inf must reproduce their synchronous rounds
+    // bit-for-bit, exactly as it does for FLANP/FedGATE
+    for solver in
+        [SolverKind::FedAvg, SolverKind::FedProx, SolverKind::FedNova]
+    {
+        let mut sync = base_cfg(solver, 10, 50);
+        sync.max_rounds = 300;
+        let mut inf = sync.clone();
+        inf.deadline = DeadlinePolicy::Fixed { t: f64::INFINITY };
+        assert_traces_identical(&run(&sync), &run(&inf));
+    }
+}
+
+#[test]
+fn quantile_deadline_prunes_stragglers_for_fedavg() {
+    // the deadline policies now apply to the averaging solvers: under
+    // Markov stragglers a quantile deadline cuts slow-state clients
+    // (missed > 0) while the model still descends
+    let system =
+        SystemModel::parse("markov:6:0.15:0.4:uniform:50:500").unwrap();
+    let mut sync_cfg = base_cfg(SolverKind::FedAvg, 12, 50);
+    sync_cfg.system = system;
+    sync_cfg.max_rounds = 300;
+    let mut q = sync_cfg.clone();
+    q.deadline = DeadlinePolicy::Quantile { q: 0.8 };
+    let (t_sync, t_q) = (run(&sync_cfg), run(&q));
+    let missed: usize = t_q.rounds.iter().map(|r| r.missed).sum();
+    assert!(missed > 0, "quantile deadline never cut a straggler");
+    assert!(t_sync.rounds.iter().all(|r| r.missed == 0));
+    assert!(t_q.last().unwrap().loss_full < t_q.rounds[0].loss_full);
+}
