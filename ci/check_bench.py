@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Gate CI on bench regressions.
+
+Usage: check_bench.py <run.json> <baseline.json>
+
+Compares a fresh `flanp-bench/v1` run (written by `cargo bench`, see
+docs/perf.md for the schema) against the checked-in baseline
+`ci/bench_baseline.json`. A bench regresses when its `min_ns` exceeds
+the baseline's by more than the baseline's `tolerance` factor (default
+1.25 = 25%). `min_ns` is used rather than `mean_ns` because the minimum
+is far less sensitive to CI-runner noise.
+
+Baseline entries with a null value are *pending*: they have never been
+populated from a CI run and are skipped (printed, not failed). This is
+how the baseline bootstraps — the first green CI run's artifact is
+copied into ci/bench_baseline.json by hand.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    run_path, base_path = sys.argv[1], sys.argv[2]
+    with open(run_path) as f:
+        run = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+
+    if run.get("schema") != "flanp-bench/v1":
+        print(f"FAIL: {run_path} schema is {run.get('schema')!r}, "
+              "expected 'flanp-bench/v1'")
+        return 1
+
+    tolerance = float(base.get("tolerance", 1.25))
+    benches = run.get("benches", {})
+    failures = []
+    checked = skipped = 0
+    for name, want in sorted(base.get("benches", {}).items()):
+        if want is None or want.get("min_ns") is None:
+            print(f"  pending  {name} (no baseline yet)")
+            skipped += 1
+            continue
+        got = benches.get(name)
+        if got is None:
+            failures.append(f"{name}: present in baseline but missing "
+                            f"from the run")
+            continue
+        want_ns, got_ns = float(want["min_ns"]), float(got["min_ns"])
+        ratio = got_ns / want_ns if want_ns > 0 else float("inf")
+        status = "ok" if ratio <= tolerance else "REGRESSED"
+        print(f"  {status:<9} {name}: {got_ns:.0f} ns vs baseline "
+              f"{want_ns:.0f} ns ({ratio:.2f}x, limit {tolerance:.2f}x)")
+        checked += 1
+        if ratio > tolerance:
+            failures.append(f"{name}: {ratio:.2f}x > {tolerance:.2f}x")
+
+    print(f"checked {checked}, pending {skipped}, failed {len(failures)}")
+    if failures:
+        print("FAIL:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,45 +1,106 @@
 //! Hot-path microbenchmarks (custom harness — criterion is unavailable
-//! offline). Run with `cargo bench`. Results feed EXPERIMENTS.md §Perf.
+//! offline). Run with `cargo bench`. Results feed EXPERIMENTS.md §Perf
+//! and docs/perf.md.
 //!
 //! Covered paths:
 //!   * engine primitives: loss / grad / gate_step / fused gate_round,
 //!     native vs HLO (PJRT), per model of the full catalog;
 //!   * the fused-round vs per-step dispatch tradeoff (the L3 perf lever);
 //!   * a full FedGATE communication round (the end-to-end unit of work);
-//!   * server-side aggregation at N=1000 clients.
+//!   * server-side aggregation at N=1000 clients;
+//!   * naive-vs-blocked kernel ablation on the native engine (PR 6).
+//!
+//! Besides the human-readable table, the harness writes a
+//! machine-readable summary (`BENCH_6.json`, schema `flanp-bench/v1` —
+//! see docs/perf.md) so CI can diff runs against a checked-in baseline.
+//!
+//! Environment knobs:
+//!   * `FLANP_BENCH_ITERS=<n>` pins every bench to exactly `n` timed
+//!     iterations (after one warmup), bypassing the adaptive ~0.3 s
+//!     calibration — use this in CI for reproducible iteration counts.
+//!   * `FLANP_BENCH_OUT=<path>` overrides the JSON output path
+//!     (default `BENCH_6.json` in the current directory).
 
 use flanp::coordinator::gate::{fedgate_round, GateState, RoundBuffers};
 use flanp::coordinator::{ExperimentConfig, SolverKind};
-use flanp::engine::Engine;
+use flanp::engine::{kernels, Engine};
 use flanp::fed::ClientFleet;
 use flanp::setup;
+use flanp::util::json::{obj, Json};
 use flanp::util::{linalg, Rng};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-/// Time `f` adaptively: warm up, then run enough iterations for ~0.3 s.
-fn bench<F: FnMut()>(name: &str, mut f: F) {
+/// Schema tag written into the JSON summary; bump on layout changes.
+const SCHEMA: &str = "flanp-bench/v1";
+
+#[derive(Clone, Copy)]
+struct BenchResult {
+    mean_ns: f64,
+    min_ns: f64,
+    iters: usize,
+}
+
+/// Collected results, keyed by bench name (insertion order preserved in
+/// the table; JSON objects are sorted by the writer).
+#[derive(Default)]
+struct Recorder {
+    benches: BTreeMap<String, BenchResult>,
+    ablation: BTreeMap<String, Json>,
+}
+
+fn pinned_iters() -> Option<usize> {
+    std::env::var("FLANP_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+}
+
+/// Time `f`: one warmup call, then either the pinned iteration count
+/// (`FLANP_BENCH_ITERS`) or enough iterations for ~0.3 s. Each timed
+/// iteration is measured individually so both the mean and the min
+/// per-iter time are reported (min is the steadier statistic under CI
+/// noise; the ~30 ns `Instant::now` overhead per iter is negligible at
+/// the µs+ scale of these benches).
+fn bench<F: FnMut()>(rec: &mut Recorder, name: &str, mut f: F) -> BenchResult {
     f(); // warmup + correctness
-    let t0 = Instant::now();
-    let mut iters = 0u32;
-    while t0.elapsed().as_secs_f64() < 0.05 {
+    let iters = pinned_iters().unwrap_or_else(|| {
+        let t0 = Instant::now();
+        let mut probe = 0u32;
+        while t0.elapsed().as_secs_f64() < 0.05 {
+            f();
+            probe += 1;
+        }
+        let per = t0.elapsed().as_secs_f64() / probe as f64;
+        ((0.3 / per) as usize).clamp(3, 10_000)
+    });
+    let mut total_ns = 0.0f64;
+    let mut min_ns = f64::INFINITY;
+    for _ in 0..iters {
+        let t = Instant::now();
         f();
-        iters += 1;
+        let ns = t.elapsed().as_secs_f64() * 1e9;
+        total_ns += ns;
+        min_ns = min_ns.min(ns);
     }
-    let per = t0.elapsed().as_secs_f64() / iters as f64;
-    let target_iters = ((0.3 / per) as u32).clamp(3, 10_000);
-    let t1 = Instant::now();
-    for _ in 0..target_iters {
-        f();
-    }
-    let per = t1.elapsed().as_secs_f64() / target_iters as f64;
-    let (val, unit) = if per >= 1.0 {
-        (per, "s ")
-    } else if per >= 1e-3 {
-        (per * 1e3, "ms")
+    let res = BenchResult { mean_ns: total_ns / iters as f64, min_ns, iters };
+    let (m, mu) = humanize(res.mean_ns);
+    let (n, nu) = humanize(res.min_ns);
+    println!(
+        "{name:<58} mean {m:>8.3} {mu}  min {n:>8.3} {nu}  ({iters} iters)"
+    );
+    rec.benches.insert(name.to_string(), res);
+    res
+}
+
+fn humanize(ns: f64) -> (f64, &'static str) {
+    if ns >= 1e9 {
+        (ns / 1e9, "s ")
+    } else if ns >= 1e6 {
+        (ns / 1e6, "ms")
     } else {
-        (per * 1e6, "us")
-    };
-    println!("{name:<58} {val:>9.3} {unit}/iter  ({target_iters} iters)");
+        (ns / 1e3, "us")
+    }
 }
 
 fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -48,7 +109,7 @@ fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
     v
 }
 
-fn engine_suite(engine: &dyn Engine, label: &str) {
+fn engine_suite(rec: &mut Recorder, engine: &dyn Engine, label: &str) {
     let meta = engine.meta().clone();
     let mut rng = Rng::new(9);
     let params = rand_vec(&mut rng, meta.param_count);
@@ -58,20 +119,20 @@ fn engine_suite(engine: &dyn Engine, label: &str) {
     let xs = rand_vec(&mut rng, meta.tau * meta.batch * meta.d);
     let ys = onehot_or_real(&mut rng, &meta, meta.tau);
 
-    bench(&format!("{label}/loss"), || {
+    bench(rec, &format!("{label}/loss"), || {
         engine.loss(&params, &x, &y).unwrap();
     });
-    bench(&format!("{label}/loss_grad"), || {
+    bench(rec, &format!("{label}/loss_grad"), || {
         engine.loss_grad(&params, &x, &y).unwrap();
     });
-    bench(&format!("{label}/gate_step"), || {
+    bench(rec, &format!("{label}/gate_step"), || {
         engine.gate_step(&params, &delta, &x, &y, 0.05).unwrap();
     });
-    bench(&format!("{label}/gate_round[fused tau={}]", meta.tau), || {
+    bench(rec, &format!("{label}/gate_round[fused tau={}]", meta.tau), || {
         engine.gate_round(&params, &delta, &xs, &ys, 0.05).unwrap();
     });
     // per-step equivalent of the fused round: the dispatch-overhead probe
-    bench(&format!("{label}/gate_round[{} x gate_step]", meta.tau), || {
+    bench(rec, &format!("{label}/gate_round[{} x gate_step]", meta.tau), || {
         let mut w = params.clone();
         for t in 0..meta.tau {
             let xi = &xs[t * meta.batch * meta.d..(t + 1) * meta.batch * meta.d];
@@ -95,7 +156,63 @@ fn onehot_or_real(rng: &mut Rng, meta: &flanp::engine::ModelMeta, tau: usize) ->
     }
 }
 
-fn fedgate_round_bench(engine: &dyn Engine, label: &str, n_clients: usize, s: usize) {
+/// Naive-vs-blocked kernel ablation (PR 6): time the two hottest native
+/// entry points on both `KernelPath`s and record the speedup. Rows land
+/// both in `benches` (under the `native-naive/` prefix) and in the
+/// dedicated `ablation` map keyed by `{model}/{bench}`.
+fn ablation_suite(rec: &mut Recorder, model: &str, artifacts: &std::path::Path) {
+    let blocked = setup::build_engine("native", model, artifacts).unwrap();
+    let naive = setup::build_engine("native-naive", model, artifacts).unwrap();
+    let meta = blocked.meta().clone();
+    let mut rng = Rng::new(9);
+    let params = rand_vec(&mut rng, meta.param_count);
+    let delta = rand_vec(&mut rng, meta.param_count);
+    let x = rand_vec(&mut rng, meta.batch * meta.d);
+    let y = onehot_or_real(&mut rng, &meta, 1);
+    let xs = rand_vec(&mut rng, meta.tau * meta.batch * meta.d);
+    let ys = onehot_or_real(&mut rng, &meta, meta.tau);
+
+    let mut row = |rec: &mut Recorder,
+                   bench_name: &str,
+                   b: BenchResult,
+                   n: BenchResult| {
+        rec.ablation.insert(
+            format!("{model}/{bench_name}"),
+            obj(vec![
+                ("naive_mean_ns", Json::Num(n.mean_ns)),
+                ("blocked_mean_ns", Json::Num(b.mean_ns)),
+                ("naive_min_ns", Json::Num(n.min_ns)),
+                ("blocked_min_ns", Json::Num(b.min_ns)),
+                ("speedup_mean", Json::Num(n.mean_ns / b.mean_ns)),
+                ("speedup_min", Json::Num(n.min_ns / b.min_ns)),
+            ]),
+        );
+    };
+
+    let b = bench(rec, &format!("native/{model}/loss_grad [ablation]"), || {
+        blocked.loss_grad(&params, &x, &y).unwrap();
+    });
+    let n = bench(rec, &format!("native-naive/{model}/loss_grad"), || {
+        naive.loss_grad(&params, &x, &y).unwrap();
+    });
+    row(rec, "loss_grad", b, n);
+
+    let b = bench(rec, &format!("native/{model}/gate_round[fused] [ablation]"), || {
+        blocked.gate_round(&params, &delta, &xs, &ys, 0.05).unwrap();
+    });
+    let n = bench(rec, &format!("native-naive/{model}/gate_round[fused]"), || {
+        naive.gate_round(&params, &delta, &xs, &ys, 0.05).unwrap();
+    });
+    row(rec, "gate_round[fused]", b, n);
+}
+
+fn fedgate_round_bench(
+    rec: &mut Recorder,
+    engine: &dyn Engine,
+    label: &str,
+    n_clients: usize,
+    s: usize,
+) {
     let cfg = ExperimentConfig::new(
         SolverKind::FedGate,
         &engine.meta().name,
@@ -111,6 +228,7 @@ fn fedgate_round_bench(engine: &dyn Engine, label: &str, n_clients: usize, s: us
     );
     let mut bufs = RoundBuffers::new(engine, engine.meta().tau);
     bench(
+        rec,
         &format!("{label}/fedgate_round[N={n_clients}, tau={}]", engine.meta().tau),
         || {
             fedgate_round(
@@ -122,12 +240,12 @@ fn fedgate_round_bench(engine: &dyn Engine, label: &str, n_clients: usize, s: us
     );
 }
 
-fn aggregation_bench() {
+fn aggregation_bench(rec: &mut Recorder) {
     let mut rng = Rng::new(4);
     let p = 109_386; // the MLP parameter count
     let n = 1000;
     let updates: Vec<Vec<f32>> = (0..8).map(|_| rand_vec(&mut rng, p)).collect();
-    bench(&format!("server/aggregate[P={p}, N={n}]"), || {
+    bench(rec, &format!("server/aggregate[P={p}, N={n}]"), || {
         let mut acc = vec![0.0f64; p];
         for _ in 0..(n / updates.len()) {
             for u in &updates {
@@ -138,18 +256,90 @@ fn aggregation_bench() {
     });
 }
 
+/// Serialize the run to the `flanp-bench/v1` schema (docs/perf.md).
+fn emit_json(rec: &Recorder, models: &[&str]) {
+    let threads = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    let benches = Json::Obj(
+        rec.benches
+            .iter()
+            .map(|(k, r)| {
+                (
+                    k.clone(),
+                    obj(vec![
+                        ("mean_ns", Json::Num(r.mean_ns)),
+                        ("min_ns", Json::Num(r.min_ns)),
+                        ("iters", Json::from(r.iters)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let config = obj(vec![
+        ("threads", Json::from(threads)),
+        (
+            "pinned_iters",
+            pinned_iters().map(Json::from).unwrap_or(Json::Null),
+        ),
+        ("models", models.iter().copied().collect()),
+        (
+            "kernel_tiles",
+            obj(vec![
+                ("mr", Json::from(kernels::MR)),
+                ("bk", Json::from(kernels::BK)),
+                ("bn", Json::from(kernels::BN)),
+            ]),
+        ),
+        ("fedgate_round", obj(vec![
+            ("n_clients", Json::from(8usize)),
+            ("s", Json::from(100usize)),
+        ])),
+    ]);
+    let doc = obj(vec![
+        ("schema", Json::from(SCHEMA)),
+        ("config", config),
+        ("benches", benches),
+        ("ablation", Json::Obj(rec.ablation.clone())),
+        ("pending_first_ci_run", Json::Bool(false)),
+    ]);
+    let out = std::env::var("FLANP_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_6.json".to_string());
+    match std::fs::write(&out, doc.to_string() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => println!("(could not write {out}: {e})"),
+    }
+}
+
 fn main() {
     println!("flanp hot-path benchmarks (lower is better)");
-    println!("{}", "-".repeat(90));
+    println!("{}", "-".repeat(100));
 
     let artifacts = setup::default_artifacts_dir();
     let models = ["linreg_d25", "logreg_d784_c10", "mlp_d784_c10_h128_h64"];
+    let mut rec = Recorder::default();
 
     for model in models {
         let native = setup::build_engine("native", model, &artifacts).unwrap();
-        engine_suite(native.as_ref(), &format!("native/{model}"));
+        engine_suite(&mut rec, native.as_ref(), &format!("native/{model}"));
     }
-    aggregation_bench();
+    aggregation_bench(&mut rec);
+
+    // naive-vs-blocked kernel ablation (native only; always available)
+    for model in models {
+        ablation_suite(&mut rec, model, &artifacts);
+    }
+    // end-to-end round cost on the native engine (always available)
+    for model in ["linreg_d25", "mlp_d784_c10_h128_h64"] {
+        let native = setup::build_engine("native", model, &artifacts).unwrap();
+        fedgate_round_bench(
+            &mut rec,
+            native.as_ref(),
+            &format!("native/{model}"),
+            8,
+            100,
+        );
+    }
 
     match setup::build_engine("hlo", models[0], &artifacts) {
         Ok(_) => {
@@ -157,7 +347,7 @@ fn main() {
                 flanp::engine::Manifest::load(&artifacts).unwrap();
             for model in models {
                 let hlo = setup::build_engine("hlo", model, &artifacts).unwrap();
-                engine_suite(hlo.as_ref(), &format!("hlo/{model}"));
+                engine_suite(&mut rec, hlo.as_ref(), &format!("hlo/{model}"));
                 // ablation: same entry points lowered WITHOUT the pallas
                 // kernels (plain jnp) — quantifies the CPU-side cost of
                 // interpret-mode pallas lowering (EXPERIMENTS.md §Perf;
@@ -165,19 +355,23 @@ fn main() {
                 if let Ok(jnp) =
                     flanp::engine::HloEngine::load_variant(&manifest, model, true)
                 {
-                    engine_suite(&jnp, &format!("hlo-jnp/{model}"));
+                    engine_suite(&mut rec, &jnp, &format!("hlo-jnp/{model}"));
                 }
             }
-            // end-to-end round cost on both engines
             for model in ["linreg_d25", "mlp_d784_c10_h128_h64"] {
-                let native = setup::build_engine("native", model, &artifacts).unwrap();
-                fedgate_round_bench(native.as_ref(), &format!("native/{model}"), 8, 100);
                 let hlo = setup::build_engine("hlo", model, &artifacts).unwrap();
-                fedgate_round_bench(hlo.as_ref(), &format!("hlo/{model}"), 8, 100);
+                fedgate_round_bench(
+                    &mut rec,
+                    hlo.as_ref(),
+                    &format!("hlo/{model}"),
+                    8,
+                    100,
+                );
             }
         }
         Err(e) => println!("(hlo benches skipped: {e:#} — run `make artifacts`)"),
     }
-    println!("{}", "-".repeat(90));
+    println!("{}", "-".repeat(100));
+    emit_json(&rec, &models);
     println!("done");
 }

@@ -40,7 +40,8 @@
 use super::config::{ExperimentConfig, SolverKind, Subroutine};
 use super::eval::EvalData;
 use super::gate::{
-    active_loss_gradsq, fedgate_round, local_round, GateState, RoundBuffers,
+    active_loss_gradsq, fedgate_round, local_rounds, GateState, LocalSpec,
+    RoundBuffers, TauSpec,
 };
 use super::solvers::{deadline_round, init_params, RunContext};
 use crate::util::linalg;
@@ -179,16 +180,23 @@ pub fn run_flanp(
                     )?,
                     Subroutine::Avg => {
                         // Remark 1: FLANP over plain FedAvg — tau local SGD
-                        // steps (zero tracking) then model averaging
+                        // steps (zero tracking) then model averaging,
+                        // fanned out through the shared gate::local_rounds
                         let p = state.w.len();
                         let zero = vec![0.0f32; p];
+                        let wis = local_rounds(
+                            engine,
+                            fleet,
+                            &arrived,
+                            &state.w,
+                            LocalSpec::Sgd(&zero),
+                            TauSpec::Uniform(cfg.tau),
+                            eta,
+                            &mut bufs,
+                        )?;
                         let mut acc = vec![0.0f64; p];
-                        for &i in &arrived {
-                            let wi = local_round(
-                                engine, fleet, i, &state.w, &zero, cfg.tau,
-                                eta, &mut bufs,
-                            )?;
-                            linalg::accumulate(&mut acc, &wi);
+                        for wi in &wis {
+                            linalg::accumulate(&mut acc, wi);
                         }
                         state.w = linalg::mean_of(&acc, arrived.len());
                     }

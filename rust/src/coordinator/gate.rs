@@ -14,7 +14,7 @@
 
 use crate::engine::{full_loss_grad, Engine};
 use crate::fed::ClientFleet;
-use crate::util::linalg;
+use crate::util::{linalg, par};
 use anyhow::Result;
 
 /// Mutable algorithm state carried across rounds and stages.
@@ -85,62 +85,196 @@ pub fn local_round(
     Ok(wi)
 }
 
+/// What each client's tau local steps compute — the per-solver variation
+/// of the one shared round shape (tau corrected steps from `w`):
+/// FedGATE's tracking correction, plain local SGD (FedAvg, FedNova,
+/// FLANP-Avg), or FedProx's proximal pull towards the round anchor `w`.
+pub(crate) enum LocalSpec<'a> {
+    /// FedGATE: per-CLIENT-ID tracking variables (indexed by client id,
+    /// not by position in `active`).
+    Gate(&'a [Vec<f32>]),
+    /// Local SGD: a shared zero tracking variable.
+    Sgd(&'a [f32]),
+    /// FedProx: `grad + mu * (w_i - w)` steps anchored at the round's
+    /// starting model.
+    Prox { mu: f32 },
+}
+
+/// Per-client local-step counts: uniform (every synchronous solver) or
+/// per client id (FedNova's window-sized tau_i).
+#[derive(Clone, Copy)]
+pub(crate) enum TauSpec<'a> {
+    Uniform(usize),
+    PerClient(&'a [usize]),
+}
+
+impl TauSpec<'_> {
+    fn of(&self, i: usize) -> usize {
+        match self {
+            TauSpec::Uniform(t) => *t,
+            TauSpec::PerClient(ts) => ts[i],
+        }
+    }
+}
+
+/// One client's local round under `spec` — the serial fallback used when
+/// the pre-sampled fan-out path is unavailable. The FedProx per-step
+/// fallback exists for engines whose fused round artifact is pinned to
+/// `meta().tau` (HLO); tau-flexible engines take the fused path, which
+/// evaluates the identical per-step expression.
+#[allow(clippy::too_many_arguments)]
+fn local_round_spec(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    i: usize,
+    w: &[f32],
+    spec: &LocalSpec,
+    tau: usize,
+    eta: f32,
+    bufs: &mut RoundBuffers,
+) -> Result<Vec<f32>> {
+    let m = engine.meta();
+    match spec {
+        LocalSpec::Gate(deltas) => {
+            local_round(engine, fleet, i, w, &deltas[i], tau, eta, bufs)
+        }
+        LocalSpec::Sgd(zero) => local_round(engine, fleet, i, w, zero, tau, eta, bufs),
+        LocalSpec::Prox { mu } => {
+            if tau == m.tau || engine.round_tau_flexible() {
+                fleet.fill_round_batches(i, tau, m.batch, &mut bufs.xs, &mut bufs.ys);
+                engine.prox_round(w, w, &bufs.xs, &bufs.ys, eta, *mu)
+            } else {
+                // per-step fallback: prox gradient = grad + mu*(w_i - w)
+                let mut wi = w.to_vec();
+                for _ in 0..tau {
+                    fleet.fill_minibatch(i, m.batch, &mut bufs.x, &mut bufs.y);
+                    let (_, mut g) = engine.loss_grad(&wi, &bufs.x, &bufs.y)?;
+                    for k in 0..w.len() {
+                        g[k] += mu * (wi[k] - w[k]);
+                    }
+                    linalg::axpy(-eta, &g, &mut wi);
+                }
+                Ok(wi)
+            }
+        }
+    }
+}
+
 /// Local rounds for every active client, fanned out across cores when
-/// the engine is thread-safe ([`Engine::as_sync`]); identical results to
-/// the serial path (same per-client RNG streams, same reduction order).
-fn local_rounds_all(
+/// the engine is thread-safe ([`Engine::as_sync`]) and the per-worker
+/// chunk clears the [`par::min_chunk_for_work`] threshold (tiny models
+/// stay serial rather than paying thread-spawn cost); identical results
+/// to the serial path (same per-client RNG streams — batches are
+/// pre-sampled serially in `active` order — and the same per-client
+/// stepping). This is THE shared fan-out for every synchronous cohort
+/// solver: FedGATE ([`fedgate_round`]), FedAvg/FedProx/FedNova
+/// (solvers.rs) and FLANP's Avg subroutine (flanp.rs).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn local_rounds(
     engine: &dyn Engine,
     fleet: &mut ClientFleet,
     active: &[usize],
     w: &[f32],
-    deltas: &[Vec<f32>],
-    tau: usize,
+    spec: LocalSpec,
+    taus: TauSpec,
     eta: f32,
     bufs: &mut RoundBuffers,
 ) -> Result<Vec<Vec<f32>>> {
     let m = engine.meta();
-    // the fused-batch paths need either a tau-flexible engine or a tau
+    // the fused-batch paths need either a tau-flexible engine or taus
     // matching the compiled round artifact
-    if active.len() < 2 || (tau != m.tau && !engine.round_tau_flexible()) {
+    let fused_ok = engine.round_tau_flexible()
+        || active.iter().all(|&i| taus.of(i) == m.tau);
+    if active.len() < 2 || !fused_ok {
         return active
             .iter()
-            .map(|&i| local_round(engine, fleet, i, w, &deltas[i], tau, eta, bufs))
+            .map(|&i| {
+                local_round_spec(engine, fleet, i, w, &spec, taus.of(i), eta, bufs)
+            })
             .collect();
     }
-    // phase 1 (serial): sample every client's tau batches
-    let xstride = tau * m.batch * m.d;
-    let ystride = tau * m.batch * m.y_width();
-    let mut all_xs = vec![0.0f32; active.len() * xstride];
-    let mut all_ys = vec![0.0f32; active.len() * ystride];
+    // phase 1 (serial): sample every client's tau_i batches. Per-client
+    // offsets (not a uniform stride) so FedNova's heterogeneous taus
+    // pack densely.
+    let n = active.len();
+    let mut xoff = Vec::with_capacity(n + 1);
+    let mut yoff = Vec::with_capacity(n + 1);
+    let (mut xo, mut yo) = (0usize, 0usize);
+    for &i in active {
+        xoff.push(xo);
+        yoff.push(yo);
+        xo += taus.of(i) * m.batch * m.d;
+        yo += taus.of(i) * m.batch * m.y_width();
+    }
+    xoff.push(xo);
+    yoff.push(yo);
+    let mut all_xs = vec![0.0f32; xo];
+    let mut all_ys = vec![0.0f32; yo];
     for (k, &i) in active.iter().enumerate() {
         fleet.fill_round_batches(
             i,
-            tau,
+            taus.of(i),
             m.batch,
-            &mut all_xs[k * xstride..(k + 1) * xstride],
-            &mut all_ys[k * ystride..(k + 1) * ystride],
+            &mut all_xs[xoff[k]..xoff[k + 1]],
+            &mut all_ys[yoff[k]..yoff[k + 1]],
         );
     }
     // phase 2: the clients' local compute — parallel across cores when
-    // the engine is Sync, else a single batch call that shares the
-    // per-round literals (HLO path, §Perf)
+    // the engine is Sync and each worker amortizes its spawn cost, else
+    // a single batch call that shares the per-round literals (HLO path,
+    // §Perf)
     match engine.as_sync().filter(|e| e.round_tau_flexible()) {
-        Some(es) => crate::util::par::par_map(active.len(), |k| {
-            let i = active[k];
-            es.gate_round(
-                w,
-                &deltas[i],
-                &all_xs[k * xstride..(k + 1) * xstride],
-                &all_ys[k * ystride..(k + 1) * ystride],
-                eta,
-            )
-        })
-        .into_iter()
-        .collect(),
+        Some(es) => {
+            let avg_tau = active.iter().map(|&i| taus.of(i)).sum::<usize>() / n;
+            let min_chunk =
+                par::min_chunk_for_work(6 * avg_tau * m.batch * m.param_count);
+            par::par_map_min_chunk(n, min_chunk, |k| {
+                let i = active[k];
+                let xs = &all_xs[xoff[k]..xoff[k + 1]];
+                let ys = &all_ys[yoff[k]..yoff[k + 1]];
+                match &spec {
+                    LocalSpec::Gate(deltas) => es.gate_round(w, &deltas[i], xs, ys, eta),
+                    LocalSpec::Sgd(zero) => es.gate_round(w, zero, xs, ys, eta),
+                    LocalSpec::Prox { mu } => es.prox_round(w, w, xs, ys, eta, *mu),
+                }
+            })
+            .into_iter()
+            .collect()
+        }
         None => {
-            let drefs: Vec<&[f32]> =
-                active.iter().map(|&i| deltas[i].as_slice()).collect();
-            engine.gate_rounds_batch(w, &drefs, &all_xs, &all_ys, eta)
+            // non-Sync engines are also non-flexible today, so fused_ok
+            // guarantees uniform taus == m.tau here; keep the per-slice
+            // loop as the safe fallback should that invariant relax
+            let uniform = active.iter().all(|&i| taus.of(i) == taus.of(active[0]));
+            match &spec {
+                LocalSpec::Gate(deltas) if uniform => {
+                    let drefs: Vec<&[f32]> =
+                        active.iter().map(|&i| deltas[i].as_slice()).collect();
+                    engine.gate_rounds_batch(w, &drefs, &all_xs, &all_ys, eta)
+                }
+                LocalSpec::Sgd(zero) if uniform => {
+                    let drefs: Vec<&[f32]> = active.iter().map(|_| *zero).collect();
+                    engine.gate_rounds_batch(w, &drefs, &all_xs, &all_ys, eta)
+                }
+                _ => (0..n)
+                    .map(|k| {
+                        let i = active[k];
+                        let xs = &all_xs[xoff[k]..xoff[k + 1]];
+                        let ys = &all_ys[yoff[k]..yoff[k + 1]];
+                        match &spec {
+                            LocalSpec::Gate(deltas) => {
+                                engine.gate_round(w, &deltas[i], xs, ys, eta)
+                            }
+                            LocalSpec::Sgd(zero) => {
+                                engine.gate_round(w, zero, xs, ys, eta)
+                            }
+                            LocalSpec::Prox { mu } => {
+                                engine.prox_round(w, w, xs, ys, eta, *mu)
+                            }
+                        }
+                    })
+                    .collect(),
+            }
         }
     }
 }
@@ -162,8 +296,15 @@ pub fn fedgate_round(
     assert!(n > 0, "empty active set");
 
     // local work + Delta_i accumulation
-    let wis = local_rounds_all(
-        engine, fleet, active, &state.w, &state.deltas, tau, eta, bufs,
+    let wis = local_rounds(
+        engine,
+        fleet,
+        active,
+        &state.w,
+        LocalSpec::Gate(&state.deltas),
+        TauSpec::Uniform(tau),
+        eta,
+        bufs,
     )?;
     let mut delta_sum = vec![0.0f64; p];
     let mut delta_is: Vec<Vec<f32>> = Vec::with_capacity(n);
@@ -206,9 +347,15 @@ pub fn active_loss_gradsq(
 ) -> Result<(f64, f64)> {
     let p = w.len();
     // per-client exact gradients, fanned out when the engine is Sync
+    // and a worker's chunk of full-shard passes clears the min-work
+    // threshold (one pass ≈ 6 * shard_rows * P flop)
+    let avg_s = active.iter().map(|&i| fleet.shards[i].s()).sum::<usize>()
+        / active.len().max(1);
+    let min_chunk =
+        par::min_chunk_for_work(6 * avg_s * engine.meta().param_count);
     let locals: Vec<(f64, Vec<f32>)> = match engine.as_sync() {
         Some(es) if active.len() >= 2 => {
-            crate::util::par::par_map(active.len(), |k| {
+            par::par_map_min_chunk(active.len(), min_chunk, |k| {
                 full_loss_grad(es, fleet, active[k], w)
             })
             .into_iter()
@@ -310,6 +457,105 @@ mod tests {
             let nonzero = d.iter().any(|&v| v != 0.0);
             assert_eq!(nonzero, touched, "client {i}");
         }
+    }
+
+    #[test]
+    fn local_rounds_sgd_matches_serial_local_round_loop() {
+        // the fan-out helper must be indistinguishable from the old
+        // per-client loop: same RNG streams, same stepping, bit-equal
+        let (e, mut fleet) = setup();
+        let (e2, mut fleet2) = setup();
+        let active: Vec<usize> = (0..8).collect();
+        let w = vec![0.05f32; 6];
+        let zero = vec![0.0f32; 6];
+        let mut bufs = RoundBuffers::new(&e, 3);
+        let mut bufs2 = RoundBuffers::new(&e2, 3);
+        let fanned = local_rounds(
+            &e,
+            &mut fleet,
+            &active,
+            &w,
+            LocalSpec::Sgd(&zero),
+            TauSpec::Uniform(3),
+            0.05,
+            &mut bufs,
+        )
+        .unwrap();
+        let serial: Vec<Vec<f32>> = active
+            .iter()
+            .map(|&i| {
+                local_round(&e2, &mut fleet2, i, &w, &zero, 3, 0.05, &mut bufs2)
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(fanned, serial);
+    }
+
+    #[test]
+    fn local_rounds_prox_matches_per_step_reference() {
+        let (e, mut fleet) = setup();
+        let (e2, mut fleet2) = setup();
+        let active = vec![0usize, 1, 2];
+        let w = vec![0.1f32; 6];
+        let mut bufs = RoundBuffers::new(&e, 3);
+        let fused = local_rounds(
+            &e,
+            &mut fleet,
+            &active,
+            &w,
+            LocalSpec::Prox { mu: 0.3 },
+            TauSpec::Uniform(3),
+            0.05,
+            &mut bufs,
+        )
+        .unwrap();
+        // explicit per-step reference: g += mu*(w_i - w); w_i -= eta*g
+        let mut x = vec![0.0f32; 10 * 5];
+        let mut y = vec![0.0f32; 10];
+        for (k, &i) in active.iter().enumerate() {
+            let mut wi = w.clone();
+            for _ in 0..3 {
+                fleet2.fill_minibatch(i, 10, &mut x, &mut y);
+                let (_, mut g) = e2.loss_grad(&wi, &x, &y).unwrap();
+                for j in 0..6 {
+                    g[j] += 0.3 * (wi[j] - w[j]);
+                }
+                linalg::axpy(-0.05, &g, &mut wi);
+            }
+            assert_eq!(fused[k], wi, "client {i}");
+        }
+    }
+
+    #[test]
+    fn local_rounds_per_client_taus_match_serial() {
+        let (e, mut fleet) = setup();
+        let (e2, mut fleet2) = setup();
+        let active = vec![0usize, 2, 5];
+        // taus indexed by CLIENT ID (FedNova convention)
+        let taus = vec![2usize, 9, 4, 9, 9, 6, 9, 9];
+        let w = vec![0.02f32; 6];
+        let zero = vec![0.0f32; 6];
+        let mut bufs = RoundBuffers::new(&e, 3);
+        let mut bufs2 = RoundBuffers::new(&e2, 3);
+        let fanned = local_rounds(
+            &e,
+            &mut fleet,
+            &active,
+            &w,
+            LocalSpec::Sgd(&zero),
+            TauSpec::PerClient(&taus),
+            0.05,
+            &mut bufs,
+        )
+        .unwrap();
+        let serial: Vec<Vec<f32>> = active
+            .iter()
+            .map(|&i| {
+                local_round(&e2, &mut fleet2, i, &w, &zero, taus[i], 0.05, &mut bufs2)
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(fanned, serial);
     }
 
     #[test]

@@ -7,7 +7,8 @@
 use super::config::{ExperimentConfig, SolverKind};
 use super::eval::EvalData;
 use super::gate::{
-    active_loss_gradsq, fedgate_round, local_round, GateState, RoundBuffers,
+    active_loss_gradsq, fedgate_round, local_round, local_rounds, GateState,
+    LocalSpec, RoundBuffers, TauSpec,
 };
 use crate::engine::{Engine, ModelKind};
 use crate::fed::{
@@ -445,7 +446,6 @@ fn run_model_average(
     let zero_delta = vec![0.0f32; p];
     let mut bufs = RoundBuffers::new(engine, cfg.tau);
     let threshold = cfg.grad_threshold(n);
-    let meta = engine.meta();
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
     ctx.record(&w, n, 0, l0, g0, 0, 0, 0, n)?;
@@ -458,36 +458,28 @@ fn run_model_average(
         let (arrived, ev) = deadline_round(
             &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
         );
-        let mut acc = vec![0.0f64; p];
-        for &i in &arrived {
-            let wi = match local {
-                Local::Sgd => {
-                    local_round(engine, fleet, i, &w, &zero_delta, cfg.tau, cfg.eta, &mut bufs)?
-                }
-                Local::Prox => {
-                    if cfg.tau == meta.tau {
-                        fleet.fill_round_batches(
-                            i, cfg.tau, meta.batch, &mut bufs.xs, &mut bufs.ys,
-                        );
-                        engine.prox_round(&w, &w, &bufs.xs, &bufs.ys, cfg.eta, cfg.prox_mu)?
-                    } else {
-                        // per-step fallback: prox gradient = grad + mu*(w_i - w)
-                        let mut wi = w.clone();
-                        for _ in 0..cfg.tau {
-                            fleet.fill_minibatch(i, meta.batch, &mut bufs.x, &mut bufs.y);
-                            let (_, mut g) = engine.loss_grad(&wi, &bufs.x, &bufs.y)?;
-                            for k in 0..p {
-                                g[k] += cfg.prox_mu * (wi[k] - w[k]);
-                            }
-                            linalg::axpy(-cfg.eta, &g, &mut wi);
-                        }
-                        wi
-                    }
-                }
-            };
-            linalg::accumulate(&mut acc, &wi);
-        }
+        // shared fan-out (gate::local_rounds): parallel local compute
+        // with serially pre-sampled batches — results identical to the
+        // old per-client loop (same RNG streams, same stepping)
+        let spec = match local {
+            Local::Sgd => LocalSpec::Sgd(&zero_delta),
+            Local::Prox => LocalSpec::Prox { mu: cfg.prox_mu },
+        };
+        let wis = local_rounds(
+            engine,
+            fleet,
+            &arrived,
+            &w,
+            spec,
+            TauSpec::Uniform(cfg.tau),
+            cfg.eta,
+            &mut bufs,
+        )?;
         if !arrived.is_empty() {
+            let mut acc = vec![0.0f64; p];
+            for wi in &wis {
+                linalg::accumulate(&mut acc, wi);
+            }
             w = linalg::mean_of(&acc, arrived.len());
         }
         let (loss, gsq) = round_stats(arrived.is_empty(), stats, || {
@@ -577,16 +569,23 @@ fn run_fednova(
             let tau_eff = arrived.iter().map(|&i| taus[i]).sum::<usize>()
                 as f64
                 / arrived.len() as f64;
-            // normalized update: d_i = (w - w_i) / (eta * tau_i)
+            // heterogeneous-tau local work through the shared fan-out,
+            // then normalized updates: d_i = (w - w_i) / (eta * tau_i)
+            let wis = local_rounds(
+                engine,
+                fleet,
+                &arrived,
+                &w,
+                LocalSpec::Sgd(&zero_delta),
+                TauSpec::PerClient(&taus),
+                cfg.eta,
+                &mut bufs,
+            )?;
             let mut acc = vec![0.0f64; p];
-            for &i in &arrived {
-                let wi = local_round(
-                    engine, fleet, i, &w, &zero_delta, taus[i], cfg.eta,
-                    &mut bufs,
-                )?;
+            for (&i, wi) in arrived.iter().zip(&wis) {
                 let inv = 1.0 / (cfg.eta * taus[i] as f32);
                 let di: Vec<f32> =
-                    w.iter().zip(&wi).map(|(a, b)| (a - b) * inv).collect();
+                    w.iter().zip(wi).map(|(a, b)| (a - b) * inv).collect();
                 linalg::accumulate(&mut acc, &di);
             }
             let d_avg = linalg::mean_of(&acc, arrived.len());

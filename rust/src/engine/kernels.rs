@@ -1,0 +1,439 @@
+//! CPU compute kernels for [`super::NativeEngine`]: a naive reference
+//! set and a blocked set ported from the Pallas tiling ideas in
+//! `python/compile/kernels/{matmul,fused}.py`.
+//!
+//! Three primitives cover the whole forward/backward hot path:
+//!
+//! * `matmul_bias`   — `z = x @ W + bias`      (forward, per layer)
+//! * `grad_weights`  — `gW += xᵀ @ dz, gb += colsum(dz)` (backward dW)
+//! * `dprev`         — `dx = dz @ Wᵀ`          (backward propagation)
+//!
+//! The blocked variants tile the loops `MR × BN × BK` (row micro-tile ×
+//! output-column block × reduction block — the CPU analogue of the
+//! Pallas kernels' `BM × BN × BK` MXU grid): each weight row loaded
+//! from memory is reused across `MR` batch rows, the reduction walks
+//! `BK`-sized panels so the active weight panel stays cache-resident,
+//! and the backward `dz @ Wᵀ` pass runs over a packed `Wᵀ`
+//! ([`pack_transpose`]) so its inner loop is stride-1 instead of
+//! striding `fout` floats between elements.
+//!
+//! **Order-preservation contract:** for every output element the
+//! blocked kernels perform exactly the same floating-point additions in
+//! exactly the same order as the naive reference — tiling only reorders
+//! *independent* outputs, never the reduction sequence of one output,
+//! and multi-row contributions are written as separate sequential adds
+//! (never reassociated into a tree). On data without engineered signed
+//! zeros the two paths are bit-identical; the differential tests in
+//! `rust/tests/kernels.rs` pin them to f32 tolerance anyway, and the
+//! unit tests below pin random-data runs exactly.
+//!
+//! The naive kernels are retained (not deleted) as the differential
+//! reference and for the `naive-vs-blocked` ablation row of
+//! `benches/hotpath.rs` / `BENCH_<n>.json` (docs/perf.md).
+
+/// Batch-row micro-tile: one weight row loaded serves `MR` batch rows.
+pub const MR: usize = 4;
+/// Reduction (fan-in) cache block: the active `BK × BN` weight panel is
+/// at most 256 KiB of f32 — L2-resident on every target CPU.
+pub const BK: usize = 128;
+/// Output-column cache block (f32 lane count × 128, matching the Pallas
+/// kernels' lane-aligned `bn`; our widest layer is 784 so at most two
+/// panels are cut).
+pub const BN: usize = 512;
+
+/// Which kernel set a [`super::NativeEngine`] dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelPath {
+    /// Tiled kernels (default).
+    #[default]
+    Blocked,
+    /// Reference loops — the pre-PR-6 hot path, kept for differential
+    /// tests and the bench ablation.
+    Naive,
+}
+
+// ---------------------------------------------------------------------------
+// forward: z = x @ W + bias
+// ---------------------------------------------------------------------------
+
+/// Naive reference: row-major ikj loop, stride-1 inner over `fout`.
+/// x: [b, fin], w: [fin, fout] row-major, z: [b, fout].
+pub fn matmul_bias_naive(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    z: &mut [f32],
+    b: usize,
+    fin: usize,
+    fout: usize,
+) {
+    for r in 0..b {
+        z[r * fout..(r + 1) * fout].copy_from_slice(bias);
+    }
+    for r in 0..b {
+        let xr = &x[r * fin..(r + 1) * fin];
+        let zr = &mut z[r * fout..(r + 1) * fout];
+        for i in 0..fin {
+            let xi = xr[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * fout..(i + 1) * fout];
+            for j in 0..fout {
+                zr[j] += xi * wrow[j];
+            }
+        }
+    }
+}
+
+/// Blocked `z = x @ W + bias`: `MR`-row micro-tile over `BN × BK`
+/// weight panels. Per output element the reduction order over `fin` is
+/// identical to the naive kernel (panels ascend, rows within a panel
+/// ascend), so results match the reference bit-for-bit on ordinary
+/// data.
+pub fn matmul_bias_blocked(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    z: &mut [f32],
+    b: usize,
+    fin: usize,
+    fout: usize,
+) {
+    for r in 0..b {
+        z[r * fout..(r + 1) * fout].copy_from_slice(bias);
+    }
+    matmul_acc_blocked(x, w, z, b, fin, fout);
+}
+
+/// `z += x @ W` over pre-initialized `z` — the shared tile loop behind
+/// [`matmul_bias_blocked`] (bias init) and [`dprev_blocked`] (zero
+/// init, packed transposed weights).
+fn matmul_acc_blocked(x: &[f32], w: &[f32], z: &mut [f32], b: usize, fin: usize, fout: usize) {
+    let full = b - b % MR;
+    let mut jb = 0;
+    while jb < fout {
+        let jn = BN.min(fout - jb);
+        let mut kb = 0;
+        while kb < fin {
+            let kn = BK.min(fin - kb);
+            let mut rb = 0;
+            while rb < full {
+                // four disjoint output-row panels of the (jb, jn) block
+                let (r0, rest) = z[rb * fout..(rb + MR) * fout].split_at_mut(fout);
+                let (r1, rest) = rest.split_at_mut(fout);
+                let (r2, r3) = rest.split_at_mut(fout);
+                let z0 = &mut r0[jb..jb + jn];
+                let z1 = &mut r1[jb..jb + jn];
+                let z2 = &mut r2[jb..jb + jn];
+                let z3 = &mut r3[jb..jb + jn];
+                let x0 = &x[rb * fin..(rb + 1) * fin];
+                let x1 = &x[(rb + 1) * fin..(rb + 2) * fin];
+                let x2 = &x[(rb + 2) * fin..(rb + 3) * fin];
+                let x3 = &x[(rb + 3) * fin..(rb + 4) * fin];
+                for k in kb..kb + kn {
+                    let (xa, xb, xc, xd) = (x0[k], x1[k], x2[k], x3[k]);
+                    if xa == 0.0 && xb == 0.0 && xc == 0.0 && xd == 0.0 {
+                        continue; // relu-sparse inputs skip whole quads
+                    }
+                    let wrow = &w[k * fout + jb..k * fout + jb + jn];
+                    for ((((za, zb), zc), zd), &wv) in z0
+                        .iter_mut()
+                        .zip(z1.iter_mut())
+                        .zip(z2.iter_mut())
+                        .zip(z3.iter_mut())
+                        .zip(wrow)
+                    {
+                        *za += xa * wv;
+                        *zb += xb * wv;
+                        *zc += xc * wv;
+                        *zd += xd * wv;
+                    }
+                }
+                rb += MR;
+            }
+            kb += kn;
+        }
+        jb += jn;
+    }
+    // remainder rows (b % MR): the naive per-row loop, full fin/fout
+    for r in full..b {
+        let xr = &x[r * fin..(r + 1) * fin];
+        let zr = &mut z[r * fout..(r + 1) * fout];
+        for i in 0..fin {
+            let xi = xr[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * fout..(i + 1) * fout];
+            for j in 0..fout {
+                zr[j] += xi * wrow[j];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// backward dW: gW += xᵀ @ dz, gb += colsum(dz)
+// ---------------------------------------------------------------------------
+
+/// Naive reference: per batch row, rank-1 update of the weight gradient
+/// plus the bias column sum (the loop lifted out of the pre-PR-6
+/// `backprop`).
+pub fn grad_weights_naive(
+    input: &[f32],
+    dcur: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    b: usize,
+    fin: usize,
+    fout: usize,
+) {
+    for r in 0..b {
+        let xr = &input[r * fin..(r + 1) * fin];
+        let dr = &dcur[r * fout..(r + 1) * fout];
+        for i in 0..fin {
+            let xi = xr[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &mut gw[i * fout..(i + 1) * fout];
+            for j in 0..fout {
+                row[j] += xi * dr[j];
+            }
+        }
+        for j in 0..fout {
+            gb[j] += dr[j];
+        }
+    }
+}
+
+/// Blocked `gW += xᵀ @ dz`: four rank-1 updates fused per pass, so the
+/// `fin × fout` gradient matrix is streamed `b/MR` times instead of `b`
+/// times. The four contributions are added as separate sequential
+/// statements (not a reassociated sum), preserving the naive reduction
+/// order over `r` for every `gW[i][j]` and `gb[j]`.
+pub fn grad_weights_blocked(
+    input: &[f32],
+    dcur: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    b: usize,
+    fin: usize,
+    fout: usize,
+) {
+    let full = b - b % MR;
+    let mut rb = 0;
+    while rb < full {
+        let x0 = &input[rb * fin..(rb + 1) * fin];
+        let x1 = &input[(rb + 1) * fin..(rb + 2) * fin];
+        let x2 = &input[(rb + 2) * fin..(rb + 3) * fin];
+        let x3 = &input[(rb + 3) * fin..(rb + 4) * fin];
+        let d0 = &dcur[rb * fout..(rb + 1) * fout];
+        let d1 = &dcur[(rb + 1) * fout..(rb + 2) * fout];
+        let d2 = &dcur[(rb + 2) * fout..(rb + 3) * fout];
+        let d3 = &dcur[(rb + 3) * fout..(rb + 4) * fout];
+        for i in 0..fin {
+            let (xa, xb, xc, xd) = (x0[i], x1[i], x2[i], x3[i]);
+            if xa == 0.0 && xb == 0.0 && xc == 0.0 && xd == 0.0 {
+                continue;
+            }
+            let row = &mut gw[i * fout..(i + 1) * fout];
+            for (j, g) in row.iter_mut().enumerate() {
+                let mut v = *g;
+                v += xa * d0[j];
+                v += xb * d1[j];
+                v += xc * d2[j];
+                v += xd * d3[j];
+                *g = v;
+            }
+        }
+        for (j, g) in gb.iter_mut().enumerate() {
+            let mut v = *g;
+            v += d0[j];
+            v += d1[j];
+            v += d2[j];
+            v += d3[j];
+            *g = v;
+        }
+        rb += MR;
+    }
+    if full < b {
+        grad_weights_naive(
+            &input[full * fin..b * fin],
+            &dcur[full * fout..b * fout],
+            gw,
+            gb,
+            b - full,
+            fin,
+            fout,
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// backward dx: dprev = dz @ Wᵀ
+// ---------------------------------------------------------------------------
+
+/// Pack `Wᵀ` row-major: `wt[j * fin + i] = w[i * fout + j]`, so the
+/// backward propagation's inner loop runs stride-1 over `fin`. Packed
+/// once per layer per backward pass into scratch and reused across all
+/// `b` batch rows.
+pub fn pack_transpose(w: &[f32], wt: &mut [f32], fin: usize, fout: usize) {
+    debug_assert_eq!(w.len(), fin * fout);
+    debug_assert!(wt.len() >= fin * fout);
+    for j in 0..fout {
+        let row = &mut wt[j * fin..(j + 1) * fin];
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = w[i * fout + j];
+        }
+    }
+}
+
+/// Naive reference: per batch row, `dprev[r][i] = dot(dz[r], W[i, :])`
+/// over the untransposed weights (already stride-1; its inefficiency is
+/// that `W` is re-streamed for every batch row).
+pub fn dprev_naive(
+    dcur: &[f32],
+    w: &[f32],
+    dprev: &mut [f32],
+    b: usize,
+    fin: usize,
+    fout: usize,
+) {
+    for r in 0..b {
+        let dr = &dcur[r * fout..(r + 1) * fout];
+        let dp = &mut dprev[r * fin..(r + 1) * fin];
+        for i in 0..fin {
+            let wrow = &w[i * fout..(i + 1) * fout];
+            let mut s = 0.0f32;
+            for j in 0..fout {
+                s += dr[j] * wrow[j];
+            }
+            dp[i] = s;
+        }
+    }
+}
+
+/// Blocked `dprev = dz @ Wᵀ` over a packed transpose `wt` (see
+/// [`pack_transpose`]): the same `MR × BN × BK` tile loop as the
+/// forward matmul, with the reduction running over `fout` and each
+/// packed `Wᵀ` row reused across `MR` batch rows. The per-output
+/// reduction order over `j` matches [`dprev_naive`] exactly.
+pub fn dprev_blocked(
+    dcur: &[f32],
+    wt: &[f32],
+    dprev: &mut [f32],
+    b: usize,
+    fin: usize,
+    fout: usize,
+) {
+    dprev[..b * fin].fill(0.0);
+    matmul_acc_blocked(dcur, wt, &mut dprev[..b * fin], b, fout, fin);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 0.7);
+        v
+    }
+
+    /// Sprinkle exact +0.0s to exercise the relu-sparsity skip paths.
+    fn relu_like(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut v = rand_vec(rng, n);
+        for x in v.iter_mut() {
+            *x = x.max(0.0);
+        }
+        v
+    }
+
+    // the awkward-shape sweep: not multiples of MR/BK/BN, batch=1, fout=1
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 7, 1),
+        (1, 784, 10),
+        (3, 13, 5),
+        (4, 128, 64),
+        (5, 130, 66),
+        (8, 5, 1),
+        (50, 784, 128),
+        (17, 257, 31),
+    ];
+
+    #[test]
+    fn matmul_blocked_matches_naive_exactly() {
+        for &(b, fin, fout) in SHAPES {
+            let mut rng = Rng::new(100 + (b + fin + fout) as u64);
+            let x = relu_like(&mut rng, b * fin);
+            let w = rand_vec(&mut rng, fin * fout);
+            let bias = rand_vec(&mut rng, fout);
+            let mut z_n = vec![0.0f32; b * fout];
+            let mut z_b = vec![7.0f32; b * fout]; // stale garbage: init must overwrite
+            matmul_bias_naive(&x, &w, &bias, &mut z_n, b, fin, fout);
+            matmul_bias_blocked(&x, &w, &bias, &mut z_b, b, fin, fout);
+            assert_eq!(z_n, z_b, "matmul mismatch at b={b} fin={fin} fout={fout}");
+        }
+    }
+
+    #[test]
+    fn grad_weights_blocked_matches_naive_exactly() {
+        for &(b, fin, fout) in SHAPES {
+            let mut rng = Rng::new(200 + (b * fin + fout) as u64);
+            let x = relu_like(&mut rng, b * fin);
+            let d = rand_vec(&mut rng, b * fout);
+            // start from a nonzero gradient: the kernels ACCUMULATE
+            let g0 = rand_vec(&mut rng, fin * fout);
+            let gb0 = rand_vec(&mut rng, fout);
+            let (mut gw_n, mut gb_n) = (g0.clone(), gb0.clone());
+            let (mut gw_b, mut gb_b) = (g0, gb0);
+            grad_weights_naive(&x, &d, &mut gw_n, &mut gb_n, b, fin, fout);
+            grad_weights_blocked(&x, &d, &mut gw_b, &mut gb_b, b, fin, fout);
+            assert_eq!(gw_n, gw_b, "gW mismatch at b={b} fin={fin} fout={fout}");
+            assert_eq!(gb_n, gb_b, "gb mismatch at b={b} fin={fin} fout={fout}");
+        }
+    }
+
+    #[test]
+    fn dprev_blocked_matches_naive_exactly() {
+        for &(b, fin, fout) in SHAPES {
+            let mut rng = Rng::new(300 + (b + fin * fout) as u64);
+            let d = rand_vec(&mut rng, b * fout);
+            let w = rand_vec(&mut rng, fin * fout);
+            let mut wt = vec![0.0f32; fin * fout];
+            pack_transpose(&w, &mut wt, fin, fout);
+            let mut dp_n = vec![0.0f32; b * fin];
+            let mut dp_b = vec![9.0f32; b * fin]; // stale garbage: fill must clear
+            dprev_naive(&d, &w, &mut dp_n, b, fin, fout);
+            dprev_blocked(&d, &wt, &mut dp_b, b, fin, fout);
+            assert_eq!(dp_n, dp_b, "dprev mismatch at b={b} fin={fin} fout={fout}");
+        }
+    }
+
+    #[test]
+    fn pack_transpose_roundtrips() {
+        let (fin, fout) = (5, 3);
+        let w: Vec<f32> = (0..15).map(|v| v as f32).collect();
+        let mut wt = vec![0.0f32; 15];
+        pack_transpose(&w, &mut wt, fin, fout);
+        for i in 0..fin {
+            for j in 0..fout {
+                assert_eq!(wt[j * fin + i], w[i * fout + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // [1 2; 3 4] @ [5 6; 7 8] + [0.5, -0.5]
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let w = vec![5.0, 6.0, 7.0, 8.0];
+        let bias = vec![0.5, -0.5];
+        let mut z = vec![0.0f32; 4];
+        matmul_bias_blocked(&x, &w, &bias, &mut z, 2, 2, 2);
+        assert_eq!(z, vec![19.5, 21.5, 43.5, 49.5]);
+    }
+}

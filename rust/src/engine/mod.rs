@@ -19,10 +19,12 @@ pub mod hlo;
 #[cfg(not(feature = "pjrt"))]
 #[path = "hlo_stub.rs"]
 pub mod hlo;
+pub mod kernels;
 pub mod manifest;
 pub mod native;
 
 pub use hlo::HloEngine;
+pub use kernels::KernelPath;
 pub use manifest::{ArtifactInfo, Manifest};
 pub use native::NativeEngine;
 

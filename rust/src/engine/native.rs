@@ -5,23 +5,100 @@
 //! update) so that `NativeEngine` and `HloEngine` agree to f32 tolerance
 //! on identical inputs — the cross-layer correctness check in
 //! `rust/tests/differential.rs`.
+//!
+//! Hot-path structure (docs/perf.md):
+//!
+//! * the dense compute lives in [`super::kernels`] — blocked tile loops
+//!   by default, with the original naive loops retained behind
+//!   [`KernelPath::Naive`] for differential tests and the bench
+//!   ablation;
+//! * all per-call temporaries (pre-activations, activations, the two
+//!   backward delta buffers, the gradient, the packed `Wᵀ`) live in a
+//!   thread-local [`Scratch`] workspace, so a tau-step
+//!   `gate_round`/`prox_round` performs zero heap allocations after
+//!   warmup beyond the returned weight vector itself;
+//! * the local-SGD weight update is fused into the backward result
+//!   (`w -= eta * (g - delta)` in place) instead of allocating a fresh
+//!   vector per step as the old `gate_step` loop did.
+//!
+//! Every fused/blocked path preserves the naive path's floating-point
+//! evaluation order per output element, so solver-level bit-identical
+//! regression pins (deadline/tiers/traces) hold across kernel paths on
+//! ordinary data.
 
+use super::kernels::{self, KernelPath};
 use super::{Engine, ModelKind, ModelMeta};
 use anyhow::Result;
+use std::cell::RefCell;
+
+/// Reusable per-thread workspace for forward/backward passes. Buffers
+/// are `resize`d (never shrunk in capacity) on entry, so steady-state
+/// rounds touch no allocator. One caveat documented in docs/perf.md:
+/// `util::par::par_map` spawns scoped workers per round, so each worker
+/// thread re-warms its scratch once per round (O(threads) allocations
+/// per communication round, not O(clients·tau)).
+#[derive(Default)]
+struct Scratch {
+    /// per-layer pre-activations `z_l` ([b, out_l])
+    zs: Vec<Vec<f32>>,
+    /// per-layer hidden activations `relu(z_l)` (last entry unused)
+    acts: Vec<Vec<f32>>,
+    /// backward delta of the current layer
+    dcur: Vec<f32>,
+    /// backward delta being built for the previous layer
+    dprev: Vec<f32>,
+    /// full flat gradient
+    grad: Vec<f32>,
+    /// packed `Wᵀ` for the blocked `dz @ Wᵀ` pass
+    wt: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
 
 pub struct NativeEngine {
     meta: ModelMeta,
+    path: KernelPath,
+    /// cached `meta.layer_dims()` (avoids re-allocating it per call)
+    dims: Vec<(usize, usize)>,
+    /// flat param offset of each layer's `[W | b]` block
+    offsets: Vec<usize>,
+    /// max layer width (over fin and fout) — sizes the delta buffers
+    max_width: usize,
+    /// max `fin * fout` — sizes the packed-transpose buffer
+    max_mat: usize,
 }
 
 impl NativeEngine {
     pub fn new(meta: ModelMeta) -> Self {
+        Self::with_kernel_path(meta, KernelPath::default())
+    }
+
+    pub fn with_kernel_path(meta: ModelMeta, path: KernelPath) -> Self {
         assert_eq!(
             meta.param_count,
             meta.expected_param_count(),
             "param_count mismatch for {}",
             meta.name
         );
-        NativeEngine { meta }
+        let dims = meta.layer_dims();
+        let mut offsets = Vec::with_capacity(dims.len());
+        let (mut off, mut max_width, mut max_mat) = (0usize, 0usize, 0usize);
+        for &(fin, fout) in &dims {
+            offsets.push(off);
+            off += fin * fout + fout;
+            max_width = max_width.max(fin).max(fout);
+            max_mat = max_mat.max(fin * fout);
+        }
+        NativeEngine { meta, path, dims, offsets, max_width, max_mat }
+    }
+
+    /// Builder-style kernel-path override (used by the bench ablation
+    /// and `setup::build_engine("native-naive", ..)`).
+    pub fn kernel_path(mut self, path: KernelPath) -> Self {
+        self.path = path;
+        self
     }
 
     /// Convenience constructors mirroring the python catalog.
@@ -80,79 +157,115 @@ impl NativeEngine {
         })
     }
 
-    /// Forward through all layers. Returns per-layer pre-activations
-    /// `zs[l]` ([b, out_l]) and hidden activations `acts[l] = relu(zs[l])`
-    /// (empty for the output layer) so the backward pass can reuse them
-    /// without recomputing (perf: saves one alloc + pass per hidden
-    /// layer per call — see EXPERIMENTS.md §Perf).
-    fn forward_all(
+    /// Size the thread-local scratch for this model at batch `b`.
+    /// `Vec::resize` keeps capacity, so after the first call per thread
+    /// (per model size) this is allocation-free.
+    fn ensure_scratch(&self, s: &mut Scratch, b: usize) {
+        let nl = self.dims.len();
+        s.zs.resize_with(nl, Vec::new);
+        s.acts.resize_with(nl, Vec::new);
+        for (li, &(_, fout)) in self.dims.iter().enumerate() {
+            s.zs[li].resize(b * fout, 0.0);
+            if li + 1 < nl {
+                s.acts[li].resize(b * fout, 0.0);
+            }
+        }
+        s.dcur.resize(b * self.max_width, 0.0);
+        s.dprev.resize(b * self.max_width, 0.0);
+        s.grad.resize(self.meta.param_count, 0.0);
+        s.wt.resize(self.max_mat, 0.0);
+    }
+
+    /// Run `f` against the sized thread-local scratch. NOT re-entrant:
+    /// engine methods must not call each other inside the closure
+    /// (RefCell would panic) — they share compute via the `*_into`
+    /// helpers instead.
+    fn with_scratch<R>(&self, b: usize, f: impl FnOnce(&mut Scratch) -> R) -> R {
+        SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            self.ensure_scratch(s, b);
+            f(s)
+        })
+    }
+
+    /// Forward through all layers into scratch: `zs[l]` pre-activations,
+    /// `acts[l] = relu(zs[l])` for hidden layers (the backward pass
+    /// reuses both without recomputing).
+    fn forward_into(
         &self,
         params: &[f32],
         x: &[f32],
         b: usize,
-    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
-        let dims = self.meta.layer_dims();
-        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(dims.len());
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(dims.len());
-        let mut off = 0usize;
-        for (li, &(fin, fout)) in dims.iter().enumerate() {
+        zs: &mut [Vec<f32>],
+        acts: &mut [Vec<f32>],
+    ) {
+        let nl = self.dims.len();
+        for li in 0..nl {
+            let (fin, fout) = self.dims[li];
+            let off = self.offsets[li];
             let w = &params[off..off + fin * fout];
             let bia = &params[off + fin * fout..off + fin * fout + fout];
-            off += fin * fout + fout;
-            let input: &[f32] = if li == 0 { x } else { &acts[li - 1] };
-            let mut z = vec![0.0f32; b * fout];
-            matmul_bias(input, w, bia, &mut z, b, fin, fout);
-            if li + 1 < dims.len() {
-                acts.push(z.iter().map(|&v| v.max(0.0)).collect());
-            } else {
-                acts.push(Vec::new());
+            {
+                let input: &[f32] = if li == 0 { x } else { &acts[li - 1][..b * fin] };
+                let z = &mut zs[li][..b * fout];
+                match self.path {
+                    KernelPath::Blocked => {
+                        kernels::matmul_bias_blocked(input, w, bia, z, b, fin, fout)
+                    }
+                    KernelPath::Naive => {
+                        kernels::matmul_bias_naive(input, w, bia, z, b, fin, fout)
+                    }
+                }
             }
-            zs.push(z);
+            if li + 1 < nl {
+                let z = &zs[li][..b * fout];
+                for (a, &zv) in acts[li][..b * fout].iter_mut().zip(z) {
+                    *a = zv.max(0.0);
+                }
+            }
         }
-        (zs, acts)
     }
 
     fn l2_loss(&self, params: &[f32]) -> f64 {
         if self.meta.l2 == 0.0 {
             return 0.0;
         }
-        let mut off = 0usize;
         let mut sq = 0.0f64;
-        for (fin, fout) in self.meta.layer_dims() {
+        for (li, &(fin, fout)) in self.dims.iter().enumerate() {
+            let off = self.offsets[li];
             for v in &params[off..off + fin * fout] {
                 sq += (*v as f64) * (*v as f64);
             }
-            off += fin * fout + fout;
         }
         0.5 * self.meta.l2 as f64 * sq
     }
 
-    /// loss + full backward pass. Returns (loss, grad).
-    fn backprop(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, Vec<f32>) {
-        let meta = &self.meta;
-        let dims = meta.layer_dims();
-        let (zs, acts) = self.forward_all(params, x, b);
-        let last = zs.len() - 1;
-        let out_w = dims[last].1;
-
-        // dz for the output layer + data loss
-        let mut dz = vec![0.0f32; b * out_w];
-        let data_loss: f64 = match meta.kind {
+    /// Mean data loss over the output layer; when `dz` is provided also
+    /// writes the output-layer delta (`resid/b` resp. `(p - y)/b`).
+    fn output_loss(
+        &self,
+        zlast: &[f32],
+        y: &[f32],
+        b: usize,
+        out_w: usize,
+        mut dz: Option<&mut [f32]>,
+    ) -> f64 {
+        match self.meta.kind {
             ModelKind::LinReg => {
-                // loss = 0.5*mean(resid^2); dz = resid / b
                 let mut acc = 0.0f64;
                 for r in 0..b {
-                    let resid = zs[last][r] - y[r];
+                    let resid = zlast[r] - y[r];
                     acc += 0.5 * (resid as f64) * (resid as f64);
-                    dz[r] = resid / b as f32;
+                    if let Some(dz) = dz.as_deref_mut() {
+                        dz[r] = resid / b as f32;
+                    }
                 }
                 acc / b as f64
             }
             _ => {
-                // softmax xent; dz = (p - y)/b
                 let mut acc = 0.0f64;
                 for r in 0..b {
-                    let logits = &zs[last][r * out_w..(r + 1) * out_w];
+                    let logits = &zlast[r * out_w..(r + 1) * out_w];
                     let yrow = &y[r * out_w..(r + 1) * out_w];
                     let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
                     let mut zsum = 0.0f64;
@@ -161,84 +274,78 @@ impl NativeEngine {
                     }
                     let logz = zsum.ln() + m as f64;
                     for c in 0..out_w {
-                        let p = ((logits[c] as f64 - logz).exp()) as f32;
-                        dz[r * out_w + c] = (p - yrow[c]) / b as f32;
+                        if let Some(dz) = dz.as_deref_mut() {
+                            let p = ((logits[c] as f64 - logz).exp()) as f32;
+                            dz[r * out_w + c] = (p - yrow[c]) / b as f32;
+                        }
                         acc -= yrow[c] as f64 * (logits[c] as f64 - logz);
                     }
                 }
                 acc / b as f64
             }
-        };
-
-        // walk layers backward accumulating gradients
-        let mut grad = vec![0.0f32; meta.param_count];
-        let mut offsets = Vec::with_capacity(dims.len());
-        {
-            let mut off = 0;
-            for &(fin, fout) in &dims {
-                offsets.push(off);
-                off += fin * fout + fout;
-            }
         }
-        let mut dcur = dz;
-        for li in (0..dims.len()).rev() {
-            let (fin, fout) = dims[li];
-            let off = offsets[li];
+    }
+
+    /// Full backward pass into `s.grad` (zeroed first). Returns the
+    /// total loss. All temporaries live in `s`; no allocation.
+    fn backprop_into(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        b: usize,
+        s: &mut Scratch,
+    ) -> f32 {
+        let Scratch { zs, acts, dcur, dprev, grad, wt } = s;
+        self.forward_into(params, x, b, zs, acts);
+        let nl = self.dims.len();
+        let out_w = self.dims[nl - 1].1;
+        let data_loss =
+            self.output_loss(&zs[nl - 1][..b * out_w], y, b, out_w, Some(&mut dcur[..b * out_w]));
+
+        grad.fill(0.0);
+        for li in (0..nl).rev() {
+            let (fin, fout) = self.dims[li];
+            let off = self.offsets[li];
             let w = &params[off..off + fin * fout];
             // layer input: x for layer 0, cached relu(z_{li-1}) otherwise
-            let input: &[f32] = if li == 0 { x } else { &acts[li - 1] };
-            // dW = input^T dcur (+ l2*W), db = colsum(dcur)
+            let input: &[f32] = if li == 0 { x } else { &acts[li - 1][..b * fin] };
+            let d = &dcur[..b * fout];
             {
-                let (gw, gb) = grad[off..off + fin * fout + fout]
-                    .split_at_mut(fin * fout);
-                for r in 0..b {
-                    let xr = &input[r * fin..(r + 1) * fin];
-                    let dr = &dcur[r * fout..(r + 1) * fout];
-                    for i in 0..fin {
-                        let xi = xr[i];
-                        if xi == 0.0 {
-                            continue;
-                        }
-                        let row = &mut gw[i * fout..(i + 1) * fout];
-                        for j in 0..fout {
-                            row[j] += xi * dr[j];
-                        }
+                let (gw, gb) = grad[off..off + fin * fout + fout].split_at_mut(fin * fout);
+                match self.path {
+                    KernelPath::Blocked => {
+                        kernels::grad_weights_blocked(input, d, gw, gb, b, fin, fout)
                     }
-                    for j in 0..fout {
-                        gb[j] += dr[j];
+                    KernelPath::Naive => {
+                        kernels::grad_weights_naive(input, d, gw, gb, b, fin, fout)
                     }
                 }
-                if meta.l2 != 0.0 {
+                if self.meta.l2 != 0.0 {
                     for (g, wv) in gw.iter_mut().zip(w) {
-                        *g += meta.l2 * wv;
+                        *g += self.meta.l2 * wv;
                     }
                 }
             }
-            // propagate: dprev = (dcur W^T) * relu'(z_{li-1})
+            // propagate: dprev = (dcur Wᵀ) * relu'(z_{li-1})
             if li > 0 {
-                let mut dprev = vec![0.0f32; b * fin];
-                for r in 0..b {
-                    let dr = &dcur[r * fout..(r + 1) * fout];
-                    let dp = &mut dprev[r * fin..(r + 1) * fin];
-                    for i in 0..fin {
-                        let wrow = &w[i * fout..(i + 1) * fout];
-                        let mut s = 0.0f32;
-                        for j in 0..fout {
-                            s += dr[j] * wrow[j];
-                        }
-                        dp[i] = s;
+                let dp = &mut dprev[..b * fin];
+                // packing Wᵀ only pays once the batch amortizes it
+                if self.path == KernelPath::Blocked && b >= 8 {
+                    kernels::pack_transpose(w, wt, fin, fout);
+                    kernels::dprev_blocked(d, wt, dp, b, fin, fout);
+                } else {
+                    kernels::dprev_naive(d, w, dp, b, fin, fout);
+                }
+                for (dv, &zv) in dp.iter_mut().zip(&zs[li - 1][..b * fin]) {
+                    if zv <= 0.0 {
+                        *dv = 0.0;
                     }
                 }
-                for (dp, z) in dprev.iter_mut().zip(&zs[li - 1]) {
-                    if *z <= 0.0 {
-                        *dp = 0.0;
-                    }
-                }
-                dcur = dprev;
+                std::mem::swap(dcur, dprev);
             }
         }
-        let total = data_loss + self.l2_loss(params);
-        (total as f32, grad)
+        (data_loss + self.l2_loss(params)) as f32
     }
 
     fn check_batch(&self, x: &[f32], y: &[f32]) -> usize {
@@ -247,28 +354,15 @@ impl NativeEngine {
         assert_eq!(y.len(), b * self.meta.y_width(), "y batch mismatch");
         b
     }
-}
 
-/// z = x @ w + bias; x: [b, fin], w: [fin, fout] row-major.
-fn matmul_bias(x: &[f32], w: &[f32], bias: &[f32], z: &mut [f32], b: usize, fin: usize, fout: usize) {
-    // init with bias
-    for r in 0..b {
-        z[r * fout..(r + 1) * fout].copy_from_slice(bias);
-    }
-    // ikj loop: stride-1 inner over fout
-    for r in 0..b {
-        let xr = &x[r * fin..(r + 1) * fin];
-        let zr = &mut z[r * fout..(r + 1) * fout];
-        for i in 0..fin {
-            let xi = xr[i];
-            if xi == 0.0 {
-                continue;
-            }
-            let wrow = &w[i * fout..(i + 1) * fout];
-            for j in 0..fout {
-                zr[j] += xi * wrow[j];
-            }
-        }
+    fn round_strides(&self, xs: &[f32], ys: &[f32]) -> (usize, usize, usize, usize) {
+        let b = self.meta.batch;
+        let xstride = b * self.meta.d;
+        let ystride = b * self.meta.y_width();
+        assert_eq!(xs.len() % xstride, 0);
+        let tau = xs.len() / xstride;
+        assert_eq!(ys.len(), tau * ystride);
+        (b, xstride, ystride, tau)
     }
 }
 
@@ -279,42 +373,21 @@ impl Engine for NativeEngine {
 
     fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
         let b = self.check_batch(x, y);
-        let (zs, _) = self.forward_all(params, x, b);
-        let last = zs.len() - 1;
-        let out_w = self.meta.layer_dims()[last].1;
-        let data: f64 = match self.meta.kind {
-            ModelKind::LinReg => {
-                let mut acc = 0.0f64;
-                for r in 0..b {
-                    let resid = (zs[last][r] - y[r]) as f64;
-                    acc += 0.5 * resid * resid;
-                }
-                acc / b as f64
-            }
-            _ => {
-                let mut acc = 0.0f64;
-                for r in 0..b {
-                    let logits = &zs[last][r * out_w..(r + 1) * out_w];
-                    let yrow = &y[r * out_w..(r + 1) * out_w];
-                    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                    let mut zsum = 0.0f64;
-                    for &l in logits {
-                        zsum += ((l - m) as f64).exp();
-                    }
-                    let logz = zsum.ln() + m as f64;
-                    for c in 0..out_w {
-                        acc -= yrow[c] as f64 * (logits[c] as f64 - logz);
-                    }
-                }
-                acc / b as f64
-            }
-        };
+        let out_w = self.dims[self.dims.len() - 1].1;
+        let data = self.with_scratch(b, |s| {
+            let Scratch { zs, acts, .. } = s;
+            self.forward_into(params, x, b, zs, acts);
+            self.output_loss(&zs[zs.len() - 1][..b * out_w], y, b, out_w, None)
+        });
         Ok((data + self.l2_loss(params)) as f32)
     }
 
     fn loss_grad(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, Vec<f32>)> {
         let b = self.check_batch(x, y);
-        Ok(self.backprop(params, x, y, b))
+        Ok(self.with_scratch(b, |s| {
+            let loss = self.backprop_into(params, x, y, b, s);
+            (loss, s.grad.clone())
+        }))
     }
 
     fn gate_step(
@@ -325,12 +398,15 @@ impl Engine for NativeEngine {
         y: &[f32],
         eta: f32,
     ) -> Result<Vec<f32>> {
-        let (_, g) = self.loss_grad(params, x, y)?;
-        Ok(params
-            .iter()
-            .zip(g.iter().zip(delta))
-            .map(|(w, (gi, di))| w - eta * (gi - di))
-            .collect())
+        let b = self.check_batch(x, y);
+        Ok(self.with_scratch(b, |s| {
+            self.backprop_into(params, x, y, b, s);
+            params
+                .iter()
+                .zip(s.grad.iter().zip(delta))
+                .map(|(w, (gi, di))| w - eta * (gi - di))
+                .collect()
+        }))
     }
 
     fn gate_round(
@@ -341,22 +417,25 @@ impl Engine for NativeEngine {
         ys: &[f32],
         eta: f32,
     ) -> Result<Vec<f32>> {
-        let b = self.meta.batch;
-        let xstride = b * self.meta.d;
-        let ystride = b * self.meta.y_width();
-        assert_eq!(xs.len() % xstride, 0);
-        let tau = xs.len() / xstride;
-        assert_eq!(ys.len(), tau * ystride);
+        let (b, xstride, ystride, tau) = self.round_strides(xs, ys);
+        // the returned weights are the ONLY allocation in the round loop
         let mut w = params.to_vec();
-        for t in 0..tau {
-            w = self.gate_step(
-                &w,
-                delta,
-                &xs[t * xstride..(t + 1) * xstride],
-                &ys[t * ystride..(t + 1) * ystride],
-                eta,
-            )?;
-        }
+        self.with_scratch(b, |s| {
+            for t in 0..tau {
+                self.backprop_into(
+                    &w,
+                    &xs[t * xstride..(t + 1) * xstride],
+                    &ys[t * ystride..(t + 1) * ystride],
+                    b,
+                    s,
+                );
+                // fused update; same FP expression as the old per-step
+                // `w - eta * (g - delta)`, evaluated in place
+                for (wi, (gi, di)) in w.iter_mut().zip(s.grad.iter().zip(delta)) {
+                    *wi -= eta * (gi - di);
+                }
+            }
+        });
         Ok(w)
     }
 
@@ -369,24 +448,24 @@ impl Engine for NativeEngine {
         eta: f32,
         prox_mu: f32,
     ) -> Result<Vec<f32>> {
-        let b = self.meta.batch;
-        let xstride = b * self.meta.d;
-        let ystride = b * self.meta.y_width();
-        let tau = xs.len() / xstride;
+        let (b, xstride, ystride, tau) = self.round_strides(xs, ys);
         let mut w = params.to_vec();
-        for t in 0..tau {
-            let (_, mut g) = self.loss_grad(
-                &w,
-                &xs[t * xstride..(t + 1) * xstride],
-                &ys[t * ystride..(t + 1) * ystride],
-            )?;
-            for ((gi, wi), ai) in g.iter_mut().zip(&w).zip(anchor) {
-                *gi += prox_mu * (wi - ai);
+        self.with_scratch(b, |s| {
+            for t in 0..tau {
+                self.backprop_into(
+                    &w,
+                    &xs[t * xstride..(t + 1) * xstride],
+                    &ys[t * ystride..(t + 1) * ystride],
+                    b,
+                    s,
+                );
+                // fused `w -= eta * (g + mu * (w - anchor))`; identical
+                // evaluation order to the old two-pass formulation
+                for ((wi, gi), ai) in w.iter_mut().zip(&s.grad).zip(anchor) {
+                    *wi -= eta * (gi + prox_mu * (*wi - ai));
+                }
             }
-            for (wi, gi) in w.iter_mut().zip(&g) {
-                *wi -= eta * gi;
-            }
-        }
+        });
         Ok(w)
     }
 
@@ -395,19 +474,21 @@ impl Engine for NativeEngine {
             return Ok(f32::NAN);
         }
         let b = self.check_batch(x, y);
-        let (zs, _) = self.forward_all(params, x, b);
-        let last = zs.len() - 1;
         let c = self.meta.classes;
-        let mut correct = 0usize;
-        for r in 0..b {
-            let logits = &zs[last][r * c..(r + 1) * c];
-            let yrow = &y[r * c..(r + 1) * c];
-            let pred = argmax(logits);
-            let lab = argmax(yrow);
-            if pred == lab {
-                correct += 1;
+        let correct = self.with_scratch(b, |s| {
+            let Scratch { zs, acts, .. } = s;
+            self.forward_into(params, x, b, zs, acts);
+            let zlast = &zs[zs.len() - 1];
+            let mut correct = 0usize;
+            for r in 0..b {
+                let logits = &zlast[r * c..(r + 1) * c];
+                let yrow = &y[r * c..(r + 1) * c];
+                if argmax(logits) == argmax(yrow) {
+                    correct += 1;
+                }
             }
-        }
+            correct
+        });
         Ok(correct as f32 / b as f32)
     }
 
@@ -589,5 +670,58 @@ mod tests {
         }
         let l1 = e.loss(&w, &x, &y).unwrap();
         assert!(l1 < 0.5 * l0, "{l1} !< {l0}/2");
+    }
+
+    /// Engine-level smoke of the kernel-path ablation: blocked and
+    /// naive paths agree bit-for-bit on a full MLP round (the dedicated
+    /// differential suite lives in rust/tests/kernels.rs).
+    #[test]
+    fn blocked_and_naive_paths_agree_on_mlp_round() {
+        let make = |path| {
+            NativeEngine::mlp(9, 4, vec![7, 5], 0.02, 6, 3).kernel_path(path)
+        };
+        let eb = make(KernelPath::Blocked);
+        let en = make(KernelPath::Naive);
+        let mut rng = Rng::new(8);
+        let p = rand_vec(&mut rng, eb.meta().param_count);
+        let delta = rand_vec(&mut rng, eb.meta().param_count);
+        let xs = rand_vec(&mut rng, 3 * 6 * 9);
+        let mut ys = vec![0.0f32; 3 * 6 * 4];
+        for t in 0..18 {
+            ys[t * 4 + t % 4] = 1.0;
+        }
+        let wb = eb.gate_round(&p, &delta, &xs, &ys, 0.05).unwrap();
+        let wn = en.gate_round(&p, &delta, &xs, &ys, 0.05).unwrap();
+        assert_eq!(wb, wn);
+        let (lb, gb) = eb.loss_grad(&p, &xs[..54], &ys[..24]).unwrap();
+        let (ln, gn) = en.loss_grad(&p, &xs[..54], &ys[..24]).unwrap();
+        assert_eq!(lb, ln);
+        assert_eq!(gb, gn);
+    }
+
+    /// Scratch reuse across different engines on one thread must not
+    /// leak state between models (the thread-local is shared).
+    #[test]
+    fn scratch_is_safe_across_models() {
+        let big = NativeEngine::mlp(20, 5, vec![16], 0.0, 8, 1);
+        let small = NativeEngine::linreg(3, 2, 1);
+        let mut rng = Rng::new(9);
+        let pb = rand_vec(&mut rng, big.meta().param_count);
+        let xb = rand_vec(&mut rng, 8 * 20);
+        let mut yb = vec![0.0f32; 8 * 5];
+        for r in 0..8 {
+            yb[r * 5 + r % 5] = 1.0;
+        }
+        let ps = rand_vec(&mut rng, 4);
+        let xsm = rand_vec(&mut rng, 6);
+        let ysm = rand_vec(&mut rng, 2);
+        // interleave: big, small, big — results must match fresh-thread runs
+        let (l1, g1) = big.loss_grad(&pb, &xb, &yb).unwrap();
+        let (ls, _) = small.loss_grad(&ps, &xsm, &ysm).unwrap();
+        let (l2, g2) = big.loss_grad(&pb, &xb, &yb).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+        let (ls2, _) = small.loss_grad(&ps, &xsm, &ysm).unwrap();
+        assert_eq!(ls, ls2);
     }
 }

@@ -4,7 +4,9 @@
 
 use crate::coordinator::ExperimentConfig;
 use crate::data::{shard, synth};
-use crate::engine::{Engine, HloEngine, Manifest, ModelKind, ModelMeta, NativeEngine};
+use crate::engine::{
+    Engine, HloEngine, KernelPath, Manifest, ModelKind, ModelMeta, NativeEngine,
+};
 use crate::fed::ClientFleet;
 use crate::util::Rng;
 use anyhow::{Context, Result};
@@ -26,7 +28,9 @@ pub fn default_artifacts_dir() -> std::path::PathBuf {
 
 /// Build an engine by kind ("hlo" loads artifacts; "native" is the
 /// pure-Rust twin — metadata from the manifest when present, else parsed
-/// from the model name).
+/// from the model name; "native-naive" is the same twin pinned to the
+/// unblocked reference kernels, used by the bench ablation and the
+/// differential kernel tests).
 pub fn build_engine(
     engine_kind: &str,
     model: &str,
@@ -37,15 +41,24 @@ pub fn build_engine(
             let manifest = Manifest::load(artifacts_dir)?;
             Ok(Box::new(HloEngine::load(&manifest, model)?))
         }
-        "native" => {
+        "native" | "native-naive" => {
+            let path = if engine_kind == "native-naive" {
+                KernelPath::Naive
+            } else {
+                KernelPath::Blocked
+            };
             if let Ok(manifest) = Manifest::load(artifacts_dir) {
                 if let Ok(meta) = manifest.model(model) {
-                    return Ok(Box::new(NativeEngine::new(meta.clone())));
+                    return Ok(Box::new(
+                        NativeEngine::new(meta.clone()).kernel_path(path),
+                    ));
                 }
             }
-            Ok(Box::new(native_from_name(model)?))
+            Ok(Box::new(native_from_name(model)?.kernel_path(path)))
         }
-        other => anyhow::bail!("unknown engine '{other}' (hlo|native)"),
+        other => {
+            anyhow::bail!("unknown engine '{other}' (hlo|native|native-naive)")
+        }
     }
 }
 
@@ -137,6 +150,33 @@ mod tests {
         assert_eq!(e.meta().hidden, vec![128, 64]);
         assert!(native_from_name("mlp").is_err());
         assert!(native_from_name("gru_d5").is_err());
+    }
+
+    #[test]
+    fn native_naive_engine_agrees_with_native() {
+        let dir = Path::new("/nonexistent-artifacts");
+        let blocked = build_engine("native", "logreg_d12_c3", dir).unwrap();
+        let naive = build_engine("native-naive", "logreg_d12_c3", dir).unwrap();
+        let meta = blocked.meta().clone();
+        let mut rng = Rng::new(3);
+        let mut params = vec![0.0f32; meta.param_count];
+        rng.fill_normal(&mut params, 0.2);
+        let mut x = vec![0.0f32; meta.batch * meta.d];
+        rng.fill_normal(&mut x, 0.5);
+        let mut y = vec![0.0f32; meta.batch * meta.classes];
+        for r in 0..meta.batch {
+            y[r * meta.classes + rng.below(meta.classes)] = 1.0;
+        }
+        // order-preserving blocked kernels: bitwise-identical results
+        let (la, ga) = blocked.loss_grad(&params, &x, &y).unwrap();
+        let (lb, gb) = naive.loss_grad(&params, &x, &y).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn build_engine_rejects_unknown_kind() {
+        assert!(build_engine("nativ", "linreg_d5", Path::new(".")).is_err());
     }
 
     #[test]

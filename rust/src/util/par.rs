@@ -4,13 +4,38 @@
 //! worker threads with static chunking and returns results in order.
 //! Used by the coordinator to fan local client work out across cores —
 //! the simulated analogue of clients computing concurrently.
+//!
+//! `par_map_min_chunk(n, min_chunk, f)` is the threshold-aware variant:
+//! it never hands a worker fewer than `min_chunk` items, so callers with
+//! cheap per-item work (an 8-client linreg round is a few thousand
+//! FLOPs) stay serial instead of paying ~10µs of thread spawn/join per
+//! worker. Callers translate a per-item work estimate into a threshold
+//! via [`min_chunk_for_work`].
 
-/// Number of worker threads to use for `n` items.
-pub fn threads_for(n: usize) -> usize {
+/// Number of worker threads for `n` items at `min_chunk` items per
+/// worker minimum. `min_chunk = 1` reproduces the old `threads_for`.
+pub fn threads_for_chunked(n: usize, min_chunk: usize) -> usize {
     let cores = std::thread::available_parallelism()
         .map(|c| c.get())
         .unwrap_or(1);
-    cores.min(n).max(1)
+    cores.min(n / min_chunk.max(1)).min(n).max(1)
+}
+
+/// Number of worker threads to use for `n` items.
+pub fn threads_for(n: usize) -> usize {
+    threads_for_chunked(n, 1)
+}
+
+/// Items each worker must amortize its spawn cost over, given an
+/// estimate of the FLOPs (or any proportional work unit) per item.
+/// Tuned so one worker's chunk is ≥ ~2M FLOPs (≈ the cost of a few
+/// thread spawns at sub-GFLOP/s scalar throughput): tiny models run
+/// serial, one MLP `gate_round` (~2.4M FLOPs per tau=10, b=50 client)
+/// already clears it at 1 item.
+pub const PAR_MIN_FLOP: usize = 2_000_000;
+
+pub fn min_chunk_for_work(flop_per_item: usize) -> usize {
+    (PAR_MIN_FLOP / flop_per_item.max(1)).max(1)
 }
 
 /// Parallel map over `0..n` preserving order. `f` must be `Sync`.
@@ -20,7 +45,19 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let workers = threads_for(n);
+    par_map_min_chunk(n, 1, f)
+}
+
+/// Parallel map over `0..n` preserving order, spawning a worker only
+/// for every `min_chunk` items. Serial (same thread, same order) when
+/// the threshold leaves a single worker, so results are always
+/// order-identical to `(0..n).map(f)`.
+pub fn par_map_min_chunk<T, F>(n: usize, min_chunk: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads_for_chunked(n, min_chunk);
     if workers <= 1 || n < 2 {
         return (0..n).map(f).collect();
     }
@@ -78,5 +115,46 @@ mod tests {
     fn threads_bounded_by_items() {
         assert_eq!(threads_for(1), 1);
         assert!(threads_for(100) >= 1);
+    }
+
+    #[test]
+    fn min_chunk_keeps_small_n_serial() {
+        // 8 items at min_chunk 100 -> a single worker regardless of cores
+        assert_eq!(threads_for_chunked(8, 100), 1);
+        assert_eq!(threads_for_chunked(0, 100), 1);
+        // and par_map_min_chunk must take the serial path (observable:
+        // the closure sees calls strictly in order on one thread)
+        let order = std::sync::Mutex::new(Vec::new());
+        let got = par_map_min_chunk(8, 100, |i| {
+            order.lock().unwrap().push(i);
+            i * 3
+        });
+        assert_eq!(got, (0..8).map(|i| i * 3).collect::<Vec<_>>());
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn min_chunk_results_order_identical_to_serial() {
+        for min_chunk in [1, 3, 64, 10_000] {
+            let got = par_map_min_chunk(257, min_chunk, |i| i * i + 1);
+            let want: Vec<usize> = (0..257).map(|i| i * i + 1).collect();
+            assert_eq!(got, want, "min_chunk={min_chunk}");
+        }
+    }
+
+    #[test]
+    fn threads_scale_with_work_budget() {
+        // plenty of items, large chunks: worker count limited by n/chunk
+        let t = threads_for_chunked(64, 16);
+        assert!(t <= 4, "expected <= 64/16 workers, got {t}");
+        assert!(t >= 1);
+    }
+
+    #[test]
+    fn min_chunk_for_work_thresholds() {
+        assert_eq!(min_chunk_for_work(PAR_MIN_FLOP), 1);
+        assert_eq!(min_chunk_for_work(PAR_MIN_FLOP * 10), 1);
+        assert_eq!(min_chunk_for_work(PAR_MIN_FLOP / 4), 4);
+        assert_eq!(min_chunk_for_work(0), PAR_MIN_FLOP);
     }
 }

@@ -1,0 +1,229 @@
+//! Blocked-vs-naive kernel differential tests (PR 6).
+//!
+//! The blocked kernels in `engine::kernels` are order-preserving: every
+//! output element accumulates the same floating-point additions in the
+//! same order as the naive reference, so the two `KernelPath`s are
+//! expected to agree bit-for-bit. These tests assert the weaker (and
+//! future-proof) contract promised by the ISSUE — agreement to f32
+//! tolerance — across every Engine entry point, for the full model
+//! catalog AND awkward shapes: dimensions that are not multiples of the
+//! MR/BK/BN tiles, `batch = 1` (all micro-tile remainder), and
+//! `fout = 1` (linreg; degenerate column blocking).
+//!
+//! A finite-difference check validates the gradient THROUGH the blocked
+//! path independently of the naive twin, closing the loop in case both
+//! paths ever share a bug.
+
+use flanp::engine::{Engine, KernelPath, NativeEngine};
+use flanp::util::Rng;
+
+/// Relative-ish f32 tolerance: |a-b| <= atol + rtol * max(|a|,|b|).
+fn close(a: f32, b: f32, atol: f32, rtol: f32) -> bool {
+    let diff = (a - b).abs();
+    diff <= atol + rtol * a.abs().max(b.abs())
+}
+
+fn assert_vec_close(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            close(x, y, atol, rtol),
+            "{what}[{i}]: blocked {x} vs naive {y}"
+        );
+    }
+}
+
+fn rand_vec(rng: &mut Rng, n: usize, sigma: f32) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, sigma);
+    v
+}
+
+fn labels(rng: &mut Rng, meta: &flanp::engine::ModelMeta, tau: usize) -> Vec<f32> {
+    let rows = tau * meta.batch;
+    if meta.y_width() == 1 {
+        rand_vec(rng, rows, 1.0)
+    } else {
+        let mut y = vec![0.0f32; rows * meta.classes];
+        for r in 0..rows {
+            y[r * meta.classes + rng.below(meta.classes)] = 1.0;
+        }
+        y
+    }
+}
+
+/// The catalog models plus tile-hostile shapes. Each pair shares one
+/// `ModelMeta`, differing only in `KernelPath`.
+fn model_pairs() -> Vec<(NativeEngine, NativeEngine)> {
+    let builders: Vec<fn() -> NativeEngine> = vec![
+        // catalog (aot.py defaults)
+        || NativeEngine::linreg(25, 10, 10),
+        || NativeEngine::logreg(784, 10, 0.01, 50, 10),
+        || NativeEngine::mlp(784, 10, vec![128, 64], 0.01, 50, 10),
+        // awkward: no dimension is a multiple of MR=4 / BK=128 / BN=512,
+        // batch 9 engages the packed-transpose dprev path (b >= 8)
+        || NativeEngine::mlp(130, 3, vec![66, 17], 0.01, 9, 5),
+        // batch = 1: every row is micro-tile remainder
+        || NativeEngine::mlp(33, 5, vec![13], 0.0, 1, 4),
+        || NativeEngine::linreg(7, 1, 3),
+        // fout = 1 output layer with a hidden layer above it would need
+        // a regression MLP (not in the catalog); linreg covers fout=1
+        || NativeEngine::linreg(257, 6, 2),
+    ];
+    builders
+        .into_iter()
+        .map(|mk| {
+            (
+                mk().kernel_path(KernelPath::Blocked),
+                mk().kernel_path(KernelPath::Naive),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn blocked_agrees_with_naive_on_all_entry_points() {
+    for (blocked, naive) in model_pairs() {
+        let meta = blocked.meta().clone();
+        let mut rng = Rng::new(41);
+        let params = rand_vec(&mut rng, meta.param_count, 0.3);
+        let delta = rand_vec(&mut rng, meta.param_count, 0.1);
+        let anchor = rand_vec(&mut rng, meta.param_count, 0.3);
+        let x = rand_vec(&mut rng, meta.batch * meta.d, 0.7);
+        let y = labels(&mut rng, &meta, 1);
+        let xs = rand_vec(&mut rng, meta.tau * meta.batch * meta.d, 0.7);
+        let ys = labels(&mut rng, &meta, meta.tau);
+        let name = &meta.name;
+        let (atol, rtol) = (1e-6, 1e-5);
+
+        let la = blocked.loss(&params, &x, &y).unwrap();
+        let lb = naive.loss(&params, &x, &y).unwrap();
+        assert!(close(la, lb, atol, rtol), "{name}/loss: {la} vs {lb}");
+
+        let (la, ga) = blocked.loss_grad(&params, &x, &y).unwrap();
+        let (lb, gb) = naive.loss_grad(&params, &x, &y).unwrap();
+        assert!(close(la, lb, atol, rtol), "{name}/loss_grad loss");
+        assert_vec_close(&ga, &gb, atol, rtol, &format!("{name}/loss_grad"));
+
+        let wa = blocked.gate_step(&params, &delta, &x, &y, 0.05).unwrap();
+        let wb = naive.gate_step(&params, &delta, &x, &y, 0.05).unwrap();
+        assert_vec_close(&wa, &wb, atol, rtol, &format!("{name}/gate_step"));
+
+        let wa = blocked.gate_round(&params, &delta, &xs, &ys, 0.05).unwrap();
+        let wb = naive.gate_round(&params, &delta, &xs, &ys, 0.05).unwrap();
+        assert_vec_close(&wa, &wb, atol, rtol, &format!("{name}/gate_round"));
+
+        let wa = blocked
+            .prox_round(&params, &anchor, &xs, &ys, 0.05, 0.3)
+            .unwrap();
+        let wb = naive
+            .prox_round(&params, &anchor, &xs, &ys, 0.05, 0.3)
+            .unwrap();
+        assert_vec_close(&wa, &wb, atol, rtol, &format!("{name}/prox_round"));
+
+        let aa = blocked.accuracy(&params, &x, &y).unwrap();
+        let ab = naive.accuracy(&params, &x, &y).unwrap();
+        if meta.y_width() == 1 {
+            assert!(aa.is_nan() && ab.is_nan(), "{name}/accuracy NaN");
+        } else {
+            assert!(close(aa, ab, atol, rtol), "{name}/accuracy");
+        }
+    }
+}
+
+#[test]
+fn blocked_and_naive_are_bit_identical_on_catalog() {
+    // The strong (order-preservation) contract the solver pins rely on:
+    // the blocked kernels perform identical additions in identical
+    // order, so results match bitwise, not just to tolerance.
+    for (blocked, naive) in model_pairs() {
+        let meta = blocked.meta().clone();
+        let mut rng = Rng::new(97);
+        let params = rand_vec(&mut rng, meta.param_count, 0.3);
+        let delta = rand_vec(&mut rng, meta.param_count, 0.1);
+        let xs = rand_vec(&mut rng, meta.tau * meta.batch * meta.d, 0.7);
+        let ys = labels(&mut rng, &meta, meta.tau);
+        let wa = blocked.gate_round(&params, &delta, &xs, &ys, 0.05).unwrap();
+        let wb = naive.gate_round(&params, &delta, &xs, &ys, 0.05).unwrap();
+        assert_eq!(wa, wb, "{}/gate_round bitwise", meta.name);
+    }
+}
+
+/// Central-difference gradient of `loss` at `params`.
+fn finite_diff(engine: &dyn Engine, params: &[f32], x: &[f32], y: &[f32], h: f32) -> Vec<f32> {
+    (0..params.len())
+        .map(|k| {
+            let mut p = params.to_vec();
+            p[k] = params[k] + h;
+            let lp = engine.loss(&p, x, y).unwrap() as f64;
+            p[k] = params[k] - h;
+            let lm = engine.loss(&p, x, y).unwrap() as f64;
+            ((lp - lm) / (2.0 * h as f64)) as f32
+        })
+        .collect()
+}
+
+#[test]
+fn blocked_gradient_matches_finite_differences_smooth_model() {
+    // logreg is smooth (softmax-xent, no ReLU kinks), so central
+    // differences are tight: truncation O(h^2), f32 roundoff O(eps/h)
+    // ~ 1e-5 per eval at h = 1e-2. Exercises the blocked forward
+    // matmul + grad_weights kernels (no hidden layer => no dprev).
+    let engine = NativeEngine::logreg(6, 3, 0.01, 9, 2)
+        .kernel_path(KernelPath::Blocked);
+    let meta = engine.meta().clone();
+    let mut rng = Rng::new(11);
+    let params = rand_vec(&mut rng, meta.param_count, 0.4);
+    let x = rand_vec(&mut rng, meta.batch * meta.d, 0.8);
+    let y = labels(&mut rng, &meta, 1);
+    let (_, grad) = engine.loss_grad(&params, &x, &y).unwrap();
+    let fd = finite_diff(&engine, &params, &x, &y, 1e-2);
+    assert_vec_close(&grad, &fd, 2e-3, 2e-2, "logreg grad vs finite-diff");
+}
+
+#[test]
+fn blocked_gradient_matches_finite_differences_mlp() {
+    // Small MLP, batch 9 so the packed-transpose dprev path (b >= 8) is
+    // exercised. ReLU kinks can land inside a +-h interval for a few
+    // (param, row) pairs, each skewing that element's central
+    // difference by up to ~|slope change|/2 (~1e-2 here), so the
+    // per-element tolerance is loose — the aggregate mean-abs-error
+    // check below is what catches a systematically wrong gradient
+    // (a bad transpose or offset errs on most elements, not a few).
+    let engine = NativeEngine::mlp(5, 3, vec![4], 0.02, 9, 2)
+        .kernel_path(KernelPath::Blocked);
+    let meta = engine.meta().clone();
+    let mut rng = Rng::new(11);
+    let params = rand_vec(&mut rng, meta.param_count, 0.4);
+    let x = rand_vec(&mut rng, meta.batch * meta.d, 0.8);
+    let y = labels(&mut rng, &meta, 1);
+    let (_, grad) = engine.loss_grad(&params, &x, &y).unwrap();
+    let fd = finite_diff(&engine, &params, &x, &y, 1e-2);
+    assert_vec_close(&grad, &fd, 2e-2, 5e-2, "mlp grad vs finite-diff");
+    let mean_err = grad
+        .iter()
+        .zip(&fd)
+        .map(|(&g, &f)| (g - f).abs() as f64)
+        .sum::<f64>()
+        / grad.len() as f64;
+    assert!(mean_err < 3e-3, "mean |analytic - fd| = {mean_err}");
+}
+
+#[test]
+fn kernel_path_default_is_blocked() {
+    let e = NativeEngine::linreg(5, 4, 2);
+    // the builder default must be the fast path; `native-naive` in
+    // setup.rs is the only way to get the reference kernels
+    assert_eq!(format!("{:?}", KernelPath::default()), "Blocked");
+    // and a default-constructed engine behaves identically to an
+    // explicitly-blocked one
+    let eb = NativeEngine::linreg(5, 4, 2).kernel_path(KernelPath::Blocked);
+    let mut rng = Rng::new(5);
+    let params = rand_vec(&mut rng, e.meta().param_count, 0.3);
+    let x = rand_vec(&mut rng, 4 * 5, 0.5);
+    let y = rand_vec(&mut rng, 4, 1.0);
+    assert_eq!(
+        e.loss_grad(&params, &x, &y).unwrap(),
+        eb.loss_grad(&params, &x, &y).unwrap()
+    );
+}
