@@ -9,7 +9,10 @@ use anyhow::{Context, Result};
 use flanp::coordinator::config::Subroutine;
 use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
 use flanp::engine::Engine;
-use flanp::fed::{DeadlinePolicy, SpeedModel, SystemModel, TierPolicy, Trace};
+use flanp::fed::{
+    DeadlineController, DeadlinePolicy, LazyFleet, LazyShards, PopulationSpec,
+    SpeedModel, StreamingStats, SystemModel, TierPolicy, Trace, VirtualClock,
+};
 use flanp::setup;
 use flanp::util::cli::Args;
 use std::path::PathBuf;
@@ -39,7 +42,14 @@ EXPERIMENTS:
                     under correlated availability: i.i.d. (uncorrelated
                     control), diurnal rotation, clustered outages, and a
                     recorded Markov trace replayed via trace:FILE —
-                    the Hard-et-al. "winner flips" sweep
+                    the Hard-et-al. \"winner flips\" sweep
+  scale             population-scale lazy-fleet sweep: O(cohort) rounds
+                    over pop:N:avail:diurnal populations (10k -> 1M
+                    clients; --quick: 10k -> 50k), measuring host
+                    time-per-round flatness as N grows and writing
+                    <out>/scale.json (schema flanp-scale/v1; round
+                    count pinned by FLANP_BENCH_ITERS, default 200) —
+                    see docs/scale.md
   all               every figure/table/ablation above
 
 OPTIONS:
@@ -103,7 +113,7 @@ fn main() {
 const EXPS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6a", "fig6b", "fig7",
     "fig8", "fig9", "table1", "table2", "ablate", "scenarios", "async",
-    "tiers", "avail", "all", "help",
+    "tiers", "avail", "scale", "all", "help",
 ];
 
 fn real_main() -> Result<()> {
@@ -152,6 +162,7 @@ fn real_main() -> Result<()> {
         "async" => async_sweep(&opts)?,
         "tiers" => tiers_sweep(&opts)?,
         "avail" => avail_sweep(&opts)?,
+        "scale" => scale_sweep(&opts)?,
         "all" => {
             fig1(&opts)?;
             fig2(&opts)?;
@@ -925,6 +936,207 @@ fn avail_sweep(opts: &BenchOpts) -> Result<()> {
         "  (the ranking under diurnal vs iid is the Hard-et-al. effect: \
          correlated availability changes the winner)"
     );
+    Ok(())
+}
+
+/// Population-scale sweep (docs/scale.md): run the lazily-realized
+/// fleet over `pop:N:avail:diurnal` populations from 10k to 1M clients
+/// and measure the HOST cost of a round. The O(cohort) contract says
+/// that cost is flat in N — the only O(N) work is the one-time
+/// construction scan, reported separately as `setup_ms`. Each round:
+/// select a cohort inside the frontier, realize conditions for the
+/// cohort only, price a `quantile:0.9` deadline off the population
+/// speed sketch, charge the virtual clock (all-offline rounds charge an
+/// estimate-priced wait, mirroring `deadline_round`), run plain SGD on
+/// lazily synthesized minibatches for the arrivals, and fold exact /
+/// censored observations back into the frontier estimates. Writes
+/// `<out>/scale.json` (schema `flanp-scale/v1`).
+fn scale_sweep(opts: &BenchOpts) -> Result<()> {
+    anyhow::ensure!(
+        opts.system.is_none(),
+        "--speed conflicts with the scale sweep (populations carry their \
+         own pop:N: scenarios)"
+    );
+    let rounds: usize = match std::env::var("FLANP_BENCH_ITERS") {
+        Ok(v) => v
+            .parse()
+            .with_context(|| format!("bad FLANP_BENCH_ITERS '{v}'"))?,
+        Err(_) => 200,
+    };
+    let pinned = std::env::var("FLANP_BENCH_ITERS").is_ok();
+    let populations: &[usize] = if opts.quick {
+        &[10_000, 50_000]
+    } else {
+        &[10_000, 100_000, 1_000_000]
+    };
+    let (cohort_size, tau, s, d, batch) = (256usize, 10usize, 64usize, 32usize, 16usize);
+    let eta = 0.01f32;
+    println!(
+        "=== Scale: O(cohort) rounds over lazy populations \
+         (cohort={cohort_size}, rounds={rounds}) ==="
+    );
+
+    let ddl = DeadlineController::new(
+        DeadlinePolicy::parse("quantile:0.9").map_err(|e| anyhow::anyhow!(e))?,
+    );
+    let mut rows = Vec::new();
+    for &n in populations {
+        let spec = PopulationSpec::parse(&format!(
+            "pop:{n}:avail:diurnal:40000:0.25:1:jitter:0.2:uniform:50:500"
+        ))
+        .map_err(|e| anyhow::anyhow!(e))?;
+        let t0 = std::time::Instant::now();
+        let mut fleet = LazyFleet::new(spec, opts.seed);
+        let mut shards = LazyShards::new(opts.seed, s, d, 0.1);
+        let setup_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mut clock = VirtualClock::new();
+        let mut w = vec![0.0f32; d];
+        let mut grad = vec![0.0f32; d];
+        let mut xb = vec![0.0f32; batch * d];
+        let mut yb = vec![0.0f32; batch];
+        let mut per_round = StreamingStats::new();
+        let mut waits = 0usize;
+        for _ in 0..rounds {
+            let r0 = std::time::Instant::now();
+            let cohort = fleet.cohort(cohort_size);
+            let cond = fleet.realize_cohort(&cohort, clock.now());
+            let present = cond.online_positions();
+            if present.is_empty() {
+                // mirror deadline_round: diurnal outages wake at the
+                // cohort's next window; the wait is charged
+                let now = clock.now();
+                let wake = fleet
+                    .spec()
+                    .system
+                    .avail
+                    .as_ref()
+                    .and_then(|a| a.next_online_time(now, &cond.ids, n))
+                    .unwrap_or_else(|| {
+                        let est_max = cond
+                            .ids
+                            .iter()
+                            .map(|&i| fleet.estimate(i))
+                            .fold(0.0, f64::max);
+                        now + tau as f64 * est_max
+                    });
+                clock.charge_wait(wake);
+                waits += 1;
+                per_round.push(r0.elapsed().as_secs_f64() * 1e6);
+                continue;
+            }
+            let deadline = ddl.round_deadline_sketch(fleet.speed_sketch(), tau);
+            let mut ids = Vec::with_capacity(present.len());
+            let mut times = Vec::with_capacity(present.len());
+            let (mut arrived, mut late) = (Vec::new(), Vec::new());
+            let mut dropped = 0usize;
+            for &k in &present {
+                ids.push(cond.ids[k]);
+                times.push(cond.times[k]);
+                if tau as f64 * cond.times[k] > deadline {
+                    late.push(k);
+                } else if cond.available[k] {
+                    arrived.push(k);
+                } else {
+                    dropped += 1;
+                }
+            }
+            clock.charge_round_deadline(
+                &ids,
+                &times,
+                tau,
+                deadline,
+                dropped,
+                late.len(),
+            );
+            if !arrived.is_empty() {
+                grad.iter_mut().for_each(|g| *g = 0.0);
+                for &k in &arrived {
+                    shards.fill_minibatch(cond.ids[k], batch, &mut xb, &mut yb);
+                    for b in 0..batch {
+                        let x = &xb[b * d..(b + 1) * d];
+                        let err: f32 = x
+                            .iter()
+                            .zip(&w)
+                            .map(|(xi, wi)| xi * wi)
+                            .sum::<f32>()
+                            - yb[b];
+                        for (g, xi) in grad.iter_mut().zip(x) {
+                            *g += err * xi;
+                        }
+                    }
+                }
+                let scale = eta / (arrived.len() * batch) as f32;
+                for (wi, g) in w.iter_mut().zip(&grad) {
+                    *wi -= scale * g;
+                }
+            }
+            for &k in &arrived {
+                fleet.observe(cond.ids[k], cond.times[k]);
+            }
+            for &k in &late {
+                fleet.observe_censored(cond.ids[k], deadline / tau as f64);
+            }
+            per_round.push(r0.elapsed().as_secs_f64() * 1e6);
+        }
+        let dist: f64 = w
+            .iter()
+            .zip(shards.teacher())
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        println!(
+            "  n={n:<9} setup={setup_ms:>8.1}ms round_us mean={:<8.1} \
+             min={:<8.1} max={:<8.1} waits={waits:<4} vtime={:<12.1} \
+             dist={dist:.4}",
+            per_round.mean(),
+            per_round.min(),
+            per_round.max(),
+            clock.now(),
+        );
+        rows.push((n, setup_ms, per_round, waits, clock.now(), dist));
+    }
+
+    // the flatness verdict: O(cohort) means the mean host round cost
+    // may not grow with the population
+    let means: Vec<f64> = rows.iter().map(|r| r.2.mean()).collect();
+    let ratio = means.iter().fold(f64::MIN, |a, &b| a.max(b))
+        / means.iter().fold(f64::MAX, |a, &b| a.min(b));
+    let flat = ratio <= 2.0;
+    println!(
+        "  round cost {} -> {} clients: {ratio:.2}x {}",
+        populations.first().unwrap(),
+        populations.last().unwrap(),
+        if flat { "FLAT (within 2x) PASS" } else { "NOT flat (>2x) FAIL" }
+    );
+
+    let mut json = String::from("{\n");
+    json.push_str("  \"schema\": \"flanp-scale/v1\",\n");
+    json.push_str(&format!("  \"rounds\": {rounds},\n"));
+    json.push_str(&format!(
+        "  \"pinned_iters\": {},\n",
+        if pinned { rounds.to_string() } else { "null".into() }
+    ));
+    json.push_str(&format!("  \"cohort\": {cohort_size},\n"));
+    json.push_str(&format!("  \"flat_within_2x\": {flat},\n"));
+    json.push_str(&format!("  \"ratio\": {ratio},\n"));
+    json.push_str("  \"populations\": [\n");
+    for (j, (n, setup_ms, st, waits, vtime, dist)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"n\": {n}, \"setup_ms\": {setup_ms}, \
+             \"round_us_mean\": {}, \"round_us_min\": {}, \
+             \"round_us_max\": {}, \"waits\": {waits}, \
+             \"virtual_time\": {vtime}, \"dist_to_teacher\": {dist}}}{}\n",
+            st.mean(),
+            st.min(),
+            st.max(),
+            if j + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = opts.out.join("scale.json");
+    std::fs::write(&path, json)?;
+    println!("  wrote {}", path.display());
     Ok(())
 }
 

@@ -171,7 +171,9 @@ impl<'a> RunContext<'a> {
 /// observations: a client that never ran teaches nothing). When the
 /// whole cohort is offline the server waits instead of training:
 /// deterministic (diurnal) outages advance the clock straight to the
-/// cohort's next window; stochastic ones charge an idle tick and retry.
+/// cohort's next window; stochastic ones charge one estimate-priced
+/// waiting round (`updates * max est` over the cohort) and retry, so an
+/// all-down round always costs wall-clock time.
 ///
 /// Under [`crate::fed::DeadlinePolicy::Sync`] with every client online
 /// the deadline is `+inf`: every available client arrives, no censored
@@ -233,13 +235,26 @@ fn deadline_round_impl(
     let present = cond.online_of(active);
     if present.is_empty() {
         let now = ctx.clock.now();
+        // deterministic (diurnal) outages advance the clock straight to
+        // the cohort's next window; stochastic outages (iid/cluster,
+        // replayed traces) have no computable wake time, so the server
+        // waits one estimate-priced round — the time a full round over
+        // the cohort's slowest estimated member would have cost — and
+        // retries. A waiting round is CHARGED, never free: real time
+        // passes while the fleet is dark (ROADMAP time-basis note).
         let wake = fleet
             .system
             .model()
             .avail
             .as_ref()
             .and_then(|a| a.next_online_time(now, active, fleet.num_clients()))
-            .unwrap_or(now);
+            .unwrap_or_else(|| {
+                let est_max = active
+                    .iter()
+                    .map(|&i| fleet.estimates.estimate(i))
+                    .fold(0.0, f64::max);
+                now + updates as f64 * est_max
+            });
         let ev = ctx.clock.charge_wait(wake);
         return (Vec::new(), ev);
     }

@@ -222,6 +222,46 @@ impl DeadlineController {
         }
     }
 
+    /// Sketch-backed twin of [`DeadlineController::round_deadline`] for
+    /// population-scale fleets: the quantile comes from a
+    /// [`crate::fed::QuantileSketch`] of the cohort's estimated
+    /// per-update times instead of a sorted copy of them, so computing
+    /// a deadline never materializes (or re-sorts) the estimate vector.
+    /// While the sketch is exact — which it always is at cohort sizes
+    /// under its capacity — the result is bit-identical to
+    /// `round_deadline` over the same estimates; see the
+    /// sketch-approximation pitfall in `docs/scenarios.md` for why tiny
+    /// cohorts should keep the sketch in its exact regime.
+    ///
+    /// ```
+    /// use flanp::fed::{DeadlineController, DeadlinePolicy, QuantileSketch};
+    ///
+    /// let ddl = DeadlineController::new(DeadlinePolicy::Quantile { q: 0.5 });
+    /// let est = [10.0, 20.0, 30.0, 40.0];
+    /// let mut sk = QuantileSketch::new(64);
+    /// for &e in &est {
+    ///     sk.push(e);
+    /// }
+    /// assert_eq!(
+    ///     ddl.round_deadline_sketch(&sk, 5),
+    ///     ddl.round_deadline(&est, 5)
+    /// );
+    /// ```
+    pub fn round_deadline_sketch(
+        &self,
+        est: &crate::fed::sketch::QuantileSketch,
+        updates: usize,
+    ) -> f64 {
+        match self.policy {
+            DeadlinePolicy::Sync => f64::INFINITY,
+            DeadlinePolicy::Fixed { t } => t,
+            DeadlinePolicy::Quantile { q } => updates as f64 * est.query(q),
+            DeadlinePolicy::Adaptive { .. } => {
+                self.scale * updates as f64 * est.query(0.5)
+            }
+        }
+    }
+
     /// Feed one round's outcome back: `arrived` out of the `cohort`
     /// clients the deadline could have admitted (callers pass the
     /// *available* participants, not the intended cohort — dropped
@@ -321,6 +361,40 @@ mod tests {
         let ddl = DeadlineController::new(DeadlinePolicy::Quantile { q: 1.0 });
         assert_eq!(ddl.round_deadline(&[50.0, 500.0], 10), 5000.0);
         assert_eq!(ddl.round_deadline(&[50.0, 500.0], 1), 500.0);
+    }
+
+    #[test]
+    fn sketch_deadline_matches_exact_deadline() {
+        use crate::fed::sketch::QuantileSketch;
+        let est = [120.0, 40.0, 300.0, 80.0, 220.0];
+        let mut sk = QuantileSketch::new(64);
+        for &e in &est {
+            sk.push(e);
+        }
+        for policy in [
+            DeadlinePolicy::Sync,
+            DeadlinePolicy::Fixed { t: 750.0 },
+            DeadlinePolicy::Quantile { q: 0.8 },
+            DeadlinePolicy::Adaptive { target: 0.9 },
+        ] {
+            let mut ddl = DeadlineController::new(policy.clone());
+            assert_eq!(
+                ddl.round_deadline_sketch(&sk, 10),
+                ddl.round_deadline(&est, 10),
+                "{policy:?}"
+            );
+            // the adaptive scale feeds through identically
+            ddl.observe_round(0, 5);
+            assert_eq!(
+                ddl.round_deadline_sketch(&sk, 10),
+                ddl.round_deadline(&est, 10),
+                "{policy:?} after adaptation"
+            );
+        }
+        // empty sketch == empty slice: never rejects anyone
+        let empty = QuantileSketch::new(64);
+        let ddl = DeadlineController::new(DeadlinePolicy::Quantile { q: 0.5 });
+        assert_eq!(ddl.round_deadline_sketch(&empty, 3), f64::INFINITY);
     }
 
     #[test]

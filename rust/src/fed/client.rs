@@ -179,12 +179,12 @@ impl ClientFleet {
 
     /// Active set for a stage of k clients: ranked by the online speed
     /// estimates when `estimated` (re-ranks under drift, TiFL-style),
-    /// else the oracle fastest-first prefix.
+    /// else the oracle fastest-first prefix. Estimate ranking is top-K
+    /// selection ([`SpeedEstimator::ranked_prefix`]): O(n log k) per
+    /// call, bit-identical to the full sort it replaced.
     pub fn active_prefix(&self, k: usize, estimated: bool) -> Vec<usize> {
         if estimated {
-            let mut ranked = self.estimates.ranked();
-            ranked.truncate(k);
-            ranked
+            self.estimates.ranked_prefix(k)
         } else {
             self.order[..k].to_vec()
         }

@@ -244,10 +244,13 @@ impl VirtualClock {
     /// observably online, so the server idles — no participants, nothing
     /// dropped or missed — until `t`, the cohort's next availability
     /// window. With an unknown wake time (stochastic outages) callers
-    /// pass `t <= now`: the round becomes an idle tick (communication
-    /// overhead only) and the next realization retries. Offline clients
-    /// are never charged as stragglers — unavailability is observable at
-    /// selection time, unlike dropout (see `fed::traces`).
+    /// price the wait themselves — one estimate-priced round, see
+    /// `coordinator::solvers::deadline_round` — and pass the resulting
+    /// `t > now`, so an all-down round is always charged real time
+    /// (plus the communication overhead) before the next realization
+    /// retries. Offline clients are never charged as stragglers —
+    /// unavailability is observable at selection time, unlike dropout
+    /// (see `fed::traces`).
     pub fn charge_wait(&mut self, t: f64) -> RoundEvent {
         self.charge_until(t, 0, 0, 0)
     }

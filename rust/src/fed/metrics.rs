@@ -1,4 +1,7 @@
-//! Per-round metric traces — everything the paper's figures plot.
+//! Per-round metric traces — everything the paper's figures plot —
+//! plus constant-memory streaming aggregation ([`StreamingStats`]) for
+//! population-scale sweeps where per-round, per-client rows no longer
+//! fit (`flanp-bench scale`, `docs/scale.md`).
 
 use crate::util::json::{obj, Json};
 use std::io::Write;
@@ -180,6 +183,90 @@ fn json_num(v: f64) -> Json {
     }
 }
 
+/// Constant-memory streaming aggregation: count, mean, variance
+/// (Welford's online algorithm — numerically stable at any stream
+/// length), min and max. At population scale a [`Trace`] row per round
+/// per metric would dominate memory; a `StreamingStats` per metric is
+/// five words regardless of how many rounds flow through it, which is
+/// what `flanp-bench scale` aggregates its measured round costs with.
+///
+/// ```
+/// use flanp::fed::StreamingStats;
+///
+/// let mut s = StreamingStats::new();
+/// for x in [1.0, 2.0, 3.0, 4.0] {
+///     s.push(x);
+/// }
+/// assert_eq!(s.count(), 4);
+/// assert_eq!(s.mean(), 2.5);
+/// assert_eq!((s.min(), s.max()), (1.0, 4.0));
+/// // population variance of 1..4 is 1.25
+/// assert!((s.variance() - 1.25).abs() < 1e-12);
+/// assert!(StreamingStats::new().mean().is_nan());
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct StreamingStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl StreamingStats {
+    pub fn new() -> Self {
+        StreamingStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Fold one observation in (O(1), no allocation).
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean of the stream (`NaN` while empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance of the stream (`NaN` while empty).
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Smallest observation (`+inf` while empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest observation (`-inf` while empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +333,28 @@ mod tests {
         let csv = t.to_csv();
         let row = csv.lines().nth(1).unwrap();
         assert!(row.ends_with(",7"), "row '{row}' lacks the available column");
+    }
+
+    #[test]
+    fn streaming_stats_match_batch_moments() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut s = StreamingStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert_eq!(s.count(), 1000);
+        assert!((s.mean() - mean).abs() < 1e-9, "{} vs {mean}", s.mean());
+        assert!((s.variance() - var).abs() < 1e-9);
+        let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!((s.min(), s.max()), (min, max));
+        // the empty stream is explicit, never a misleading zero
+        let e = StreamingStats::new();
+        assert!(e.mean().is_nan() && e.variance().is_nan());
+        assert_eq!(e.count(), 0);
     }
 
     #[test]

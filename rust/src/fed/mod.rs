@@ -1,13 +1,16 @@
 //! Federated substrate: heterogeneous client fleet, system-heterogeneity
 //! scenarios (speed models + per-round dynamics + dropout + correlated
 //! availability), trace recording/replay, aggregation deadline policies,
-//! TiFL-style tier scheduling, virtual wall-clock with round events, and
-//! per-round metric traces.
+//! TiFL-style tier scheduling, lazily-realized populations with sketch
+//! summaries, virtual wall-clock with round events, and per-round metric
+//! traces.
 
 pub mod aggregation;
 pub mod client;
 pub mod clock;
 pub mod metrics;
+pub mod population;
+pub mod sketch;
 pub mod speed;
 pub mod system;
 pub mod tiers;
@@ -16,7 +19,12 @@ pub mod traces;
 pub use aggregation::{DeadlineController, DeadlinePolicy};
 pub use client::{ClientFleet, DEFAULT_EWMA_ALPHA};
 pub use clock::{RoundEvent, VirtualClock};
-pub use metrics::{RoundRecord, Trace};
+pub use metrics::{RoundRecord, StreamingStats, Trace};
+pub use population::{
+    CohortConditions, LazyFleet, LazyShards, PopulationFleet, PopulationSpec,
+    DEFAULT_EXACT_THRESHOLD, DEFAULT_FRONTIER,
+};
+pub use sketch::{QuantileSketch, TopK};
 pub use speed::SpeedModel;
 pub use system::{Dynamics, RoundConditions, SpeedEstimator, SystemModel, SystemState};
 pub use tiers::{TierPolicy, TierScheduler, TierSplit};

@@ -1,0 +1,858 @@
+//! Lazily-realized population fleets (`fed::population`).
+//!
+//! The materialized [`ClientFleet`] touches all N clients every round:
+//! the base draw, the per-round realization, the estimate ranking and
+//! the trace rows are each O(N). Hard et al. (*Learning from straggler
+//! clients in federated learning*, PAPERS.md) run against fleets of
+//! ~10^6 phones — a regime where a round must cost O(cohort), not
+//! O(population). This module is that regime:
+//!
+//! * [`PopulationSpec`] — a population described by a distribution, not
+//!   a roster: `pop:N:SCENARIO`, where `SCENARIO` is the full system
+//!   grammar of [`crate::fed::SystemModel`].
+//! * [`LazyFleet`] — clients realized on demand from **per-client
+//!   seeded streams**: client `i`'s base speed, dynamics lane, data
+//!   rows and per-round draws each come from their own
+//!   deterministically-derived PCG stream, so any client id can be
+//!   realized at any time and re-realized bit-identically — the
+//!   property record→replay parity rests on. Rounds realize only the
+//!   cohort; the global structures live in sketch form (a
+//!   [`crate::fed::TopK`] prefix frontier, a
+//!   [`crate::fed::QuantileSketch`] of the speed distribution).
+//! * [`LazyShards`] — lazily synthesized linear-regression shards:
+//!   row `j` of client `i` is re-derived from its own stream on every
+//!   touch, so a million clients' data occupies zero bytes until (and
+//!   after) a cohort trains on it.
+//! * [`PopulationFleet`] — the two-regime switch: at small N
+//!   (≤ [`DEFAULT_EXACT_THRESHOLD`]) populations materialize into a
+//!   plain [`ClientFleet`] via `setup::build_population_fleet`, keeping
+//!   every existing prefix/loss/wall-clock/trace pin **bit-identical**;
+//!   past the threshold the lazy fleet takes over with the same spec.
+//!
+//! The two regimes draw from differently-shaped RNG streams (one
+//! sequential stream vs per-client streams), so their concrete samples
+//! differ; what is preserved across the switch is the distribution, the
+//! determinism, and every structural contract (estimate ranking
+//! semantics, deadline arithmetic, availability observability). See
+//! `docs/scale.md` for the full scaling model and its guarantees.
+//!
+//! ```
+//! use flanp::fed::{LazyFleet, PopulationSpec};
+//!
+//! let spec = PopulationSpec::parse(
+//!     "pop:10000:avail:diurnal:1000:0.5:1:uniform:50:500",
+//! )
+//! .unwrap();
+//! assert_eq!(spec.n, 10_000);
+//! assert_eq!(PopulationSpec::parse(&spec.spec()).unwrap(), spec);
+//!
+//! let mut fleet = LazyFleet::new(spec, 7);
+//! // the frontier hands out the estimated-fastest cohort in O(frontier)
+//! let cohort = fleet.cohort(8);
+//! assert_eq!(cohort.len(), 8);
+//! // one round realizes conditions for the cohort only — O(cohort)
+//! let cond = fleet.realize_cohort(&cohort, 0.0);
+//! assert_eq!(cond.times.len(), 8);
+//! // any client id is realizable on demand, bit-identically every time
+//! assert_eq!(fleet.base_speed(9_123), fleet.base_speed(9_123));
+//! ```
+
+use crate::fed::client::ClientFleet;
+use crate::fed::sketch::{QuantileSketch, TopK};
+use crate::fed::speed::SpeedModel;
+use crate::fed::system::{Dynamics, SystemModel};
+use crate::fed::traces::AvailabilityModel;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Populations at or below this size materialize into a plain
+/// [`ClientFleet`] (`setup::build_population_fleet`): full
+/// materialization is affordable, and delegation keeps every existing
+/// small-N regression pin bit-identical.
+pub const DEFAULT_EXACT_THRESHOLD: usize = 4096;
+
+/// Default prefix-frontier size: how many base-fastest candidates the
+/// lazy fleet keeps live estimates for (cohorts are selected within the
+/// frontier, TiFL-cache style).
+pub const DEFAULT_FRONTIER: usize = 1024;
+
+/// Per-client stream components. Client `i` owns streams
+/// `i * STREAM_COMPONENTS + comp`; reserved global streams sit at the
+/// top of the id space, unreachable for any realizable population.
+const STREAM_COMPONENTS: u64 = 8;
+const COMP_SPEED: u64 = 0;
+const COMP_MARKOV: u64 = 1;
+const COMP_DATA: u64 = 2;
+const COMP_ROUND: u64 = 3;
+const COMP_ROW: u64 = 4;
+/// Global streams (never collide with `sid`: populations are far below
+/// `2^61` clients).
+const TEACHER_STREAM: u64 = u64::MAX - 1;
+const CLUSTER_STREAM: u64 = u64::MAX - 3;
+
+fn sid(i: usize, comp: u64) -> u64 {
+    (i as u64) * STREAM_COMPONENTS + comp
+}
+
+/// Weyl-sequence salt decorrelating per-round stateless streams
+/// (golden-ratio increment; the `+1` keeps round 0 off the raw seed).
+fn round_salt(r: usize) -> u64 {
+    (r as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+fn row_salt(j: usize) -> u64 {
+    (j as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03)
+}
+
+fn base_speed_of(seed: u64, base: &SpeedModel, i: usize) -> f64 {
+    base.draw_one(&mut Rng::with_stream(seed, sid(i, COMP_SPEED)))
+}
+
+/// A population described by its size and scenario distribution —
+/// the `pop:N:SCENARIO` grammar.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PopulationSpec {
+    /// population size N
+    pub n: usize,
+    /// the scenario every client's parameters are drawn from (the full
+    /// grammar of [`SystemModel::parse`], minus `trace:` — a trace
+    /// carries per-client rows, the opposite of a population
+    /// distribution)
+    pub system: SystemModel,
+}
+
+impl PopulationSpec {
+    /// Parse a population spec. Grammar:
+    ///
+    /// ```text
+    ///   pop:N:SCENARIO
+    /// ```
+    ///
+    /// `N` is a positive population size and `SCENARIO` any
+    /// non-`trace:` system scenario ([`SystemModel::parse`]).
+    ///
+    /// ```
+    /// use flanp::fed::PopulationSpec;
+    ///
+    /// let p = PopulationSpec::parse("pop:1000000:jitter:0.3:uniform:50:500")
+    ///     .unwrap();
+    /// assert_eq!(p.n, 1_000_000);
+    /// assert_eq!(p.spec(), "pop:1000000:jitter:0.3:uniform:50:500");
+    /// assert_eq!(PopulationSpec::parse(&p.spec()).unwrap(), p);
+    /// assert!(PopulationSpec::parse("pop:0:homog:10").is_err());
+    /// assert!(PopulationSpec::parse("uniform:50:500").is_err());
+    /// ```
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let rest = spec.strip_prefix("pop:").ok_or_else(|| {
+            format!(
+                "population spec '{spec}' must start with 'pop:N:' \
+                 (expected pop:N:SCENARIO)"
+            )
+        })?;
+        let (n_tok, sys_spec) = rest.split_once(':').ok_or_else(|| {
+            format!("missing scenario in population spec '{spec}'")
+        })?;
+        let n: usize = n_tok.parse().map_err(|_| {
+            format!(
+                "bad population size '{n_tok}' in population spec '{spec}'"
+            )
+        })?;
+        let system = SystemModel::parse(sys_spec)?;
+        let pop = PopulationSpec { n, system };
+        pop.validate()
+            .map_err(|e| format!("{e} in population spec '{spec}'"))?;
+        Ok(pop)
+    }
+
+    /// Canonical spec string; `parse(spec()) == self`.
+    pub fn spec(&self) -> String {
+        format!("pop:{}:{}", self.n, self.system.spec())
+    }
+
+    /// Structural sanity check (configs can be built without `parse`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 {
+            return Err("population size must be positive".into());
+        }
+        if self.system.trace.is_some() {
+            return Err(
+                "trace replay carries per-client rows and cannot describe \
+                 a population distribution"
+                    .into(),
+            );
+        }
+        self.system.validate()
+    }
+}
+
+/// One round's realized conditions for a COHORT (indexed by cohort
+/// position, not client id — O(cohort) memory, the population-scale
+/// twin of [`crate::fed::RoundConditions`]).
+#[derive(Clone, Debug)]
+pub struct CohortConditions {
+    /// the cohort's client ids, in selection order
+    pub ids: Vec<usize>,
+    /// realized per-update compute time of each cohort member
+    pub times: Vec<f64>,
+    /// false when the member silently drops out (`drop:`, unobservable)
+    pub available: Vec<bool>,
+    /// false when the member is offline (`avail:`, observable at
+    /// selection time — skipped, never charged, never estimated)
+    pub online: Vec<bool>,
+}
+
+impl CohortConditions {
+    /// Cohort positions (not client ids) that are observably online.
+    pub fn online_positions(&self) -> Vec<usize> {
+        (0..self.ids.len()).filter(|&k| self.online[k]).collect()
+    }
+
+    /// Number of observably-online cohort members.
+    pub fn online_count(&self) -> usize {
+        self.online.iter().filter(|&&o| o).count()
+    }
+}
+
+#[derive(Clone, Debug)]
+struct MarkovLane {
+    rng: Rng,
+    slow: bool,
+    rounds_done: usize,
+}
+
+/// A lazily-realized population: any client id can be realized on
+/// demand from its own seeded streams, rounds charge O(cohort) work,
+/// and the only O(N) cost is one streaming construction pass that seeds
+/// the prefix frontier and the population speed sketch.
+///
+/// Memory after construction is O(frontier + touched clients +
+/// sketch): the estimate table, the Markov lanes and the data lanes
+/// hold entries only for clients some cohort actually touched.
+///
+/// Dynamics semantics mirror [`crate::fed::SystemState`] per charged
+/// round: jitter and dropout are i.i.d. per (round, client) and come
+/// from stateless per-round streams; Markov fast/slow chains advance
+/// one transition per charged round on a sequential per-client lane
+/// (lazily caught up on first touch, so an untouched client's chain
+/// state is independent of when it is first realized); cluster outage
+/// chains advance once per charged round globally — a charged waiting
+/// round steps them, consistent with the charged-wait fix in
+/// `coordinator::solvers::deadline_round` (see `docs/scale.md`).
+#[derive(Clone, Debug)]
+pub struct LazyFleet {
+    spec: PopulationSpec,
+    seed: u64,
+    alpha: f64,
+    /// ids of the frontier-capacity base-fastest clients, fastest-first
+    /// by base speed (the cached candidate set cohorts re-rank within)
+    frontier: Vec<usize>,
+    /// population base-speed quantile sketch (deadlines, tier bounds)
+    speed_sketch: QuantileSketch,
+    /// EWMA estimates for touched clients (prior = base speed)
+    estimates: HashMap<usize, f64>,
+    markov: HashMap<usize, MarkovLane>,
+    cluster_down: Vec<bool>,
+    cluster_rng: Rng,
+    rounds: usize,
+}
+
+impl LazyFleet {
+    /// Build with the default frontier and sketch capacities. One O(N)
+    /// streaming pass (no per-client state is retained).
+    pub fn new(spec: PopulationSpec, seed: u64) -> Self {
+        Self::with_capacity(
+            spec,
+            seed,
+            DEFAULT_FRONTIER,
+            QuantileSketch::DEFAULT_CAPACITY,
+        )
+    }
+
+    /// Build with explicit frontier / sketch capacities. Panics on an
+    /// invalid spec (mirrors [`ClientFleet`]'s constructor contract).
+    pub fn with_capacity(
+        spec: PopulationSpec,
+        seed: u64,
+        frontier_capacity: usize,
+        sketch_capacity: usize,
+    ) -> Self {
+        spec.validate()
+            .unwrap_or_else(|e| panic!("invalid population spec: {e}"));
+        assert!(frontier_capacity > 0, "empty prefix frontier");
+        let n = spec.n;
+        let mut topk = TopK::new(frontier_capacity.min(n));
+        let mut sketch = QuantileSketch::new(sketch_capacity);
+        for i in 0..n {
+            let t = base_speed_of(seed, &spec.system.base, i);
+            topk.push(t, i);
+            sketch.push(t);
+        }
+        let clusters =
+            spec.system.avail.as_ref().map_or(0, |a| a.num_clusters());
+        LazyFleet {
+            frontier: topk.ids(),
+            speed_sketch: sketch,
+            spec,
+            seed,
+            alpha: crate::fed::client::DEFAULT_EWMA_ALPHA,
+            estimates: HashMap::new(),
+            markov: HashMap::new(),
+            cluster_down: vec![false; clusters],
+            cluster_rng: Rng::with_stream(seed, CLUSTER_STREAM),
+            rounds: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &PopulationSpec {
+        &self.spec
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.spec.n
+    }
+
+    /// Charged rounds realized so far.
+    pub fn rounds_realized(&self) -> usize {
+        self.rounds
+    }
+
+    /// The frontier's client ids, fastest-first by base speed.
+    pub fn frontier(&self) -> &[usize] {
+        &self.frontier
+    }
+
+    /// The population base-speed quantile sketch (feed it to
+    /// [`crate::fed::DeadlineController::round_deadline_sketch`] or
+    /// [`crate::fed::TierPolicy::sketch_bounds`]).
+    pub fn speed_sketch(&self) -> &QuantileSketch {
+        &self.speed_sketch
+    }
+
+    /// Client `i`'s base per-update time, re-derived from its own
+    /// stream — bit-identical on every call, no state consulted.
+    pub fn base_speed(&self, i: usize) -> f64 {
+        assert!(i < self.spec.n, "client {i} outside population {}", self.spec.n);
+        base_speed_of(self.seed, &self.spec.system.base, i)
+    }
+
+    /// Current speed estimate for client `i` (the base speed until an
+    /// observation arrives — the lazy analogue of the probe prior).
+    pub fn estimate(&self, i: usize) -> f64 {
+        self.estimates.get(&i).copied().unwrap_or_else(|| self.base_speed(i))
+    }
+
+    /// The `k` estimated-fastest frontier members — O(frontier · log k),
+    /// independent of N. Like tier membership in
+    /// [`crate::fed::TierScheduler`], the frontier is a cached candidate
+    /// set: estimates re-rank within it every call, but a client outside
+    /// it (never among the base-fastest) is not reconsidered.
+    pub fn cohort(&self, k: usize) -> Vec<usize> {
+        let mut t = TopK::new(k.min(self.frontier.len()));
+        for &i in &self.frontier {
+            t.push(self.estimate(i), i);
+        }
+        t.ids()
+    }
+
+    /// Realize one charged round's conditions for `ids` only at virtual
+    /// time `now` — O(cohort + clusters) work, nothing else realized.
+    /// Global chain state (cluster outages) advances exactly once per
+    /// call, so every charged round — including waiting rounds — steps
+    /// the outage process.
+    pub fn realize_cohort(
+        &mut self,
+        ids: &[usize],
+        now: f64,
+    ) -> CohortConditions {
+        let r = self.rounds;
+        self.rounds += 1;
+        let seed = self.seed;
+        let n = self.spec.n;
+        if let Some(a) = &self.spec.system.avail {
+            a.step_clusters(&mut self.cluster_down, &mut self.cluster_rng);
+        }
+        let mut times = Vec::with_capacity(ids.len());
+        let mut available = Vec::with_capacity(ids.len());
+        let mut online = Vec::with_capacity(ids.len());
+        for &i in ids {
+            assert!(i < n, "client {i} outside population {n}");
+            let base = base_speed_of(seed, &self.spec.system.base, i);
+            // stateless per-(round, client) stream: jitter, dropout and
+            // iid availability are independent across rounds, so a
+            // fresh salted stream realizes them without per-client
+            // round state
+            let mut rs =
+                Rng::with_stream(seed ^ round_salt(r), sid(i, COMP_ROUND));
+            let t = match self.spec.system.dynamics {
+                Dynamics::Static => base,
+                Dynamics::Jitter { sigma } => {
+                    base * (sigma * rs.normal()).exp()
+                }
+                Dynamics::Markov { slow_factor, p_slow, p_recover } => {
+                    // sequential per-client lane, caught up one
+                    // transition per charged round on first touch
+                    let lane =
+                        self.markov.entry(i).or_insert_with(|| MarkovLane {
+                            rng: Rng::with_stream(seed, sid(i, COMP_MARKOV)),
+                            slow: false,
+                            rounds_done: 0,
+                        });
+                    while lane.rounds_done <= r {
+                        let u = lane.rng.next_f64();
+                        lane.slow = if lane.slow {
+                            u >= p_recover
+                        } else {
+                            u < p_slow
+                        };
+                        lane.rounds_done += 1;
+                    }
+                    if lane.slow {
+                        base * slow_factor
+                    } else {
+                        base
+                    }
+                }
+            };
+            times.push(t);
+            available.push(if self.spec.system.p_drop > 0.0 {
+                rs.next_f64() >= self.spec.system.p_drop
+            } else {
+                true
+            });
+            let on = match &self.spec.system.avail {
+                None => true,
+                Some(a) => match a.online_at(now, i, n) {
+                    Some(flag) => flag,
+                    None => match a {
+                        AvailabilityModel::Iid { p } => rs.next_f64() < *p,
+                        AvailabilityModel::Cluster { clusters, .. } => {
+                            !self.cluster_down
+                                [AvailabilityModel::cluster_of(i, n, *clusters)]
+                        }
+                        AvailabilityModel::Diurnal { .. } => unreachable!(),
+                    },
+                },
+            };
+            online.push(on);
+        }
+        CohortConditions { ids: ids.to_vec(), times, available, online }
+    }
+
+    /// Fold one observed per-update time into client `i`'s estimate —
+    /// the same exact-fixed-point EWMA as
+    /// [`crate::fed::SpeedEstimator::observe`].
+    pub fn observe(&mut self, i: usize, per_update_time: f64) {
+        let base = self.base_speed(i);
+        let e = self.estimates.entry(i).or_insert(base);
+        *e += self.alpha * (per_update_time - *e);
+    }
+
+    /// Censored feedback (deadline miss): pull the estimate up toward
+    /// the bound, never down
+    /// ([`crate::fed::SpeedEstimator::observe_censored`]).
+    pub fn observe_censored(&mut self, i: usize, lower_bound: f64) {
+        if lower_bound > self.estimate(i) {
+            self.observe(i, lower_bound);
+        }
+    }
+
+    /// Clients with retained per-client state (estimates, dynamics or
+    /// data lanes) — the memory footprint check: everything else about
+    /// the population occupies no per-client storage.
+    pub fn touched_clients(&self) -> usize {
+        let mut ids: Vec<usize> = self
+            .estimates
+            .keys()
+            .chain(self.markov.keys())
+            .copied()
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+}
+
+/// Lazily synthesized linear-regression shards over a population: a
+/// hidden teacher `w*` plus per-row streams, so row `j` of client `i`
+/// is re-derived bit-identically on every touch and the dataset as a
+/// whole is never stored. The population twin of
+/// `data::synth` + [`ClientFleet::fill_minibatch`], sized for the
+/// `flanp-bench scale` training loop.
+///
+/// ```
+/// use flanp::fed::LazyShards;
+///
+/// let mut shards = LazyShards::new(7, 100, 4, 0.1);
+/// assert_eq!(shards.teacher().len(), 4);
+/// let (mut x, mut y) = (vec![0.0f32; 8 * 4], vec![0.0f32; 8]);
+/// shards.fill_minibatch(42, 8, &mut x, &mut y);
+/// // rows are re-realizable: the same (client, row) always yields the
+/// // same sample
+/// let mut x2 = vec![0.0f32; 4];
+/// let y2 = shards.realize_row(42, 3, &mut x2);
+/// assert_eq!(y2, shards.realize_row(42, 3, &mut x2));
+/// ```
+#[derive(Clone, Debug)]
+pub struct LazyShards {
+    seed: u64,
+    /// rows per client shard
+    s: usize,
+    /// feature dimension
+    d: usize,
+    /// label noise scale
+    noise: f64,
+    teacher: Vec<f32>,
+    /// per-client minibatch sampling lanes (created on first touch)
+    lanes: HashMap<usize, Rng>,
+}
+
+impl LazyShards {
+    pub fn new(seed: u64, s: usize, d: usize, noise: f64) -> Self {
+        assert!(s > 0 && d > 0, "degenerate shard shape {s}x{d}");
+        let mut teacher = vec![0.0f32; d];
+        Rng::with_stream(seed, TEACHER_STREAM).fill_normal(&mut teacher, 1.0);
+        LazyShards { seed, s, d, noise, teacher, lanes: HashMap::new() }
+    }
+
+    /// The hidden regression target `w*` (drawn once from its own
+    /// global stream).
+    pub fn teacher(&self) -> &[f32] {
+        &self.teacher
+    }
+
+    /// Rows per client shard.
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Realize row `j` of client `i` into `x` (length `d`), returning
+    /// the label `y = x·w* + noise·z`. Stateless: bit-identical on
+    /// every call.
+    pub fn realize_row(&self, client: usize, row: usize, x: &mut [f32]) -> f32 {
+        assert!(row < self.s, "row {row} outside shard of {}", self.s);
+        assert_eq!(x.len(), self.d);
+        let mut rng =
+            Rng::with_stream(self.seed ^ row_salt(row), sid(client, COMP_ROW));
+        rng.fill_normal(x, 1.0);
+        let dot: f32 =
+            x.iter().zip(&self.teacher).map(|(a, b)| a * b).sum();
+        dot + self.noise as f32 * rng.normal() as f32
+    }
+
+    /// Fill one stochastic minibatch (size `b`, sampled without
+    /// replacement from client `i`'s shard) into `x_buf` (`b*d`) /
+    /// `y_buf` (`b`). Sampling advances the client's own lane, exactly
+    /// like the materialized fleet's per-client minibatch streams.
+    pub fn fill_minibatch(
+        &mut self,
+        client: usize,
+        b: usize,
+        x_buf: &mut [f32],
+        y_buf: &mut [f32],
+    ) {
+        assert!(b <= self.s, "batch {b} > shard {}", self.s);
+        assert_eq!(x_buf.len(), b * self.d);
+        assert_eq!(y_buf.len(), b);
+        let picks = {
+            let seed = self.seed;
+            let lane = self.lanes.entry(client).or_insert_with(|| {
+                Rng::with_stream(seed, sid(client, COMP_DATA))
+            });
+            lane.sample_indices(self.s, b)
+        };
+        for (k, &row) in picks.iter().enumerate() {
+            let x = &mut x_buf[k * self.d..(k + 1) * self.d];
+            y_buf[k] = self.realize_row(client, row, x);
+        }
+    }
+}
+
+/// The two-regime population switch (see the module docs): exact
+/// materialization at small N for the bit-identity pin, lazy
+/// sketch-backed realization at scale. Built by
+/// `setup::build_population_fleet`.
+pub enum PopulationFleet {
+    /// N ≤ threshold: a fully materialized [`ClientFleet`], built
+    /// through the identical code path as a non-population run —
+    /// prefixes, losses, wall-clock and trace CSVs are byte-identical.
+    Exact(Box<ClientFleet>),
+    /// N > threshold: the lazy fleet.
+    Lazy(Box<LazyFleet>),
+}
+
+impl PopulationFleet {
+    pub fn num_clients(&self) -> usize {
+        match self {
+            PopulationFleet::Exact(f) => f.num_clients(),
+            PopulationFleet::Lazy(f) => f.num_clients(),
+        }
+    }
+
+    pub fn is_exact(&self) -> bool {
+        matches!(self, PopulationFleet::Exact(_))
+    }
+
+    /// The materialized fleet (None in the lazy regime).
+    pub fn exact_mut(&mut self) -> Option<&mut ClientFleet> {
+        match self {
+            PopulationFleet::Exact(f) => Some(f),
+            PopulationFleet::Lazy(_) => None,
+        }
+    }
+
+    /// The lazy fleet (None in the exact regime).
+    pub fn lazy_mut(&mut self) -> Option<&mut LazyFleet> {
+        match self {
+            PopulationFleet::Exact(_) => None,
+            PopulationFleet::Lazy(f) => Some(f),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fed::speed::sort_fastest_first;
+
+    fn spec(s: &str) -> PopulationSpec {
+        PopulationSpec::parse(s).unwrap()
+    }
+
+    #[test]
+    fn parse_roundtrips_and_rejects() {
+        for s in [
+            "pop:100:uniform:50:500",
+            "pop:1000000:avail:diurnal:40000:0.25:1:uniform:50:500",
+            "pop:64:drop:0.05:markov:4:0.1:0.5:exp:0.01",
+        ] {
+            let p = spec(s);
+            assert_eq!(p.spec(), s);
+            assert_eq!(PopulationSpec::parse(&p.spec()).unwrap(), p);
+        }
+        for bad in [
+            "pop:0:homog:10",        // empty population
+            "pop:x:homog:10",        // non-numeric N
+            "pop:10",                // missing scenario
+            "pop:10:warp:9",         // bad scenario
+            "uniform:50:500",        // missing pop: prefix
+        ] {
+            let e = PopulationSpec::parse(bad).unwrap_err();
+            assert!(
+                e.contains(bad) || e.contains("speed"),
+                "error '{e}' for '{bad}'"
+            );
+        }
+    }
+
+    #[test]
+    fn base_speeds_are_rerealized_bit_identically() {
+        let f = LazyFleet::new(spec("pop:500:uniform:50:500"), 11);
+        for i in [0usize, 7, 123, 499] {
+            let a = f.base_speed(i);
+            assert_eq!(a, f.base_speed(i));
+            assert!((50.0..500.0).contains(&a));
+        }
+        // independent instances agree: realization is pure in (seed, id)
+        let g = LazyFleet::new(spec("pop:500:uniform:50:500"), 11);
+        assert_eq!(f.base_speed(250), g.base_speed(250));
+        // a different seed realizes a different population
+        let h = LazyFleet::new(spec("pop:500:uniform:50:500"), 12);
+        assert_ne!(f.base_speed(250), h.base_speed(250));
+    }
+
+    #[test]
+    fn frontier_is_the_exact_base_speed_prefix() {
+        // at small N the frontier must equal a full materialized sort
+        let n = 300;
+        let f = LazyFleet::with_capacity(
+            spec("pop:300:uniform:50:500"),
+            3,
+            16,
+            QuantileSketch::DEFAULT_CAPACITY,
+        );
+        let speeds: Vec<f64> = (0..n).map(|i| f.base_speed(i)).collect();
+        let want: Vec<usize> =
+            sort_fastest_first(&speeds).into_iter().take(16).collect();
+        assert_eq!(f.frontier(), &want[..]);
+        // and the default cohort is the frontier prefix (no drift yet)
+        assert_eq!(f.cohort(4), want[..4].to_vec());
+    }
+
+    #[test]
+    fn speed_sketch_is_exact_at_small_n() {
+        let f = LazyFleet::new(spec("pop:100:uniform:50:500"), 5);
+        let speeds: Vec<f64> =
+            (0..100).map(|i| f.base_speed(i)).collect();
+        assert!(f.speed_sketch().is_exact());
+        for q in [0.1, 0.5, 0.9, 1.0] {
+            assert_eq!(
+                f.speed_sketch().query(q),
+                crate::fed::aggregation::quantile(&speeds, q)
+            );
+        }
+    }
+
+    #[test]
+    fn cohort_reranks_under_drifted_estimates() {
+        let mut f = LazyFleet::new(spec("pop:200:uniform:50:500"), 7);
+        let fastest = f.cohort(1)[0];
+        // the base-fastest client slows 100x for many observed rounds
+        for _ in 0..50 {
+            f.observe(fastest, f.base_speed(fastest) * 100.0);
+        }
+        let c = f.cohort(8);
+        assert!(
+            !c.contains(&fastest),
+            "cohort {c:?} still contains slowed client {fastest}"
+        );
+        // censored feedback only ever pulls estimates up
+        let other = c[0];
+        let before = f.estimate(other);
+        f.observe_censored(other, before * 0.5);
+        assert_eq!(f.estimate(other), before);
+        f.observe_censored(other, before * 4.0);
+        assert!(f.estimate(other) > before);
+    }
+
+    #[test]
+    fn realization_is_deterministic_and_order_independent() {
+        let mk = || {
+            LazyFleet::new(
+                spec("pop:100:drop:0.1:jitter:0.3:uniform:50:500"),
+                13,
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        // same rounds, different cohort shapes per instance would break
+        // determinism if realization were stateful beyond the round
+        // counter — identical cohorts must match exactly
+        for r in 0..10 {
+            let ids: Vec<usize> = (0..10).map(|k| (k * 7 + r) % 100).collect();
+            let ca = a.realize_cohort(&ids, 0.0);
+            let cb = b.realize_cohort(&ids, 0.0);
+            assert_eq!(ca.times, cb.times);
+            assert_eq!(ca.available, cb.available);
+            assert_eq!(ca.online, cb.online);
+        }
+        // jitter re-draws per round: same cohort, different rounds
+        let ids = vec![1, 2, 3];
+        let c1 = a.realize_cohort(&ids, 0.0);
+        let c2 = a.realize_cohort(&ids, 0.0);
+        assert_ne!(c1.times, c2.times);
+    }
+
+    #[test]
+    fn markov_lanes_catch_up_independently_of_touch_order() {
+        let s = "pop:50:markov:4:0.3:0.3:homog:100";
+        // fleet A touches client 5 every round; fleet B only at the end
+        let (mut a, mut b) = (LazyFleet::new(spec(s), 3), LazyFleet::new(spec(s), 3));
+        let mut last_a = Vec::new();
+        for _ in 0..12 {
+            last_a = a.realize_cohort(&[5], 0.0).times.clone();
+            b.realize_cohort(&[], 0.0);
+        }
+        let last_b = b.realize_cohort(&[5], 0.0).times;
+        // B's 13th round pairs with A realizing one more
+        let last_a13 = a.realize_cohort(&[5], 0.0).times;
+        assert_eq!(last_a13, last_b, "lane catch-up diverged (prev {last_a:?})");
+        // two-level times only
+        assert!(last_b[0] == 100.0 || last_b[0] == 400.0);
+    }
+
+    #[test]
+    fn diurnal_flags_match_the_availability_model() {
+        let mut f = LazyFleet::new(
+            spec("pop:4:avail:diurnal:100:0.5:1:homog:10"),
+            5,
+        );
+        let all: Vec<usize> = (0..4).collect();
+        let c = f.realize_cohort(&all, 0.0);
+        assert_eq!(c.online, vec![true, true, false, false]);
+        assert_eq!(c.online_count(), 2);
+        assert_eq!(c.online_positions(), vec![0, 1]);
+        let c = f.realize_cohort(&all, 50.0);
+        assert_eq!(c.online, vec![false, false, true, true]);
+        // diurnal realization consumes no randomness: dropout-free
+        assert!(c.available.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn cluster_chains_advance_per_charged_round_globally() {
+        // p_fail = 1, p_recover = 0: every cluster is down from the
+        // first charged round onward, even for a round that realizes an
+        // empty cohort — waiting rounds step the outage process
+        let mut f = LazyFleet::new(
+            spec("pop:8:avail:cluster:2:1:0:homog:10"),
+            9,
+        );
+        let c = f.realize_cohort(&[0, 7], 0.0);
+        assert_eq!(c.online, vec![false, false]);
+        f.realize_cohort(&[], 0.0); // a waiting round still steps chains
+        let c = f.realize_cohort(&[3], 0.0);
+        assert_eq!(c.online, vec![false]);
+        assert_eq!(f.rounds_realized(), 3);
+    }
+
+    #[test]
+    fn touched_state_stays_cohort_sized() {
+        let mut f = LazyFleet::new(
+            spec("pop:100000:markov:4:0.1:0.5:uniform:50:500"),
+            21,
+        );
+        for r in 0..20 {
+            let ids: Vec<usize> = (0..16).map(|k| k * 3 + (r % 2)).collect();
+            let c = f.realize_cohort(&ids, 0.0);
+            for (k, &i) in c.ids.iter().enumerate() {
+                f.observe(i, c.times[k]);
+            }
+        }
+        // 2 interleaved cohorts of 16 at most: far below the population
+        assert!(
+            f.touched_clients() <= 48,
+            "touched {} clients for 16-cohorts",
+            f.touched_clients()
+        );
+    }
+
+    #[test]
+    fn lazy_shards_rows_are_stable_and_minibatches_draw_from_them() {
+        let mut sh = LazyShards::new(17, 32, 4, 0.0);
+        assert_eq!((sh.s(), sh.d()), (32, 4));
+        // zero noise: y is exactly x·w*
+        let mut x = vec![0.0f32; 4];
+        let y = sh.realize_row(3, 10, &mut x);
+        let dot: f32 =
+            x.iter().zip(sh.teacher()).map(|(a, b)| a * b).sum();
+        assert_eq!(y, dot);
+        // minibatch rows come from the client's own shard
+        let (mut xb, mut yb) = (vec![0.0f32; 8 * 4], vec![0.0f32; 8]);
+        sh.fill_minibatch(3, 8, &mut xb, &mut yb);
+        let mut probe = vec![0.0f32; 4];
+        for k in 0..8 {
+            let row = &xb[k * 4..(k + 1) * 4];
+            let found = (0..32).any(|j| {
+                sh.realize_row(3, j, &mut probe);
+                probe == row
+            });
+            assert!(found, "minibatch row {k} not in client 3's shard");
+        }
+        // different clients see different data
+        let (mut xc, mut yc) = (vec![0.0f32; 8 * 4], vec![0.0f32; 8]);
+        sh.fill_minibatch(4, 8, &mut xc, &mut yc);
+        assert_ne!(xb, xc);
+    }
+
+    #[test]
+    fn population_fleet_reports_its_regime() {
+        let lazy = PopulationFleet::Lazy(Box::new(LazyFleet::new(
+            spec("pop:5000:uniform:50:500"),
+            1,
+        )));
+        assert!(!lazy.is_exact());
+        assert_eq!(lazy.num_clients(), 5000);
+    }
+}

@@ -1,0 +1,449 @@
+//! Constant-memory sketches for population-scale fleets (`fed::sketch`).
+//!
+//! At 10^6 clients the full-materialization structures every solver
+//! leans on — the fastest-first ranking behind
+//! [`crate::fed::ClientFleet::active_prefix`], the tier boundaries of
+//! [`crate::fed::TierScheduler`], the `quantile:Q` deadline of
+//! [`crate::fed::DeadlineController`] — stop fitting in a round budget:
+//! each one is a sort or a scan over all N clients every time it is
+//! consulted. This module holds their sketch replacements, sized to the
+//! cohort instead of the population:
+//!
+//! * [`TopK`] — the k smallest `(value, id)` pairs of a stream: the
+//!   FLANP prefix frontier. Selecting over n values costs O(n log k)
+//!   memory O(k), and the result is **bit-identical** to the full
+//!   stable sort followed by `truncate(k)`: ties break by ascending id,
+//!   exactly what a stable sort over values indexed by id produces.
+//! * [`QuantileSketch`] — a deterministic KLL-style quantile sketch for
+//!   tier boundaries and deadline quantiles. While it holds at most
+//!   `capacity` points it is *exact* — bit-identical to
+//!   [`crate::fed::aggregation::quantile`]'s nearest-rank answer —
+//!   and beyond that it compacts into weighted levels of
+//!   O(capacity · log2(n/capacity)) total memory with a bounded rank
+//!   error (see [`QuantileSketch::query`]).
+//!
+//! The exactness in the small regime is what lets the lazy population
+//! fleet (`fed::population`) pin itself bit-identical to the
+//! materialized [`crate::fed::ClientFleet`] at small N while the same
+//! code path scales to millions (see `docs/scale.md`).
+//!
+//! ```
+//! use flanp::fed::{QuantileSketch, TopK};
+//!
+//! // TopK selection == stable sort + truncate; ties break by id
+//! let est = [3.0, 1.0, 2.0, 1.0];
+//! assert_eq!(TopK::select(&est, 3), vec![1, 3, 2]);
+//! assert_eq!(TopK::select(&est, 9), vec![1, 3, 2, 0]);
+//!
+//! // the sketch is exact below its capacity...
+//! let mut sk = QuantileSketch::new(256);
+//! for i in 0..100 {
+//!     sk.push(i as f64);
+//! }
+//! assert!(sk.is_exact());
+//! assert_eq!(sk.query(0.5), 49.0); // nearest-rank, like fed::aggregation::quantile
+//! // ...and stays within its rank-error bound far beyond it
+//! for i in 100..100_000 {
+//!     sk.push(i as f64);
+//! }
+//! assert!(!sk.is_exact());
+//! let med = sk.query(0.5) / 100_000.0;
+//! assert!((med - 0.5).abs() < 0.05, "median rank {med}");
+//! ```
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A `(value, id)` stream element ordered lexicographically — by value
+/// first (`f64::total_cmp`), then by id. This is exactly the effective
+/// key of the stable [`crate::fed::speed::sort_fastest_first`] sort,
+/// which keeps index order on equal speeds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Entry {
+    value: f64,
+    id: usize,
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.value.total_cmp(&other.value).then(self.id.cmp(&other.id))
+    }
+}
+
+/// Streaming top-K selection: retains the k smallest `(value, id)`
+/// pairs seen so far (a bounded max-heap), the FLANP fastest-prefix
+/// frontier at population scale.
+///
+/// [`TopK::ids`] returns the retained ids fastest-first and is
+/// bit-identical to sorting all n values with the stable fastest-first
+/// sort and truncating to k — the property
+/// [`crate::fed::SpeedEstimator::ranked_prefix`] (and therefore every
+/// existing prefix test) relies on.
+///
+/// ```
+/// use flanp::fed::TopK;
+///
+/// let mut t = TopK::new(2);
+/// for (id, v) in [4.0, 1.0, 3.0, 1.0].into_iter().enumerate() {
+///     t.push(v, id);
+/// }
+/// // the two smallest values are the ties at 1.0; ids stay ascending
+/// assert_eq!(t.ids(), vec![1, 3]);
+/// assert_eq!(t.items(), vec![(1.0, 1), (1.0, 3)]);
+/// ```
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    heap: BinaryHeap<Entry>,
+}
+
+impl TopK {
+    /// An empty frontier that will retain at most `k` elements.
+    pub fn new(k: usize) -> Self {
+        TopK { k, heap: BinaryHeap::with_capacity(k + 1) }
+    }
+
+    /// Capacity `k` this frontier was built with.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Elements currently retained (`min(k, pushes)` once ids are
+    /// distinct).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Offer one element; it is retained iff it is among the k
+    /// lexicographically-smallest `(value, id)` pairs seen so far.
+    /// `value` must not be NaN (NaN would also panic the materialized
+    /// fastest-first sort this mirrors).
+    pub fn push(&mut self, value: f64, id: usize) {
+        assert!(!value.is_nan(), "NaN value in top-K frontier");
+        let e = Entry { value, id };
+        if self.heap.len() < self.k {
+            self.heap.push(e);
+        } else if let Some(top) = self.heap.peek() {
+            if e < *top {
+                self.heap.pop();
+                self.heap.push(e);
+            }
+        }
+    }
+
+    /// Retained `(value, id)` pairs, fastest-first (ties by ascending
+    /// id).
+    pub fn items(&self) -> Vec<(f64, usize)> {
+        let mut v: Vec<Entry> = self.heap.iter().copied().collect();
+        v.sort();
+        v.into_iter().map(|e| (e.value, e.id)).collect()
+    }
+
+    /// Retained ids, fastest-first — bit-identical to
+    /// `sort_fastest_first(values)` truncated to k when fed every
+    /// `(values[i], i)`.
+    pub fn ids(&self) -> Vec<usize> {
+        let mut v: Vec<Entry> = self.heap.iter().copied().collect();
+        v.sort();
+        v.into_iter().map(|e| e.id).collect()
+    }
+
+    /// One-shot selection over a full slice: the ids of the k smallest
+    /// values, fastest-first. O(n log k) — the drop-in replacement for
+    /// "stable-sort all n, keep the first k".
+    pub fn select(values: &[f64], k: usize) -> Vec<usize> {
+        let mut t = TopK::new(k.min(values.len()));
+        for (i, &v) in values.iter().enumerate() {
+            t.push(v, i);
+        }
+        t.ids()
+    }
+}
+
+/// A deterministic KLL-style quantile sketch.
+///
+/// Values live in levels of weight `2^level`; level buffers that
+/// overflow `capacity` are sorted and *compacted*: every other element
+/// (alternating the starting offset between compactions, so successive
+/// compaction errors cancel instead of accumulating) is promoted to the
+/// next level at double weight, the rest are discarded. Memory is
+/// O(capacity · log2(n/capacity)); the rank error of a query is at most
+/// `(log2(n/capacity) + 1) / capacity` of the total weight — about
+/// 0.04 at capacity 256 over 10^5 points, and typically far smaller
+/// because of the alternating offsets (verified empirically in this
+/// module's tests).
+///
+/// Until the first compaction ([`QuantileSketch::is_exact`]) every
+/// point is stored at weight 1 and [`QuantileSketch::query`] is
+/// bit-identical to [`crate::fed::aggregation::quantile`] — same
+/// nearest-rank formula, same `+inf` on an empty sketch. That exactness
+/// is the small-N regression pin for sketch-based deadlines and tier
+/// boundaries.
+///
+/// ```
+/// use flanp::fed::aggregation::quantile;
+/// use flanp::fed::QuantileSketch;
+///
+/// let xs = [40.0, 10.0, 30.0, 20.0];
+/// let mut sk = QuantileSketch::new(64);
+/// for &x in &xs {
+///     sk.push(x);
+/// }
+/// for q in [0.01, 0.25, 0.5, 0.75, 1.0] {
+///     assert_eq!(sk.query(q), quantile(&xs, q));
+/// }
+/// assert_eq!(QuantileSketch::new(64).query(0.5), f64::INFINITY);
+/// ```
+#[derive(Clone, Debug)]
+pub struct QuantileSketch {
+    capacity: usize,
+    /// `levels[l]` holds values of weight `2^l` (level 0 unsorted)
+    levels: Vec<Vec<f64>>,
+    count: u64,
+    compactions: u64,
+}
+
+impl QuantileSketch {
+    /// Default per-level buffer capacity: ~1% rank error at 10^6 points.
+    pub const DEFAULT_CAPACITY: usize = 256;
+
+    /// A sketch whose per-level buffers hold `capacity` values.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 8, "sketch capacity {capacity} < 8");
+        QuantileSketch {
+            capacity,
+            levels: vec![Vec::new()],
+            count: 0,
+            compactions: 0,
+        }
+    }
+
+    /// Total points pushed (not the number stored).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Values currently stored across all levels (the memory bound).
+    pub fn stored(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    /// True while no compaction has happened: every point is stored and
+    /// [`QuantileSketch::query`] equals the exact nearest-rank quantile.
+    pub fn is_exact(&self) -> bool {
+        self.compactions == 0
+    }
+
+    /// Add one point. Amortized O(1); NaN is rejected (it would poison
+    /// every downstream deadline and boundary).
+    pub fn push(&mut self, x: f64) {
+        assert!(!x.is_nan(), "NaN value in quantile sketch");
+        self.levels[0].push(x);
+        self.count += 1;
+        let mut l = 0;
+        while self.levels[l].len() > self.capacity {
+            self.compact(l);
+            l += 1;
+        }
+    }
+
+    fn compact(&mut self, l: usize) {
+        if self.levels.len() == l + 1 {
+            self.levels.push(Vec::new());
+        }
+        let offset = (self.compactions & 1) as usize;
+        self.compactions += 1;
+        let mut buf = std::mem::take(&mut self.levels[l]);
+        buf.sort_by(|a, b| a.total_cmp(b));
+        let mut i = offset;
+        while i < buf.len() {
+            self.levels[l + 1].push(buf[i]);
+            i += 2;
+        }
+    }
+
+    /// Weighted nearest-rank `q`-quantile of everything pushed so far
+    /// (`q` in (0, 1]; `q = 1` is the stored maximum). An empty sketch
+    /// yields `+inf`, mirroring [`crate::fed::aggregation::quantile`]
+    /// so a deadline over an empty cohort never rejects anyone.
+    pub fn query(&self, q: f64) -> f64 {
+        let mut items: Vec<(f64, u64)> = Vec::with_capacity(self.stored());
+        for (l, buf) in self.levels.iter().enumerate() {
+            let w = 1u64 << l;
+            items.extend(buf.iter().map(|&v| (v, w)));
+        }
+        if items.is_empty() {
+            return f64::INFINITY;
+        }
+        items.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let total: u64 = items.iter().map(|&(_, w)| w).sum();
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for &(v, w) in &items {
+            cum += w;
+            if cum >= rank {
+                return v;
+            }
+        }
+        items.last().unwrap().0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fed::aggregation::quantile;
+    use crate::fed::speed::sort_fastest_first;
+    use crate::util::Rng;
+
+    #[test]
+    fn topk_matches_stable_sort_prefix() {
+        let mut rng = Rng::new(5);
+        // duplicates are the interesting case: ties must keep id order
+        let values: Vec<f64> =
+            (0..200).map(|_| (rng.below(40) as f64) * 0.5).collect();
+        let full = sort_fastest_first(&values);
+        for k in [0, 1, 3, 17, 100, 200, 500] {
+            let want: Vec<usize> =
+                full.iter().copied().take(k).collect();
+            assert_eq!(TopK::select(&values, k), want, "k = {k}");
+        }
+    }
+
+    #[test]
+    fn topk_tracks_drifted_estimates() {
+        // the frontier is rebuilt from live estimates each selection, so
+        // a drifted client must fall out exactly as a full re-sort says
+        let mut est: Vec<f64> = (0..50).map(|i| 50.0 + i as f64).collect();
+        assert_eq!(TopK::select(&est, 3), vec![0, 1, 2]);
+        est[0] = 1e6; // the fastest client slows down 4 orders
+        est[49] = 1.0; // the slowest becomes fastest
+        let want: Vec<usize> =
+            sort_fastest_first(&est).into_iter().take(3).collect();
+        assert_eq!(TopK::select(&est, 3), want);
+        assert_eq!(TopK::select(&est, 3), vec![49, 1, 2]);
+    }
+
+    #[test]
+    fn topk_streaming_matches_one_shot() {
+        let mut rng = Rng::new(9);
+        let values: Vec<f64> = (0..500).map(|_| rng.next_f64()).collect();
+        let mut t = TopK::new(16);
+        for (i, &v) in values.iter().enumerate() {
+            t.push(v, i);
+        }
+        assert_eq!(t.len(), 16);
+        assert_eq!(t.k(), 16);
+        assert!(!t.is_empty());
+        assert_eq!(t.ids(), TopK::select(&values, 16));
+        let items = t.items();
+        assert!(items.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn topk_zero_capacity_is_empty() {
+        let mut t = TopK::new(0);
+        t.push(1.0, 0);
+        assert!(t.is_empty());
+        assert_eq!(t.ids(), Vec::<usize>::new());
+        assert_eq!(TopK::select(&[1.0, 2.0], 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn topk_rejects_nan() {
+        TopK::new(4).push(f64::NAN, 0);
+    }
+
+    #[test]
+    fn sketch_is_exact_below_capacity() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> =
+            (0..200).map(|_| rng.uniform(50.0, 500.0)).collect();
+        let mut sk = QuantileSketch::new(256);
+        for &x in &xs {
+            sk.push(x);
+        }
+        assert!(sk.is_exact());
+        assert_eq!(sk.count(), 200);
+        assert_eq!(sk.stored(), 200);
+        for q in [0.01, 0.1, 0.25, 0.5, 0.8, 0.95, 1.0] {
+            assert_eq!(sk.query(q), quantile(&xs, q), "q = {q}");
+        }
+    }
+
+    #[test]
+    fn sketch_empty_is_infinite() {
+        assert_eq!(QuantileSketch::new(64).query(0.5), f64::INFINITY);
+    }
+
+    #[test]
+    fn sketch_rank_error_is_bounded_at_scale() {
+        // 10^5 uniform points: the value at rank-quantile q is ~q, so
+        // |query(q) - q| reads the rank error directly
+        let n = 100_000usize;
+        let m = 256usize;
+        let mut rng = Rng::new(11);
+        let mut sk = QuantileSketch::new(m);
+        for _ in 0..n {
+            sk.push(rng.next_f64());
+        }
+        assert!(!sk.is_exact());
+        // documented bound: (log2(n/m) + 1) / m ≈ 0.037 at these sizes
+        let bound = ((n as f64 / m as f64).log2() + 1.0) / m as f64;
+        for q in [0.05, 0.25, 0.5, 0.75, 0.9, 0.99] {
+            let err = (sk.query(q) - q).abs();
+            assert!(
+                err <= bound,
+                "q = {q}: rank error {err} exceeds bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_memory_is_logarithmic() {
+        let m = 64usize;
+        let mut sk = QuantileSketch::new(m);
+        for i in 0..1_000_000u64 {
+            sk.push(i as f64);
+        }
+        // O(capacity * log2(n/capacity)): generous factor-2 headroom
+        let levels = (1_000_000f64 / m as f64).log2().ceil() as usize + 2;
+        assert!(
+            sk.stored() <= m * levels,
+            "stored {} over {} levels of {m}",
+            sk.stored(),
+            levels
+        );
+    }
+
+    #[test]
+    fn sketch_query_order_statistics_are_monotone() {
+        let mut rng = Rng::new(17);
+        let mut sk = QuantileSketch::new(32);
+        for _ in 0..10_000 {
+            sk.push(rng.uniform(0.0, 1000.0));
+        }
+        let qs = [0.1, 0.3, 0.5, 0.7, 0.9, 1.0];
+        let vals: Vec<f64> = qs.iter().map(|&q| sk.query(q)).collect();
+        assert!(vals.windows(2).all(|w| w[0] <= w[1]), "{vals:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn sketch_rejects_nan() {
+        QuantileSketch::new(8).push(f64::NAN);
+    }
+}

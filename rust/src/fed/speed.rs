@@ -32,20 +32,24 @@ impl SpeedModel {
     /// replay (`fed::traces`) reproduces a recorded run's data streams
     /// exactly regardless of what base model was recorded.
     pub fn draw(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
-        (0..n)
-            .map(|_| {
-                let u = rng.next_f64();
-                match self {
-                    // identical to rng.uniform(lo, hi)
-                    SpeedModel::Uniform { lo, hi } => lo + (hi - lo) * u,
-                    // identical to rng.exponential(lambda)
-                    SpeedModel::Exponential { lambda } => {
-                        -(1.0 - u).ln() / lambda
-                    }
-                    SpeedModel::Homogeneous { t } => *t,
-                }
-            })
-            .collect()
+        (0..n).map(|_| self.draw_one(rng)).collect()
+    }
+
+    /// One base-time draw. Consumes exactly one uniform for every model
+    /// (`Homogeneous` ignores its draw) — the invariant [`SpeedModel::draw`]
+    /// documents, and what lets the lazy population fleet
+    /// (`fed::population`) realize client `i`'s base time from its own
+    /// per-client stream with a single call, bit-identical on every
+    /// re-realization.
+    pub fn draw_one(&self, rng: &mut Rng) -> f64 {
+        let u = rng.next_f64();
+        match self {
+            // identical to rng.uniform(lo, hi)
+            SpeedModel::Uniform { lo, hi } => lo + (hi - lo) * u,
+            // identical to rng.exponential(lambda)
+            SpeedModel::Exponential { lambda } => -(1.0 - u).ln() / lambda,
+            SpeedModel::Homogeneous { t } => *t,
+        }
     }
 
     pub fn parse(s: &str) -> Result<Self, String> {
@@ -125,6 +129,21 @@ mod tests {
     fn homogeneous_all_equal() {
         let m = SpeedModel::Homogeneous { t: 7.5 };
         assert!(m.draw(&mut Rng::new(3), 10).iter().all(|&t| t == 7.5));
+    }
+
+    #[test]
+    fn draw_is_sequential_draw_one() {
+        for m in [
+            SpeedModel::paper_uniform(),
+            SpeedModel::Exponential { lambda: 0.5 },
+            SpeedModel::Homogeneous { t: 7.0 },
+        ] {
+            let batch = m.draw(&mut Rng::new(9), 32);
+            let mut rng = Rng::new(9);
+            let one_by_one: Vec<f64> =
+                (0..32).map(|_| m.draw_one(&mut rng)).collect();
+            assert_eq!(batch, one_by_one, "{m:?}");
+        }
     }
 
     #[test]

@@ -584,6 +584,15 @@ impl SpeedEstimator {
     pub fn ranked(&self) -> Vec<usize> {
         sort_fastest_first(&self.est)
     }
+
+    /// The `k` fastest client ids by current estimate — bit-identical
+    /// to `ranked()` truncated to `k`, via top-K heap selection
+    /// ([`crate::fed::TopK`]): O(n log k) per call instead of the full
+    /// O(n log n) sort, the difference between a stage boundary costing
+    /// a population sort and costing a cohort scan (see `docs/scale.md`).
+    pub fn ranked_prefix(&self, k: usize) -> Vec<usize> {
+        crate::fed::sketch::TopK::select(&self.est, k)
+    }
 }
 
 #[cfg(test)]
@@ -844,6 +853,18 @@ mod tests {
         assert_eq!(est.estimates(), &prior[..]);
         assert_eq!(est.ranked(), vec![0, 1, 2]);
         assert_eq!(est.observations(1), 100);
+    }
+
+    #[test]
+    fn ranked_prefix_equals_truncated_ranking() {
+        // including ties, which the stable sort breaks by id
+        let mut est = SpeedEstimator::new(&[30.0, 10.0, 20.0, 10.0, 20.0], 0.5);
+        est.observe(0, 5.0); // drift one estimate
+        for k in 0..=6 {
+            let mut full = est.ranked();
+            full.truncate(k);
+            assert_eq!(est.ranked_prefix(k), full, "k = {k}");
+        }
     }
 
     #[test]

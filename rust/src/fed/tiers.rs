@@ -195,6 +195,35 @@ impl TierPolicy {
         }
         Ok(())
     }
+
+    /// Tier boundaries from a population quantile sketch instead of a
+    /// full ranking: the upper estimate bound of tier `t` (0 = fastest)
+    /// is the sketch's `(t+1)/K` quantile. While the sketch is exact
+    /// these equal the quantile-split upper *bands* the materialized
+    /// [`TierScheduler`] freezes — both are the nearest-rank value at
+    /// `ceil(k·n/K)` — so a population fleet can place a client into a
+    /// tier by comparing its estimate against K boundaries without ever
+    /// ranking all N clients (see `docs/scale.md`).
+    ///
+    /// ```
+    /// use flanp::fed::{QuantileSketch, TierPolicy};
+    ///
+    /// let mut sk = QuantileSketch::new(64);
+    /// for e in [10.0, 20.0, 30.0, 40.0, 50.0, 60.0] {
+    ///     sk.push(e);
+    /// }
+    /// let bounds = TierPolicy::new(3).sketch_bounds(&sk);
+    /// // 6 clients into 3 tiers: boundaries at ranks 2, 4, 6
+    /// assert_eq!(bounds, vec![20.0, 40.0, 60.0]);
+    /// ```
+    pub fn sketch_bounds(
+        &self,
+        sketch: &crate::fed::sketch::QuantileSketch,
+    ) -> Vec<f64> {
+        (1..=self.tiers)
+            .map(|k| sketch.query(k as f64 / self.tiers as f64))
+            .collect()
+    }
 }
 
 /// The per-run tier state machine: cached latency ranking, cached tier
@@ -452,6 +481,33 @@ mod tests {
         ] {
             let e = TierPolicy::parse(bad).unwrap_err();
             assert!(e.contains(bad), "error '{e}' does not name '{bad}'");
+        }
+    }
+
+    #[test]
+    fn sketch_bounds_equal_materialized_band_maxima() {
+        // an exact sketch reproduces the quantile split's frozen upper
+        // bands: nearest-rank at k/K over n == rank (k*n).div_ceil(K)
+        for (n, k_tiers) in [(8usize, 4usize), (10, 5), (7, 3), (12, 4)] {
+            let mut rng = Rng::new(n as u64 + k_tiers as u64);
+            let speeds = SpeedModel::paper_uniform().draw(&mut rng, n);
+            let est = SpeedEstimator::new(&speeds, 0.25);
+            let policy = TierPolicy::new(k_tiers);
+            let sched = TierScheduler::new(policy.clone(), &est);
+            let mut sk = crate::fed::sketch::QuantileSketch::new(256);
+            for &s in &speeds {
+                sk.push(s);
+            }
+            let bounds = policy.sketch_bounds(&sk);
+            assert_eq!(bounds.len(), sched.num_tiers());
+            for t in 0..sched.num_tiers() {
+                let band_max = est
+                    .estimate(*sched.tier_members(t).last().unwrap());
+                assert_eq!(
+                    bounds[t], band_max,
+                    "tier {t} of {k_tiers} over {n} clients"
+                );
+            }
         }
     }
 

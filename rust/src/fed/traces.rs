@@ -303,7 +303,8 @@ impl TraceReplay {
 /// real scheduler. Three caveats bound the bit-identity guarantee:
 /// replaying a `drop:` scenario is not bit-identical (its silent
 /// dropouts become observable); a recorded `avail:diurnal` wait replays
-/// as a free idle tick (the trace does not carry the window schedule);
+/// as an estimate-priced waiting round rather than a jump to the exact
+/// window boundary (the trace does not carry the window schedule);
 /// and ORACLE-ranked runs (`--oracle-ranking`, `fedgate-fastK`) can
 /// diverge under jitter/Markov, because the replayed fleet's base
 /// speeds — and hence its oracle ordering — are the recorded round-0
@@ -515,16 +516,12 @@ impl AvailabilityModel {
             AvailabilityModel::Iid { p } => {
                 (0..n).map(|_| rng.next_f64() < *p).collect()
             }
-            AvailabilityModel::Diurnal { period, duty, spread } => (0..n)
-                .map(|i| {
-                    (now / period + Self::phase(*spread, i, n)).fract() < *duty
-                })
+            AvailabilityModel::Diurnal { .. } => (0..n)
+                // single source of truth with the lazy per-client path
+                .map(|i| self.online_at(now, i, n).unwrap())
                 .collect(),
-            AvailabilityModel::Cluster { clusters, p_fail, p_recover } => {
-                for down in cluster_down.iter_mut() {
-                    let u = rng.next_f64();
-                    *down = if *down { u >= *p_recover } else { u < *p_fail };
-                }
+            AvailabilityModel::Cluster { clusters, .. } => {
+                self.step_clusters(cluster_down, rng);
                 (0..n)
                     .map(|i| !cluster_down[Self::cluster_of(i, n, *clusters)])
                     .collect()
@@ -532,12 +529,45 @@ impl AvailabilityModel {
         }
     }
 
+    /// Advance the per-cluster Markov outage chains by one charged
+    /// round (`avail:cluster`; a no-op for the other variants). Exactly
+    /// the chain step [`AvailabilityModel::realize`] performs, split
+    /// out so a lazy population fleet can advance the O(C) global state
+    /// once per round and derive each cohort member's flag from it
+    /// without realizing all N clients.
+    pub fn step_clusters(&self, cluster_down: &mut [bool], rng: &mut Rng) {
+        if let AvailabilityModel::Cluster { p_fail, p_recover, .. } = self {
+            for down in cluster_down.iter_mut() {
+                let u = rng.next_f64();
+                *down = if *down { u >= *p_recover } else { u < *p_fail };
+            }
+        }
+    }
+
+    /// Closed-form online flag for ONE client at virtual time `now`:
+    /// `Some(flag)` when the model is deterministic given the clock
+    /// (diurnal windows — the same arithmetic as
+    /// [`AvailabilityModel::realize`], per client), `None` when
+    /// availability is a stochastic process whose realization needs the
+    /// chain state or a fresh draw (iid, cluster). The lazy population
+    /// fleet uses this to realize a cohort member's availability in
+    /// O(1) instead of realizing the fleet.
+    pub fn online_at(&self, now: f64, i: usize, n: usize) -> Option<bool> {
+        match self {
+            AvailabilityModel::Diurnal { period, duty, spread } => Some(
+                (now / period + Self::phase(*spread, i, n)).fract() < *duty,
+            ),
+            _ => None,
+        }
+    }
+
     /// When every member of `cohort` is offline: the next virtual time
     /// at which one of them comes back online, if the model knows it.
     /// Diurnal windows are deterministic, so the clock can jump straight
     /// to the cohort's next window; stochastic outages (iid / cluster)
-    /// return `None` — the round becomes an idle tick and the next
-    /// realization retries.
+    /// return `None` — the caller charges one estimate-priced waiting
+    /// round instead (see `coordinator::solvers::deadline_round`) and
+    /// the next realization retries.
     pub fn next_online_time(
         &self,
         now: f64,
@@ -720,6 +750,59 @@ mod tests {
         // stochastic models advertise no wake time
         let iid = AvailabilityModel::Iid { p: 0.5 };
         assert_eq!(iid.next_online_time(30.0, &[0], 4), None);
+    }
+
+    #[test]
+    fn online_at_matches_realized_flags() {
+        let m = AvailabilityModel::Diurnal {
+            period: 100.0,
+            duty: 0.4,
+            spread: 1.0,
+        };
+        let mut down = Vec::new();
+        let mut rng = Rng::new(5);
+        for now in [0.0, 13.0, 40.0, 77.5, 260.0] {
+            let on = m.realize(now, 6, &mut down, &mut rng);
+            for (i, &flag) in on.iter().enumerate() {
+                assert_eq!(m.online_at(now, i, 6), Some(flag), "t={now} i={i}");
+            }
+        }
+        // stochastic models have no closed form
+        assert_eq!(AvailabilityModel::Iid { p: 0.5 }.online_at(0.0, 0, 4), None);
+        let cl = AvailabilityModel::Cluster {
+            clusters: 2,
+            p_fail: 0.1,
+            p_recover: 0.5,
+        };
+        assert_eq!(cl.online_at(0.0, 0, 4), None);
+    }
+
+    #[test]
+    fn step_clusters_matches_realized_chain() {
+        let m = AvailabilityModel::Cluster {
+            clusters: 3,
+            p_fail: 0.3,
+            p_recover: 0.3,
+        };
+        // same seed, same chain: stepping the state alone must follow
+        // the exact trajectory realize() walks
+        let mut down_a = vec![false; 3];
+        let mut down_b = vec![false; 3];
+        let (mut rng_a, mut rng_b) = (Rng::new(9), Rng::new(9));
+        for _ in 0..50 {
+            let on = m.realize(0.0, 9, &mut down_a, &mut rng_a);
+            m.step_clusters(&mut down_b, &mut rng_b);
+            assert_eq!(down_a, down_b);
+            for (i, &flag) in on.iter().enumerate() {
+                let c = AvailabilityModel::cluster_of(i, 9, 3);
+                assert_eq!(flag, !down_b[c]);
+            }
+        }
+        // non-cluster models consume nothing and touch nothing
+        let iid = AvailabilityModel::Iid { p: 0.5 };
+        let mut rng = Rng::new(4);
+        iid.step_clusters(&mut [], &mut rng);
+        assert_eq!(rng.next_u64(), Rng::new(4).next_u64());
     }
 
     #[test]

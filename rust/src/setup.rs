@@ -7,7 +7,7 @@ use crate::data::{shard, synth};
 use crate::engine::{
     Engine, HloEngine, KernelPath, Manifest, ModelKind, ModelMeta, NativeEngine,
 };
-use crate::fed::ClientFleet;
+use crate::fed::{ClientFleet, LazyFleet, PopulationFleet, PopulationSpec};
 use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -135,6 +135,37 @@ pub fn build_fleet(
     Ok(fleet)
 }
 
+/// Build a [`PopulationFleet`] from a `pop:N:SCENARIO` spec: at
+/// `N <= exact_threshold` the population materializes through the
+/// identical [`build_fleet`] path as a non-population run (config
+/// resized to `N`, system swapped for the population scenario), so
+/// small populations stay **bit-identical** to plain fleets; past the
+/// threshold the lazy sketch-backed fleet takes over. Pass
+/// [`crate::fed::DEFAULT_EXACT_THRESHOLD`] unless an experiment pins
+/// its own switch point. See `docs/scale.md`.
+pub fn build_population_fleet(
+    meta: &ModelMeta,
+    cfg: &ExperimentConfig,
+    pop: &PopulationSpec,
+    noise: f64,
+    separation: f64,
+    exact_threshold: usize,
+) -> Result<PopulationFleet> {
+    pop.validate().map_err(anyhow::Error::msg)?;
+    if pop.n <= exact_threshold {
+        let mut sized = cfg.clone();
+        sized.num_clients = pop.n;
+        sized.system = pop.system.clone();
+        let fleet = build_fleet(meta, &sized, noise, separation)?;
+        Ok(PopulationFleet::Exact(Box::new(fleet)))
+    } else {
+        Ok(PopulationFleet::Lazy(Box::new(LazyFleet::new(
+            pop.clone(),
+            cfg.seed,
+        ))))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +218,32 @@ mod tests {
         assert_eq!(fleet.num_clients(), 10);
         assert_eq!(fleet.s(0), 20);
         assert_eq!(fleet.d(), 25);
+    }
+
+    #[test]
+    fn population_fleet_materializes_below_threshold() {
+        let e = native_from_name("linreg_d25").unwrap();
+        let cfg = ExperimentConfig::new(SolverKind::Flanp, "linreg_d25", 10, 20);
+        let pop = PopulationSpec::parse("pop:6:uniform:50:500").unwrap();
+        let mut f =
+            build_population_fleet(e.meta(), &cfg, &pop, 0.1, 0.0, 4096)
+                .unwrap();
+        assert!(f.is_exact());
+        assert_eq!(f.num_clients(), 6);
+        // identical to a plain fleet built with a resized config: the
+        // exact regime IS the ordinary construction path
+        let mut sized = cfg.clone();
+        sized.num_clients = 6;
+        sized.system = pop.system.clone();
+        let plain = build_fleet(e.meta(), &sized, 0.1, 0.0).unwrap();
+        assert_eq!(f.exact_mut().unwrap().speeds, plain.speeds);
+        assert_eq!(f.exact_mut().unwrap().order, plain.order);
+        // past the threshold the population goes lazy
+        let big = PopulationSpec::parse("pop:100000:uniform:50:500").unwrap();
+        let f = build_population_fleet(e.meta(), &cfg, &big, 0.1, 0.0, 4096)
+            .unwrap();
+        assert!(!f.is_exact());
+        assert_eq!(f.num_clients(), 100_000);
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! fed::population integration tests.
+//!
+//! The load-bearing regression is the small-N bit-identity pin: a
+//! `pop:N:SCENARIO` population at materializable N must run EXACTLY
+//! like a plain fleet built from the same scenario — same prefix
+//! growth, same losses, same wall-clock, and a byte-identical recorded
+//! trace CSV — across the static, jitter, Markov and correlated-
+//! availability scenarios. The lazy regime's own contracts (per-client
+//! re-realization, O(cohort) state, sketch bounds) are unit-tested in
+//! `fed::{population,sketch}`; here we check the two regimes meet at
+//! the threshold.
+
+use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::fed::{
+    PopulationSpec, SystemModel, Trace, DEFAULT_EXACT_THRESHOLD,
+};
+use flanp::setup;
+use std::path::PathBuf;
+
+fn base_cfg(solver: SolverKind, n: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(solver, "linreg_d25", n, 50);
+    cfg.tau = 10;
+    cfg.eta = 0.05;
+    cfg.n0 = 2;
+    cfg.mu = 0.5;
+    cfg.c_stat = 0.5;
+    cfg.max_rounds = 400;
+    cfg.eval_every = 5;
+    cfg.eval_rows = 500;
+    cfg.seed = 3;
+    cfg.record_trace = true;
+    cfg
+}
+
+fn assert_traces_identical(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round count");
+    assert_eq!(a.stage_transitions, b.stage_transitions, "{what}: stages");
+    assert_eq!(a.total_time, b.total_time, "{what}: wall-clock");
+    assert_eq!(a.finished, b.finished, "{what}: finished");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.time, y.time, "{what} round {}", x.round);
+        assert_eq!(x.loss_full, y.loss_full, "{what} round {}", x.round);
+        assert_eq!(x.participants, y.participants, "{what} round {}", x.round);
+        assert_eq!(x.available, y.available, "{what} round {}", x.round);
+    }
+}
+
+fn csv_path(file: &str) -> PathBuf {
+    std::env::temp_dir().join(file)
+}
+
+/// Run `spec` once through the population path (exact regime) and once
+/// through the plain fleet path, asserting identical traces and
+/// byte-identical recorded trace CSVs.
+fn pin_exact_regime(spec: &str, solver: SolverKind, tag: &str) {
+    let n = 16;
+    let engine = setup::native_from_name("linreg_d25").unwrap();
+
+    // population path: cfg carries a deliberately WRONG size/system so
+    // the test fails if build_population_fleet stops overriding them
+    let cfg = base_cfg(solver.clone(), 4);
+    let pop = PopulationSpec::parse(&format!("pop:{n}:{spec}")).unwrap();
+    let mut pf = setup::build_population_fleet(
+        engine.meta(),
+        &cfg,
+        &pop,
+        0.1,
+        0.0,
+        DEFAULT_EXACT_THRESHOLD,
+    )
+    .unwrap();
+    let fleet = pf.exact_mut().expect("small population must materialize");
+    let mut sized = cfg.clone();
+    sized.num_clients = n;
+    sized.system = pop.system.clone();
+    let t_pop = run_solver(&engine, fleet, &sized).unwrap();
+    let p_pop = csv_path(&format!("pop_pin_{tag}_pop.csv"));
+    fleet.write_recorded_trace(&p_pop).unwrap();
+
+    // plain path: the ordinary build_fleet construction
+    let mut plain_cfg = base_cfg(solver, n);
+    plain_cfg.system = SystemModel::parse(spec).unwrap();
+    let mut plain =
+        setup::build_fleet(engine.meta(), &plain_cfg, 0.1, 0.0).unwrap();
+    let t_plain = run_solver(&engine, &mut plain, &plain_cfg).unwrap();
+    let p_plain = csv_path(&format!("pop_pin_{tag}_plain.csv"));
+    plain.write_recorded_trace(&p_plain).unwrap();
+
+    assert_traces_identical(&t_pop, &t_plain, tag);
+    let (a, b) = (
+        std::fs::read(&p_pop).unwrap(),
+        std::fs::read(&p_plain).unwrap(),
+    );
+    assert!(!a.is_empty(), "{tag}: empty recorded trace");
+    assert_eq!(a, b, "{tag}: recorded trace CSVs differ");
+}
+
+#[test]
+fn exact_regime_is_bit_identical_static() {
+    pin_exact_regime("uniform:50:500", SolverKind::Flanp, "static");
+}
+
+#[test]
+fn exact_regime_is_bit_identical_jitter() {
+    pin_exact_regime("jitter:0.3:uniform:50:500", SolverKind::Flanp, "jitter");
+}
+
+#[test]
+fn exact_regime_is_bit_identical_markov() {
+    pin_exact_regime(
+        "markov:4:0.1:0.5:uniform:50:500",
+        SolverKind::FedGate,
+        "markov",
+    );
+}
+
+#[test]
+fn exact_regime_is_bit_identical_clustered_availability() {
+    pin_exact_regime(
+        "avail:cluster:4:0.1:0.3:uniform:50:500",
+        SolverKind::Flanp,
+        "cluster",
+    );
+}
+
+#[test]
+fn exact_regime_is_bit_identical_diurnal_availability() {
+    pin_exact_regime(
+        "avail:diurnal:40000:0.25:1:uniform:50:500",
+        SolverKind::Flanp,
+        "diurnal",
+    );
+}
+
+#[test]
+fn lazy_regime_engages_past_the_threshold_and_is_deterministic() {
+    let engine = setup::native_from_name("linreg_d25").unwrap();
+    let cfg = base_cfg(SolverKind::Flanp, 4);
+    let pop = PopulationSpec::parse(
+        "pop:10000:avail:diurnal:40000:0.25:1:uniform:50:500",
+    )
+    .unwrap();
+    let build = || {
+        setup::build_population_fleet(
+            engine.meta(),
+            &cfg,
+            &pop,
+            0.1,
+            0.0,
+            DEFAULT_EXACT_THRESHOLD,
+        )
+        .unwrap()
+    };
+    let (mut a, mut b) = (build(), build());
+    assert!(!a.is_exact());
+    let (fa, fb) = (a.lazy_mut().unwrap(), b.lazy_mut().unwrap());
+    // frontier + rounds are reproducible across independent builds
+    assert_eq!(fa.frontier(), fb.frontier());
+    for r in 0..20 {
+        let cohort = fa.cohort(64);
+        assert_eq!(cohort, fb.cohort(64));
+        let now = r as f64 * 1000.0;
+        let ca = fa.realize_cohort(&cohort, now);
+        let cb = fb.realize_cohort(&cohort, now);
+        assert_eq!(ca.times, cb.times, "round {r}");
+        assert_eq!(ca.online, cb.online, "round {r}");
+        for (k, &i) in ca.ids.iter().enumerate() {
+            if ca.online[k] {
+                fa.observe(i, ca.times[k]);
+                fb.observe(i, cb.times[k]);
+            }
+        }
+    }
+}

@@ -251,8 +251,10 @@ fn diurnal_correlated_availability_flips_the_winner() {
     // The Hard-et-al. effect (the ISSUE acceptance): correlated
     // availability changes which algorithm wins. Control: i.i.d.
     // availability at 25% — FLANP's adaptive prefix still beats
-    // full-participation FedGATE (its unavailable-prefix rounds are
-    // free retries, its productive rounds are cheap). Treatment:
+    // full-participation FedGATE (its all-offline prefix rounds charge
+    // one cheap estimate-priced wait over a tiny fast prefix, while
+    // every FedGATE round is priced by the slowest of ~4 online
+    // clients drawn from the whole speed range). Treatment:
     // diurnal ROTATION at the same 25% marginal availability — FLANP's
     // small fastest-prefix must now WAIT, on the clock, for its two
     // designated clients' windows to come around, while FedGATE always
@@ -293,10 +295,9 @@ fn diurnal_correlated_availability_flips_the_winner() {
 }
 
 #[test]
-fn diurnal_waits_are_charged_and_idle_ticks_are_not() {
+fn diurnal_waits_jump_the_clock_to_the_next_window() {
     // deterministic outage windows advance the clock to the cohort's
-    // next window (the server genuinely waits); i.i.d. outages have no
-    // known wake time, so an all-offline round is a free idle tick
+    // next window (the server genuinely waits, in one charged jump)
     let mut diu = base_cfg(SolverKind::Flanp, 16, 50);
     // spread 0: one shared window — rounds realized inside the off
     // window must jump the clock forward
@@ -311,4 +312,35 @@ fn diurnal_waits_are_charged_and_idle_ticks_are_not() {
         .windows(2)
         .any(|w| w[1].available == 0 && w[1].time > w[0].time + 1000.0);
     assert!(waited, "no charged diurnal wait in {} rounds", t.rounds.len());
+}
+
+#[test]
+fn stochastic_all_down_rounds_charge_an_estimate_priced_wait() {
+    // the ROADMAP time-basis gap, closed: a stochastic outage with no
+    // computable wake time used to make an all-down round a FREE retry,
+    // letting a solver spin through dark rounds at zero cost. It must
+    // now charge one estimate-priced waiting round — `tau * max est`
+    // over the cohort — every time the whole cohort is offline.
+    let mut cfg = base_cfg(SolverKind::Flanp, 8, 50);
+    // one cluster, p_fail 1, p_recover 0: permanently dark from the
+    // first chain step, so EVERY round is an all-down waiting round
+    cfg.system = SystemModel::parse("avail:cluster:1:1:0:homog:100").unwrap();
+    cfg.max_rounds = 25;
+    cfg.c_stat = 1e-12; // timing-only
+    let (t, _) = run(&cfg);
+    // rounds[0] is the pre-training evaluation row; every later round
+    // is an all-down wait
+    assert!(t.rounds.len() >= 3, "expected recorded waiting rounds");
+    let mut prev = 0.0;
+    for r in &t.rounds[1..] {
+        assert_eq!(r.available, 0, "round {} unexpectedly online", r.round);
+        // homog:100 estimates are exactly 100; tau = 10 → 1000 charged
+        assert!(
+            (r.time - prev - 1000.0).abs() < 1e-9,
+            "round {} charged {} (want tau * max est = 1000)",
+            r.round,
+            r.time - prev
+        );
+        prev = r.time;
+    }
 }
