@@ -10,8 +10,9 @@ use flanp::coordinator::config::Subroutine;
 use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
 use flanp::engine::Engine;
 use flanp::fed::{
-    DeadlineController, DeadlinePolicy, LazyFleet, LazyShards, PopulationSpec,
-    SpeedModel, StreamingStats, SystemModel, TierPolicy, Trace, VirtualClock,
+    DeadlineController, DeadlinePolicy, ForecastPolicy, LazyFleet, LazyShards,
+    PopulationSpec, SpeedModel, StreamingStats, SystemModel, TierPolicy, Trace,
+    VirtualClock,
 };
 use flanp::setup;
 use flanp::util::cli::Args;
@@ -43,6 +44,13 @@ EXPERIMENTS:
                     control), diurnal rotation, clustered outages, and a
                     recorded Markov trace replayed via trace:FILE —
                     the Hard-et-al. \"winner flips\" sweep
+  select            predictive selection: plain quantile-deadline FLANP
+                    vs over-selection (overselect:1.3, cancel stragglers
+                    at the k-th arrival) vs availability forecasting
+                    (forecast:ewma:0.3) vs both, under diurnal rotation,
+                    clustered outages and a recorded trace replay —
+                    reports wall-clock, cancelled work and misses (see
+                    docs/scenarios.md §8)
   scale             population-scale lazy-fleet sweep: O(cohort) rounds
                     over pop:N:avail:diurnal populations (10k -> 1M
                     clients; --quick: 10k -> 50k), measuring host
@@ -113,7 +121,7 @@ fn main() {
 const EXPS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6a", "fig6b", "fig7",
     "fig8", "fig9", "table1", "table2", "ablate", "scenarios", "async",
-    "tiers", "avail", "scale", "all", "help",
+    "tiers", "avail", "select", "scale", "all", "help",
 ];
 
 fn real_main() -> Result<()> {
@@ -162,6 +170,7 @@ fn real_main() -> Result<()> {
         "async" => async_sweep(&opts)?,
         "tiers" => tiers_sweep(&opts)?,
         "avail" => avail_sweep(&opts)?,
+        "select" => select_sweep(&opts)?,
         "scale" => scale_sweep(&opts)?,
         "all" => {
             fig1(&opts)?;
@@ -935,6 +944,126 @@ fn avail_sweep(opts: &BenchOpts) -> Result<()> {
     println!(
         "  (the ranking under diurnal vs iid is the Hard-et-al. effect: \
          correlated availability changes the winner)"
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Select — predictive selection (fed::selection): over-selection with
+// straggler cancellation and availability forecasting vs the plain
+// quantile-deadline baseline, under correlated availability
+// ---------------------------------------------------------------------------
+
+fn select_sweep(opts: &BenchOpts) -> Result<()> {
+    // each row runs its OWN spec; a global override would silently turn
+    // the sweep into identical, mislabeled runs
+    anyhow::ensure!(
+        opts.system.is_none(),
+        "--speed conflicts with the select sweep (it runs a fixed scenario grid)"
+    );
+    println!(
+        "=== Select: over-selection + availability forecasting vs plain \
+         quantile-deadline FLANP ==="
+    );
+    let (n, s, rounds) = if opts.quick { (12, 50, 1500) } else { (32, 100, 6000) };
+
+    // record a diurnal reference run first so the grid includes a
+    // replayed measured trace (record -> replay is bit-identical)
+    let recorded = opts.out.join("select_recorded_diurnal.csv");
+    {
+        let mut cfg =
+            ExperimentConfig::new(SolverKind::FedGate, "linreg_d25", n, s);
+        cfg.eta = 0.05;
+        cfg.tau = 10;
+        cfg.mu = 0.5;
+        cfg.c_stat = 0.5;
+        cfg.system = SystemModel::parse(
+            "avail:diurnal:40000:0.25:1:jitter:0.2:uniform:50:500",
+        )
+        .map_err(|e| anyhow::anyhow!(e))?;
+        cfg.seed = opts.seed;
+        cfg.max_rounds = rounds;
+        cfg.eval_every = 5;
+        cfg.eval_rows = 500;
+        cfg.record_trace = true;
+        let engine = setup::build_engine(
+            &opts.engine,
+            &cfg.model,
+            &setup::default_artifacts_dir(),
+        )?;
+        let mut fleet = setup::build_fleet(engine.meta(), &cfg, 0.1, 0.0)?;
+        run_solver(engine.as_ref(), &mut fleet, &cfg)?;
+        fleet
+            .write_recorded_trace(&recorded)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "  recorded {} realized rounds to {}",
+            fleet.recorded_trace().map_or(0, |d| d.num_rounds()),
+            recorded.display()
+        );
+    }
+
+    let specs: Vec<(&str, String)> = vec![
+        (
+            "diurnal",
+            "avail:diurnal:40000:0.25:1:jitter:0.2:uniform:50:500".into(),
+        ),
+        ("clustered", "avail:cluster:4:0.1:0.3:uniform:50:500".into()),
+        ("replayed", format!("trace:{}", recorded.display())),
+    ];
+    // (label, overselect factor, forecast policy)
+    let variants: Vec<(&str, f64, Option<ForecastPolicy>)> = vec![
+        ("flanp-plain", 1.0, None),
+        ("flanp-over1.3", 1.3, None),
+        ("flanp-fc-ewma", 1.0, Some(ForecastPolicy::Ewma { alpha: 0.3 })),
+        (
+            "flanp-over+fc",
+            1.3,
+            Some(ForecastPolicy::Ewma { alpha: 0.3 }),
+        ),
+    ];
+    for (label, spec) in &specs {
+        let system =
+            SystemModel::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+        println!("  -- scenario {label} ({spec}) --");
+        let mut plain_time = None;
+        for (name, overselect, forecast) in &variants {
+            let mut cfg =
+                ExperimentConfig::new(SolverKind::Flanp, "linreg_d25", n, s);
+            cfg.eta = 0.05;
+            cfg.tau = 10;
+            cfg.n0 = 2;
+            cfg.mu = 0.5;
+            cfg.c_stat = 0.5;
+            cfg.system = system.clone();
+            cfg.deadline = DeadlinePolicy::Quantile { q: 0.8 };
+            cfg.overselect = *overselect;
+            cfg.forecast = forecast.clone();
+            cfg.seed = opts.seed;
+            cfg.max_rounds = rounds;
+            cfg.eval_every = 5;
+            cfg.eval_rows = 500;
+            let trace = run_one(opts, &cfg, &format!("select_{label}_{name}"))?;
+            if *name == "flanp-plain" {
+                plain_time = Some(trace.total_time);
+            }
+            let vs = plain_time
+                .map(|t0| format!("{:>5.2}x vs plain", t0 / trace.total_time))
+                .unwrap_or_default();
+            println!(
+                "  {name:<14} time={:<12.1} rounds={:<5} cancelled={:<5} \
+                 missed={:<5} finished={} {vs}",
+                trace.total_time,
+                trace.rounds.len().saturating_sub(1),
+                trace.total_cancelled(),
+                trace.total_missed(),
+                trace.finished,
+            );
+        }
+    }
+    println!(
+        "  (over-selection trades cancelled work for wall-clock; the \
+         cancelled column is the price — see docs/scenarios.md §8)"
     );
     Ok(())
 }

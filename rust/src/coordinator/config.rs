@@ -1,6 +1,9 @@
 //! Experiment configuration: every knob of every figure in one struct.
 
-use crate::fed::{DeadlinePolicy, SpeedModel, SystemModel, TierPolicy};
+use crate::fed::{
+    validate_overselect, DeadlinePolicy, ForecastPolicy, SpeedModel,
+    SystemModel, TierPolicy, OVERSELECT_OFF,
+};
 
 /// Which algorithm drives the run.
 #[derive(Clone, Debug, PartialEq)]
@@ -137,6 +140,18 @@ pub struct ExperimentConfig {
     /// re-ranking baseline that tier caching is measured against.
     /// Mutually exclusive with `tiers`.
     pub rerank_per_round: bool,
+    /// Over-selection factor F (`fed::selection`, `--overselect`): the
+    /// adaptive cohort solvers (flanp | flanp-heuristic | tifl) select
+    /// `ceil(F * k)` clients for a statistical requirement of k and
+    /// close the round at the k-th ARRIVAL, cancelling the surplus
+    /// in-flight work. 1.0 (the default) is off — bit-identical to the
+    /// pre-selection behavior.
+    pub overselect: f64,
+    /// Availability forecasting (`fed::selection`, `--forecast`): learn
+    /// per-client online-window predictions from the realized rounds and
+    /// skip predicted-offline clients at selection time. `None` (the
+    /// default) is off — bit-identical to the pre-selection behavior.
+    pub forecast: Option<ForecastPolicy>,
     /// EWMA smoothing of the online speed estimator, in (0, 1]
     pub ewma_alpha: f64,
     /// Record every realized round (probe included) of the
@@ -199,6 +214,8 @@ impl ExperimentConfig {
             estimate_speeds: true,
             tiers: None,
             rerank_per_round: false,
+            overselect: OVERSELECT_OFF,
+            forecast: None,
             ewma_alpha: crate::fed::DEFAULT_EWMA_ALPHA,
             record_trace: false,
             seed: 1,
@@ -342,6 +359,37 @@ impl ExperimentConfig {
                 "rerank_per_round applies to flanp | flanp-heuristic, not {}",
                 self.solver.name()
             ));
+        }
+        validate_overselect(self.overselect)?;
+        // only the adaptive cohort solvers have selection freedom: the
+        // full-participation benchmarks already use every client and the
+        // partial/async baselines keep oracle selection by design
+        if self.overselect > OVERSELECT_OFF
+            && !matches!(
+                self.solver,
+                SolverKind::Flanp | SolverKind::FlanpHeuristic | SolverKind::Tifl
+            )
+        {
+            return Err(format!(
+                "overselect = {} applies to the adaptive cohort solvers \
+                 (flanp | flanp-heuristic | tifl), not {}",
+                self.overselect,
+                self.solver.name()
+            ));
+        }
+        if let Some(fc) = &self.forecast {
+            fc.validate()?;
+            if !matches!(
+                self.solver,
+                SolverKind::Flanp | SolverKind::FlanpHeuristic | SolverKind::Tifl
+            ) {
+                return Err(format!(
+                    "forecast policy '{}' applies to the adaptive cohort \
+                     solvers (flanp | flanp-heuristic | tifl), not {}",
+                    fc.spec(),
+                    self.solver.name()
+                ));
+            }
         }
         if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
             return Err(format!(
@@ -508,6 +556,43 @@ mod tests {
         cfg.solver = SolverKind::Tifl;
         cfg.tiers = Some(TierPolicy::new(4));
         cfg.deadline = DeadlinePolicy::Quantile { q: 0.8 };
+        assert!(cfg.validate(10).is_ok());
+    }
+
+    #[test]
+    fn selection_configs_validate_per_solver() {
+        let mut cfg = ExperimentConfig::new(SolverKind::Flanp, "m", 10, 100);
+        cfg.overselect = 1.3;
+        assert!(cfg.validate(10).is_ok());
+        cfg.forecast = Some(ForecastPolicy::parse("ewma:0.3").unwrap());
+        assert!(cfg.validate(10).is_ok());
+        // over-selection needs selection freedom: the full-participation
+        // and oracle-selection baselines reject it
+        for solver in [
+            SolverKind::FedGate,
+            SolverKind::FedAvg,
+            SolverKind::FedGatePartialRandom { k: 3 },
+            SolverKind::FedBuff { k: 3 },
+        ] {
+            cfg.solver = solver;
+            assert!(cfg.validate(10).is_err());
+        }
+        // tifl over-selects its scheduled tier
+        cfg.solver = SolverKind::Tifl;
+        cfg.tiers = Some(TierPolicy::new(4));
+        assert!(cfg.validate(10).is_ok());
+        // out-of-range factors and malformed policies are rejected
+        cfg.overselect = 0.5;
+        assert!(cfg.validate(10).is_err());
+        cfg.overselect = f64::INFINITY;
+        assert!(cfg.validate(10).is_err());
+        cfg.overselect = 1.0;
+        cfg.forecast = Some(ForecastPolicy::Ewma { alpha: 0.0 });
+        assert!(cfg.validate(10).is_err());
+        // defaults are off and validate everywhere
+        cfg.forecast = None;
+        cfg.solver = SolverKind::FedGate;
+        cfg.tiers = None;
         assert!(cfg.validate(10).is_ok());
     }
 

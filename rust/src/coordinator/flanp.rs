@@ -43,11 +43,15 @@ use super::gate::{
     active_loss_gradsq, fedgate_round, local_rounds, GateState, LocalSpec,
     RoundBuffers, TauSpec,
 };
-use super::solvers::{deadline_round, init_params, RunContext};
+use super::solvers::{
+    deadline_round, deadline_round_overselect, init_params, RunContext,
+};
 use crate::util::linalg;
 use super::stopping::{HeuristicStop, OracleStop, StageStop};
 use crate::engine::Engine;
-use crate::fed::{ClientFleet, DeadlineController, Trace};
+use crate::fed::{
+    overselect_target, ClientFleet, DeadlineController, Trace, OVERSELECT_OFF,
+};
 use anyhow::Result;
 
 pub fn run_flanp(
@@ -89,6 +93,15 @@ pub fn run_flanp(
             fleet.active_prefix(n, cfg.estimate_speeds)
         };
         n = active.len(); // tier-granular stages admit whole tiers
+        // predictive selection layer (fed::selection): over-select
+        // ceil(F * n) candidates and swap predicted-offline picks for
+        // forecast-approved alternates. n stays the STATISTICAL stage
+        // size — stepsizes, the stopping threshold and the cancel target
+        // all key off n, never off the padded cohort. With overselect
+        // off and no forecaster this is the identity on `active`.
+        let overselecting = cfg.overselect > OVERSELECT_OFF;
+        active = fleet
+            .select_cohort(&active, overselect_target(n, cfg.overselect, n_total));
         state.reset_tracking();
         if !cfg.warm_start && stage > 0 {
             // ablation: discard the previous stage's model (Prop. 1 off)
@@ -106,7 +119,8 @@ pub fn run_flanp(
         // time; a duplicate row would break clock monotonicity). Also
         // primes the heuristic threshold from the first gradient norm.
         if ctx.trace.rounds.is_empty() {
-            let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
+            let (l0, g0) =
+                active_loss_gradsq(engine, fleet, &active[..n], &state.w)?;
             if heuristic {
                 heur.observe_initial(g0);
             }
@@ -120,6 +134,7 @@ pub fn run_flanp(
                 0,
                 std::mem::take(&mut pending_reranks),
                 fleet.num_clients(),
+                0,
             )?;
         }
 
@@ -138,19 +153,26 @@ pub fn run_flanp(
             if !std::mem::take(&mut first_round_of_stage) {
                 if tiered {
                     if fleet.refresh_tiers() {
-                        active = fleet.tiered_prefix(n);
-                        if active.len() != n {
+                        let base = fleet.tiered_prefix(n);
+                        if base.len() != n {
                             // new boundaries grew the snapped cohort:
                             // retune the stage stepsizes so eta/gamma and
                             // the stopping threshold track the same n
-                            n = active.len();
+                            n = base.len();
                             (eta, gamma) = cfg.stage_stepsizes(n);
                         }
+                        active = fleet.select_cohort(
+                            &base,
+                            overselect_target(n, cfg.overselect, n_total),
+                        );
                         pending_reranks += 1;
                         stats = None; // active changed
                     }
                 } else if cfg.rerank_per_round {
-                    active = fleet.active_prefix(n, true);
+                    active = fleet.select_cohort(
+                        &fleet.active_prefix(n, true),
+                        overselect_target(n, cfg.overselect, n_total),
+                    );
                     pending_reranks += 1;
                     stats = None; // active changed
                 }
@@ -168,10 +190,20 @@ pub fn run_flanp(
             // synchronous rounds.
             let (cond, participants) =
                 fleet.realize_round(&active, ctx.clock.now());
-            let (arrived, ev) = deadline_round(
-                &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
-                cfg.tau,
-            );
+            // over-selection closes the round at the n-th arrival (the
+            // statistical requirement) and cancels the padded tail;
+            // without it the plain deadline path runs byte-for-byte
+            let (arrived, ev) = if overselecting {
+                deadline_round_overselect(
+                    &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
+                    cfg.tau, n,
+                )
+            } else {
+                deadline_round(
+                    &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
+                    cfg.tau,
+                )
+            };
             if !arrived.is_empty() {
                 match cfg.subroutine {
                     Subroutine::Gate => fedgate_round(
@@ -202,9 +234,13 @@ pub fn run_flanp(
                     }
                 }
             }
+            // the statistical-accuracy rule thresholds the gradient of
+            // the STATISTICAL cohort's ERM (the n clients the stage
+            // needs — active[..n]); over-selection's padding is a
+            // systems-level spare pool, not extra statistical accuracy
             let (loss, gsq) = match stats {
                 Some(s) if arrived.is_empty() => s,
-                _ => active_loss_gradsq(engine, fleet, &active, &state.w)?,
+                _ => active_loss_gradsq(engine, fleet, &active[..n], &state.w)?,
             };
             stats = Some((loss, gsq));
             ctx.record(
@@ -217,6 +253,7 @@ pub fn run_flanp(
                 ev.missed,
                 std::mem::take(&mut pending_reranks),
                 cond.online_count(),
+                ev.cancelled,
             )?;
 
             let done = if heuristic {
@@ -353,6 +390,49 @@ mod tests {
         // advanced past the first stage and descended
         assert!(t.stage_transitions.len() >= 2, "{:?}", t.stage_transitions);
         assert!(t.last().unwrap().loss_full < t.rounds[0].loss_full);
+    }
+
+    #[test]
+    fn overselect_cancels_surplus_without_slowing_the_run() {
+        // static fleet, everyone online: the padded cohort's n-th arrival
+        // IS the statistical prefix's straggler, so over-selection books
+        // cancellations every round while the clock, the arrivals and
+        // the whole statistical trajectory match the plain run exactly
+        let (e, mut fleet) = setup(8, 50, 37);
+        let mut c = cfg(SolverKind::Flanp, 8);
+        c.overselect = 1.5;
+        let t = run_flanp(&e, &mut fleet, &c).unwrap();
+        assert!(t.finished);
+        assert!(t.total_cancelled() > 0, "no in-flight work was cancelled");
+        assert_eq!(t.total_missed(), 0, "cancellations booked as misses");
+        let ns: Vec<usize> =
+            t.stage_transitions.iter().map(|&(_, n)| n).collect();
+        assert_eq!(ns, vec![2, 4, 8], "padding leaked into stage sizes");
+        let (e2, mut fleet2) = setup(8, 50, 37);
+        let t0 = run_flanp(&e2, &mut fleet2, &cfg(SolverKind::Flanp, 8)).unwrap();
+        assert_eq!(t.rounds.len(), t0.rounds.len());
+        for (a, b) in t.rounds.iter().zip(&t0.rounds) {
+            assert_eq!(a.time, b.time);
+            assert_eq!(a.loss_full, b.loss_full);
+        }
+    }
+
+    #[test]
+    fn overselect_off_and_no_forecast_is_bit_identical_to_default() {
+        // the explicit "off" spelling must not perturb anything
+        let (e, mut fleet) = setup(8, 50, 38);
+        let mut c = cfg(SolverKind::Flanp, 8);
+        c.overselect = 1.0;
+        c.forecast = None;
+        let t = run_flanp(&e, &mut fleet, &c).unwrap();
+        let (e2, mut fleet2) = setup(8, 50, 38);
+        let t0 = run_flanp(&e2, &mut fleet2, &cfg(SolverKind::Flanp, 8)).unwrap();
+        assert_eq!(t.rounds.len(), t0.rounds.len());
+        for (a, b) in t.rounds.iter().zip(&t0.rounds) {
+            assert_eq!(a.time, b.time);
+            assert_eq!(a.loss_full, b.loss_full);
+            assert_eq!(a.cancelled, 0);
+        }
     }
 
     #[test]

@@ -12,8 +12,9 @@ use super::gate::{
 };
 use crate::engine::{Engine, ModelKind};
 use crate::fed::{
-    ClientFleet, DeadlineController, DeadlinePolicy, RoundConditions,
-    RoundEvent, RoundRecord, Trace, VirtualClock,
+    overselect_target, ClientFleet, DeadlineController, DeadlinePolicy,
+    RoundConditions, RoundEvent, RoundRecord, Trace, VirtualClock,
+    OVERSELECT_OFF,
 };
 use crate::util::{linalg, Rng};
 use anyhow::Result;
@@ -79,7 +80,9 @@ impl<'a> RunContext<'a> {
     /// this round (0 for the fixed-cohort solvers); `available` is the
     /// fleet-wide observably-online count from the round's realized
     /// conditions (`RoundConditions::online_count`; the fleet size for
-    /// the initial pre-training row).
+    /// the initial pre-training row); `cancelled` is the round's
+    /// actively-cancelled in-flight count (over-selection,
+    /// `fed::selection`; 0 unless `overselect > 1`).
     #[allow(clippy::too_many_arguments)]
     pub fn record(
         &mut self,
@@ -92,6 +95,7 @@ impl<'a> RunContext<'a> {
         missed: usize,
         reranks: usize,
         available: usize,
+        cancelled: usize,
     ) -> Result<()> {
         let round = self.trace.rounds.len();
         let evaluate = round % self.cfg.eval_every.max(1) == 0;
@@ -121,6 +125,7 @@ impl<'a> RunContext<'a> {
             missed,
             reranks,
             available,
+            cancelled,
         });
         Ok(())
     }
@@ -188,7 +193,54 @@ pub(crate) fn deadline_round(
     participants: &[usize],
     updates: usize,
 ) -> (Vec<usize>, RoundEvent) {
-    deadline_round_impl(ctx, fleet, ddl, active, cond, participants, updates, None)
+    deadline_round_impl(
+        ctx,
+        fleet,
+        ddl,
+        active,
+        cond,
+        participants,
+        updates,
+        None,
+        None,
+    )
+}
+
+/// Over-selecting variant of [`deadline_round`] (`fed::selection`): the
+/// caller selected MORE clients than it statistically needs (`active`
+/// holds `ceil(F * target)` ids) and the round closes at the `target`-th
+/// ARRIVAL — the server actively cancels every other in-flight client at
+/// that moment instead of waiting for (or billing) the deadline. The
+/// clock charges `min(deadline, target-th arrival total)` via
+/// [`VirtualClock::charge_round_cancel`]; cancelled clients are fed
+/// censored observations floored at the cancellation cutoff (all the
+/// server learned is that they were still running when it hung up).
+/// With `target >= active.len()` no arrival is surplus and the only
+/// remaining difference from [`deadline_round`] is that deadline misses
+/// are booked as cancellations (the server hangs up on them at the
+/// deadline rather than letting them expire).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn deadline_round_overselect(
+    ctx: &mut RunContext,
+    fleet: &mut ClientFleet,
+    ddl: &mut DeadlineController,
+    active: &[usize],
+    cond: &RoundConditions,
+    participants: &[usize],
+    updates: usize,
+    target: usize,
+) -> (Vec<usize>, RoundEvent) {
+    deadline_round_impl(
+        ctx,
+        fleet,
+        ddl,
+        active,
+        cond,
+        participants,
+        updates,
+        None,
+        Some(target),
+    )
 }
 
 /// Heterogeneous-step variant of [`deadline_round`] (FedNova): client
@@ -217,6 +269,7 @@ pub(crate) fn deadline_round_hetero(
         participants,
         updates,
         Some(taus),
+        None,
     )
 }
 
@@ -230,7 +283,11 @@ fn deadline_round_impl(
     participants: &[usize],
     updates: usize,
     taus: Option<&[usize]>,
+    target: Option<usize>,
 ) -> (Vec<usize>, RoundEvent) {
+    // over-selection only combines with homogeneous local steps (the
+    // overselecting solvers — FLANP, TiFL — are uniform-tau)
+    debug_assert!(taus.is_none() || target.is_none());
     // the clock may only charge the observably-online cohort members
     let present = cond.online_of(active);
     if present.is_empty() {
@@ -285,6 +342,48 @@ fn deadline_round_impl(
         participants.iter().copied().partition(|&i| total(i) <= deadline);
     let times: Vec<f64> = present.iter().map(|&i| cond.times[i]).collect();
     let dropped = present.len() - participants.len();
+    // over-selection (`fed::selection`): close the round at the
+    // `target`-th arrival. Every other in-flight client — surplus
+    // arrival-to-be and would-be deadline miss alike — is CANCELLED at
+    // the cutoff and booked in the `cancelled` column, never as a
+    // deadline `miss` (cancellation is a selection-policy cost the
+    // over-selector chose to pay, not a deadline outcome).
+    if let Some(t_kept) = target {
+        // rank arrivals by completion time (ties broken by id so the
+        // kept set is deterministic) and keep the first `target`
+        let mut by_arrival = arrived.clone();
+        by_arrival.sort_by(|&a, &b| {
+            total(a).partial_cmp(&total(b)).unwrap().then(a.cmp(&b))
+        });
+        by_arrival.truncate(t_kept);
+        // cutoff: the server hangs up at the target-th arrival when
+        // enough clients make it; otherwise it waits out the full
+        // deadline hoping for more and cancels whatever still runs there
+        let cutoff = if arrived.len() >= t_kept && t_kept > 0 {
+            total(by_arrival[t_kept - 1])
+        } else {
+            deadline
+        };
+        // kept ids back in selection order: aggregation order (batch
+        // sampling, float accumulation) must not depend on realized
+        // timings
+        let kept: Vec<usize> =
+            arrived.iter().copied().filter(|i| by_arrival.contains(i)).collect();
+        let cancelled = participants.len() - kept.len();
+        let ev = ctx.clock.charge_round_cancel(
+            &present, &times, updates, cutoff, dropped, cancelled,
+        );
+        fleet.observe_round(&kept, cond);
+        // a cancelled client's only information is that it was still
+        // running when the server hung up: times[i] > cutoff / updates
+        for &i in participants {
+            if !by_arrival.contains(&i) {
+                fleet.observe_censored(&[i], cutoff / updates as f64);
+            }
+        }
+        ddl.observe_round(kept.len(), participants.len());
+        return (kept, ev);
+    }
     let ev = match taus {
         None => ctx.clock.charge_round_deadline(
             &present,
@@ -392,7 +491,7 @@ fn run_fedgate_full(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &state.w)?;
-    ctx.record(&state.w, n, 0, l0, g0, 0, 0, 0, n)?;
+    ctx.record(&state.w, n, 0, l0, g0, 0, 0, 0, n, 0)?;
     // cached stats for the fixed eval set: an empty (wait/all-dropped)
     // round leaves w unchanged, so the objective need not be recomputed
     let mut stats = (l0, g0);
@@ -422,6 +521,7 @@ fn run_fedgate_full(
             ev.missed,
             0,
             cond.online_count(),
+            ev.cancelled,
         )?;
         if gsq <= threshold {
             ctx.trace.finished = true;
@@ -463,7 +563,7 @@ fn run_model_average(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
-    ctx.record(&w, n, 0, l0, g0, 0, 0, 0, n)?;
+    ctx.record(&w, n, 0, l0, g0, 0, 0, 0, n, 0)?;
     // cached stats for the fixed eval set: an empty (wait/all-dropped)
     // round leaves w unchanged, so the objective need not be recomputed
     let mut stats = (l0, g0);
@@ -511,6 +611,7 @@ fn run_model_average(
             ev.missed,
             0,
             cond.online_count(),
+            ev.cancelled,
         )?;
         if gsq <= threshold {
             ctx.trace.finished = true;
@@ -547,7 +648,7 @@ fn run_fednova(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
-    ctx.record(&w, n, 0, l0, g0, 0, 0, 0, n)?;
+    ctx.record(&w, n, 0, l0, g0, 0, 0, 0, n, 0)?;
     // cached stats for the fixed eval set: an empty (wait/all-dropped)
     // round leaves w unchanged, so the objective need not be recomputed
     let mut stats = (l0, g0);
@@ -621,6 +722,7 @@ fn run_fednova(
             ev.missed,
             0,
             cond.online_count(),
+            ev.cancelled,
         )?;
         if gsq <= threshold {
             ctx.trace.finished = true;
@@ -658,7 +760,7 @@ fn run_fedgate_partial(
     // charge, offline clients) of the common round step
     let mut ddl = DeadlineController::new(DeadlinePolicy::Sync);
     let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
-    ctx.record(&state.w, k, 0, l0, g0, 0, 0, 0, n)?;
+    ctx.record(&state.w, k, 0, l0, g0, 0, 0, 0, n, 0)?;
     // cached stats for the fixed (full-objective) eval set
     let mut stats = (l0, g0);
     loop {
@@ -695,6 +797,7 @@ fn run_fedgate_partial(
             ev.missed,
             0,
             cond.online_count(),
+            ev.cancelled,
         )?;
         if gsq <= threshold {
             ctx.trace.finished = true;
@@ -747,7 +850,7 @@ fn run_tifl(
     let threshold = cfg.grad_threshold(n);
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &state.w)?;
-    ctx.record(&state.w, n, 0, l0, g0, 0, 0, 0, n)?;
+    ctx.record(&state.w, n, 0, l0, g0, 0, 0, 0, n, 0)?;
     // cached stats for the fixed (full-objective) eval set
     let mut stats = (l0, g0);
     loop {
@@ -756,14 +859,34 @@ fn run_tifl(
         // becomes a wait/idle round in deadline_round (its online
         // members are the only ones trained or charged).
         let reranks = fleet.refresh_tiers() as usize;
-        let tiers = fleet.tiers.as_mut().expect("tifl scheduler enabled above");
-        let tier = tiers.select_tier();
-        let active = tiers.tier_members(tier).to_vec();
+        let base = {
+            let tiers =
+                fleet.tiers.as_mut().expect("tifl scheduler enabled above");
+            let tier = tiers.select_tier();
+            tiers.tier_members(tier).to_vec()
+        };
+        // predictive selection (fed::selection): pad the scheduled tier
+        // to ceil(F * m) with the fastest non-members and let the
+        // forecaster swap predicted-offline picks; the round still
+        // statistically needs only the tier's m arrivals. Off by
+        // default — select_cohort is then the identity on the tier.
+        let m = base.len();
+        let overselecting = cfg.overselect > OVERSELECT_OFF;
+        let active = fleet
+            .select_cohort(&base, overselect_target(m, cfg.overselect, n));
         let (cond, participants) =
             fleet.realize_round(&active, ctx.clock.now());
-        let (arrived, ev) = deadline_round(
-            &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
-        );
+        let (arrived, ev) = if overselecting {
+            deadline_round_overselect(
+                &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
+                cfg.tau, m,
+            )
+        } else {
+            deadline_round(
+                &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
+                cfg.tau,
+            )
+        };
         if !arrived.is_empty() {
             fedgate_round(
                 engine, fleet, &mut state, &arrived, cfg.tau, cfg.eta,
@@ -784,6 +907,7 @@ fn run_tifl(
             ev.missed,
             reranks,
             cond.online_count(),
+            ev.cancelled,
         )?;
         if gsq <= threshold {
             ctx.trace.finished = true;
@@ -856,7 +980,7 @@ fn run_fedbuff(
     }
 
     let (l0, g0) = active_loss_gradsq(engine, fleet, &all, &w)?;
-    ctx.record(&w, n, 0, l0, g0, 0, 0, 0, n)?;
+    ctx.record(&w, n, 0, l0, g0, 0, 0, 0, n, 0)?;
 
     // server buffer: staleness-weighted delta accumulator. Dropped
     // uploads are tracked per CLIENT (a fast unavailable client can
@@ -913,6 +1037,7 @@ fn run_fedbuff(
                 0,
                 0,
                 cond.online_count(),
+                0,
             )?;
             acc.fill(0.0);
             buffered = 0;
@@ -1116,6 +1241,22 @@ mod tests {
             .rounds
             .windows(2)
             .all(|w| w[1].time - w[0].time <= max_cost + 1e-9));
+    }
+
+    #[test]
+    fn tifl_overselect_pads_the_tier_and_cancels_the_surplus() {
+        let (e, mut fleet) = setup(8, 50);
+        let mut cfg = base_cfg(SolverKind::Tifl);
+        cfg.tiers = Some(crate::fed::TierPolicy::new(4));
+        cfg.overselect = 2.0;
+        cfg.max_rounds = 400;
+        let t = run_solver(&e, &mut fleet, &cfg).unwrap();
+        // every round selects 2 * tier(2) = 4 and cancels the 2 surplus
+        // in-flight clients at the 2nd arrival
+        assert!(t.rounds[1..].iter().all(|r| r.participants == 4));
+        assert!(t.rounds[1..].iter().all(|r| r.cancelled == 2));
+        assert_eq!(t.total_missed(), 0);
+        assert!(t.last().unwrap().loss_full < t.rounds[0].loss_full);
     }
 
     #[test]

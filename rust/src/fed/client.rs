@@ -8,6 +8,7 @@
 //! does not allocate.
 
 use crate::data::{Dataset, Shard};
+use crate::fed::selection::{AvailabilityForecaster, ForecastPolicy};
 use crate::fed::speed::sort_fastest_first;
 use crate::fed::system::{RoundConditions, SpeedEstimator, SystemModel, SystemState};
 use crate::fed::tiers::{TierPolicy, TierScheduler};
@@ -33,6 +34,12 @@ pub struct ClientFleet {
     /// enabled by [`ClientFleet::ensure_tiers`] when the experiment uses
     /// tier-cached ranking or the tifl solver
     pub tiers: Option<TierScheduler>,
+    /// optional availability forecaster (`fed::selection`), learned
+    /// online from the realized online bits in [`ClientFleet::
+    /// realize_round`] and consulted by [`ClientFleet::select_cohort`].
+    /// None (the default) leaves every selection path bit-identical to
+    /// the pre-forecast behavior.
+    pub forecast: Option<AvailabilityForecaster>,
     rngs: Vec<Rng>,
 }
 
@@ -101,8 +108,17 @@ impl ClientFleet {
             system,
             estimates,
             tiers: None,
+            forecast: None,
             rngs,
         }
+    }
+
+    /// Enable availability forecasting (`ExperimentConfig::forecast` /
+    /// `--forecast`). Consumes no RNG and touches no realized state, so
+    /// enabling it right after construction (as `setup::build_fleet`
+    /// does) cannot perturb any scenario draw.
+    pub fn set_forecast(&mut self, policy: ForecastPolicy) {
+        self.forecast = Some(AvailabilityForecaster::new(policy));
     }
 
     pub fn num_clients(&self) -> usize {
@@ -140,6 +156,17 @@ impl ClientFleet {
         now: f64,
     ) -> (RoundConditions, Vec<usize>) {
         let cond = self.next_round_conditions_at(now);
+        // availability forecasting learns from the same selection-time
+        // observability the estimator path uses: the server contacted
+        // the cohort, so it saw exactly these online bits. RNG-free (the
+        // bits were already realized above), and scoped to the cohort so
+        // forecast state stays O(observed clients), mirroring the lazy
+        // population fleet's sparse estimates.
+        if let Some(f) = &mut self.forecast {
+            for &i in active {
+                f.observe(i, cond.online[i]);
+            }
+        }
         let participants: Vec<usize> = active
             .iter()
             .copied()
@@ -187,6 +214,45 @@ impl ClientFleet {
             self.estimates.ranked_prefix(k)
         } else {
             self.order[..k].to_vec()
+        }
+    }
+
+    /// Predictive cohort builder (`fed::selection`): extend `base` —
+    /// the statistically-required cohort in its selection order (ranked
+    /// prefix for FLANP, tier members for TiFL) — to `target` members
+    /// (`overselect_target`) with the fastest estimate-ranked clients
+    /// not already in it, then let the availability forecaster swap
+    /// predicted-offline picks for the fastest predicted-online
+    /// alternates ([`AvailabilityForecaster::filter_prefix`]).
+    ///
+    /// With `target <= base.len()` and forecasting off this returns
+    /// `base` unchanged without touching the estimate ranking — the
+    /// default path is bit-identical to pre-selection behavior.
+    pub fn select_cohort(&self, base: &[usize], target: usize) -> Vec<usize> {
+        let want = target.max(base.len());
+        if want == base.len() && self.forecast.is_none() {
+            return base.to_vec();
+        }
+        // candidate ranking: base first (its own order), then every
+        // other client fastest-first by the online estimates
+        let n = self.num_clients();
+        let mut in_base = vec![false; n];
+        for &i in base {
+            in_base[i] = true;
+        }
+        let mut ranking = base.to_vec();
+        ranking.extend(
+            self.estimates
+                .ranked_prefix(n)
+                .into_iter()
+                .filter(|&i| !in_base[i]),
+        );
+        match &self.forecast {
+            None => {
+                ranking.truncate(want);
+                ranking
+            }
+            Some(f) => f.filter_prefix(&ranking, want),
         }
     }
 
@@ -506,6 +572,51 @@ mod tests {
         assert!(retiers >= 1, "a 100x sustained slowdown never re-tiered");
         let t = f.tiers.as_ref().unwrap();
         assert_eq!(t.tier_of(fastest), t.num_tiers() - 1);
+    }
+
+    #[test]
+    fn select_cohort_without_forecast_or_surplus_is_identity() {
+        let f = fleet(8, 20, 4);
+        let base = f.active_prefix(3, true);
+        assert_eq!(f.select_cohort(&base, 3), base);
+        // never shrinks below the statistical requirement
+        assert_eq!(f.select_cohort(&base, 0), base);
+    }
+
+    #[test]
+    fn select_cohort_extends_with_fastest_nonmembers() {
+        let f = fleet(8, 20, 4);
+        let base = f.active_prefix(3, true);
+        let ext = f.select_cohort(&base, 5);
+        assert_eq!(ext.len(), 5);
+        assert_eq!(&ext[..3], &base[..]);
+        // static scenario: extending the ranked prefix IS the larger
+        // ranked prefix
+        assert_eq!(ext, f.active_prefix(5, true));
+        // target past the fleet clamps to the fleet
+        assert_eq!(f.select_cohort(&base, 99).len(), 8);
+    }
+
+    #[test]
+    fn forecaster_learns_from_realized_rounds_and_reroutes_selection() {
+        let sys = SystemModel::parse("avail:diurnal:100:0.5:1:uniform:50:500")
+            .unwrap();
+        let mut f = fleet_sys(4, 20, 4, &sys);
+        f.set_forecast(ForecastPolicy::parse("ewma:0.5").unwrap());
+        // at t = 0 clients 0, 1 are online and 2, 3 offline; a few
+        // realized rounds teach the forecaster that split
+        for _ in 0..4 {
+            f.realize_round(&[0, 1, 2, 3], 0.0);
+        }
+        let fc = f.forecast.as_ref().unwrap();
+        assert_eq!(fc.tracked(), 4);
+        assert!(fc.predicted_online(0) && fc.predicted_online(1));
+        assert!(!fc.predicted_online(2) && !fc.predicted_online(3));
+        // selection swaps the predicted-offline base for predicted-online
+        // alternates — and never shrinks the cohort
+        let cohort = f.select_cohort(&[2, 3], 2);
+        assert_eq!(cohort.len(), 2);
+        assert!(!cohort.contains(&2) && !cohort.contains(&3));
     }
 
     #[test]

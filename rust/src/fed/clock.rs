@@ -65,6 +65,10 @@ pub struct RoundEvent {
     /// clients that were computing but missed the aggregation deadline
     /// (their update is discarded; 0 under synchronous aggregation)
     pub missed: usize,
+    /// clients whose in-flight work the server actively cancelled at the
+    /// k-th arrival (over-selection, `fed::selection`; 0 unless the
+    /// round was charged via [`VirtualClock::charge_round_cancel`])
+    pub cancelled: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -109,6 +113,12 @@ impl VirtualClock {
         self.events.iter().map(|e| e.missed).sum()
     }
 
+    /// Total cancellations recorded across all charged rounds
+    /// (over-selection's actively cancelled in-flight work).
+    pub fn total_cancelled(&self) -> usize {
+        self.events.iter().map(|e| e.cancelled).sum()
+    }
+
     /// Shared core of every round-charging path: the critical path is
     /// the max per-client total `times[k] * updates[k]`, truncated at
     /// the aggregation deadline. `deadline = +inf` reproduces the
@@ -123,13 +133,14 @@ impl VirtualClock {
         deadline: f64,
         dropped: usize,
         missed: usize,
+        cancelled: usize,
     ) -> RoundEvent {
         debug_assert_eq!(ids.len(), times.len());
         debug_assert!(
             !ids.is_empty(),
             "charging a round with an empty participant set"
         );
-        debug_assert!(dropped + missed <= ids.len());
+        debug_assert!(dropped + missed + cancelled <= ids.len());
         debug_assert!(deadline > 0.0, "non-positive deadline {deadline}");
         let mut slowest = None;
         let mut slowest_total = 0.0f64;
@@ -149,9 +160,10 @@ impl VirtualClock {
             cost,
             slowest,
             slowest_time,
-            participants: ids.len() - dropped - missed,
+            participants: ids.len() - dropped - missed - cancelled,
             dropped,
             missed,
+            cancelled,
         };
         self.events.push(ev.clone());
         ev
@@ -194,6 +206,41 @@ impl VirtualClock {
             deadline,
             dropped,
             missed,
+            0,
+        )
+    }
+
+    /// Over-selection round (`fed::selection`): the server asked this
+    /// whole cohort for updates but statistically needs only the first
+    /// `target` arrivals — at the `target`-th arrival it CANCELS the
+    /// remaining in-flight work instead of waiting or discarding the
+    /// round. `cutoff` is `min(deadline, total of the target-th
+    /// arrival)`, computed by the caller (which owns the
+    /// arrival/dropout classification —
+    /// `coordinator::solvers::deadline_round`); the round costs
+    /// `min(cutoff, slowest cohort member)` and the `cancelled` tail is
+    /// accounted separately from deadline `missed` (an actively
+    /// cancelled client is a selection-policy cost, not a deadline
+    /// miss). With `cutoff = deadline` and `cancelled = 0` this is
+    /// bit-identical to [`VirtualClock::charge_round_deadline`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn charge_round_cancel(
+        &mut self,
+        ids: &[usize],
+        times: &[f64],
+        updates: usize,
+        cutoff: f64,
+        dropped: usize,
+        cancelled: usize,
+    ) -> RoundEvent {
+        self.charge_core(
+            ids,
+            times,
+            |k| times[k] * updates as f64,
+            cutoff,
+            dropped,
+            0,
+            cancelled,
         )
     }
 
@@ -237,6 +284,7 @@ impl VirtualClock {
             deadline,
             dropped,
             missed,
+            0,
         )
     }
 
@@ -277,6 +325,7 @@ impl VirtualClock {
             participants,
             dropped,
             missed,
+            cancelled: 0,
         };
         self.events.push(ev.clone());
         ev
@@ -481,6 +530,61 @@ mod tests {
         );
         assert_eq!(ev.cost, 150.0);
         assert_eq!(ev.missed, 1);
+    }
+
+    #[test]
+    fn cancel_round_charges_the_kth_arrival() {
+        let mut c = VirtualClock::with_comm_overhead(3.0);
+        // totals at tau = 5: 50, 150, 100, 125. Over-selected round with
+        // target 2: the 2nd arrival is client 9 (total 100), so the two
+        // slower clients are cancelled and the round costs 100, not 150.
+        let ev = c.charge_round_cancel(
+            &[7, 8, 9, 10],
+            &[10.0, 30.0, 20.0, 25.0],
+            5,
+            100.0,
+            0,
+            2,
+        );
+        assert_eq!(ev.cost, 103.0);
+        assert_eq!(ev.participants, 2);
+        assert_eq!(ev.cancelled, 2);
+        assert_eq!(ev.missed, 0);
+        // the straggler identity is still the critical-path client
+        assert_eq!(ev.slowest, Some(8));
+        assert_eq!(c.total_cancelled(), 2);
+        assert_eq!(c.total_missed(), 0);
+    }
+
+    #[test]
+    fn cancel_with_full_cutoff_is_bit_identical_to_deadline() {
+        let speeds = [110.25, 317.5, 50.125, 499.9];
+        let mut ddl = VirtualClock::with_comm_overhead(1.5);
+        let mut cancel = VirtualClock::with_comm_overhead(1.5);
+        for tau in 1..20usize {
+            let deadline = 1000.0 * tau as f64;
+            let a = ddl.charge_round_deadline(
+                &[0, 1, 2, 3],
+                &speeds,
+                tau,
+                deadline,
+                0,
+                0,
+            );
+            let b = cancel.charge_round_cancel(
+                &[0, 1, 2, 3],
+                &speeds,
+                tau,
+                deadline,
+                0,
+                0,
+            );
+            assert_eq!(a.cost, b.cost, "tau {tau}");
+            assert_eq!(a.slowest, b.slowest);
+            assert_eq!(a.participants, b.participants);
+        }
+        assert_eq!(ddl.now(), cancel.now());
+        assert_eq!(cancel.total_cancelled(), 0);
     }
 
     #[test]

@@ -46,6 +46,10 @@ pub struct RoundRecord {
     /// otherwise). Mirrors the per-client `available` column of the
     /// recorded trace CSV.
     pub available: usize,
+    /// clients whose in-flight work the server actively cancelled at
+    /// the k-th arrival (over-selection, `fed::selection`; 0 unless
+    /// `overselect > 1` closed the round at its target arrival)
+    pub cancelled: usize,
 }
 
 /// A full run's trace plus identifying metadata.
@@ -104,6 +108,19 @@ impl Trace {
         self.rounds.iter().map(|r| r.available).min()
     }
 
+    /// Total deadline misses across the run (the arrived-vs-missed
+    /// split of [`crate::fed::aggregation`]'s policies; cancellations
+    /// are booked separately in [`Trace::total_cancelled`]).
+    pub fn total_missed(&self) -> usize {
+        self.rounds.iter().map(|r| r.missed).sum()
+    }
+
+    /// Total in-flight cancellations across the run (over-selection's
+    /// wasted-work bill — see docs/scenarios.md §8).
+    pub fn total_cancelled(&self) -> usize {
+        self.rounds.iter().map(|r| r.cancelled).sum()
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("algo", self.algo.as_str().into()),
@@ -135,6 +152,7 @@ impl Trace {
                             ("missed", r.missed.into()),
                             ("reranks", r.reranks.into()),
                             ("available", r.available.into()),
+                            ("cancelled", r.cancelled.into()),
                         ])
                     })
                     .collect(),
@@ -145,11 +163,11 @@ impl Trace {
     /// CSV with a header row (one line per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage,dropped,missed,reranks,available\n",
+            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage,dropped,missed,reranks,available,cancelled\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.time,
                 r.participants,
@@ -162,7 +180,8 @@ impl Trace {
                 r.dropped,
                 r.missed,
                 r.reranks,
-                r.available
+                r.available,
+                r.cancelled
             ));
         }
         s
@@ -286,6 +305,7 @@ mod tests {
             missed: 0,
             reranks: 0,
             available: 4,
+            cancelled: 0,
         }
     }
 
@@ -307,7 +327,7 @@ mod tests {
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("round,time"));
-        assert!(csv.lines().next().unwrap().ends_with(",available"));
+        assert!(csv.lines().next().unwrap().ends_with(",available,cancelled"));
     }
 
     #[test]
@@ -332,7 +352,24 @@ mod tests {
         assert!(t.to_json().to_string().contains("\"available\":7"));
         let csv = t.to_csv();
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",7"), "row '{row}' lacks the available column");
+        assert!(
+            row.ends_with(",7,0"),
+            "row '{row}' lacks the available,cancelled columns"
+        );
+    }
+
+    #[test]
+    fn cancelled_column_is_totaled_and_serialized() {
+        let mut t = Trace::new("x");
+        let mut r = rec(0, 1.0, 2.0);
+        r.cancelled = 3;
+        t.push(r);
+        t.push(rec(1, 2.0, 1.0));
+        assert_eq!(t.total_cancelled(), 3);
+        assert!(t.to_json().to_string().contains("\"cancelled\":3"));
+        let csv = t.to_csv();
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.ends_with(",3"), "row '{row}' lacks the cancelled column");
     }
 
     #[test]

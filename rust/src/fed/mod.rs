@@ -1,15 +1,17 @@
 //! Federated substrate: heterogeneous client fleet, system-heterogeneity
 //! scenarios (speed models + per-round dynamics + dropout + correlated
 //! availability), trace recording/replay, aggregation deadline policies,
-//! TiFL-style tier scheduling, lazily-realized populations with sketch
-//! summaries, virtual wall-clock with round events, and per-round metric
-//! traces.
+//! predictive selection (over-selection + cancellation + availability
+//! forecasting), TiFL-style tier scheduling, lazily-realized populations
+//! with sketch summaries, virtual wall-clock with round events, and
+//! per-round metric traces.
 
 pub mod aggregation;
 pub mod client;
 pub mod clock;
 pub mod metrics;
 pub mod population;
+pub mod selection;
 pub mod sketch;
 pub mod speed;
 pub mod system;
@@ -23,6 +25,10 @@ pub use metrics::{RoundRecord, StreamingStats, Trace};
 pub use population::{
     CohortConditions, LazyFleet, LazyShards, PopulationFleet, PopulationSpec,
     DEFAULT_EXACT_THRESHOLD, DEFAULT_FRONTIER,
+};
+pub use selection::{
+    overselect_target, parse_overselect, validate_overselect,
+    AvailabilityForecaster, ForecastPolicy, OVERSELECT_OFF,
 };
 pub use sketch::{QuantileSketch, TopK};
 pub use speed::SpeedModel;

@@ -58,6 +58,7 @@
 //! ```
 
 use crate::fed::client::ClientFleet;
+use crate::fed::selection::{AvailabilityForecaster, ForecastPolicy};
 use crate::fed::sketch::{QuantileSketch, TopK};
 use crate::fed::speed::SpeedModel;
 use crate::fed::system::{Dynamics, SystemModel};
@@ -250,6 +251,12 @@ pub struct LazyFleet {
     speed_sketch: QuantileSketch,
     /// EWMA estimates for touched clients (prior = base speed)
     estimates: HashMap<usize, f64>,
+    /// optional availability forecaster — sparse like `estimates`, fed
+    /// the realized online bit of every cohort member, so its state is
+    /// O(touched clients) and any per-client prediction is
+    /// stateless-reconstructible from (policy, that client's
+    /// observations)
+    forecast: Option<AvailabilityForecaster>,
     markov: HashMap<usize, MarkovLane>,
     cluster_down: Vec<bool>,
     cluster_rng: Rng,
@@ -296,6 +303,7 @@ impl LazyFleet {
             seed,
             alpha: crate::fed::client::DEFAULT_EWMA_ALPHA,
             estimates: HashMap::new(),
+            forecast: None,
             markov: HashMap::new(),
             cluster_down: vec![false; clusters],
             cluster_rng: Rng::with_stream(seed, CLUSTER_STREAM),
@@ -305,6 +313,16 @@ impl LazyFleet {
 
     pub fn spec(&self) -> &PopulationSpec {
         &self.spec
+    }
+
+    /// Enable availability forecasting
+    /// ([`crate::fed::AvailabilityForecaster`]): every subsequent
+    /// [`Self::realize_cohort`] feeds the forecaster the cohort's
+    /// realized online bits and [`Self::cohort`] prefers frontier
+    /// members predicted online. RNG-free, so enabling it never
+    /// perturbs any realization stream.
+    pub fn set_forecast(&mut self, policy: ForecastPolicy) {
+        self.forecast = Some(AvailabilityForecaster::new(policy));
     }
 
     pub fn num_clients(&self) -> usize {
@@ -346,12 +364,29 @@ impl LazyFleet {
     /// [`crate::fed::TierScheduler`], the frontier is a cached candidate
     /// set: estimates re-rank within it every call, but a client outside
     /// it (never among the base-fastest) is not reconsidered.
+    ///
+    /// With a forecaster enabled ([`Self::set_forecast`]) the whole
+    /// frontier is ranked (O(frontier · log frontier)) and members
+    /// predicted offline yield their slot to the next-fastest predicted
+    /// online; the cohort never shrinks — an all-offline forecast
+    /// degrades to the plain estimate prefix.
     pub fn cohort(&self, k: usize) -> Vec<usize> {
-        let mut t = TopK::new(k.min(self.frontier.len()));
-        for &i in &self.frontier {
-            t.push(self.estimate(i), i);
+        match &self.forecast {
+            None => {
+                let mut t = TopK::new(k.min(self.frontier.len()));
+                for &i in &self.frontier {
+                    t.push(self.estimate(i), i);
+                }
+                t.ids()
+            }
+            Some(f) => {
+                let mut t = TopK::new(self.frontier.len());
+                for &i in &self.frontier {
+                    t.push(self.estimate(i), i);
+                }
+                f.filter_prefix(&t.ids(), k.min(self.frontier.len()))
+            }
         }
-        t.ids()
     }
 
     /// Realize one charged round's conditions for `ids` only at virtual
@@ -435,6 +470,11 @@ impl LazyFleet {
             };
             online.push(on);
         }
+        if let Some(f) = &mut self.forecast {
+            for (k, &i) in ids.iter().enumerate() {
+                f.observe(i, online[k]);
+            }
+        }
         CohortConditions { ids: ids.to_vec(), times, available, online }
     }
 
@@ -456,15 +496,17 @@ impl LazyFleet {
         }
     }
 
-    /// Clients with retained per-client state (estimates, dynamics or
-    /// data lanes) — the memory footprint check: everything else about
-    /// the population occupies no per-client storage.
+    /// Clients with retained per-client state (estimates, dynamics,
+    /// forecast windows or data lanes) — the memory footprint check:
+    /// everything else about the population occupies no per-client
+    /// storage.
     pub fn touched_clients(&self) -> usize {
         let mut ids: Vec<usize> = self
             .estimates
             .keys()
             .chain(self.markov.keys())
             .copied()
+            .chain(self.forecast.iter().flat_map(|f| f.tracked_ids()))
             .collect();
         ids.sort_unstable();
         ids.dedup();
@@ -795,6 +837,33 @@ mod tests {
         let c = f.realize_cohort(&[3], 0.0);
         assert_eq!(c.online, vec![false]);
         assert_eq!(f.rounds_realized(), 3);
+    }
+
+    #[test]
+    fn forecast_reroutes_the_lazy_cohort_and_stays_sparse() {
+        use crate::fed::selection::ForecastPolicy;
+        // homog speeds: ties rank by id, so the un-forecast cohort is
+        // always the id prefix of the frontier
+        let mut f = LazyFleet::new(
+            spec("pop:4:avail:diurnal:100:0.5:1:homog:10"),
+            5,
+        );
+        assert_eq!(f.cohort(2), vec![0, 1]);
+        f.set_forecast(ForecastPolicy::Ewma { alpha: 0.5 });
+        // an untouched forecaster changes nothing (optimistic prior)
+        assert_eq!(f.cohort(2), vec![0, 1]);
+        // at t=50 the diurnal phase puts clients 0,1 offline and 2,3
+        // online; a few observed rounds teach the forecaster that
+        for _ in 0..3 {
+            let c = f.realize_cohort(&[0, 1, 2, 3], 50.0);
+            assert_eq!(c.online, vec![false, false, true, true]);
+        }
+        assert_eq!(f.cohort(2), vec![2, 3]);
+        // the cohort never shrinks: asking for all four tops back up
+        // with the predicted-offline pair, fastest-first
+        assert_eq!(f.cohort(4), vec![2, 3, 0, 1]);
+        // forecast state is O(touched), and it counts in the footprint
+        assert_eq!(f.touched_clients(), 4);
     }
 
     #[test]

@@ -1,0 +1,429 @@
+//! Predictive client selection (`fed::selection`).
+//!
+//! The paper's FLANP adapts *how many* clients participate as statistical
+//! accuracy grows, and `fed::system`'s estimator adapts *which* — but
+//! both react to realized speeds only after paying for a doomed cohort.
+//! Production FL stacks predict instead (Hard et al., *Federated Learning
+//! for Mobile Keyboard Prediction*; TiFL's latency-aware selection):
+//!
+//! * **Over-selection** — ask `ceil(F * k)` clients for a round that
+//!   statistically needs `k`, aggregate the first `k` arrivals and
+//!   *cancel* the stragglers' in-flight work, charging the clock only to
+//!   the k-th arrival ([`overselect_target`], [`parse_overselect`]; the
+//!   clock side is [`crate::fed::VirtualClock::charge_round_cancel`]).
+//! * **Availability forecasting** — a per-client window tracker
+//!   ([`AvailabilityForecaster`]) learned online from the same realized
+//!   `RoundConditions::online` bits the `SpeedEstimator` sees, consulted
+//!   at selection time so FLANP / TiFL skip clients whose predicted
+//!   availability window does not cover the round.
+//!
+//! Both are deterministic and RNG-free: the forecaster only reads
+//! already-realized online bits (which are drawn on the system stream
+//! regardless), so enabling either knob never perturbs any random
+//! stream — with `overselect = 1.0` and no forecaster every solver is
+//! bit-identical to the pre-selection-layer behavior (pinned by
+//! `rust/tests/golden.rs` and `rust/tests/selection.rs`).
+//!
+//! Forecast state is **sparse**: a `HashMap` keyed by the client ids
+//! actually observed, so the lazy population path
+//! ([`crate::fed::LazyFleet`]) stays O(cohort) per round — an id with no
+//! entry predicts the optimistic prior, which makes every per-client
+//! prediction stateless-reconstructible from (policy, observations).
+//!
+//! ```
+//! use flanp::fed::selection::{overselect_target, ForecastPolicy};
+//!
+//! // grammar: forecast:ewma:A | forecast:window:W (prefix optional)
+//! let p = ForecastPolicy::parse("forecast:ewma:0.3").unwrap();
+//! assert_eq!(p, ForecastPolicy::Ewma { alpha: 0.3 });
+//! assert_eq!(p.spec(), "forecast:ewma:0.3");
+//! // ceil(1.3 * 10) = 13 candidates for a 10-client round
+//! assert_eq!(overselect_target(10, 1.3, 64), 13);
+//! // the target never exceeds the fleet and never shrinks the cohort
+//! assert_eq!(overselect_target(10, 1.3, 11), 11);
+//! assert_eq!(overselect_target(10, 1.0, 64), 10);
+//! ```
+
+use std::collections::HashMap;
+
+/// Over-selection factor meaning "off": select exactly `k` clients.
+pub const OVERSELECT_OFF: f64 = 1.0;
+
+/// Largest accepted over-selection factor — past this the "cancelled
+/// tail" is most of the fleet and the wasted-work pitfall dominates
+/// (docs/scenarios.md §8).
+pub const OVERSELECT_MAX: f64 = 16.0;
+
+/// Optimistic prior for never-observed clients: assumed online, so the
+/// forecaster never starves selection of clients it has not tried yet.
+const PRIOR_ONLINE: f64 = 1.0;
+
+/// Predicted-online decision threshold on the tracked score.
+const ONLINE_THRESHOLD: f64 = 0.5;
+
+/// Largest window the `window:W` tracker accepts (observations are
+/// packed into a u64 bitmask so per-client state stays constant-size).
+pub const FORECAST_WINDOW_MAX: usize = 64;
+
+/// Parse an over-selection spec. Grammar: `overselect:F` (the bare `F`
+/// is accepted too, for CLI ergonomics). `F` must be in
+/// `[1.0, OVERSELECT_MAX]`; `1.0` means off.
+///
+/// ```
+/// use flanp::fed::selection::parse_overselect;
+/// assert_eq!(parse_overselect("overselect:1.3").unwrap(), 1.3);
+/// assert_eq!(parse_overselect("1.0").unwrap(), 1.0);
+/// assert!(parse_overselect("overselect:0.5").is_err());
+/// ```
+pub fn parse_overselect(spec: &str) -> Result<f64, String> {
+    let tok = spec.strip_prefix("overselect:").unwrap_or(spec);
+    let f: f64 = tok
+        .parse()
+        .map_err(|_| format!("bad factor '{tok}' in overselect spec '{spec}'"))?;
+    validate_overselect(f).map_err(|e| format!("{e} in overselect spec '{spec}'"))?;
+    Ok(f)
+}
+
+/// Structural check for an over-selection factor (configs can be built
+/// without `parse`).
+pub fn validate_overselect(f: f64) -> Result<(), String> {
+    if f.is_finite() && (OVERSELECT_OFF..=OVERSELECT_MAX).contains(&f) {
+        Ok(())
+    } else {
+        Err(format!(
+            "overselect factor {f} outside [{OVERSELECT_OFF}, {OVERSELECT_MAX}]"
+        ))
+    }
+}
+
+/// How many clients to *select* for a round that statistically needs
+/// `k`: `ceil(F * k)`, never below `k`, never above the fleet.
+pub fn overselect_target(k: usize, factor: f64, n_total: usize) -> usize {
+    ((k as f64 * factor).ceil() as usize).max(k).min(n_total)
+}
+
+/// How a client's availability window is tracked.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ForecastPolicy {
+    /// Exponential moving average of the realized online bit with
+    /// smoothing `alpha` in (0, 1]: `score += alpha * (online - score)`.
+    Ewma { alpha: f64 },
+    /// Fraction of online observations over the last `w` rounds the
+    /// client was looked at (`w` in `1..=FORECAST_WINDOW_MAX`).
+    Window { w: usize },
+}
+
+impl ForecastPolicy {
+    /// Parse a forecast spec. Grammar:
+    ///
+    /// ```text
+    ///   forecast:ewma:A | forecast:window:W
+    /// ```
+    ///
+    /// (the `forecast:` prefix is optional, for CLI ergonomics).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let body = spec.strip_prefix("forecast:").unwrap_or(spec);
+        let policy = match body.split_once(':') {
+            Some(("ewma", a)) => {
+                let alpha: f64 = a.parse().map_err(|_| {
+                    format!("bad alpha '{a}' in forecast spec '{spec}'")
+                })?;
+                ForecastPolicy::Ewma { alpha }
+            }
+            Some(("window", w)) => {
+                let w: usize = w.parse().map_err(|_| {
+                    format!("bad window '{w}' in forecast spec '{spec}'")
+                })?;
+                ForecastPolicy::Window { w }
+            }
+            _ => {
+                return Err(format!(
+                    "unknown forecast policy '{spec}' \
+                     (expected forecast:ewma:A | forecast:window:W)"
+                ))
+            }
+        };
+        policy.validate().map_err(|e| format!("{e} in forecast spec '{spec}'"))?;
+        Ok(policy)
+    }
+
+    /// Canonical spec string; `parse(spec()) == self` for every policy.
+    pub fn spec(&self) -> String {
+        match self {
+            ForecastPolicy::Ewma { alpha } => format!("forecast:ewma:{alpha}"),
+            ForecastPolicy::Window { w } => format!("forecast:window:{w}"),
+        }
+    }
+
+    /// Structural sanity check (configs can be built without `parse`).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            ForecastPolicy::Ewma { alpha } => {
+                if alpha > 0.0 && alpha <= 1.0 {
+                    Ok(())
+                } else {
+                    Err(format!("forecast ewma alpha {alpha} outside (0, 1]"))
+                }
+            }
+            ForecastPolicy::Window { w } => {
+                if (1..=FORECAST_WINDOW_MAX).contains(&w) {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "forecast window {w} outside 1..={FORECAST_WINDOW_MAX}"
+                    ))
+                }
+            }
+        }
+    }
+}
+
+/// Per-client tracked state: `score` is the EWMA estimate; `bits`/`len`
+/// pack the sliding window (only the fields the policy uses are read).
+#[derive(Clone, Copy, Debug, Default)]
+struct ClientWindow {
+    score: f64,
+    bits: u64,
+    len: u32,
+}
+
+/// Online availability forecaster: one window tracker per *observed*
+/// client, fed the realized `online` bit every time a client appears in
+/// a selected cohort, and consulted at selection time to skip clients
+/// whose predicted window does not cover the round.
+///
+/// ```
+/// use flanp::fed::selection::{AvailabilityForecaster, ForecastPolicy};
+///
+/// let mut f = AvailabilityForecaster::new(ForecastPolicy::Ewma { alpha: 0.5 });
+/// // never observed: optimistic prior, predicted online
+/// assert!(f.predicted_online(7));
+/// f.observe(7, false);
+/// f.observe(7, false);
+/// assert!(!f.predicted_online(7)); // 1.0 -> 0.5 -> 0.25
+/// f.observe(7, true);
+/// f.observe(7, true);
+/// assert!(f.predicted_online(7));
+/// ```
+#[derive(Clone, Debug)]
+pub struct AvailabilityForecaster {
+    policy: ForecastPolicy,
+    state: HashMap<usize, ClientWindow>,
+}
+
+impl AvailabilityForecaster {
+    pub fn new(policy: ForecastPolicy) -> Self {
+        AvailabilityForecaster { policy, state: HashMap::new() }
+    }
+
+    pub fn policy(&self) -> &ForecastPolicy {
+        &self.policy
+    }
+
+    /// Number of clients with tracked state (O(observed ids), never
+    /// O(population) — the lazy fleet's contract).
+    pub fn tracked(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Ids with tracked state, unordered (the lazy fleet folds these
+    /// into its memory-footprint accounting).
+    pub fn tracked_ids(&self) -> impl Iterator<Item = usize> + '_ {
+        self.state.keys().copied()
+    }
+
+    /// Feed one realized online bit for one client. Deterministic and
+    /// RNG-free: the bit was already drawn on the system stream.
+    pub fn observe(&mut self, client: usize, online: bool) {
+        let w = self.state.entry(client).or_insert(ClientWindow {
+            score: PRIOR_ONLINE,
+            bits: 0,
+            len: 0,
+        });
+        match self.policy {
+            ForecastPolicy::Ewma { alpha } => {
+                let obs = if online { 1.0 } else { 0.0 };
+                w.score += alpha * (obs - w.score);
+            }
+            ForecastPolicy::Window { w: width } => {
+                w.bits = (w.bits << 1) | online as u64;
+                w.len = (w.len + 1).min(width as u32);
+            }
+        }
+    }
+
+    /// Predicted probability the client is online next round; clients
+    /// never observed predict the optimistic prior (1.0).
+    pub fn predict(&self, client: usize) -> f64 {
+        let w = match self.state.get(&client) {
+            Some(w) => w,
+            None => return PRIOR_ONLINE,
+        };
+        match self.policy {
+            ForecastPolicy::Ewma { .. } => w.score,
+            ForecastPolicy::Window { w: width } => {
+                if w.len == 0 {
+                    return PRIOR_ONLINE;
+                }
+                let kept = w.len.min(width as u32);
+                let mask = if kept >= 64 { u64::MAX } else { (1u64 << kept) - 1 };
+                (w.bits & mask).count_ones() as f64 / kept as f64
+            }
+        }
+    }
+
+    /// Selection-time decision: does the predicted availability window
+    /// cover the round?
+    pub fn predicted_online(&self, client: usize) -> bool {
+        self.predict(client) >= ONLINE_THRESHOLD
+    }
+
+    /// Pick up to `k` clients from a fastest-first `ranking`, preferring
+    /// clients predicted online; if fewer than `k` are predicted online
+    /// the fastest predicted-offline clients top the cohort back up (the
+    /// forecaster reorders within the ranking, it never shrinks the
+    /// cohort — an all-wrong forecast degrades to the plain prefix).
+    pub fn filter_prefix(&self, ranking: &[usize], k: usize) -> Vec<usize> {
+        let mut picked = Vec::with_capacity(k.min(ranking.len()));
+        let mut skipped = Vec::new();
+        for &i in ranking {
+            if picked.len() == k {
+                break;
+            }
+            if self.predicted_online(i) {
+                picked.push(i);
+            } else {
+                skipped.push(i);
+            }
+        }
+        for i in skipped {
+            if picked.len() == k {
+                break;
+            }
+            picked.push(i);
+        }
+        picked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overselect_parse_roundtrips_and_rejects() {
+        assert_eq!(parse_overselect("overselect:1.3").unwrap(), 1.3);
+        assert_eq!(parse_overselect("2").unwrap(), 2.0);
+        for bad in ["overselect:0.9", "overselect:x", "overselect:inf", "-1"] {
+            let e = parse_overselect(bad).unwrap_err();
+            assert!(e.contains(bad), "error '{e}' does not name '{bad}'");
+        }
+    }
+
+    #[test]
+    fn overselect_target_is_ceil_clamped() {
+        assert_eq!(overselect_target(10, 1.3, 100), 13);
+        assert_eq!(overselect_target(10, 1.0, 100), 10);
+        assert_eq!(overselect_target(3, 1.1, 100), 4); // ceil(3.3)
+        assert_eq!(overselect_target(10, 4.0, 12), 12); // fleet-clamped
+        assert_eq!(overselect_target(0, 1.3, 100), 0);
+    }
+
+    #[test]
+    fn forecast_parse_roundtrips_every_variant() {
+        for spec in ["forecast:ewma:0.3", "forecast:window:8"] {
+            let p = ForecastPolicy::parse(spec).unwrap();
+            assert_eq!(p.spec(), spec);
+            assert_eq!(ForecastPolicy::parse(&p.spec()).unwrap(), p, "{spec}");
+        }
+        // the forecast: prefix is optional
+        assert_eq!(
+            ForecastPolicy::parse("ewma:0.3").unwrap(),
+            ForecastPolicy::Ewma { alpha: 0.3 }
+        );
+    }
+
+    #[test]
+    fn forecast_parse_errors_name_the_full_spec() {
+        for bad in [
+            "forecast:ewma:0",    // alpha outside (0, 1]
+            "forecast:ewma:1.5",  // alpha outside (0, 1]
+            "forecast:ewma:x",    // non-numeric
+            "forecast:window:0",  // window outside 1..=64
+            "forecast:window:65", // window outside 1..=64
+            "forecast:median:3",  // unknown policy
+            "forecast:ewma",      // missing parameter
+        ] {
+            let e = ForecastPolicy::parse(bad).unwrap_err();
+            assert!(e.contains(bad), "error '{e}' does not name '{bad}'");
+        }
+    }
+
+    #[test]
+    fn ewma_tracker_follows_the_online_bit() {
+        let mut f =
+            AvailabilityForecaster::new(ForecastPolicy::Ewma { alpha: 0.5 });
+        assert_eq!(f.predict(3), 1.0);
+        f.observe(3, false);
+        assert_eq!(f.predict(3), 0.5);
+        assert!(f.predicted_online(3)); // threshold is inclusive
+        f.observe(3, false);
+        assert_eq!(f.predict(3), 0.25);
+        assert!(!f.predicted_online(3));
+        f.observe(3, true);
+        f.observe(3, true);
+        assert!(f.predicted_online(3));
+        assert_eq!(f.tracked(), 1);
+    }
+
+    #[test]
+    fn window_tracker_is_a_sliding_majority() {
+        let mut f =
+            AvailabilityForecaster::new(ForecastPolicy::Window { w: 4 });
+        assert!(f.predicted_online(0));
+        for _ in 0..4 {
+            f.observe(0, false);
+        }
+        assert_eq!(f.predict(0), 0.0);
+        // three online observations push the 4-window majority back up
+        f.observe(0, true);
+        f.observe(0, true);
+        f.observe(0, true);
+        assert_eq!(f.predict(0), 0.75);
+        assert!(f.predicted_online(0));
+        // old observations slide out entirely
+        f.observe(0, true);
+        assert_eq!(f.predict(0), 1.0);
+    }
+
+    #[test]
+    fn window_width_64_masks_correctly() {
+        let mut f =
+            AvailabilityForecaster::new(ForecastPolicy::Window { w: 64 });
+        for _ in 0..64 {
+            f.observe(9, true);
+        }
+        assert_eq!(f.predict(9), 1.0);
+        f.observe(9, false);
+        assert_eq!(f.predict(9), 63.0 / 64.0);
+    }
+
+    #[test]
+    fn filter_prefix_prefers_predicted_online_but_never_shrinks() {
+        let mut f =
+            AvailabilityForecaster::new(ForecastPolicy::Ewma { alpha: 1.0 });
+        f.observe(0, false); // fastest client predicted offline
+        f.observe(2, false);
+        let ranking = [0, 1, 2, 3, 4];
+        // predicted-online clients fill first, in ranking order
+        assert_eq!(f.filter_prefix(&ranking, 3), vec![1, 3, 4]);
+        // not enough predicted online: fastest skipped clients top up
+        assert_eq!(f.filter_prefix(&ranking, 4), vec![1, 3, 4, 0]);
+        assert_eq!(f.filter_prefix(&ranking, 5), vec![1, 3, 4, 0, 2]);
+        // k past the ranking just returns everything reordered
+        assert_eq!(f.filter_prefix(&ranking, 9).len(), 5);
+        // an untouched forecaster is the identity on prefixes
+        let g = AvailabilityForecaster::new(ForecastPolicy::Ewma { alpha: 0.5 });
+        assert_eq!(g.filter_prefix(&ranking, 3), vec![0, 1, 2]);
+    }
+}

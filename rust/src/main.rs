@@ -87,6 +87,21 @@ OPTIONS (run):
                     stage sizes snap to tier boundaries; required by the
                     tifl solver. Re-tier events land in the trace's
                     reranks column.
+  --overselect F    predictive over-selection             [1.0 = off]
+                    select ceil(F x k) clients for a round that
+                    statistically needs k, aggregate the first k arrivals
+                    and cancel the stragglers' in-flight work — the clock
+                    is charged only to the k-th arrival, cancellations
+                    land in the trace's cancelled column. F in [1, 16];
+                    applies to flanp | flanp-heuristic | tifl
+  --forecast SPEC   availability forecasting              [off]
+                    forecast:ewma:A | forecast:window:W — track each
+                    observed client's realized online bit (EWMA with
+                    alpha A, or the majority of the last W observations)
+                    and skip clients predicted offline at selection time,
+                    topping the cohort back up with the next-fastest
+                    predicted-online candidates. Applies to flanp |
+                    flanp-heuristic | tifl
   --ewma F          EWMA alpha of the online speed estimator [0.25]
   --oracle-ranking  rank FLANP prefixes by oracle speeds instead of the
                     online estimates
@@ -173,6 +188,15 @@ fn cmd_run(args: &mut Args) -> Result<()> {
         .map(|s| TierPolicy::parse(&s))
         .transpose()
         .map_err(|e| anyhow::anyhow!(e))?;
+    let overselect = flanp::fed::parse_overselect(
+        &args.flag_str("overselect", "1.0"),
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    let forecast = args
+        .flag_opt("forecast")
+        .map(|s| flanp::fed::ForecastPolicy::parse(&s))
+        .transpose()
+        .map_err(|e| anyhow::anyhow!(e))?;
     let ewma = args
         .flag_f64("ewma", flanp::fed::DEFAULT_EWMA_ALPHA)
         .map_err(|e| anyhow::anyhow!(e))?;
@@ -204,6 +228,8 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     cfg.system = system;
     cfg.deadline = deadline;
     cfg.tiers = tiers;
+    cfg.overselect = overselect;
+    cfg.forecast = forecast;
     cfg.estimate_speeds = !oracle_ranking;
     cfg.rerank_per_round = rerank_per_round;
     cfg.ewma_alpha = ewma;
@@ -220,7 +246,8 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     if !quiet {
         println!(
             "flanp run: solver={} model={} engine={} N={} s={} tau={} eta={} \
-             gamma={} system={} deadline={} tiers={} ranking={}",
+             gamma={} system={} deadline={} tiers={} overselect={} \
+             forecast={} ranking={}",
             cfg.solver.name(),
             model,
             engine_kind,
@@ -232,6 +259,11 @@ fn cmd_run(args: &mut Args) -> Result<()> {
             cfg.system.spec(),
             cfg.deadline.spec(),
             cfg.tiers.as_ref().map(|t| t.spec()).unwrap_or_else(|| "off".into()),
+            cfg.overselect,
+            cfg.forecast
+                .as_ref()
+                .map(|f| f.spec())
+                .unwrap_or_else(|| "off".into()),
             if cfg.estimate_speeds {
                 if cfg.rerank_per_round { "per-round" } else { "estimated" }
             } else {
@@ -246,7 +278,8 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     let last = trace.last().context("empty trace")?;
     println!(
         "done: rounds={} virtual_time={:.1} loss_full={:.6} grad^2={:.3e} \
-         dist={:.4} acc={:.4} finished={} ({} stages, {} reranks) [{:.2?} real]",
+         dist={:.4} acc={:.4} finished={} ({} stages, {} reranks, \
+         {} cancelled) [{:.2?} real]",
         last.round,
         trace.total_time,
         last.loss_full,
@@ -256,6 +289,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
         trace.finished,
         trace.stage_transitions.len().max(1),
         trace.total_reranks(),
+        trace.total_cancelled(),
         wall
     );
     if let Some(p) = trace_path {

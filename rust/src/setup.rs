@@ -132,6 +132,11 @@ pub fn build_fleet(
     if let Some(policy) = &cfg.tiers {
         fleet.ensure_tiers(policy);
     }
+    // forecasting is RNG-free, so enabling it here (after every scenario
+    // draw) cannot perturb the fleet's streams
+    if let Some(fc) = &cfg.forecast {
+        fleet.set_forecast(fc.clone());
+    }
     Ok(fleet)
 }
 
@@ -159,10 +164,11 @@ pub fn build_population_fleet(
         let fleet = build_fleet(meta, &sized, noise, separation)?;
         Ok(PopulationFleet::Exact(Box::new(fleet)))
     } else {
-        Ok(PopulationFleet::Lazy(Box::new(LazyFleet::new(
-            pop.clone(),
-            cfg.seed,
-        ))))
+        let mut lazy = LazyFleet::new(pop.clone(), cfg.seed);
+        if let Some(fc) = &cfg.forecast {
+            lazy.set_forecast(fc.clone());
+        }
+        Ok(PopulationFleet::Lazy(Box::new(lazy)))
     }
 }
 

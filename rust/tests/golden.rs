@@ -1,0 +1,143 @@
+//! Golden-trace regression harness.
+//!
+//! One fixed scenario — diurnal availability rotation plus log-normal
+//! speed jitter — and one canonical config per solver; the full
+//! per-round CSV trace ([`flanp::fed::Trace::to_csv`]) is byte-compared
+//! against a committed fixture in `tests/fixtures/golden/`. Any change
+//! to selection, deadline accounting, RNG stream consumption, or the
+//! trace schema shows up as a byte diff here. In particular the
+//! predictive-selection layer (`fed::selection`) is pinned OFF-path:
+//! with `overselect = 1.0` and no forecaster (the defaults every golden
+//! config uses) each solver must stay bit-identical to the
+//! pre-selection-layer behavior these fixtures freeze.
+//!
+//! Blessing protocol:
+//!   * a MISSING fixture is written from the current run and the test
+//!     passes — the first run on a fresh checkout self-blesses; commit
+//!     the generated CSVs so later runs compare,
+//!   * `FLANP_BLESS=1 cargo test --test golden` regenerates every
+//!     fixture after an INTENDED behavior change — commit the diff and
+//!     call it out in the PR description.
+//!
+//! Fixtures are text CSVs produced by deterministic arithmetic on one
+//! platform; `exp`/`ln` come from the system libm, so bless on the same
+//! platform class that runs CI if a byte diff appears with no code
+//! change.
+
+use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::fed::{SystemModel, TierPolicy};
+use flanp::setup;
+use std::path::PathBuf;
+
+/// The one golden scenario: a rotating 50%-duty diurnal window over the
+/// fleet plus mild log-normal jitter — exercises availability skips,
+/// wait rounds, deadline arithmetic and estimate drift all at once.
+const SCENARIO: &str = "avail:diurnal:20000:0.5:1:jitter:0.2:uniform:50:500";
+
+fn fixtures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden")
+}
+
+fn golden_cfg(solver: SolverKind, tiered: bool) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(solver, "linreg_d25", 16, 50);
+    cfg.eta = 0.05;
+    cfg.tau = 10;
+    cfg.n0 = 2;
+    cfg.mu = 0.5;
+    cfg.c_stat = 0.5;
+    cfg.system = SystemModel::parse(SCENARIO).unwrap();
+    if tiered {
+        cfg.tiers = Some(TierPolicy::parse("tiers:4").unwrap());
+    }
+    cfg.seed = 7;
+    // a fixed budget keeps every fixture the same length whether or not
+    // the solver reaches statistical accuracy first
+    cfg.max_rounds = 120;
+    cfg.eval_every = 5;
+    cfg.eval_rows = 500;
+    cfg
+}
+
+/// Run `cfg`, then byte-compare (or bless) the trace CSV for `tag`.
+fn check(tag: &str, cfg: &ExperimentConfig) {
+    let engine = setup::native_from_name(&cfg.model).unwrap();
+    let mut fleet = setup::build_fleet(engine.meta(), cfg, 0.1, 0.0).unwrap();
+    let trace = run_solver(&engine, &mut fleet, cfg).unwrap();
+    let got = trace.to_csv();
+    let path = fixtures_dir().join(format!("{tag}.csv"));
+    let bless = std::env::var("FLANP_BLESS").is_ok_and(|v| v == "1");
+    if bless || !path.exists() {
+        std::fs::create_dir_all(fixtures_dir()).unwrap();
+        std::fs::write(&path, &got).unwrap();
+        if !bless {
+            eprintln!(
+                "golden: blessed missing fixture {} — commit it",
+                path.display()
+            );
+        }
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    if got != want {
+        // a full-string assert_eq! dumps both traces; report the first
+        // diverging line instead
+        let (mut line, mut a, mut b) = (0usize, "", "");
+        for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+            if g != w {
+                (line, a, b) = (i + 1, g, w);
+                break;
+            }
+        }
+        if line == 0 {
+            line = got.lines().count().min(want.lines().count()) + 1;
+            (a, b) = ("<end>", "<end>");
+        }
+        panic!(
+            "golden trace drifted for {tag} at line {line}:\n  got:  {a}\n  \
+             want: {b}\n({} vs {} lines) — if this change is intended, \
+             regenerate with FLANP_BLESS=1 and commit the fixture diff",
+            got.lines().count(),
+            want.lines().count(),
+        );
+    }
+}
+
+#[test]
+fn golden_flanp_stage() {
+    check("flanp-stage", &golden_cfg(SolverKind::Flanp, false));
+}
+
+#[test]
+fn golden_flanp_tiered() {
+    check("flanp-tiered", &golden_cfg(SolverKind::Flanp, true));
+}
+
+#[test]
+fn golden_fedgate() {
+    check("fedgate", &golden_cfg(SolverKind::FedGate, false));
+}
+
+#[test]
+fn golden_fedavg() {
+    check("fedavg", &golden_cfg(SolverKind::FedAvg, false));
+}
+
+#[test]
+fn golden_fedprox() {
+    check("fedprox", &golden_cfg(SolverKind::FedProx, false));
+}
+
+#[test]
+fn golden_fednova() {
+    check("fednova", &golden_cfg(SolverKind::FedNova, false));
+}
+
+#[test]
+fn golden_fedbuff2() {
+    check("fedbuff2", &golden_cfg(SolverKind::FedBuff { k: 2 }, false));
+}
+
+#[test]
+fn golden_tifl() {
+    check("tifl", &golden_cfg(SolverKind::Tifl, true));
+}

@@ -9,7 +9,7 @@ use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
 use flanp::data::{shard, synth};
 use flanp::engine::NativeEngine;
 use flanp::fed::speed::sort_fastest_first;
-use flanp::fed::{ClientFleet, SpeedModel, VirtualClock};
+use flanp::fed::{ClientFleet, QuantileSketch, SpeedModel, TopK, VirtualClock};
 use flanp::util::prop::{forall, gen_usize};
 use flanp::util::{linalg, Rng};
 
@@ -264,6 +264,110 @@ fn prop_determinism_across_identical_runs() {
                         x.round, x.loss_full, y.loss_full
                     ));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quantile_sketch_rank_error_within_bound() {
+    // the sketch's documented guarantee: rank error of any query is at
+    // most (log2(n/m) + 1) / m of the total weight (m = capacity),
+    // exercised over adversarially-shaped streams — random, sorted,
+    // reverse-sorted, and duplicate-heavy (the compaction worst cases)
+    forall(
+        110,
+        24,
+        |r| (gen_usize(r, 1, 4000), gen_usize(r, 0, 3), r.next_u64()),
+        |&(n, shape, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut xs: Vec<f64> = match shape {
+                0 => (0..n).map(|_| rng.next_f64() * 1e3).collect(),
+                1 => (0..n).map(|i| i as f64).collect(),
+                2 => (0..n).map(|i| (n - i) as f64).collect(),
+                _ => (0..n).map(|_| rng.below(8) as f64).collect(),
+            };
+            let m = 32usize;
+            let mut sk = QuantileSketch::new(m);
+            for &x in &xs {
+                sk.push(x);
+            }
+            xs.sort_by(|a, b| a.total_cmp(b));
+            let bound =
+                ((n as f64 / m as f64).log2().max(0.0) + 1.0) / m as f64;
+            for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0] {
+                let v = sk.query(q);
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                // v's admissible rank range is [lo+1, hi]; error is the
+                // distance from the target rank to that range
+                let lo = xs.partition_point(|&x| x < v);
+                let hi = xs.partition_point(|&x| x <= v);
+                if hi == lo {
+                    return Err(format!(
+                        "query({q}) returned {v}, absent from the stream"
+                    ));
+                }
+                let err = if rank < lo + 1 {
+                    (lo + 1 - rank) as f64 / n as f64
+                } else if rank > hi {
+                    (rank - hi) as f64 / n as f64
+                } else {
+                    0.0
+                };
+                if err > bound {
+                    return Err(format!(
+                        "rank error {err:.4} > bound {bound:.4} \
+                         (n={n}, shape={shape}, q={q})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_topk_matches_stable_sort_truncate() {
+    // TopK::select and a streaming TopK must both equal "stable-sort
+    // the values fastest-first (ties by ascending id), truncate to k" —
+    // for k below, at, and past the input size, with heavy duplicates
+    // so the id tiebreak is load-bearing
+    forall(
+        111,
+        40,
+        |r| {
+            let n = gen_usize(r, 0, 60);
+            let values: Vec<f64> = (0..n)
+                .map(|_| gen_usize(r, 0, 12) as f64 * 0.25)
+                .collect();
+            (values, gen_usize(r, 0, 70))
+        },
+        |(values, k)| {
+            let want: Vec<usize> =
+                sort_fastest_first(values).into_iter().take(*k).collect();
+            let got = TopK::select(values, *k);
+            if got != want {
+                return Err(format!(
+                    "select(k={k}) = {got:?} != {want:?} for {values:?}"
+                ));
+            }
+            let mut t = TopK::new(*k);
+            for (i, &v) in values.iter().enumerate() {
+                t.push(v, i);
+            }
+            if t.ids() != want {
+                return Err(format!(
+                    "streaming ids(k={k}) = {:?} != {want:?}",
+                    t.ids()
+                ));
+            }
+            // retained values agree with the sorted prefix too
+            let vals: Vec<f64> = t.items().iter().map(|&(v, _)| v).collect();
+            let want_vals: Vec<f64> =
+                want.iter().map(|&i| values[i]).collect();
+            if vals != want_vals {
+                return Err(format!("values {vals:?} != {want_vals:?}"));
             }
             Ok(())
         },

@@ -1,0 +1,98 @@
+//! fed::selection end-to-end regressions: the ISSUE-8 acceptance pins.
+//!
+//! Under diurnal availability rotation, FLANP with over-selection
+//! (`overselect:1.3`) plus availability forecasting (`forecast:ewma`)
+//! must beat plain quantile-deadline FLANP on wall-clock at equal final
+//! statistical accuracy. With the selection layer off the behavior is
+//! bit-identical to the defaults (the coordinator unit tests and the
+//! golden harness pin that side).
+
+use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::fed::{DeadlinePolicy, ForecastPolicy, SystemModel, Trace};
+use flanp::setup;
+
+fn run(cfg: &ExperimentConfig) -> Trace {
+    let engine = setup::native_from_name(&cfg.model).unwrap();
+    let mut fleet = setup::build_fleet(engine.meta(), cfg, 0.1, 0.0).unwrap();
+    run_solver(&engine, &mut fleet, cfg).unwrap()
+}
+
+/// Quantile-deadline FLANP under a slowly-rotating 25%-duty diurnal
+/// window: at any instant only ~a quarter of the fleet is online, and
+/// the online quarter persists for several rounds before rotating on —
+/// the regime where a window forecaster has signal to exploit.
+fn diurnal_cfg(
+    overselect: f64,
+    forecast: Option<ForecastPolicy>,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(SolverKind::Flanp, "linreg_d25", 16, 50);
+    cfg.eta = 0.05;
+    cfg.tau = 10;
+    cfg.n0 = 2;
+    cfg.mu = 0.5;
+    cfg.c_stat = 0.5;
+    cfg.system =
+        SystemModel::parse("avail:diurnal:200000:0.25:1:uniform:50:500")
+            .unwrap();
+    cfg.deadline = DeadlinePolicy::Quantile { q: 0.8 };
+    cfg.overselect = overselect;
+    cfg.forecast = forecast;
+    cfg.seed = 11;
+    cfg.max_rounds = 4000;
+    cfg.eval_every = 5;
+    cfg.eval_rows = 500;
+    cfg
+}
+
+#[test]
+fn overselect_plus_forecast_beats_plain_quantile_flanp_under_diurnal() {
+    let plain = run(&diurnal_cfg(1.0, None));
+    let predictive = run(&diurnal_cfg(
+        1.3,
+        Some(ForecastPolicy::Ewma { alpha: 0.3 }),
+    ));
+    // equal final statistical accuracy: both certify the full-fleet
+    // gradient threshold, and the final full losses agree closely
+    assert!(plain.finished, "plain quantile FLANP unfinished under diurnal");
+    assert!(predictive.finished, "predictive FLANP unfinished under diurnal");
+    let lp = plain.last().unwrap().loss_full;
+    let lq = predictive.last().unwrap().loss_full;
+    assert!(
+        (lp - lq).abs() <= 0.10 * lp.max(lq),
+        "final losses diverged: plain {lp} vs predictive {lq}"
+    );
+    // the acceptance pin: predictive selection wins on wall-clock
+    assert!(
+        predictive.total_time < plain.total_time,
+        "predictive FLANP {} !< plain {} under diurnal rotation",
+        predictive.total_time,
+        plain.total_time
+    );
+    // and its price is visible: cancelled work is booked, never hidden
+    assert!(
+        predictive.total_cancelled() > 0,
+        "over-selection at 1.3 never cancelled anyone"
+    );
+    assert_eq!(plain.total_cancelled(), 0, "plain run booked cancellations");
+}
+
+#[test]
+fn forecast_alone_reduces_wasted_offline_selections() {
+    // forecasting with no over-selection must also help (or at least
+    // never hurt) under the same rotation: predicted-offline clients
+    // yield their slots to online ones, so fewer selected-but-offline
+    // skips and fewer all-offline wait rounds are paid
+    let plain = run(&diurnal_cfg(1.0, None));
+    let forecast =
+        run(&diurnal_cfg(1.0, Some(ForecastPolicy::Ewma { alpha: 0.3 })));
+    assert!(forecast.finished);
+    assert!(
+        forecast.total_time <= plain.total_time,
+        "forecast-only FLANP {} slower than plain {}",
+        forecast.total_time,
+        plain.total_time
+    );
+    // forecasting alone never cancels: cancellation is over-selection's
+    // mechanism, not the forecaster's
+    assert_eq!(forecast.total_cancelled(), 0);
+}

@@ -9,7 +9,7 @@
 //! public CLI spec grammar.
 
 use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
-use flanp::fed::{SystemModel, Trace, VirtualClock};
+use flanp::fed::{SpeedEstimator, SystemModel, Trace, VirtualClock};
 use flanp::setup;
 
 fn base_cfg(solver: SolverKind, n: usize, s: usize) -> ExperimentConfig {
@@ -149,6 +149,54 @@ fn dropout_scenario_records_drops_and_still_converges() {
     );
     // dropped counts never exceed the cohort
     assert!(trace.rounds.iter().all(|r| r.dropped <= 16));
+}
+
+#[test]
+fn estimator_recovers_true_ranking_after_a_censored_burst() {
+    // the over-selection failure mode: a burst of deadline-censored
+    // observations (cancelled stragglers report only "slower than the
+    // cutoff") pulls the FAST clients' estimates up toward the bound
+    // and scrambles the ranking; a bounded number of uncensored rounds
+    // must restore it
+    let truth = [10.0, 20.0, 40.0, 80.0, 160.0];
+    let mut est = SpeedEstimator::new(&truth, 0.25);
+    assert_eq!(est.ranked(), vec![0, 1, 2, 3, 4]);
+    // five rounds where the two fastest clients get cancelled at a
+    // cutoff of 500 per update — censoring only ever pulls UP, so only
+    // their estimates move
+    for _ in 0..5 {
+        est.observe_censored(0, 500.0);
+        est.observe_censored(1, 500.0);
+    }
+    assert_ne!(
+        est.ranked(),
+        vec![0, 1, 2, 3, 4],
+        "censored burst left the ranking intact — the test is vacuous"
+    );
+    assert!(est.estimate(0) > truth[4], "client 0 not pushed past slowest");
+    // uncensored recovery: exact observations are EWMA fixed points, so
+    // with alpha = 0.25 the ranking must re-converge within a bounded
+    // number of rounds (analytically ~11 here; 20 is a safe ceiling)
+    let mut recovered = None;
+    for round in 1..=20 {
+        for (i, &t) in truth.iter().enumerate() {
+            est.observe(i, t);
+        }
+        if est.ranked() == vec![0, 1, 2, 3, 4] {
+            recovered = Some(round);
+            break;
+        }
+    }
+    let r = recovered.expect("ranking never recovered in 20 uncensored rounds");
+    assert!(r <= 15, "recovery took {r} rounds, expected <= 15");
+    // and the estimates themselves converge back toward the truth
+    // (geometric decay: ~500 * 0.75^80 residual, far under tolerance)
+    for (i, &t) in truth.iter().enumerate() {
+        for _ in 0..80 {
+            est.observe(i, t);
+        }
+        assert!((est.estimate(i) - t).abs() < 1e-6 * t.max(1.0));
+    }
 }
 
 #[test]
