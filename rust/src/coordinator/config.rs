@@ -1,5 +1,6 @@
 //! Experiment configuration: every knob of every figure in one struct.
 
+use crate::data::DataSpec;
 use crate::fed::{
     validate_overselect, DeadlinePolicy, ForecastPolicy, SpeedModel,
     SystemModel, TierPolicy, OVERSELECT_OFF,
@@ -37,6 +38,16 @@ pub enum SolverKind {
     /// fairness credits so slow tiers still contribute. The tier count
     /// and hysteresis come from [`ExperimentConfig::tiers`] (required).
     Tifl,
+    /// Ditto-style personalization (Li et al. 2021, via the
+    /// straggler-resilient personalized FL line): the GLOBAL model runs
+    /// plain FedAvg rounds through the shared `deadline_round` step,
+    /// while every arrived client additionally trains a PERSONAL head
+    /// `v_i` with tau proximal steps `v_i -= eta * (grad_i(v_i) +
+    /// lambda * (v_i - w))` inside its already-charged tau budget. The
+    /// per-client held-out accuracy of the personal heads fills the
+    /// trace's `acc` column — the quantity the non-IID acceptance
+    /// scenario compares across solvers.
+    Ditto { lambda: f64 },
 }
 
 impl SolverKind {
@@ -52,10 +63,21 @@ impl SolverKind {
             SolverKind::FedGatePartialFastest { k } => format!("fedgate-fast{k}"),
             SolverKind::FedBuff { k } => format!("fedbuff{k}"),
             SolverKind::Tifl => "tifl".into(),
+            SolverKind::Ditto { lambda } => format!("ditto:{lambda}"),
         }
     }
 
     pub fn parse(s: &str) -> Result<Self, String> {
+        if let Some(l) = s.strip_prefix("ditto:") {
+            return Ok(SolverKind::Ditto {
+                lambda: l
+                    .parse()
+                    .map_err(|_| format!("bad ditto lambda '{l}'"))?,
+            });
+        }
+        if s == "ditto" {
+            return Ok(SolverKind::Ditto { lambda: 1.0 });
+        }
         if let Some(k) = s.strip_prefix("fedgate-rand") {
             return Ok(SolverKind::FedGatePartialRandom {
                 k: k.parse().map_err(|_| "bad k")?,
@@ -119,6 +141,11 @@ pub struct ExperimentConfig {
     /// system-heterogeneity scenario: base speed draw + per-round
     /// dynamics + dropout (plain [`SpeedModel`]s convert via `.into()`)
     pub system: SystemModel,
+    /// statistical-heterogeneity scenario (`--data`, the `data:`
+    /// grammar): Dirichlet label skew + per-client covariate shift,
+    /// optionally speed-correlated. [`DataSpec::iid`] (the default) is
+    /// bit-identical to the seed's IID sharding.
+    pub data: DataSpec,
     /// Aggregation deadline policy (fed::aggregation): how the server
     /// decides when to close a round and aggregate whatever arrived.
     /// [`DeadlinePolicy::Sync`] (the default) waits for the slowest
@@ -210,6 +237,7 @@ impl ExperimentConfig {
             c_stat: 1.0,
             prox_mu: 0.1,
             system: SpeedModel::paper_uniform().into(),
+            data: DataSpec::iid(),
             deadline: DeadlinePolicy::Sync,
             estimate_speeds: true,
             tiers: None,
@@ -241,6 +269,24 @@ impl ExperimentConfig {
     /// The sufficient stopping threshold ||grad||^2 <= 2 mu V_ns.
     pub fn grad_threshold(&self, n: usize) -> f64 {
         2.0 * self.mu * self.v_ns(n)
+    }
+
+    /// Whether the configured model classifies (per-client accuracy is
+    /// meaningful): every non-linreg model family in the manifest is a
+    /// classifier.
+    pub fn classification(&self) -> bool {
+        self.model.starts_with("logreg") || self.model.starts_with("mlp")
+    }
+
+    /// Whether this run reserves per-client held-out rows and fills the
+    /// trace's `acc` column: a classification model under a non-IID
+    /// `data:` scenario, or any ditto run (the personalized solver is
+    /// measured BY per-client accuracy). IID non-ditto runs stay off —
+    /// bit-identical to the seed.
+    pub fn client_eval_enabled(&self) -> bool {
+        self.classification()
+            && (!self.data.is_iid()
+                || matches!(self.solver, SolverKind::Ditto { .. }))
     }
 
     /// Per-stage stepsizes for n participants.
@@ -309,7 +355,7 @@ impl ExperimentConfig {
             return Err(format!(
                 "deadline policy '{}' applies to the synchronous cohort \
                  solvers (flanp | flanp-heuristic | fedgate | fedavg | \
-                 fedprox | fednova | tifl), not {}",
+                 fedprox | fednova | tifl | ditto), not {}",
                 self.deadline.spec(),
                 self.solver.name()
             ));
@@ -413,6 +459,30 @@ impl ExperimentConfig {
                 return Err("k exceeds num_clients".into());
             }
         }
+        if let SolverKind::Ditto { lambda } = self.solver {
+            if !(lambda > 0.0) || !lambda.is_finite() {
+                return Err(format!(
+                    "ditto lambda = {lambda} must be positive and finite"
+                ));
+            }
+        }
+        // statistical-heterogeneity scenario (the data: grammar)
+        if self.data.dirichlet.is_some() && !self.classification() {
+            return Err(format!(
+                "data:dirichlet label skew needs a classification model \
+                 (logreg | mlp), not '{}' — the lazy population path \
+                 interprets dirichlet as cluster-teacher skew instead",
+                self.model
+            ));
+        }
+        if self.client_eval_enabled() && self.s < 2 * batch {
+            return Err(format!(
+                "per-client held-out evaluation reserves one batch \
+                 ({batch} rows) of each shard; s = {} must be at least \
+                 2 x batch",
+                self.s
+            ));
+        }
         Ok(())
     }
 }
@@ -509,11 +579,77 @@ mod tests {
             "fedgate-fast8",
             "fedbuff4",
             "tifl",
+            "ditto:0.5",
+            "ditto:1",
         ] {
             assert_eq!(SolverKind::parse(s).unwrap().name(), s);
         }
         assert!(SolverKind::parse("sgd").is_err());
         assert!(SolverKind::parse("fedbuff").is_err(), "buffer size required");
+        // bare ditto defaults its personalization strength
+        assert_eq!(
+            SolverKind::parse("ditto").unwrap(),
+            SolverKind::Ditto { lambda: 1.0 }
+        );
+        assert!(SolverKind::parse("ditto:x").is_err());
+    }
+
+    #[test]
+    fn data_configs_validate_per_model() {
+        let mut cfg =
+            ExperimentConfig::new(SolverKind::FedAvg, "logreg_d16_c4", 10, 100);
+        cfg.data = DataSpec::parse("data:dirichlet:0.1:shift:3:corr:speed")
+            .unwrap();
+        assert!(cfg.validate(50).is_ok());
+        // dirichlet label skew is a classification notion in the eager path
+        cfg.model = "linreg_d25".into();
+        assert!(cfg.validate(50).is_err());
+        // covariate shift alone is model-agnostic
+        cfg.data = DataSpec::parse("data:shift:2").unwrap();
+        assert!(cfg.validate(50).is_ok());
+        // held-out reservation needs s >= 2 x batch on classifiers
+        cfg.model = "logreg_d16_c4".into();
+        cfg.s = 50;
+        assert!(cfg.validate(50).is_err());
+        cfg.s = 100;
+        assert!(cfg.validate(50).is_ok());
+        // the explicit IID spelling stays valid everywhere
+        cfg.data = DataSpec::iid();
+        cfg.s = 50;
+        assert!(cfg.validate(50).is_ok());
+    }
+
+    #[test]
+    fn ditto_configs_validate() {
+        let mut cfg = ExperimentConfig::new(
+            SolverKind::Ditto { lambda: 1.0 },
+            "logreg_d16_c4",
+            10,
+            100,
+        );
+        assert!(cfg.validate(50).is_ok());
+        assert!(cfg.client_eval_enabled());
+        // ditto is a synchronous cohort solver: deadlines apply
+        cfg.deadline = DeadlinePolicy::Quantile { q: 0.8 };
+        assert!(cfg.validate(50).is_ok());
+        // ...but it has no adaptive prefix: selection knobs reject
+        cfg.deadline = DeadlinePolicy::Sync;
+        cfg.overselect = 1.3;
+        assert!(cfg.validate(50).is_err());
+        cfg.overselect = 1.0;
+        cfg.tiers = Some(TierPolicy::new(4));
+        assert!(cfg.validate(50).is_err());
+        cfg.tiers = None;
+        cfg.solver = SolverKind::Ditto { lambda: 0.0 };
+        assert!(cfg.validate(50).is_err());
+        cfg.solver = SolverKind::Ditto { lambda: f64::NAN };
+        assert!(cfg.validate(50).is_err());
+        // non-IID fedavg on a classifier also turns per-client eval on;
+        // plain IID fedavg does not
+        cfg.solver = SolverKind::FedAvg;
+        assert!(!cfg.client_eval_enabled());
+        cfg.data = DataSpec::parse("data:dirichlet:0.5").unwrap();
+        assert!(cfg.client_eval_enabled());
     }
 
     #[test]

@@ -142,6 +142,93 @@ impl EvalData {
     }
 }
 
+/// Per-client held-out evaluator: one engine-batch chunk per client,
+/// built from the shard tail the fleet reserved via
+/// [`ClientFleet::set_holdout`]. This is the statistical-heterogeneity
+/// measurement the `acc` trace column and the `Trace` worst-decile
+/// aggregate come from — under non-IID skew a client's held-out
+/// accuracy reflects ITS distribution, not the population mixture.
+pub struct ClientEval {
+    /// [clients][b*d] held-out feature chunks
+    x_chunks: Vec<Vec<f32>>,
+    /// [clients][b*y_width] held-out label chunks
+    y_chunks: Vec<Vec<f32>>,
+}
+
+impl ClientEval {
+    /// Build iff the fleet reserved a holdout (`Ok(None)` otherwise, so
+    /// callers can assign the result unconditionally — IID runs stay on
+    /// the zero-cost path). The holdout must be exactly one engine
+    /// batch (`setup::build_fleet` reserves `meta.batch` rows).
+    pub fn maybe_build(
+        engine: &dyn Engine,
+        fleet: &ClientFleet,
+    ) -> Result<Option<ClientEval>> {
+        let h = fleet.holdout();
+        if h == 0 {
+            return Ok(None);
+        }
+        let meta = engine.meta();
+        anyhow::ensure!(
+            h == meta.batch,
+            "holdout {h} is not one engine batch ({})",
+            meta.batch
+        );
+        let (d, yw) = (meta.d, meta.y_width());
+        let n = fleet.num_clients();
+        let mut x_chunks = Vec::with_capacity(n);
+        let mut y_chunks = Vec::with_capacity(n);
+        for c in 0..n {
+            let rows = fleet.holdout_rows(c);
+            let mut x = vec![0.0f32; h * d];
+            let mut y = vec![0.0f32; h * yw];
+            fleet.dataset.gather_x(rows, &mut x);
+            fleet.dataset.y.encode_into(rows, &mut y);
+            x_chunks.push(x);
+            y_chunks.push(y);
+        }
+        Ok(Some(ClientEval { x_chunks, y_chunks }))
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.x_chunks.len()
+    }
+
+    /// Client `c`'s held-out accuracy under parameters `w`.
+    pub fn accuracy_of(
+        &self,
+        engine: &dyn Engine,
+        c: usize,
+        w: &[f32],
+    ) -> Result<f64> {
+        Ok(engine.accuracy(w, &self.x_chunks[c], &self.y_chunks[c])? as f64)
+    }
+
+    /// Every client's held-out accuracy under ONE global model.
+    pub fn accuracies_global(
+        &self,
+        engine: &dyn Engine,
+        w: &[f32],
+    ) -> Result<Vec<f64>> {
+        (0..self.num_clients())
+            .map(|c| self.accuracy_of(engine, c, w))
+            .collect()
+    }
+
+    /// Every client's held-out accuracy under its OWN model (the
+    /// personalized solvers' metric; `models[c]` is client c's head).
+    pub fn accuracies_personal(
+        &self,
+        engine: &dyn Engine,
+        models: &[Vec<f32>],
+    ) -> Result<Vec<f64>> {
+        assert_eq!(models.len(), self.num_clients());
+        (0..self.num_clients())
+            .map(|c| self.accuracy_of(engine, c, &models[c]))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,5 +286,38 @@ mod tests {
         let (e, fleet) = linreg_fleet();
         let ev = EvalData::build(&e, &fleet, 0, 1).unwrap();
         assert!(ev.full_accuracy(&e, &vec![0.0; 6]).unwrap().is_nan());
+    }
+
+    #[test]
+    fn client_eval_scores_each_holdout_chunk() {
+        let e = NativeEngine::logreg(6, 3, 0.0, 10, 5);
+        let mut rng = Rng::new(9);
+        let mut spec = synth::MixtureSpec::cifar_like(4 * 30);
+        spec.d = 6;
+        spec.classes = 3;
+        spec.separation = 2.0;
+        let ds = synth::mixture(&mut rng, &spec);
+        let shards = shard::partition_iid(&mut rng, &ds, 4);
+        let mut fleet = ClientFleet::new(
+            ds,
+            shards,
+            &SpeedModel::paper_uniform().into(),
+            &mut rng,
+        );
+        // no holdout -> no evaluator, the zero-cost default
+        assert!(ClientEval::maybe_build(&e, &fleet).unwrap().is_none());
+        fleet.set_holdout(10);
+        let ev = ClientEval::maybe_build(&e, &fleet).unwrap().unwrap();
+        assert_eq!(ev.num_clients(), 4);
+        let w = vec![0.0f32; e.meta().param_count];
+        let global = ev.accuracies_global(&e, &w).unwrap();
+        assert_eq!(global.len(), 4);
+        assert!(global.iter().all(|a| (0.0..=1.0).contains(a)));
+        // per-client heads: identical heads reproduce the global scores
+        let heads = vec![w.clone(); 4];
+        assert_eq!(ev.accuracies_personal(&e, &heads).unwrap(), global);
+        // a holdout that is not one engine batch is rejected
+        fleet.set_holdout(7);
+        assert!(ClientEval::maybe_build(&e, &fleet).is_err());
     }
 }

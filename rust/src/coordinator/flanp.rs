@@ -38,7 +38,7 @@
 //! cadences is inspectable per run (`flanp-bench tiers`).
 
 use super::config::{ExperimentConfig, SolverKind, Subroutine};
-use super::eval::EvalData;
+use super::eval::{ClientEval, EvalData};
 use super::gate::{
     active_loss_gradsq, fedgate_round, local_rounds, GateState, LocalSpec,
     RoundBuffers, TauSpec,
@@ -70,6 +70,7 @@ pub fn run_flanp(
 
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
+    ctx.client_eval = ClientEval::maybe_build(engine, fleet)?;
     let n_total = fleet.num_clients();
     let mut state = GateState::new(init_params(engine, cfg.seed), n_total);
     let mut bufs = RoundBuffers::new(engine, cfg.tau);

@@ -5,7 +5,7 @@
 //! by the semi-synchronous solvers.
 
 use super::config::{ExperimentConfig, SolverKind};
-use super::eval::EvalData;
+use super::eval::{ClientEval, EvalData};
 use super::gate::{
     active_loss_gradsq, fedgate_round, local_round, local_rounds, GateState,
     LocalSpec, RoundBuffers, TauSpec,
@@ -46,6 +46,11 @@ pub struct RunContext<'a> {
     pub engine: &'a dyn Engine,
     pub cfg: &'a ExperimentConfig,
     pub eval: &'a EvalData,
+    /// per-client held-out evaluator (None — the zero-cost default —
+    /// unless the fleet reserved a holdout: non-IID `data:` runs and
+    /// the ditto solver on classification models). Feeds the trace's
+    /// `acc` column and `client_acc` aggregates.
+    pub client_eval: Option<ClientEval>,
     pub clock: VirtualClock,
     pub trace: Trace,
 }
@@ -60,6 +65,7 @@ impl<'a> RunContext<'a> {
             engine,
             cfg,
             eval,
+            client_eval: None,
             clock: VirtualClock::with_comm_overhead(cfg.comm_overhead),
             trace: Trace::new(&cfg.solver.name()),
         }
@@ -97,6 +103,61 @@ impl<'a> RunContext<'a> {
         available: usize,
         cancelled: usize,
     ) -> Result<()> {
+        self.record_impl(
+            w, None, participants, stage, loss_active, grad_sq, dropped,
+            missed, reranks, available, cancelled,
+        )
+    }
+
+    /// [`RunContext::record`] for personalized solvers: the `acc`
+    /// column scores each client's held-out chunk with its OWN head
+    /// (`models[c]`) instead of the global model `w` (every other
+    /// column still describes `w`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_personal(
+        &mut self,
+        w: &[f32],
+        models: &[Vec<f32>],
+        participants: usize,
+        stage: usize,
+        loss_active: f64,
+        grad_sq: f64,
+        dropped: usize,
+        missed: usize,
+        reranks: usize,
+        available: usize,
+        cancelled: usize,
+    ) -> Result<()> {
+        self.record_impl(
+            w,
+            Some(models),
+            participants,
+            stage,
+            loss_active,
+            grad_sq,
+            dropped,
+            missed,
+            reranks,
+            available,
+            cancelled,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn record_impl(
+        &mut self,
+        w: &[f32],
+        models: Option<&[Vec<f32>]>,
+        participants: usize,
+        stage: usize,
+        loss_active: f64,
+        grad_sq: f64,
+        dropped: usize,
+        missed: usize,
+        reranks: usize,
+        available: usize,
+        cancelled: usize,
+    ) -> Result<()> {
         let round = self.trace.rounds.len();
         let evaluate = round % self.cfg.eval_every.max(1) == 0;
         let (loss_full, accuracy) = if evaluate {
@@ -110,6 +171,22 @@ impl<'a> RunContext<'a> {
                 prev.map(|r| r.loss_full).unwrap_or(f64::NAN),
                 prev.map(|r| r.accuracy).unwrap_or(f64::NAN),
             )
+        };
+        // per-client held-out accuracy rides the same eval cadence as
+        // the full objective (it is N extra engine batches); between
+        // eval rounds the previous value carries, like loss_full
+        let acc = if !evaluate {
+            self.trace.last().map(|r| r.acc).unwrap_or(f64::NAN)
+        } else if let Some(ce) = &self.client_eval {
+            let per = match models {
+                Some(m) => ce.accuracies_personal(self.engine, m)?,
+                None => ce.accuracies_global(self.engine, w)?,
+            };
+            let mean = per.iter().sum::<f64>() / per.len() as f64;
+            self.trace.client_acc = per;
+            mean
+        } else {
+            f64::NAN
         };
         self.trace.push(RoundRecord {
             round,
@@ -126,6 +203,7 @@ impl<'a> RunContext<'a> {
             reranks,
             available,
             cancelled,
+            acc,
         });
         Ok(())
     }
@@ -469,6 +547,7 @@ pub fn run_solver(
         }
         SolverKind::FedBuff { k } => run_fedbuff(engine, fleet, cfg, k),
         SolverKind::Tifl => run_tifl(engine, fleet, cfg),
+        SolverKind::Ditto { lambda } => run_ditto(engine, fleet, cfg, lambda),
     }
 }
 
@@ -483,6 +562,7 @@ fn run_fedgate_full(
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
+    ctx.client_eval = ClientEval::maybe_build(engine, fleet)?;
     let mut ddl = DeadlineController::new(cfg.deadline.clone());
     let n = fleet.num_clients();
     let active: Vec<usize> = (0..n).collect();
@@ -553,6 +633,7 @@ fn run_model_average(
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
+    ctx.client_eval = ClientEval::maybe_build(engine, fleet)?;
     let mut ddl = DeadlineController::new(cfg.deadline.clone());
     let n = fleet.num_clients();
     let active: Vec<usize> = (0..n).collect();
@@ -624,6 +705,146 @@ fn run_model_average(
     Ok(ctx.trace)
 }
 
+/// Ditto (Li et al., 2021): personalized federated learning as global
+/// plus per-client proximal objectives. The GLOBAL model follows the
+/// plain FedAvg path — same shared [`deadline_round`] step, same
+/// aggregation — while every arrived client additionally trains its own
+/// personal head `v_i` with proximal SGD anchored at the freshly
+/// aggregated `w`:
+///
+///   v_i <- v_i - eta * (grad f_i(v_i) + lambda * (v_i - w))
+///
+/// The head steps ride the tau budget the round already charged (the
+/// paper's on-device framing: personalization is concurrent local work,
+/// not extra wall-clock), so ditto's round clock matches fedavg's and
+/// wall-clock comparisons across solvers are apples-to-apples. Heads
+/// persist across rounds and start at the initial `w`; clients that
+/// never arrive keep their stale heads — exactly the availability
+/// pathology the `noniid` bench sweep measures. Trace rows score the
+/// personal heads through [`RunContext::record_personal`], so the `acc`
+/// column is personalized accuracy whenever client eval is on.
+fn run_ditto(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    cfg: &ExperimentConfig,
+    lambda: f64,
+) -> Result<Trace> {
+    let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
+    let mut ctx = RunContext::new(engine, cfg, &eval);
+    ctx.client_eval = ClientEval::maybe_build(engine, fleet)?;
+    let mut ddl = DeadlineController::new(cfg.deadline.clone());
+    let n = fleet.num_clients();
+    let active: Vec<usize> = (0..n).collect();
+    let p = engine.meta().param_count;
+    let mut w = init_params(engine, cfg.seed);
+    let zero_delta = vec![0.0f32; p];
+    let mut bufs = RoundBuffers::new(engine, cfg.tau);
+    let threshold = cfg.grad_threshold(n);
+
+    // personal heads, one per client, initialized at the global init;
+    // head batches come from dedicated streams so the global trajectory
+    // stays bit-identical to plain fedavg (see `ditto_local`)
+    let mut heads: Vec<Vec<f32>> = vec![w.clone(); n];
+    let mut head_rngs: Vec<Rng> = (0..n)
+        .map(|i| Rng::with_stream(cfg.seed ^ 0xd177_0b57, i as u64))
+        .collect();
+
+    let (l0, g0) = active_loss_gradsq(engine, fleet, &active, &w)?;
+    ctx.record_personal(&w, &heads, n, 0, l0, g0, 0, 0, 0, n, 0)?;
+    let mut stats = (l0, g0);
+    loop {
+        let (cond, participants) =
+            fleet.realize_round(&active, ctx.clock.now());
+        let (arrived, ev) = deadline_round(
+            &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
+        );
+        let wis = local_rounds(
+            engine,
+            fleet,
+            &arrived,
+            &w,
+            LocalSpec::Sgd(&zero_delta),
+            TauSpec::Uniform(cfg.tau),
+            cfg.eta,
+            &mut bufs,
+        )?;
+        if !arrived.is_empty() {
+            let mut acc = vec![0.0f64; p];
+            for wi in &wis {
+                linalg::accumulate(&mut acc, wi);
+            }
+            w = linalg::mean_of(&acc, arrived.len());
+        }
+        // personal proximal steps, anchored at the fresh post-round w
+        for &i in &arrived {
+            ditto_local(
+                engine, fleet, i, &mut heads[i], &w, lambda, cfg.tau,
+                cfg.eta, &mut bufs, &mut head_rngs[i],
+            )?;
+        }
+        let (loss, gsq) = round_stats(arrived.is_empty(), stats, || {
+            active_loss_gradsq(engine, fleet, &active, &w)
+        })?;
+        stats = (loss, gsq);
+        ctx.record_personal(
+            &w,
+            &heads,
+            n,
+            0,
+            loss,
+            gsq,
+            ev.dropped,
+            ev.missed,
+            0,
+            cond.online_count(),
+            ev.cancelled,
+        )?;
+        if gsq <= threshold {
+            ctx.trace.finished = true;
+            break;
+        }
+        if ctx.should_stop() {
+            break;
+        }
+    }
+    Ok(ctx.trace)
+}
+
+/// tau proximal SGD steps on client `client`'s personal head:
+/// `head -= eta * (grad(head; batch) + lambda * (head - anchor))`.
+///
+/// This is NOT [`LocalSpec::Prox`] — that spec anchors at the
+/// round-START parameters it was handed (the FedProx contract), while
+/// Ditto's head must be pulled toward the freshly AGGREGATED global
+/// model. Charges no clock: the head steps ride the tau budget the
+/// round already paid for (see [`run_ditto`]). Batches are drawn from
+/// `rng`, a head-only stream, so the client's canonical minibatch
+/// stream — and with it the global model's trajectory — is untouched.
+#[allow(clippy::too_many_arguments)]
+fn ditto_local(
+    engine: &dyn Engine,
+    fleet: &ClientFleet,
+    client: usize,
+    head: &mut [f32],
+    anchor: &[f32],
+    lambda: f64,
+    tau: usize,
+    eta: f32,
+    bufs: &mut RoundBuffers,
+    rng: &mut Rng,
+) -> Result<()> {
+    let b = engine.meta().batch;
+    for _ in 0..tau {
+        fleet.fill_minibatch_with(rng, client, b, &mut bufs.x, &mut bufs.y);
+        let (_, mut g) = engine.loss_grad(head, &bufs.x, &bufs.y)?;
+        for (k, gk) in g.iter_mut().enumerate() {
+            *gk += lambda as f32 * (head[k] - anchor[k]);
+        }
+        linalg::axpy(-eta, &g, head);
+    }
+    Ok(())
+}
+
 /// FedNova (Wang et al., 2020): heterogeneous local-step counts tau_i
 /// sized to a common time window, normalized aggregation. Routed through
 /// the shared [`deadline_round_hetero`] step, so FedNova honors the
@@ -637,6 +858,7 @@ fn run_fednova(
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
+    ctx.client_eval = ClientEval::maybe_build(engine, fleet)?;
     let mut ddl = DeadlineController::new(cfg.deadline.clone());
     let n = fleet.num_clients();
     let active: Vec<usize> = (0..n).collect();
@@ -746,6 +968,7 @@ fn run_fedgate_partial(
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
+    ctx.client_eval = ClientEval::maybe_build(engine, fleet)?;
     let n = fleet.num_clients();
     let mut state = GateState::new(init_params(engine, cfg.seed), n);
     let mut bufs = RoundBuffers::new(engine, cfg.tau);
@@ -840,6 +1063,7 @@ fn run_tifl(
     fleet.ensure_tiers(&policy);
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
+    ctx.client_eval = ClientEval::maybe_build(engine, fleet)?;
     let mut ddl = DeadlineController::new(cfg.deadline.clone());
     let n = fleet.num_clients();
     let all: Vec<usize> = (0..n).collect();
@@ -952,6 +1176,7 @@ fn run_fedbuff(
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
+    ctx.client_eval = ClientEval::maybe_build(engine, fleet)?;
     let n = fleet.num_clients();
     let all: Vec<usize> = (0..n).collect();
     let p = engine.meta().param_count;
@@ -1146,6 +1371,28 @@ mod tests {
         let t = run_solver(&e, &mut fleet, &cfg).unwrap();
         assert!(t.last().unwrap().loss_full < t.rounds[0].loss_full);
         assert!(t.finished);
+    }
+
+    #[test]
+    fn ditto_converges_like_fedavg() {
+        let (e, mut fleet) = setup(8, 50);
+        let cfg = base_cfg(SolverKind::Ditto { lambda: 1.0 });
+        let t = run_solver(&e, &mut fleet, &cfg).unwrap();
+        assert!(t.finished, "global model did not reach the threshold");
+        assert!(t.last().unwrap().loss_full < t.rounds[0].loss_full);
+        // linreg: no client eval, so the acc column stays NaN
+        assert!(t.rounds.iter().all(|r| r.acc.is_nan()));
+        assert!(t.client_acc.is_empty());
+        // the GLOBAL path is fedavg verbatim: identical round count
+        let (e2, mut fleet2) = setup(8, 50);
+        let t2 = run_solver(&e2, &mut fleet2, &base_cfg(SolverKind::FedAvg))
+            .unwrap();
+        assert_eq!(t.rounds.len(), t2.rounds.len());
+        assert_eq!(
+            t.last().unwrap().loss_full.to_bits(),
+            t2.last().unwrap().loss_full.to_bits(),
+            "ditto's global model must be bit-identical to fedavg's"
+        );
     }
 
     #[test]

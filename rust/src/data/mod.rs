@@ -5,6 +5,10 @@
 //! statistically equivalent *generators* (DESIGN.md §6): every claim the
 //! paper makes concerns time-to-statistical-accuracy under i.i.d.
 //! across-client data, which any fixed, learnable distribution exercises.
+//! The `data:` grammar ([`synth::DataSpec`]) breaks the i.i.d.
+//! assumption on demand — Dirichlet label skew, per-client covariate
+//! shift, optionally correlated with the speed ranking — to exercise the
+//! statistical half of the paper's interplay (docs/scenarios.md §9).
 
 pub mod dataset;
 pub mod shard;
@@ -12,3 +16,4 @@ pub mod synth;
 
 pub use dataset::{Dataset, Labels};
 pub use shard::Shard;
+pub use synth::DataSpec;

@@ -3,8 +3,10 @@
 //! The paper's setup (Section 2): each of N nodes holds s i.i.d. samples,
 //! drawn once before training; nodes cannot re-sample. An i.i.d. shard is
 //! a random partition of an i.i.d. dataset; we shuffle then slice.
+//! [`partition_dirichlet`] is the non-IID variant (`data:dirichlet:A:`):
+//! each client draws its labels from its own Dirichlet(alpha) categorical.
 
-use crate::data::Dataset;
+use crate::data::{synth, Dataset};
 use crate::util::Rng;
 
 /// One client's view: indices into the shared dataset.
@@ -52,6 +54,75 @@ pub fn partition_fixed_s(
     rng.shuffle(&mut idx);
     (0..num_clients)
         .map(|c| Shard { indices: idx[c * s..(c + 1) * s].to_vec() })
+        .collect()
+}
+
+/// Non-IID partition (`data:dirichlet:A:`): client `c` draws its `s`
+/// labels from its own Dirichlet(alpha) categorical
+/// ([`synth::dirichlet_proportions`], blended toward uniform by
+/// `strength[c]` for the `corr:speed` grading) and pulls matching rows
+/// from per-class pools in dataset order. An exhausted class falls back
+/// to the class with the most remaining rows, so every client still gets
+/// exactly `s` rows and all `n*s` rows are used — deterministic in
+/// `(seed, labels)`, with each client's draws confined to its own skew
+/// stream.
+pub fn partition_dirichlet(
+    seed: u64,
+    labels: &[usize],
+    num_classes: usize,
+    num_clients: usize,
+    s: usize,
+    alpha: f64,
+    strength: &[f64],
+) -> Vec<Shard> {
+    assert!(num_classes > 1, "dirichlet skew needs >= 2 classes");
+    assert_eq!(strength.len(), num_clients);
+    assert!(
+        num_clients * s <= labels.len(),
+        "need {}x{} = {} samples, dataset has {}",
+        num_clients,
+        s,
+        num_clients * s,
+        labels.len()
+    );
+    // per-class row pools, consumed back-to-front (dataset order)
+    let mut pools: Vec<Vec<usize>> = vec![Vec::new(); num_classes];
+    for (row, &l) in labels.iter().enumerate() {
+        assert!(l < num_classes, "label {l} out of range");
+        pools[l].push(row);
+    }
+    (0..num_clients)
+        .map(|c| {
+            // the proportions AND the categorical picks come from the
+            // client's own skew stream, so the lazy path can reproduce
+            // the proportions bit-exactly from (seed, client) alone
+            let mut rng = synth::skew_stream(seed, c);
+            let mut p =
+                synth::dirichlet_proportions_with(&mut rng, alpha, num_classes);
+            synth::blend_to_uniform(&mut p, strength[c]);
+            let mut indices = Vec::with_capacity(s);
+            for _ in 0..s {
+                let u = rng.next_f64();
+                let mut acc = 0.0;
+                let mut pick = num_classes - 1;
+                for (cls, &pc) in p.iter().enumerate() {
+                    acc += pc;
+                    if u < acc {
+                        pick = cls;
+                        break;
+                    }
+                }
+                if pools[pick].is_empty() {
+                    // fallback: most-remaining class keeps the partition
+                    // total-preserving when a popular label runs dry
+                    pick = (0..num_classes)
+                        .max_by_key(|&cls| pools[cls].len())
+                        .unwrap();
+                }
+                indices.push(pools[pick].pop().expect("pools exhausted"));
+            }
+            Shard { indices }
+        })
         .collect()
 }
 
@@ -113,6 +184,69 @@ mod tests {
         let b = partition_iid(&mut Rng::new(9), &ds, 8);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.indices, y.indices);
+        }
+    }
+
+    /// Round-robin labels so every class pool has exactly n/k rows.
+    fn cyclic_labels(n: usize, k: usize) -> Vec<usize> {
+        (0..n).map(|i| i % k).collect()
+    }
+
+    #[test]
+    fn dirichlet_partition_is_disjoint_and_exact() {
+        let labels = cyclic_labels(400, 4);
+        let shards =
+            partition_dirichlet(7, &labels, 4, 8, 50, 0.2, &vec![1.0; 8]);
+        assert_eq!(shards.len(), 8);
+        let mut seen = std::collections::HashSet::new();
+        for sh in &shards {
+            assert_eq!(sh.s(), 50);
+            for &i in &sh.indices {
+                assert!(i < 400);
+                assert!(seen.insert(i), "duplicate index {i}");
+            }
+        }
+        assert_eq!(seen.len(), 400, "not all rows used");
+    }
+
+    #[test]
+    fn dirichlet_partition_deterministic_and_skewed() {
+        let labels = cyclic_labels(800, 4);
+        let a = partition_dirichlet(3, &labels, 4, 8, 100, 0.1, &vec![1.0; 8]);
+        let b = partition_dirichlet(3, &labels, 4, 8, 100, 0.1, &vec![1.0; 8]);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.indices, y.indices);
+        }
+        // alpha = 0.1: the average client's top label should dominate its
+        // shard well beyond the IID share of 1/4
+        let top_share: f64 = a
+            .iter()
+            .map(|sh| {
+                let mut counts = [0usize; 4];
+                for &i in &sh.indices {
+                    counts[labels[i]] += 1;
+                }
+                *counts.iter().max().unwrap() as f64 / sh.s() as f64
+            })
+            .sum::<f64>()
+            / a.len() as f64;
+        assert!(top_share > 0.5, "mean top-label share {top_share}");
+    }
+
+    #[test]
+    fn dirichlet_zero_strength_is_near_uniform() {
+        // strength 0 blends fully to uniform: each client's label
+        // histogram stays close to the 1/k IID share
+        let labels = cyclic_labels(800, 4);
+        let shards =
+            partition_dirichlet(3, &labels, 4, 4, 200, 0.1, &vec![0.0; 4]);
+        for sh in &shards {
+            let mut counts = [0usize; 4];
+            for &i in &sh.indices {
+                counts[labels[i]] += 1;
+            }
+            let top = *counts.iter().max().unwrap() as f64 / sh.s() as f64;
+            assert!(top < 0.45, "top share {top} under zero strength");
         }
     }
 }

@@ -6,6 +6,10 @@
 //! * [`mixture`] — a C-class Gaussian-mixture classification set standing
 //!   in for MNIST (d=784, well-separated) and CIFAR10 (lower separation =
 //!   harder, more rounds), preserving the i.i.d.-across-clients setup.
+//! * [`DataSpec`] — the statistical-heterogeneity grammar
+//!   (`data:dirichlet:A:shift:S:corr:speed`): per-client Dirichlet
+//!   label/cluster skew, per-client covariate shift, optionally graded by
+//!   the speed ranking so the slow cohort is the shifted one.
 
 use crate::data::{Dataset, Labels};
 use crate::util::Rng;
@@ -86,6 +90,268 @@ pub fn mixture(rng: &mut Rng, spec: &MixtureSpec) -> Dataset {
         }
     }
     Dataset::new(x, Labels::Class(y, classes), d)
+}
+
+// ---------------------------------------------------------------------------
+// Statistical heterogeneity: the `data:` grammar + per-client skew streams
+// ---------------------------------------------------------------------------
+
+/// Per-client RNG stream layout for the data-skew lanes. These mirror
+/// `fed::population`'s 8-component per-client blocks (components 0–4 are
+/// taken by speed/markov/data/round/row lanes); the skew lanes claim the
+/// previously-free components 5 and 6 so the eager partitioner and the
+/// lazy `LazyShards` synthesis derive bit-identical per-client skew state
+/// from the same `(seed, client)` pair.
+pub const DATA_STREAM_COMPONENTS: u64 = 8;
+/// Component 5: Dirichlet proportions + categorical label draws.
+pub const DATA_SKEW_COMPONENT: u64 = 5;
+/// Component 6: the covariate-shift direction.
+pub const DATA_SHIFT_COMPONENT: u64 = 6;
+
+/// Statistical-heterogeneity scenario: how client shards deviate from the
+/// IID partition. Composable, like the system grammar:
+///
+/// ```text
+/// data:iid                          explicit IID (the default)
+/// data:[dirichlet:A:][shift:S:][corr:speed]
+///   dirichlet:A:   per-client label skew ~ Dirichlet(A); smaller A =
+///                  more concentrated (each client sees few labels)
+///   shift:S:       per-client covariate shift: x += S * u_c for a
+///                  client-specific unit direction u_c
+///   corr:speed     grade the skew by speed rank — the fastest client is
+///                  IID, the slowest fully skewed (the paper-adjacent
+///                  "slow-and-shifted cohort" scenario)
+/// ```
+///
+/// ```
+/// use flanp::data::synth::DataSpec;
+/// let d = DataSpec::parse("data:dirichlet:0.1:shift:3:corr:speed").unwrap();
+/// assert_eq!(d.dirichlet, Some(0.1));
+/// assert_eq!(d.shift, Some(3.0));
+/// assert!(d.corr_speed);
+/// assert_eq!(DataSpec::parse(&d.spec()).unwrap(), d);
+/// assert!(DataSpec::parse("data:iid").unwrap().is_iid());
+/// assert!(DataSpec::parse("dirichlet:0.1").is_err()); // missing data:
+/// assert!(DataSpec::parse("data:corr:speed").is_err()); // corr alone
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataSpec {
+    /// Dirichlet concentration for per-client label/cluster skew.
+    pub dirichlet: Option<f64>,
+    /// Per-client covariate-shift magnitude.
+    pub shift: Option<f64>,
+    /// Grade skew strength by speed rank (slowest = fully skewed).
+    pub corr_speed: bool,
+}
+
+impl Default for DataSpec {
+    fn default() -> Self {
+        DataSpec::iid()
+    }
+}
+
+impl DataSpec {
+    /// The default: IID shards, no shift — byte-identical to the seed.
+    pub fn iid() -> Self {
+        DataSpec { dirichlet: None, shift: None, corr_speed: false }
+    }
+
+    pub fn is_iid(&self) -> bool {
+        self.dirichlet.is_none() && self.shift.is_none()
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let rest = s
+            .strip_prefix("data:")
+            .ok_or_else(|| format!("data spec '{s}' must start with 'data:'"))?;
+        if rest == "iid" {
+            return Ok(DataSpec::iid());
+        }
+        let mut spec = DataSpec::iid();
+        // trailing colons are legal (`data:dirichlet:0.1:` — the grammar
+        // is prefix-shaped like the system grammar, with nothing after)
+        let toks: Vec<&str> = rest.split(':').filter(|t| !t.is_empty()).collect();
+        if toks.is_empty() {
+            return Err(format!(
+                "empty data spec '{s}' (use data:iid for the explicit default)"
+            ));
+        }
+        let num = |what: &str, tok: &str| -> Result<f64, String> {
+            let v: f64 = tok
+                .parse()
+                .map_err(|_| format!("bad {what} '{tok}' in data spec '{s}'"))?;
+            if !(v > 0.0) || !v.is_finite() {
+                return Err(format!(
+                    "{what} must be positive and finite in data spec '{s}'"
+                ));
+            }
+            Ok(v)
+        };
+        let mut i = 0;
+        while i < toks.len() {
+            match toks[i] {
+                "dirichlet" if spec.dirichlet.is_none() => {
+                    let tok = toks.get(i + 1).ok_or_else(|| {
+                        format!("dirichlet needs an alpha in data spec '{s}'")
+                    })?;
+                    spec.dirichlet = Some(num("alpha", tok)?);
+                    i += 2;
+                }
+                "shift" if spec.shift.is_none() => {
+                    let tok = toks.get(i + 1).ok_or_else(|| {
+                        format!("shift needs a magnitude in data spec '{s}'")
+                    })?;
+                    spec.shift = Some(num("shift", tok)?);
+                    i += 2;
+                }
+                "corr" if !spec.corr_speed => {
+                    match toks.get(i + 1) {
+                        Some(&"speed") => spec.corr_speed = true,
+                        other => {
+                            return Err(format!(
+                                "corr supports only 'speed', got {other:?} \
+                                 in data spec '{s}'"
+                            ))
+                        }
+                    }
+                    i += 2;
+                }
+                other => {
+                    return Err(format!(
+                        "unknown or repeated data segment '{other}' in \
+                         data spec '{s}' (expected \
+                         data:[dirichlet:A:][shift:S:][corr:speed] | data:iid)"
+                    ))
+                }
+            }
+        }
+        if spec.corr_speed && spec.is_iid() {
+            return Err(format!(
+                "corr:speed without dirichlet: or shift: has nothing to \
+                 correlate in data spec '{s}'"
+            ));
+        }
+        Ok(spec)
+    }
+
+    /// Canonical spec string; `parse(spec()) == self`.
+    pub fn spec(&self) -> String {
+        if self.is_iid() {
+            return "data:iid".into();
+        }
+        let mut out = String::from("data");
+        if let Some(a) = self.dirichlet {
+            out.push_str(&format!(":dirichlet:{a}"));
+        }
+        if let Some(sh) = self.shift {
+            out.push_str(&format!(":shift:{sh}"));
+        }
+        if self.corr_speed {
+            out.push_str(":corr:speed");
+        }
+        out
+    }
+}
+
+/// One Gamma(alpha, 1) sample (Marsaglia–Tsang squeeze; alpha < 1 via the
+/// Gamma(alpha+1) * U^(1/alpha) boost). Building block for
+/// [`dirichlet_proportions`].
+pub fn gamma(rng: &mut Rng, alpha: f64) -> f64 {
+    if alpha < 1.0 {
+        let u = rng.next_f64();
+        return gamma(rng, alpha + 1.0) * u.powf(1.0 / alpha);
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v = v * v * v;
+        let u = rng.next_f64();
+        if u < 1.0 - 0.0331 * x * x * x * x {
+            return d * v;
+        }
+        if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+/// Client `client`'s Dirichlet(alpha) label proportions over `k` classes,
+/// drawn from the continuation of `rng` (normalized Gamma draws). The
+/// all-zero corner (possible underflow at tiny alpha) falls back to a
+/// point mass on the client's first Gamma argmax — still a valid simplex.
+pub fn dirichlet_proportions_with(rng: &mut Rng, alpha: f64, k: usize) -> Vec<f64> {
+    let mut p: Vec<f64> = (0..k).map(|_| gamma(rng, alpha)).collect();
+    let sum: f64 = p.iter().sum();
+    if sum > 0.0 && sum.is_finite() {
+        for v in &mut p {
+            *v /= sum;
+        }
+    } else {
+        let top = p
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        p.iter_mut().for_each(|v| *v = 0.0);
+        p[top] = 1.0;
+    }
+    p
+}
+
+/// Pure per-client Dirichlet proportions: deterministic in
+/// `(seed, client)`, independent of everything else (own stream
+/// [`DATA_SKEW_COMPONENT`]). The eager partitioner
+/// (`shard::partition_dirichlet`) and the lazy population synthesizer
+/// (`fed::population::LazyShards`) both call THIS function, which is what
+/// makes their per-client skew state bit-identical across regimes.
+pub fn dirichlet_proportions(seed: u64, client: usize, alpha: f64, k: usize) -> Vec<f64> {
+    let mut rng = skew_stream(seed, client);
+    dirichlet_proportions_with(&mut rng, alpha, k)
+}
+
+/// The client's skew stream (proportions + its categorical label draws).
+pub fn skew_stream(seed: u64, client: usize) -> Rng {
+    Rng::with_stream(
+        seed,
+        client as u64 * DATA_STREAM_COMPONENTS + DATA_SKEW_COMPONENT,
+    )
+}
+
+/// Client `client`'s covariate-shift vector: a fixed direction of norm
+/// `mag`, deterministic in `(seed, client)` (own stream
+/// [`DATA_SHIFT_COMPONENT`]); shared verbatim by the eager and lazy paths.
+pub fn shift_vector(seed: u64, client: usize, d: usize, mag: f64) -> Vec<f32> {
+    let mut rng = Rng::with_stream(
+        seed,
+        client as u64 * DATA_STREAM_COMPONENTS + DATA_SHIFT_COMPONENT,
+    );
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 1.0);
+    let norm = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        let scale = (mag / norm) as f32;
+        for x in &mut v {
+            *x *= scale;
+        }
+    }
+    v
+}
+
+/// Blend proportions toward the uniform simplex: `strength` 1 keeps the
+/// full skew, 0 is exactly uniform — the `corr:speed` grading, where a
+/// client's strength is its speed percentile (fastest 0, slowest 1).
+pub fn blend_to_uniform(p: &mut [f64], strength: f64) {
+    let k = p.len().max(1) as f64;
+    let s = strength.clamp(0.0, 1.0);
+    for v in p.iter_mut() {
+        *v = s * *v + (1.0 - s) / k;
+    }
 }
 
 #[cfg(test)]
@@ -189,5 +455,98 @@ mod tests {
         let c = MixtureSpec::cifar_like(10);
         assert!(c.separation < m.separation);
         assert!(c.sigma >= m.sigma);
+    }
+
+    #[test]
+    fn data_spec_roundtrip_and_rejects() {
+        for spec in [
+            "data:iid",
+            "data:dirichlet:0.1",
+            "data:shift:3",
+            "data:dirichlet:0.1:shift:3",
+            "data:dirichlet:0.1:shift:3:corr:speed",
+            "data:shift:0.5:corr:speed",
+        ] {
+            let d = DataSpec::parse(spec).unwrap();
+            assert_eq!(d.spec(), spec, "canonical form drifted");
+            assert_eq!(DataSpec::parse(&d.spec()).unwrap(), d);
+        }
+        // trailing colon (prefix spelling) parses to the same spec
+        assert_eq!(
+            DataSpec::parse("data:dirichlet:0.1:").unwrap(),
+            DataSpec::parse("data:dirichlet:0.1").unwrap()
+        );
+        for bad in [
+            "dirichlet:0.1",
+            "data:",
+            "data:corr:speed",
+            "data:dirichlet:-1",
+            "data:dirichlet:0",
+            "data:dirichlet:x",
+            "data:shift:-2",
+            "data:corr:rank",
+            "data:dirichlet:0.1:dirichlet:0.2",
+            "data:warp:9",
+        ] {
+            let e = DataSpec::parse(bad).unwrap_err();
+            assert!(e.contains(bad), "error '{e}' does not name '{bad}'");
+        }
+    }
+
+    #[test]
+    fn gamma_mean_matches_alpha() {
+        // E[Gamma(alpha, 1)] = alpha, both below and above the alpha=1
+        // boost boundary
+        for alpha in [0.3, 1.0, 4.0] {
+            let mut rng = Rng::new(11);
+            let n = 20_000;
+            let mean: f64 =
+                (0..n).map(|_| gamma(&mut rng, alpha)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - alpha).abs() < 0.05 * alpha.max(1.0),
+                "alpha {alpha}: mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_proportions_simplex_and_deterministic() {
+        for client in [0usize, 1, 17] {
+            let p = dirichlet_proportions(9, client, 0.3, 5);
+            assert_eq!(p, dirichlet_proportions(9, client, 0.3, 5));
+            assert_eq!(p.len(), 5);
+            assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)), "{p:?}");
+            let sum: f64 = p.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "sum {sum}");
+        }
+        // different clients draw different proportions
+        assert_ne!(
+            dirichlet_proportions(9, 0, 0.3, 5),
+            dirichlet_proportions(9, 1, 0.3, 5)
+        );
+    }
+
+    #[test]
+    fn shift_vector_norm_and_determinism() {
+        let v = shift_vector(5, 3, 16, 2.5);
+        assert_eq!(v, shift_vector(5, 3, 16, 2.5));
+        let norm = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((norm - 2.5).abs() < 1e-4, "norm {norm}");
+        assert_ne!(v, shift_vector(5, 4, 16, 2.5));
+    }
+
+    #[test]
+    fn blend_to_uniform_endpoints() {
+        let base = vec![0.7, 0.2, 0.1, 0.0];
+        let mut p = base.clone();
+        blend_to_uniform(&mut p, 1.0);
+        assert_eq!(p, base);
+        let mut p = base.clone();
+        blend_to_uniform(&mut p, 0.0);
+        assert!(p.iter().all(|&v| (v - 0.25).abs() < 1e-12));
+        let mut p = base;
+        blend_to_uniform(&mut p, 0.5);
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
     }
 }

@@ -40,6 +40,11 @@ pub struct ClientFleet {
     /// None (the default) leaves every selection path bit-identical to
     /// the pre-forecast behavior.
     pub forecast: Option<AvailabilityForecaster>,
+    /// per-client held-out rows reserved at the TAIL of each shard for
+    /// per-client accuracy evaluation (`coordinator::eval::ClientEval`);
+    /// 0 (the default) keeps every training path bit-identical to the
+    /// pre-holdout behavior. Set via [`ClientFleet::set_holdout`].
+    holdout: usize,
     rngs: Vec<Rng>,
 }
 
@@ -109,6 +114,7 @@ impl ClientFleet {
             estimates,
             tiers: None,
             forecast: None,
+            holdout: 0,
             rngs,
         }
     }
@@ -312,6 +318,42 @@ impl ClientFleet {
         }
     }
 
+    /// Reserve `rows` held-out rows at the tail of EVERY client's shard.
+    /// Training paths ([`ClientFleet::fill_minibatch`],
+    /// [`ClientFleet::fill_round_batches`],
+    /// [`ClientFleet::for_each_full_chunk`]) see only the remaining
+    /// train prefix, so held-out rows never leak into an update.
+    /// Consumes no RNG; call right after construction (as
+    /// `setup::build_fleet` does) so the shared draw sequence is
+    /// untouched.
+    pub fn set_holdout(&mut self, rows: usize) {
+        for (c, sh) in self.shards.iter().enumerate() {
+            assert!(
+                rows < sh.s(),
+                "holdout {rows} leaves client {c} no training rows \
+                 (shard size {})",
+                sh.s()
+            );
+        }
+        self.holdout = rows;
+    }
+
+    /// Held-out rows per client (0 when per-client eval is off).
+    pub fn holdout(&self) -> usize {
+        self.holdout
+    }
+
+    /// The client's held-out row indices (the shard tail).
+    pub fn holdout_rows(&self, client: usize) -> &[usize] {
+        let sh = &self.shards[client];
+        &sh.indices[sh.s() - self.holdout..]
+    }
+
+    /// Rows available for training: shard size minus the holdout.
+    fn train_len(&self, client: usize) -> usize {
+        self.shards[client].s() - self.holdout
+    }
+
     /// Samples held by one client.
     pub fn s(&self, client: usize) -> usize {
         self.shards[client].s()
@@ -341,10 +383,27 @@ impl ClientFleet {
         x_buf: &mut [f32],
         y_buf: &mut [f32],
     ) {
-        let shard_len = self.shards[client].s();
-        assert!(b <= shard_len, "batch {b} > shard {shard_len}");
-        let rng = &mut self.rngs[client];
-        let picks = rng.sample_indices(shard_len, b);
+        let mut rng = std::mem::replace(&mut self.rngs[client], Rng::new(0));
+        self.fill_minibatch_with(&mut rng, client, b, x_buf, y_buf);
+        self.rngs[client] = rng;
+    }
+
+    /// Like [`ClientFleet::fill_minibatch`] but sampling from a
+    /// caller-owned stream instead of the client's own minibatch stream.
+    /// Lets side computations (ditto's personal-head steps) draw batches
+    /// without perturbing the client's canonical stream — the global
+    /// trajectory stays bit-identical to a run without the side work.
+    pub fn fill_minibatch_with(
+        &self,
+        rng: &mut Rng,
+        client: usize,
+        b: usize,
+        x_buf: &mut [f32],
+        y_buf: &mut [f32],
+    ) {
+        let train_len = self.train_len(client);
+        assert!(b <= train_len, "batch {b} > train rows {train_len}");
+        let picks = rng.sample_indices(train_len, b);
         let rows: Vec<usize> =
             picks.iter().map(|&p| self.shards[client].indices[p]).collect();
         self.dataset.gather_x(&rows, x_buf);
@@ -374,9 +433,10 @@ impl ClientFleet {
         }
     }
 
-    /// Visit the client's FULL shard in chunks of exactly `b` rows
-    /// (requires s % b == 0 — validated by the experiment config). Used
-    /// for the exact local gradients of the stopping rule.
+    /// Visit the client's full TRAIN prefix (the whole shard when no
+    /// holdout is set) in chunks of exactly `b` rows (requires the
+    /// train length to be a multiple of b — validated by the experiment
+    /// config). Used for the exact local gradients of the stopping rule.
     pub fn for_each_full_chunk<F: FnMut(&[f32], &[f32])>(
         &self,
         client: usize,
@@ -385,14 +445,14 @@ impl ClientFleet {
         y_buf: &mut [f32],
         mut f: F,
     ) {
+        let s = self.train_len(client);
         let shard = &self.shards[client];
-        let s = shard.s();
         assert_eq!(
             s % b,
             0,
             "shard size {s} must be a multiple of artifact batch {b}"
         );
-        for chunk in shard.indices.chunks(b) {
+        for chunk in shard.indices[..s].chunks(b) {
             self.dataset.gather_x(chunk, x_buf);
             self.dataset.y.encode_into(chunk, y_buf);
             f(x_buf, y_buf);
@@ -673,6 +733,44 @@ mod tests {
         let mut x = vec![0.0; 6 * 4];
         let mut y = vec![0.0; 6 * 3];
         f.for_each_full_chunk(0, 6, &mut x, &mut y, |_, _| {});
+    }
+
+    #[test]
+    fn holdout_rows_never_enter_training() {
+        let mut f = fleet(3, 24, 4);
+        f.set_holdout(6);
+        assert_eq!(f.holdout(), 6);
+        for c in 0..3 {
+            assert_eq!(f.holdout_rows(c).len(), 6);
+            assert_eq!(f.holdout_rows(c), &f.shards[c].indices[18..]);
+        }
+        let held: std::collections::HashSet<usize> =
+            f.holdout_rows(1).iter().copied().collect();
+        // minibatches draw only from the train prefix
+        let b = 8;
+        let mut x = vec![0.0; b * 4];
+        let mut y = vec![0.0; b * 3];
+        for _ in 0..20 {
+            f.fill_minibatch(1, b, &mut x, &mut y);
+            for r in 0..b {
+                let row = &x[r * 4..(r + 1) * 4];
+                let hit = held.iter().any(|&i| f.dataset.row(i) == row);
+                assert!(!hit, "held-out row sampled into a minibatch");
+            }
+        }
+        // full chunks cover exactly the train prefix
+        let mut rows_seen = 0;
+        f.for_each_full_chunk(1, 6, &mut x[..6 * 4], &mut y[..6 * 3], |xc, _| {
+            rows_seen += xc.len() / 4;
+        });
+        assert_eq!(rows_seen, 18);
+    }
+
+    #[test]
+    #[should_panic(expected = "no training rows")]
+    fn holdout_must_leave_training_rows() {
+        let mut f = fleet(2, 10, 4);
+        f.set_holdout(10);
     }
 
     #[test]

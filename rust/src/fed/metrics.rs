@@ -50,6 +50,13 @@ pub struct RoundRecord {
     /// the k-th arrival (over-selection, `fed::selection`; 0 unless
     /// `overselect > 1` closed the round at its target arrival)
     pub cancelled: usize,
+    /// mean per-client held-out accuracy (the statistical-heterogeneity
+    /// measurement — `coordinator::eval::ClientEval`; evaluated with
+    /// each client's OWN model for personalized solvers, the global
+    /// model otherwise). NaN when per-client eval is off — the IID
+    /// default; between eval rounds the previous value carries, like
+    /// `loss_full`.
+    pub acc: f64,
 }
 
 /// A full run's trace plus identifying metadata.
@@ -62,6 +69,10 @@ pub struct Trace {
     pub finished: bool,
     /// total simulated time at termination
     pub total_time: f64,
+    /// final per-client held-out accuracies (empty unless per-client
+    /// eval ran — the source of [`Trace::mean_client_acc`] /
+    /// [`Trace::worst_decile_acc`])
+    pub client_acc: Vec<f64>,
 }
 
 impl Trace {
@@ -121,6 +132,31 @@ impl Trace {
         self.rounds.iter().map(|r| r.cancelled).sum()
     }
 
+    /// Mean of the final per-client held-out accuracies (NaN unless
+    /// per-client eval ran).
+    pub fn mean_client_acc(&self) -> f64 {
+        if self.client_acc.is_empty() {
+            return f64::NAN;
+        }
+        self.client_acc.iter().sum::<f64>() / self.client_acc.len() as f64
+    }
+
+    /// Mean accuracy of the worst decile of clients — the ceil(n/10)
+    /// clients with the LOWEST final held-out accuracy. The fairness
+    /// aggregate of the interplay experiment: a solver whose global
+    /// model abandons the slow-and-shifted cohort collapses here while
+    /// its mean barely moves (docs/scenarios.md §9). NaN unless
+    /// per-client eval ran.
+    pub fn worst_decile_acc(&self) -> f64 {
+        if self.client_acc.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.client_acc.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let k = (sorted.len() + 9) / 10;
+        sorted[..k].iter().sum::<f64>() / k as f64
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("algo", self.algo.as_str().into()),
@@ -153,6 +189,7 @@ impl Trace {
                             ("reranks", r.reranks.into()),
                             ("available", r.available.into()),
                             ("cancelled", r.cancelled.into()),
+                            ("acc", json_num(r.acc)),
                         ])
                     })
                     .collect(),
@@ -163,11 +200,11 @@ impl Trace {
     /// CSV with a header row (one line per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage,dropped,missed,reranks,available,cancelled\n",
+            "round,time,participants,loss_active,loss_full,grad_norm_sq,dist_to_opt,accuracy,stage,dropped,missed,reranks,available,cancelled,acc\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.time,
                 r.participants,
@@ -181,7 +218,8 @@ impl Trace {
                 r.missed,
                 r.reranks,
                 r.available,
-                r.cancelled
+                r.cancelled,
+                r.acc
             ));
         }
         s
@@ -306,6 +344,7 @@ mod tests {
             reranks: 0,
             available: 4,
             cancelled: 0,
+            acc: f64::NAN,
         }
     }
 
@@ -327,7 +366,9 @@ mod tests {
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("round,time"));
-        assert!(csv.lines().next().unwrap().ends_with(",available,cancelled"));
+        assert!(
+            csv.lines().next().unwrap().ends_with(",available,cancelled,acc")
+        );
     }
 
     #[test]
@@ -353,8 +394,8 @@ mod tests {
         let csv = t.to_csv();
         let row = csv.lines().nth(1).unwrap();
         assert!(
-            row.ends_with(",7,0"),
-            "row '{row}' lacks the available,cancelled columns"
+            row.ends_with(",7,0,NaN"),
+            "row '{row}' lacks the available,cancelled,acc columns"
         );
     }
 
@@ -369,7 +410,31 @@ mod tests {
         assert!(t.to_json().to_string().contains("\"cancelled\":3"));
         let csv = t.to_csv();
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",3"), "row '{row}' lacks the cancelled column");
+        assert!(
+            row.ends_with(",3,NaN"),
+            "row '{row}' lacks the cancelled,acc columns"
+        );
+    }
+
+    #[test]
+    fn acc_column_and_client_aggregates() {
+        let mut t = Trace::new("x");
+        let mut r = rec(0, 1.0, 2.0);
+        r.acc = 0.75;
+        t.push(r);
+        let csv = t.to_csv();
+        assert!(csv.lines().nth(1).unwrap().ends_with(",0.75"));
+        assert!(t.to_json().to_string().contains("\"acc\":0.75"));
+        // no per-client vector -> NaN aggregates, never a silent zero
+        assert!(t.mean_client_acc().is_nan());
+        assert!(t.worst_decile_acc().is_nan());
+        // 20 clients: worst decile = mean of the 2 lowest
+        t.client_acc = (0..20).map(|i| i as f64 / 20.0).collect();
+        assert!((t.mean_client_acc() - 0.475).abs() < 1e-12);
+        assert!((t.worst_decile_acc() - 0.025).abs() < 1e-12);
+        // non-divisible count rounds the decile UP (ceil(5/10) = 1)
+        t.client_acc = vec![0.9, 0.8, 0.1, 0.7, 0.6];
+        assert_eq!(t.worst_decile_acc(), 0.1);
     }
 
     #[test]

@@ -57,6 +57,7 @@
 //! assert_eq!(fleet.base_speed(9_123), fleet.base_speed(9_123));
 //! ```
 
+use crate::data::{synth, DataSpec};
 use crate::fed::client::ClientFleet;
 use crate::fed::selection::{AvailabilityForecaster, ForecastPolicy};
 use crate::fed::sketch::{QuantileSketch, TopK};
@@ -80,6 +81,10 @@ pub const DEFAULT_FRONTIER: usize = 1024;
 /// Per-client stream components. Client `i` owns streams
 /// `i * STREAM_COMPONENTS + comp`; reserved global streams sit at the
 /// top of the id space, unreachable for any realizable population.
+/// Components 5 (Dirichlet skew) and 6 (covariate shift) are claimed by
+/// `data/synth.rs` (`DATA_SKEW_COMPONENT` / `DATA_SHIFT_COMPONENT`), so
+/// the lazy non-IID state is derived from the very same streams the
+/// eager `data:` path uses; component 7 is free.
 const STREAM_COMPONENTS: u64 = 8;
 const COMP_SPEED: u64 = 0;
 const COMP_MARKOV: u64 = 1;
@@ -90,6 +95,13 @@ const COMP_ROW: u64 = 4;
 /// `2^61` clients).
 const TEACHER_STREAM: u64 = u64::MAX - 1;
 const CLUSTER_STREAM: u64 = u64::MAX - 3;
+/// Cluster-teacher streams for the lazy `data:dirichlet` regime:
+/// teacher `k` of [`LAZY_CLUSTERS`] lives at `u64::MAX - 16 - k`.
+const CLUSTER_TEACHER_BASE: u64 = u64::MAX - 16;
+/// Teacher clusters the lazy Dirichlet skew mixes over (the regression
+/// analogue of label classes: each client's effective teacher is its
+/// Dirichlet-weighted mixture of these).
+pub const LAZY_CLUSTERS: usize = 4;
 
 fn sid(i: usize, comp: u64) -> u64 {
     (i as u64) * STREAM_COMPONENTS + comp
@@ -544,16 +556,109 @@ pub struct LazyShards {
     /// label noise scale
     noise: f64,
     teacher: Vec<f32>,
+    /// the `data:` grammar applied lazily (IID by default). Dirichlet
+    /// skew is the regression analogue of label skew: each client's
+    /// effective teacher is its Dirichlet mixture over
+    /// [`LAZY_CLUSTERS`] cluster teachers. Shift adds the client's
+    /// seeded shift vector ([`synth::shift_vector`]) to every feature
+    /// row AFTER the label is computed, matching the eager path where
+    /// labels are synthesized before the shift mutates the features.
+    data: DataSpec,
+    /// base speed model for the `corr:speed` strength grading
+    /// ([`SpeedModel::cdf`] of the client's own base draw); required
+    /// when `data` says `corr:speed`
+    base: Option<SpeedModel>,
+    /// cluster teachers (empty unless `data.dirichlet` is on)
+    cluster_teachers: Vec<Vec<f32>>,
     /// per-client minibatch sampling lanes (created on first touch)
     lanes: HashMap<usize, Rng>,
 }
 
 impl LazyShards {
     pub fn new(seed: u64, s: usize, d: usize, noise: f64) -> Self {
+        Self::with_data(seed, s, d, noise, DataSpec::iid(), None)
+    }
+
+    /// Build with a `data:` spec. Skew state is derived per touch from
+    /// the same pure per-client streams the eager path uses
+    /// (`synth::dirichlet_proportions` / `synth::shift_vector`), so a
+    /// million-client non-IID population still occupies zero bytes of
+    /// data. `base` must be the population's base speed model when the
+    /// spec says `corr:speed` (strength = the client's base-speed
+    /// percentile, [`SpeedModel::cdf`] — the O(1) population analogue
+    /// of the eager path's speed rank).
+    pub fn with_data(
+        seed: u64,
+        s: usize,
+        d: usize,
+        noise: f64,
+        data: DataSpec,
+        base: Option<SpeedModel>,
+    ) -> Self {
         assert!(s > 0 && d > 0, "degenerate shard shape {s}x{d}");
+        assert!(
+            !data.corr_speed || base.is_some(),
+            "data spec '{}' says corr:speed but no base speed model given",
+            data.spec()
+        );
         let mut teacher = vec![0.0f32; d];
         Rng::with_stream(seed, TEACHER_STREAM).fill_normal(&mut teacher, 1.0);
-        LazyShards { seed, s, d, noise, teacher, lanes: HashMap::new() }
+        let cluster_teachers = if data.dirichlet.is_some() {
+            (0..LAZY_CLUSTERS)
+                .map(|k| {
+                    let mut t = vec![0.0f32; d];
+                    Rng::with_stream(seed, CLUSTER_TEACHER_BASE - k as u64)
+                        .fill_normal(&mut t, 1.0);
+                    t
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        LazyShards {
+            seed,
+            s,
+            d,
+            noise,
+            teacher,
+            data,
+            base,
+            cluster_teachers,
+            lanes: HashMap::new(),
+        }
+    }
+
+    /// Skew strength in [0, 1] for client `i` (1 unless `corr:speed`).
+    pub fn strength(&self, i: usize) -> f64 {
+        match (&self.base, self.data.corr_speed) {
+            (Some(b), true) => {
+                let t = base_speed_of(self.seed, b, i);
+                b.cdf(t)
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// Client `i`'s effective teacher under the lazy Dirichlet skew:
+    /// the Dirichlet-weighted mixture of the cluster teachers, blended
+    /// toward uniform by the client's strength. Bit-reuses the eager
+    /// path's proportions ([`synth::dirichlet_proportions`]), which is
+    /// what the cross-path property test pins.
+    pub fn client_teacher(&self, i: usize) -> Vec<f32> {
+        let alpha = match self.data.dirichlet {
+            Some(a) => a,
+            None => return self.teacher.clone(),
+        };
+        let mut p =
+            synth::dirichlet_proportions(self.seed, i, alpha, LAZY_CLUSTERS);
+        synth::blend_to_uniform(&mut p, self.strength(i));
+        let mut t = vec![0.0f32; self.d];
+        for (k, ct) in self.cluster_teachers.iter().enumerate() {
+            for (tj, cj) in t.iter_mut().zip(ct) {
+                *tj += p[k] as f32 * cj;
+            }
+        }
+        t
     }
 
     /// The hidden regression target `w*` (drawn once from its own
@@ -572,17 +677,37 @@ impl LazyShards {
     }
 
     /// Realize row `j` of client `i` into `x` (length `d`), returning
-    /// the label `y = x·w* + noise·z`. Stateless: bit-identical on
-    /// every call.
+    /// the label `y = x·w_i* + noise·z` (the client's effective teacher
+    /// under `data:dirichlet`, the global teacher otherwise). The
+    /// covariate shift is added to `x` AFTER the label, so a shifted
+    /// client's conditional y|x moves — the distribution shift a global
+    /// model cannot fit. Stateless: bit-identical on every call, and
+    /// byte-identical to the pre-`data:` behavior when the spec is IID.
     pub fn realize_row(&self, client: usize, row: usize, x: &mut [f32]) -> f32 {
         assert!(row < self.s, "row {row} outside shard of {}", self.s);
         assert_eq!(x.len(), self.d);
         let mut rng =
             Rng::with_stream(self.seed ^ row_salt(row), sid(client, COMP_ROW));
         rng.fill_normal(x, 1.0);
-        let dot: f32 =
-            x.iter().zip(&self.teacher).map(|(a, b)| a * b).sum();
-        dot + self.noise as f32 * rng.normal() as f32
+        let teacher_buf;
+        let teacher: &[f32] = if self.data.dirichlet.is_some() {
+            teacher_buf = self.client_teacher(client);
+            &teacher_buf
+        } else {
+            &self.teacher
+        };
+        let dot: f32 = x.iter().zip(teacher).map(|(a, b)| a * b).sum();
+        let y = dot + self.noise as f32 * rng.normal() as f32;
+        if let Some(mag) = self.data.shift {
+            let g = self.strength(client) as f32;
+            if g > 0.0 {
+                let v = synth::shift_vector(self.seed, client, self.d, mag);
+                for (xj, vj) in x.iter_mut().zip(&v) {
+                    *xj += g * vj;
+                }
+            }
+        }
+        y
     }
 
     /// Fill one stochastic minibatch (size `b`, sampled without
@@ -913,6 +1038,75 @@ mod tests {
         let (mut xc, mut yc) = (vec![0.0f32; 8 * 4], vec![0.0f32; 8]);
         sh.fill_minibatch(4, 8, &mut xc, &mut yc);
         assert_ne!(xb, xc);
+    }
+
+    #[test]
+    fn lazy_noniid_shards_are_stateless_and_iid_off_is_identical() {
+        let data =
+            DataSpec::parse("data:dirichlet:0.2:shift:3:corr:speed").unwrap();
+        let base = SpeedModel::Uniform { lo: 50.0, hi: 500.0 };
+        let sh = LazyShards::with_data(19, 64, 6, 0.1, data, Some(base));
+        // per-touch re-realization is bit-identical
+        let (mut a, mut b) = (vec![0.0f32; 6], vec![0.0f32; 6]);
+        let ya = sh.realize_row(12, 5, &mut a);
+        let yb = sh.realize_row(12, 5, &mut b);
+        assert_eq!(ya, yb);
+        assert_eq!(a, b);
+        // strengths are valid percentiles and teachers differ by client
+        for i in [0usize, 3, 63] {
+            let g = sh.strength(i);
+            assert!((0.0..=1.0).contains(&g), "strength {g}");
+        }
+        assert_ne!(sh.client_teacher(0), sh.client_teacher(1));
+        // the IID spelling is byte-identical to the pre-`data:` path
+        let mut plain = LazyShards::new(19, 64, 6, 0.1);
+        let mut via_data =
+            LazyShards::with_data(19, 64, 6, 0.1, DataSpec::iid(), None);
+        assert_eq!(plain.teacher(), via_data.teacher());
+        let (mut xp, mut yp) = (vec![0.0f32; 8 * 6], vec![0.0f32; 8]);
+        let (mut xv, mut yv) = (vec![0.0f32; 8 * 6], vec![0.0f32; 8]);
+        plain.fill_minibatch(7, 8, &mut xp, &mut yp);
+        via_data.fill_minibatch(7, 8, &mut xv, &mut yv);
+        assert_eq!(xp, xv);
+        assert_eq!(yp, yv);
+    }
+
+    #[test]
+    fn lazy_corr_speed_grades_skew_by_base_percentile() {
+        // homogeneous base speeds: every client sits at the same
+        // percentile, so grading is uniform; a uniform base spreads the
+        // strengths across [0, 1]
+        let data = DataSpec::parse("data:shift:2:corr:speed").unwrap();
+        let sh = LazyShards::with_data(
+            3,
+            16,
+            4,
+            0.0,
+            data.clone(),
+            Some(SpeedModel::Uniform { lo: 50.0, hi: 500.0 }),
+        );
+        let gs: Vec<f64> = (0..200).map(|i| sh.strength(i)).collect();
+        let (lo, hi) = gs.iter().fold((1.0f64, 0.0f64), |(l, h), &g| {
+            (l.min(g), h.max(g))
+        });
+        assert!(lo < 0.2 && hi > 0.8, "strengths not spread: [{lo}, {hi}]");
+        // without corr:speed every client is fully skewed
+        let full = LazyShards::with_data(
+            3,
+            16,
+            4,
+            0.0,
+            DataSpec::parse("data:shift:2").unwrap(),
+            None,
+        );
+        assert!((0..20).all(|i| full.strength(i) == 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "corr:speed")]
+    fn lazy_corr_speed_without_base_model_panics() {
+        let data = DataSpec::parse("data:shift:1:corr:speed").unwrap();
+        LazyShards::with_data(1, 8, 2, 0.0, data, None);
     }
 
     #[test]

@@ -87,6 +87,27 @@ impl SpeedModel {
         }
     }
 
+    /// Population CDF: the fraction of clients with base time <= `t`
+    /// — the percentile a drawn base speed sits at. The lazy `data:`
+    /// path grades `corr:speed` skew strength with this (the O(1)
+    /// analytic analogue of the eager path's speed rank / (N-1));
+    /// Homogeneous has no ordering, so every client sits at 0.5.
+    pub fn cdf(&self, t: f64) -> f64 {
+        match self {
+            SpeedModel::Uniform { lo, hi } => {
+                ((t - lo) / (hi - lo)).clamp(0.0, 1.0)
+            }
+            SpeedModel::Exponential { lambda } => {
+                if t <= 0.0 {
+                    0.0
+                } else {
+                    1.0 - (-lambda * t).exp()
+                }
+            }
+            SpeedModel::Homogeneous { .. } => 0.5,
+        }
+    }
+
     /// Canonical spec string; `parse(spec()) == self`.
     pub fn spec(&self) -> String {
         match self {
@@ -129,6 +150,27 @@ mod tests {
     fn homogeneous_all_equal() {
         let m = SpeedModel::Homogeneous { t: 7.5 };
         assert!(m.draw(&mut Rng::new(3), 10).iter().all(|&t| t == 7.5));
+    }
+
+    #[test]
+    fn cdf_matches_the_draw_distribution() {
+        let u = SpeedModel::Uniform { lo: 50.0, hi: 500.0 };
+        assert_eq!(u.cdf(50.0), 0.0);
+        assert_eq!(u.cdf(500.0), 1.0);
+        assert_eq!(u.cdf(275.0), 0.5);
+        assert_eq!(u.cdf(0.0), 0.0, "clamped below the support");
+        assert_eq!(u.cdf(1e9), 1.0, "clamped above the support");
+        let e = SpeedModel::Exponential { lambda: 2.0 };
+        assert_eq!(e.cdf(0.0), 0.0);
+        assert!((e.cdf(0.5 * std::f64::consts::LN_2) - 0.5).abs() < 1e-12);
+        let h = SpeedModel::Homogeneous { t: 7.0 };
+        assert_eq!(h.cdf(7.0), 0.5);
+        // empirical check: the CDF at a draw is the draw's percentile
+        let draws = u.draw(&mut Rng::new(4), 20_000);
+        let t = 200.0;
+        let frac = draws.iter().filter(|&&x| x <= t).count() as f64
+            / draws.len() as f64;
+        assert!((frac - u.cdf(t)).abs() < 0.02);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use anyhow::{Context, Result};
 use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::data::DataSpec;
 use flanp::engine::Manifest;
 use flanp::fed::{DeadlinePolicy, SystemModel, TierPolicy};
 use flanp::setup;
@@ -24,9 +25,13 @@ USAGE:
 
 OPTIONS (run):
   --solver S        flanp | flanp-heuristic | fedgate | fedavg | fednova |
-                    fedprox | fedgate-randK | fedgate-fastK | fedbuffK | tifl
+                    fedprox | fedgate-randK | fedgate-fastK | fedbuffK |
+                    tifl | ditto:L
                     (fedbuffK = buffered-async, flush every K uploads;
-                    tifl = tier-scheduled FedGATE, needs --tiers)
+                    tifl = tier-scheduled FedGATE, needs --tiers;
+                    ditto:L = fedavg global model + per-client personal
+                    heads trained with lambda-L proximal SGD — the acc
+                    trace column scores the heads)
                                                        [flanp]
   --model M         manifest model name                [linreg_d25]
   --engine E        hlo | native                       [hlo]
@@ -67,6 +72,27 @@ OPTIONS (run):
                     open. trace:FILE replays a recorded per-round CSV
                     (wrap cycles, hold repeats the last round; see
                     --record-trace)
+  --data SPEC       statistical-heterogeneity scenario [iid]
+                    grammar (composable, in this order):
+                      data:[dirichlet:A:][shift:S:][corr:speed]
+                      dirichlet:A:   non-IID label skew — each client's
+                                     shard is drawn from a Dirichlet(A)
+                                     mixture over the classes (small A =
+                                     near single-class shards; needs a
+                                     classification model)
+                      shift:S:       per-client covariate shift — a fixed
+                                     random direction of norm S is added
+                                     to every feature row of the shard
+                      corr:speed     grade the skew by client speed: the
+                                     FASTEST client stays IID, the
+                                     SLOWEST gets full-strength skew (the
+                                     paper's adversarial interplay case)
+                    e.g. data:dirichlet:0.1:corr:speed (label skew
+                    concentrated on the stragglers),
+                    data:dirichlet:0.5:shift:2: (skew plus shift).
+                    Non-IID runs (and ditto) reserve one engine batch per
+                    client as a held-out tail and report mean per-client
+                    accuracy in the trace's acc column
   --deadline SPEC   aggregation deadline policy        [sync]
                     sync           wait for the slowest cohort member
                     fixed:T        aggregate whatever arrived by round
@@ -183,6 +209,8 @@ fn cmd_run(args: &mut Args) -> Result<()> {
         .map_err(|e| anyhow::anyhow!(e))?;
     let deadline = DeadlinePolicy::parse(&args.flag_str("deadline", "sync"))
         .map_err(|e| anyhow::anyhow!(e))?;
+    let data = DataSpec::parse(&args.flag_str("data", "data:iid"))
+        .map_err(|e| anyhow::anyhow!(e))?;
     let tiers = args
         .flag_opt("tiers")
         .map(|s| TierPolicy::parse(&s))
@@ -227,6 +255,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     cfg.c_stat = c_stat;
     cfg.system = system;
     cfg.deadline = deadline;
+    cfg.data = data;
     cfg.tiers = tiers;
     cfg.overselect = overselect;
     cfg.forecast = forecast;
@@ -246,7 +275,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     if !quiet {
         println!(
             "flanp run: solver={} model={} engine={} N={} s={} tau={} eta={} \
-             gamma={} system={} deadline={} tiers={} overselect={} \
+             gamma={} system={} data={} deadline={} tiers={} overselect={} \
              forecast={} ranking={}",
             cfg.solver.name(),
             model,
@@ -257,6 +286,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
             eta,
             gamma,
             cfg.system.spec(),
+            cfg.data.spec(),
             cfg.deadline.spec(),
             cfg.tiers.as_ref().map(|t| t.spec()).unwrap_or_else(|| "off".into()),
             cfg.overselect,
@@ -292,6 +322,14 @@ fn cmd_run(args: &mut Args) -> Result<()> {
         trace.total_cancelled(),
         wall
     );
+    if !trace.client_acc.is_empty() {
+        println!(
+            "client holdout acc: mean={:.4} worst-decile={:.4} (N={})",
+            trace.mean_client_acc(),
+            trace.worst_decile_acc(),
+            trace.client_acc.len()
+        );
+    }
     if let Some(p) = trace_path {
         trace.write_csv(Path::new(&p))?;
         println!("trace written to {p}");

@@ -3,7 +3,7 @@
 //! examples and the integration tests.
 
 use crate::coordinator::ExperimentConfig;
-use crate::data::{shard, synth};
+use crate::data::{shard, synth, Labels};
 use crate::engine::{
     Engine, HloEngine, KernelPath, Manifest, ModelKind, ModelMeta, NativeEngine,
 };
@@ -129,6 +129,18 @@ pub fn build_fleet(
         cfg.record_trace,
         &mut rng,
     );
+    // non-IID skew is applied AFTER construction from pure per-client
+    // streams (data/synth.rs), so the dataset synthesis, the IID
+    // partition draw and every fleet fork above consume exactly the
+    // seed's draw sequence: `data:` off is bit-identical, and `data:`
+    // on changes only shard membership and feature values — never
+    // speeds, ordering or the system process.
+    if !cfg.data.is_iid() {
+        apply_data_skew(&mut fleet, cfg)?;
+    }
+    if cfg.client_eval_enabled() {
+        fleet.set_holdout(meta.batch);
+    }
     if let Some(policy) = &cfg.tiers {
         fleet.ensure_tiers(policy);
     }
@@ -138,6 +150,71 @@ pub fn build_fleet(
         fleet.set_forecast(fc.clone());
     }
     Ok(fleet)
+}
+
+/// Per-client skew strength in [0, 1] for the `corr:speed` grading:
+/// the fastest client gets 0 (IID-like), the slowest 1 (fully skewed),
+/// linear in speed rank. Without `corr:speed` every client is fully
+/// skewed. Exposed so tests and the lazy path can pin the eager
+/// convention.
+pub fn skew_strengths(order: &[usize], corr_speed: bool) -> Vec<f64> {
+    let n = order.len();
+    let mut strength = vec![1.0; n];
+    if corr_speed && n > 1 {
+        for (rank, &c) in order.iter().enumerate() {
+            strength[c] = rank as f64 / (n - 1) as f64;
+        }
+    }
+    strength
+}
+
+/// Apply the `data:` grammar (`ExperimentConfig::data`) to a freshly
+/// built fleet: Dirichlet label skew re-partitions the rows through
+/// [`shard::partition_dirichlet`]; covariate shift adds each client's
+/// seeded shift vector ([`synth::shift_vector`]) to its own rows in
+/// place. Both are keyed to `(cfg.seed, client)` alone, so the lazy
+/// population path reproduces the same per-client skew state without
+/// materializing anything.
+fn apply_data_skew(fleet: &mut ClientFleet, cfg: &ExperimentConfig) -> Result<()> {
+    let strength = skew_strengths(&fleet.order, cfg.data.corr_speed);
+    if let Some(alpha) = cfg.data.dirichlet {
+        let (labels, classes): (Vec<usize>, usize) = match &fleet.dataset.y {
+            Labels::Class(l, k) => {
+                (l.iter().map(|&v| v as usize).collect(), *k)
+            }
+            Labels::Real(_) => anyhow::bail!(
+                "data:dirichlet needs a classification model \
+                 (validate the config first)"
+            ),
+        };
+        fleet.shards = shard::partition_dirichlet(
+            cfg.seed,
+            &labels,
+            classes,
+            cfg.num_clients,
+            cfg.s,
+            alpha,
+            &strength,
+        );
+    }
+    if let Some(mag) = cfg.data.shift {
+        let d = fleet.dataset.d;
+        for c in 0..cfg.num_clients {
+            if strength[c] == 0.0 {
+                continue;
+            }
+            let v = synth::shift_vector(cfg.seed, c, d, mag);
+            // rows are disjoint across shards, so in-place mutation
+            // shifts each row exactly once
+            for &row in &fleet.shards[c].indices {
+                let x = &mut fleet.dataset.x[row * d..(row + 1) * d];
+                for (xj, vj) in x.iter_mut().zip(&v) {
+                    *xj += strength[c] as f32 * vj;
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Build a [`PopulationFleet`] from a `pop:N:SCENARIO` spec: at

@@ -8,6 +8,7 @@ use flanp::coordinator::gate::{
 use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
 use flanp::data::{shard, synth};
 use flanp::engine::NativeEngine;
+use flanp::fed::population::{LazyShards, LAZY_CLUSTERS};
 use flanp::fed::speed::sort_fastest_first;
 use flanp::fed::{ClientFleet, QuantileSketch, SpeedModel, TopK, VirtualClock};
 use flanp::util::prop::{forall, gen_usize};
@@ -368,6 +369,199 @@ fn prop_topk_matches_stable_sort_truncate() {
                 want.iter().map(|&i| values[i]).collect();
             if vals != want_vals {
                 return Err(format!("values {vals:?} != {want_vals:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dirichlet_proportions_simplex_and_deterministic() {
+    // every (seed, client, alpha, k) yields a valid probability simplex,
+    // bit-identical on every call — the statelessness both the eager
+    // partitioner and the lazy population path rely on
+    forall(
+        112,
+        40,
+        |r| {
+            (
+                r.next_u64(),
+                gen_usize(r, 0, 500),
+                gen_usize(r, 1, 40) as f64 / 10.0, // alpha in [0.1, 4.0]
+                gen_usize(r, 2, 10),
+            )
+        },
+        |&(seed, client, alpha, k)| {
+            let p = synth::dirichlet_proportions(seed, client, alpha, k);
+            if p.len() != k {
+                return Err(format!("len {} != k {k}", p.len()));
+            }
+            if !p.iter().all(|&x| (0.0..=1.0).contains(&x)) {
+                return Err(format!("proportion outside [0,1]: {p:?}"));
+            }
+            let sum: f64 = p.iter().sum();
+            if (sum - 1.0).abs() > 1e-9 {
+                return Err(format!("sum {sum} != 1"));
+            }
+            if p != synth::dirichlet_proportions(seed, client, alpha, k) {
+                return Err("not deterministic per (seed, client)".into());
+            }
+            // the same draws flow from the client's skew stream — the
+            // eager partitioner's entry point
+            let with = synth::dirichlet_proportions_with(
+                &mut synth::skew_stream(seed, client),
+                alpha,
+                k,
+            );
+            if p != with {
+                return Err("skew_stream path diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dirichlet_concentration_monotone_in_alpha() {
+    // smaller alpha = more concentrated shards: the mean max-class
+    // share (over enough clients for the noise to wash out) must
+    // decrease as alpha grows
+    forall(
+        113,
+        8,
+        |r| (r.next_u64(), gen_usize(r, 3, 10)),
+        |&(seed, k)| {
+            let clients = 60usize;
+            let mean_max = |alpha: f64| -> f64 {
+                (0..clients)
+                    .map(|c| {
+                        synth::dirichlet_proportions(seed, c, alpha, k)
+                            .into_iter()
+                            .fold(0.0f64, f64::max)
+                    })
+                    .sum::<f64>()
+                    / clients as f64
+            };
+            let shares: Vec<f64> =
+                [0.05, 0.5, 5.0].iter().map(|&a| mean_max(a)).collect();
+            if !(shares[0] > shares[1] && shares[1] > shares[2]) {
+                return Err(format!(
+                    "mean max share not decreasing in alpha: {shares:?}"
+                ));
+            }
+            // alpha -> large approaches the uniform 1/k share
+            if shares[2] < 1.0 / k as f64 {
+                return Err(format!(
+                    "max share {} below uniform 1/{k}",
+                    shares[2]
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lazy_and_eager_derive_identical_skew_state() {
+    // the cross-path contract: LazyShards synthesizes non-IID state
+    // from the SAME pure per-client streams the eager path consumes —
+    // proportions bit-exact, shift vectors bit-exact, and the shifted
+    // row exactly plain-row + strength * shift_vector. (Full row
+    // identity across paths is impossible by design: eager shards are
+    // drawn rows of a materialized dataset, lazy rows are synthesized —
+    // the shared state is the skew, not the features.)
+    forall(
+        114,
+        12,
+        |r| {
+            (
+                r.next_u64(),
+                gen_usize(r, 0, 40),
+                gen_usize(r, 0, 15),
+                gen_usize(r, 1, 30) as f64 / 10.0,
+            )
+        },
+        |&(seed, client, row, mag)| {
+            let (s, d, noise) = (16usize, 6usize, 0.1f64);
+            let alpha = 0.3;
+            let row = row.min(s - 1);
+            let iid = LazyShards::new(seed, s, d, noise);
+            let skew = synth::DataSpec {
+                dirichlet: Some(alpha),
+                shift: Some(mag),
+                corr_speed: false,
+            };
+            let lazy = LazyShards::with_data(seed, s, d, noise, skew, None);
+
+            // 1. the lazy teacher mixture reuses the eager proportions
+            let p = synth::dirichlet_proportions(
+                seed,
+                client,
+                alpha,
+                LAZY_CLUSTERS,
+            );
+            // strength 1.0 without corr:speed — blending is a no-op
+            if lazy.strength(client) != 1.0 {
+                return Err("strength != 1 without corr:speed".into());
+            }
+            let t = lazy.client_teacher(client);
+            if t.len() != d || t == lazy.teacher() {
+                return Err("client teacher not a cluster mixture".into());
+            }
+            let _ = p; // proportions validity pinned by prop 112
+
+            // 2. shift vectors: deterministic, length d, norm mag
+            let v = synth::shift_vector(seed, client, d, mag);
+            if v != synth::shift_vector(seed, client, d, mag) {
+                return Err("shift vector not deterministic".into());
+            }
+            let norm: f64 =
+                v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+            if (norm - mag).abs() > 1e-5 * (1.0 + mag) {
+                return Err(format!("||v|| {norm} != {mag}"));
+            }
+
+            // 3. the shifted row is exactly plain + 1.0 * v, feature by
+            // feature (same f32 op the implementation performs)
+            let shift_only = LazyShards::with_data(
+                seed,
+                s,
+                d,
+                noise,
+                synth::DataSpec {
+                    dirichlet: None,
+                    shift: Some(mag),
+                    corr_speed: false,
+                },
+                None,
+            );
+            let mut plain = vec![0.0f32; d];
+            let y_plain = iid.realize_row(client, row, &mut plain);
+            let mut shifted = vec![0.0f32; d];
+            let y_shifted = shift_only.realize_row(client, row, &mut shifted);
+            for j in 0..d {
+                if shifted[j] != plain[j] + 1.0f32 * v[j] {
+                    return Err(format!(
+                        "x[{j}] {} != plain {} + v {}",
+                        shifted[j], plain[j], v[j]
+                    ));
+                }
+            }
+            // labels predate the shift: y|x moves, y itself does not
+            if y_shifted != y_plain {
+                return Err("shift changed the label draw".into());
+            }
+
+            // 4. the eager partitioner is deterministic in the same state
+            let labels: Vec<usize> = (0..8 * s).map(|i| i % 4).collect();
+            let a = shard::partition_dirichlet(
+                seed, &labels, 4, 8, s, alpha, &[1.0; 8],
+            );
+            let b = shard::partition_dirichlet(
+                seed, &labels, 4, 8, s, alpha, &[1.0; 8],
+            );
+            if a.iter().zip(&b).any(|(x, y)| x.indices != y.indices) {
+                return Err("partition_dirichlet not deterministic".into());
             }
             Ok(())
         },
