@@ -1,0 +1,237 @@
+#!/usr/bin/env python3
+"""Validate a structured event log (and optionally a run summary).
+
+Usage: check_events.py <events.jsonl> [run_summary.json] [--trace trace.csv]
+
+Checks a `flanp-events/v1` event log written by `flanp run --events`
+(see docs/observability.md for the schema):
+
+  * the first line is the schema header {"schema": "flanp-events/v1"},
+  * every following line is a JSON object with the fields
+    round / stage / kind / client / detail, `kind` one of the known
+    wire names, `client` an integer or null,
+  * THE accounting invariant: in every round that prices a deadline,
+    the per-client events partition the cohort —
+    arrived + missed + cancelled + offline == the deadline event's
+    `cohort` field. Wait rounds carry no per-client events.
+
+With a `run_summary.json` argument it also checks the
+`flanp-summary/v1` summary: the per-kind event counters equal the
+event log's, and the span profiler reported a non-empty per-phase
+host-time breakdown (at least one phase with count > 0).
+
+With `--trace trace.csv` (the CSV `flanp run --out` writes) the
+per-round missed / cancelled event counts are compared against the
+trace's columns row by row — the two accounting paths must agree.
+
+Exit codes mirror check_bench.py: 0 pass, 1 fail, 2 usage.
+"""
+
+import json
+import sys
+
+EVENTS_SCHEMA = "flanp-events/v1"
+SUMMARY_SCHEMA = "flanp-summary/v1"
+
+KINDS = {
+    "cohort_selected", "cohort_padded", "cohort_reordered",
+    "deadline", "wait",
+    "arrived", "missed", "cancelled", "offline", "censored",
+    "rerank", "tier_promote", "tier_demote",
+    "stage", "lazy_round",
+}
+
+PER_CLIENT = {"arrived", "missed", "cancelled", "offline", "censored"}
+
+
+def parse_events(path, failures):
+    """Parse + field-check every line; return the event list."""
+    events = []
+    with open(path) as f:
+        lines = f.read().splitlines()
+    if not lines:
+        failures.append(f"{path}: empty file")
+        return events
+    try:
+        header = json.loads(lines[0])
+    except json.JSONDecodeError as e:
+        failures.append(f"{path}:1: bad header JSON: {e}")
+        return events
+    if header.get("schema") != EVENTS_SCHEMA:
+        failures.append(f"{path}:1: schema is {header.get('schema')!r}, "
+                        f"expected {EVENTS_SCHEMA!r}")
+    for lineno, line in enumerate(lines[1:], start=2):
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as e:
+            failures.append(f"{path}:{lineno}: bad JSON: {e}")
+            continue
+        ok = True
+        for field in ("round", "stage", "kind", "client", "detail"):
+            if field not in ev:
+                failures.append(f"{path}:{lineno}: missing field "
+                                f"{field!r}")
+                ok = False
+        if not ok:
+            continue
+        if ev["kind"] not in KINDS:
+            failures.append(f"{path}:{lineno}: unknown kind "
+                            f"{ev['kind']!r}")
+            continue
+        if not isinstance(ev["round"], int) or not isinstance(
+                ev["stage"], int):
+            failures.append(f"{path}:{lineno}: round/stage not integers")
+            continue
+        client_ok = ev["client"] is None or (
+            isinstance(ev["client"], int) and not isinstance(
+                ev["client"], bool))
+        if not client_ok:
+            failures.append(f"{path}:{lineno}: client is "
+                            f"{ev['client']!r}, expected int or null")
+            continue
+        if ev["kind"] in PER_CLIENT and ev["client"] is None:
+            failures.append(f"{path}:{lineno}: per-client kind "
+                            f"{ev['kind']!r} without a client id")
+            continue
+        events.append(ev)
+    return events
+
+
+def check_accounting(events, failures):
+    """arrived + missed + cancelled + offline == cohort per deadline
+    round; returns {round: (missed, cancelled)} for the trace check."""
+    rounds = {}
+    for ev in events:
+        t = rounds.setdefault(
+            ev["round"],
+            {"cohort": None, "arrived": 0, "missed": 0,
+             "cancelled": 0, "offline": 0},
+        )
+        if ev["kind"] == "deadline":
+            if t["cohort"] is not None:
+                failures.append(f"round {ev['round']}: two deadline "
+                                f"events")
+            t["cohort"] = ev["detail"].get("cohort")
+        elif ev["kind"] in ("arrived", "missed", "cancelled", "offline"):
+            t[ev["kind"]] += 1
+    deadline_rounds = 0
+    by_round = {}
+    for r in sorted(rounds):
+        t = rounds[r]
+        parts = (t["arrived"], t["missed"], t["cancelled"], t["offline"])
+        if t["cohort"] is None:
+            # a wait (or purely informational) round: nobody was priced,
+            # so nobody may be booked
+            if any(parts):
+                failures.append(f"round {r}: per-client events "
+                                f"{parts} without a deadline event")
+            continue
+        deadline_rounds += 1
+        if sum(parts) != t["cohort"]:
+            failures.append(
+                f"round {r}: arrived {t['arrived']} + missed "
+                f"{t['missed']} + cancelled {t['cancelled']} + offline "
+                f"{t['offline']} = {sum(parts)} != cohort {t['cohort']}")
+        by_round[r] = (t["missed"], t["cancelled"])
+    if deadline_rounds == 0:
+        failures.append("no deadline rounds in the event log")
+    print(f"  accounting: {deadline_rounds} deadline rounds balanced")
+    return by_round
+
+
+def check_trace(trace_path, by_round, failures):
+    """Per-round missed/cancelled columns of the trace CSV must equal
+    the event counts."""
+    with open(trace_path) as f:
+        lines = f.read().splitlines()
+    if not lines:
+        failures.append(f"{trace_path}: empty trace")
+        return
+    cols = lines[0].split(",")
+    try:
+        i_round = cols.index("round")
+        i_missed = cols.index("missed")
+        i_cancelled = cols.index("cancelled")
+    except ValueError as e:
+        failures.append(f"{trace_path}: missing column: {e}")
+        return
+    checked = 0
+    for line in lines[1:]:
+        row = line.split(",")
+        r = int(row[i_round])
+        if r not in by_round:
+            continue
+        want = (int(row[i_missed]), int(row[i_cancelled]))
+        got = by_round[r]
+        if got != want:
+            failures.append(f"round {r}: events (missed, cancelled) = "
+                            f"{got} but trace row says {want}")
+        checked += 1
+    print(f"  trace: {checked} deadline rounds cross-checked against "
+          f"{trace_path}")
+
+
+def check_summary(path, events, failures):
+    """Summary counters equal the log's; spans non-empty."""
+    with open(path) as f:
+        summary = json.load(f)
+    if summary.get("schema") != SUMMARY_SCHEMA:
+        failures.append(f"{path}: schema is {summary.get('schema')!r}, "
+                        f"expected {SUMMARY_SCHEMA!r}")
+        return
+    counts = {}
+    for ev in events:
+        counts[ev["kind"]] = counts.get(ev["kind"], 0) + 1
+    for kind, want in sorted(summary.get("events", {}).items()):
+        got = counts.get(kind, 0)
+        if int(want) != got:
+            failures.append(f"{path}: events.{kind} = {int(want)} but "
+                            f"the event log has {got}")
+    spans = summary.get("spans", {})
+    active = {name: s for name, s in spans.items()
+              if s.get("count", 0) > 0}
+    if not active:
+        failures.append(f"{path}: span profiler reported no per-phase "
+                        f"host time (empty spans)")
+    else:
+        breakdown = ", ".join(
+            f"{name} {s['total_us']:.0f}us/{s['count']:.0f}"
+            for name, s in sorted(active.items()))
+        print(f"  spans: {breakdown}")
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    trace_path = None
+    if "--trace" in args:
+        i = args.index("--trace")
+        try:
+            trace_path = args[i + 1]
+        except IndexError:
+            print(__doc__)
+            return 2
+        del args[i:i + 2]
+    if not 1 <= len(args) <= 2:
+        print(__doc__)
+        return 2
+
+    failures = []
+    events = parse_events(args[0], failures)
+    print(f"  parsed {len(events)} events from {args[0]}")
+    by_round = check_accounting(events, failures)
+    if trace_path is not None:
+        check_trace(trace_path, by_round, failures)
+    if len(args) == 2:
+        check_summary(args[1], events, failures)
+
+    if failures:
+        print("FAIL:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print("PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

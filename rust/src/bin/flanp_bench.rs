@@ -7,16 +7,22 @@
 
 use anyhow::{Context, Result};
 use flanp::coordinator::config::Subroutine;
-use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::coordinator::{
+    run_solver, run_solver_with, ExperimentConfig, SolverKind,
+};
 use flanp::data::DataSpec;
 use flanp::engine::Engine;
 use flanp::fed::{
-    DeadlineController, DeadlinePolicy, ForecastPolicy, LazyFleet, LazyShards,
-    PopulationSpec, SpeedModel, StreamingStats, SystemModel, TierPolicy, Trace,
-    VirtualClock,
+    observe, ClientFleet, DeadlineController, DeadlinePolicy, EventKind,
+    ForecastPolicy, JsonlObserver, LazyFleet, LazyShards, NoopObserver,
+    Observe, Observer, Phase, PopulationSpec, Span, SpeedModel,
+    StreamingStats, SystemModel, TierPolicy, Trace, VirtualClock,
+    LAZY_EVENT_SAMPLE,
 };
 use flanp::setup;
 use flanp::util::cli::Args;
+use flanp::util::log;
+use flanp::{log_error, log_info};
 use std::path::PathBuf;
 
 const USAGE: &str = "\
@@ -26,25 +32,42 @@ USAGE:
   flanp-bench <experiment> [options]
   flanp-bench help
 
-EXPERIMENTS:
+EXPERIMENTS (each row enumerates the shared flags it honors; flags not
+listed are accepted but have no effect on that experiment):
   fig1 .. fig9      the paper's figures (fig7 = table1, fig8 = table2)
+                    flags: --quick --engine --out --seed --speed
+                           --events --summary --log-level
+                           (--trials: fig7/fig8 only)
   table1 | table2   runtime ratio tables (effect of s / of N)
+                    flags: --quick --engine --out --seed --trials
+                           --speed --events --summary --log-level
   ablate            warm start / growth factor / subroutine ablations
+                    flags: --quick --engine --out --seed --speed
+                           --events --summary --log-level
   scenarios         FLANP vs FedGATE under time-varying heterogeneity
                     (static / jitter / markov / markov+drop)
+                    flags: --quick --engine --out --seed --events
+                           --summary --log-level (--speed rejected:
+                           the sweep runs its own scenario grid)
   async             FLANP vs FedGATE vs FedBuff vs deadline variants
                     under the same four scenarios (semi-sync + async
                     aggregation; see docs/scenarios.md)
+                    flags: --quick --engine --out --seed --events
+                           --summary --log-level (--speed rejected)
   tiers             tier-cached FLANP (tiers:K[:hysteresis:H]) vs
                     per-round individual re-ranking vs stage re-ranking
                     vs oracle ranking, plus the tifl solver, under the
                     same four scenarios — reports wall-clock AND the
                     re-rank/re-tier events each cadence pays
+                    flags: --quick --engine --out --seed --events
+                           --summary --log-level (--speed rejected)
   avail             FLANP (stage/tiered) vs FedGATE vs FedBuff vs TiFL
                     under correlated availability: i.i.d. (uncorrelated
                     control), diurnal rotation, clustered outages, and a
                     recorded Markov trace replayed via trace:FILE —
                     the Hard-et-al. \"winner flips\" sweep
+                    flags: --quick --engine --out --seed --events
+                           --summary --log-level (--speed rejected)
   select            predictive selection: plain quantile-deadline FLANP
                     vs over-selection (overselect:1.3, cancel stragglers
                     at the k-th arrival) vs availability forecasting
@@ -52,6 +75,8 @@ EXPERIMENTS:
                     clustered outages and a recorded trace replay —
                     reports wall-clock, cancelled work and misses (see
                     docs/scenarios.md §8)
+                    flags: --quick --engine --out --seed --events
+                           --summary --log-level (--speed rejected)
   noniid            statistical heterogeneity: FedAvg vs FLANP vs
                     ditto:1 under diurnal availability with
                     speed-correlated Dirichlet label skew + covariate
@@ -61,14 +86,22 @@ EXPERIMENTS:
                     held-out accuracy, i.e. whose personalized accuracy
                     collapses when the slow cohort is the shifted one
                     (see docs/scenarios.md §9)
+                    flags: --quick --engine --out --seed --events
+                           --summary --log-level (--speed rejected)
   scale             population-scale lazy-fleet sweep: O(cohort) rounds
                     over pop:N:avail:diurnal populations (10k -> 1M
                     clients; --quick: 10k -> 50k), measuring host
                     time-per-round flatness as N grows and writing
-                    <out>/scale.json (schema flanp-scale/v1; round
-                    count pinned by FLANP_BENCH_ITERS, default 200) —
-                    see docs/scale.md
+                    <out>/scale.json (schema flanp-scale/v1, including
+                    a per-phase host-time spans object; round count
+                    pinned by FLANP_BENCH_ITERS, default 200) — see
+                    docs/scale.md
+                    flags: --quick --out --seed --events --log-level
+                           (--speed rejected; --engine/--trials/
+                           --summary unused — spans land in scale.json)
   all               every figure/table/ablation above
+                    flags: --quick --engine --out --seed --trials
+                           --speed --events --summary --log-level
 
 OPTIONS:
   --quick           reduced sizes (CI-scale; shapes still hold)
@@ -76,8 +109,18 @@ OPTIONS:
   --out DIR         CSV trace directory     [results]
   --seed N          PRNG seed               [1]
   --trials N        seeds averaged for tables [3]
+  --events          write a structured event log per run (JSONL, schema
+                    flanp-events/v1) next to its CSV trace in --out:
+                    <tag>_<algo>.events.jsonl (scale: scale.events.jsonl
+                    with sampled lazy_round events)
+  --summary         write a run summary per run (JSON, schema
+                    flanp-summary/v1) next to its CSV trace in --out:
+                    <tag>_<algo>.summary.json — event totals, estimator-
+                    error quantiles, per-phase host-time spans
+  --log-level L     error | warn | info | debug [info] (FLANP_LOG env
+                    var is the fallback; the flag wins)
   --speed SPEC      override every experiment's system-heterogeneity
-                    scenario (not valid for the scenarios/async sweeps,
+                    scenario (not valid for the scenario-grid sweeps,
                     which run their own scenario grids)
                     grammar: [drop:P:][static:|jitter:SIGMA:|markov:F:PS:PR:]BASE
                     prefixes (composable, dropout first):
@@ -119,11 +162,16 @@ struct BenchOpts {
     trials: usize,
     /// global scenario override (--speed)
     system: Option<SystemModel>,
+    /// per-run event-log sidecars (--events)
+    events: bool,
+    /// per-run summary sidecars (--summary)
+    summary: bool,
 }
 
 fn main() {
+    log::init_from_env();
     if let Err(e) = real_main() {
-        eprintln!("error: {e:#}");
+        log_error!("error: {e:#}");
         std::process::exit(1);
     }
 }
@@ -149,6 +197,9 @@ fn real_main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
+    if let Some(l) = args.flag_opt("log-level") {
+        log::set_level(log::Level::parse(&l).map_err(|e| anyhow::anyhow!(e))?);
+    }
     let opts = BenchOpts {
         quick: args.switch("quick"),
         engine: args.flag_str("engine", "native"),
@@ -160,6 +211,8 @@ fn real_main() -> Result<()> {
             .map(|s| SystemModel::parse(&s))
             .transpose()
             .map_err(|e| anyhow::anyhow!(e))?,
+        events: args.switch("events"),
+        summary: args.switch("summary"),
     };
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
     std::fs::create_dir_all(&opts.out)?;
@@ -205,6 +258,51 @@ fn real_main() -> Result<()> {
 // shared machinery
 // ---------------------------------------------------------------------------
 
+/// Run the solver with the optional per-run observability sidecars
+/// (`--events` / `--summary`): `<stem>.events.jsonl` and
+/// `<stem>.summary.json` land next to the run's CSV trace in `--out`.
+/// With neither switch this is exactly `run_solver` — the disabled
+/// observer keeps every benchmark number bit-identical.
+fn run_observed(
+    opts: &BenchOpts,
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    cfg: &ExperimentConfig,
+    stem: &str,
+) -> Result<Trace> {
+    if !opts.events && !opts.summary {
+        return run_solver_with(engine, fleet, cfg, &mut Observe::off());
+    }
+    let sink: Box<dyn Observer> = if opts.events {
+        let p = opts.out.join(format!("{stem}.events.jsonl"));
+        Box::new(
+            JsonlObserver::create(&p)
+                .with_context(|| format!("creating event log {}", p.display()))?,
+        )
+    } else {
+        Box::new(NoopObserver)
+    };
+    if opts.summary {
+        observe::reset_spans();
+        observe::enable_profiling(true);
+    }
+    let mut obs = Observe::new(sink, opts.summary);
+    let t0 = std::time::Instant::now();
+    let trace = run_solver_with(engine, fleet, cfg, &mut obs)?;
+    if opts.summary {
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let p = opts.out.join(format!("{stem}.summary.json"));
+        std::fs::write(&p, obs.summary_json(&trace, wall_ms).to_string() + "\n")
+            .with_context(|| format!("writing run summary {}", p.display()))?;
+    }
+    Ok(trace)
+}
+
+/// `"ditto:1"` -> `"ditto-1"`: keep sidecar/CSV names shell-friendly.
+fn file_stem(tag: &str, algo: &str) -> String {
+    format!("{tag}_{}", algo.replace(':', "-"))
+}
+
 /// Run one config and return its trace (building engine + fleet fresh so
 /// every algorithm sees identical data and speeds for a given seed). A
 /// `--speed` override replaces the experiment's scenario wholesale.
@@ -221,9 +319,10 @@ fn run_one(opts: &BenchOpts, cfg: &ExperimentConfig, tag: &str) -> Result<Trace>
     )?;
     let mut fleet = setup::build_fleet(engine.meta(), cfg, 0.1, 0.0)?;
     let t0 = std::time::Instant::now();
-    let trace = run_solver(engine.as_ref(), &mut fleet, cfg)?;
+    let stem = file_stem(tag, &cfg.solver.name());
+    let trace = run_observed(opts, engine.as_ref(), &mut fleet, cfg, &stem)?;
     let last = trace.last().context("empty trace")?;
-    println!(
+    log_info!(
         "  {:<16} rounds={:<5} time={:<12.1} loss={:<10.6} dist={:<9.4} \
          acc={:<7.4} finished={} [{:.2?}]",
         trace.algo,
@@ -255,18 +354,18 @@ fn print_speedups(base: &str, traces: &[(String, &Trace)], target: f64, by_dist:
     let metric = if by_dist { "dist" } else { "loss" };
     match base_time {
         Some(bt) => {
-            println!("  -- time to {metric} <= {target:.4} --");
+            log_info!("  -- time to {metric} <= {target:.4} --");
             for (name, t) in traces {
                 match time_of(t) {
-                    Some(tt) => println!(
+                    Some(tt) => log_info!(
                         "  {name:<16} {tt:>12.1}   {:>5.2}x vs {base}",
                         bt / tt
                     ),
-                    None => println!("  {name:<16} {:>12}   (target not reached)", "-"),
+                    None => log_info!("  {name:<16} {:>12}   (target not reached)", "-"),
                 }
             }
         }
-        None => println!("  (baseline {base} did not reach the target)"),
+        None => log_info!("  (baseline {base} did not reach the target)"),
     }
 }
 
@@ -316,7 +415,7 @@ fn time_budget(rounds: usize, tau: usize) -> f64 {
 // ---------------------------------------------------------------------------
 
 fn fig1(opts: &BenchOpts) -> Result<()> {
-    println!("=== Figure 1: logistic regression, MNIST-like (N=50, s=1200) ===");
+    log_info!("=== Figure 1: logistic regression, MNIST-like (N=50, s=1200) ===");
     let (n, s, rounds) = if opts.quick { (10, 200, 40) } else { (50, 1200, 120) };
     let mut traces = Vec::new();
     for solver in [SolverKind::Flanp, SolverKind::FedGate, SolverKind::FedAvg] {
@@ -348,7 +447,7 @@ fn fig1(opts: &BenchOpts) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn fig2(opts: &BenchOpts) -> Result<()> {
-    println!("=== Figure 2: linear regression, synthetic (N=100, 10k samples) ===");
+    log_info!("=== Figure 2: linear regression, synthetic (N=100, 10k samples) ===");
     let (n, s, rounds) = if opts.quick { (20, 50, 150) } else { (100, 100, 600) };
     let mut traces = Vec::new();
     for solver in [SolverKind::Flanp, SolverKind::FedGate, SolverKind::FedAvg] {
@@ -381,7 +480,7 @@ fn fig34(opts: &BenchOpts, cifar: bool) -> Result<()> {
     } else {
         ("Figure 3: MLP, MNIST-like (N=20)", "mlp_d784_c10_h128_h64", 0.05f32)
     };
-    println!("=== {label} ===");
+    log_info!("=== {label} ===");
     let tag = if cifar { "fig4" } else { "fig3" };
     let (n, s, rounds) = if opts.quick { (8, 100, 12) } else { (20, 500, 60) };
     let mut traces = Vec::new();
@@ -419,7 +518,7 @@ fn fig34(opts: &BenchOpts, cifar: bool) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn fig5(opts: &BenchOpts) -> Result<()> {
-    println!("=== Figure 5: MLP, MNIST-like, exponential speeds (N=20) ===");
+    log_info!("=== Figure 5: MLP, MNIST-like, exponential speeds (N=20) ===");
     let (n, s, rounds) = if opts.quick { (8, 100, 12) } else { (20, 500, 60) };
     let mut traces = Vec::new();
     for solver in [
@@ -460,7 +559,7 @@ fn fig6(opts: &BenchOpts, fastest: bool) -> Result<()> {
     } else {
         "Figure 6a: FLANP vs FedGATE random-k"
     };
-    println!("=== {label} (N=50) ===");
+    log_info!("=== {label} (N=50) ===");
     let tag = if fastest { "fig6b" } else { "fig6a" };
     let (n, s, rounds) = if opts.quick { (10, 100, 20) } else { (50, 500, 80) };
     let ks = if opts.quick { vec![2, 5] } else { vec![5, 10, 20] };
@@ -492,7 +591,7 @@ fn fig6(opts: &BenchOpts, fastest: bool) -> Result<()> {
     let flanp_final = traces[0].1.last().unwrap().loss_full;
     for (name, t) in &traces[1..] {
         let fin = t.last().unwrap().loss_full;
-        println!(
+        log_info!(
             "  {name:<16} final loss {fin:.6} vs flanp {flanp_final:.6} ({})",
             if fin > flanp_final { "saturates above flanp" } else { "below" }
         );
@@ -540,20 +639,20 @@ fn runtime_pair(opts: &BenchOpts, n: usize, s: usize, tag: &str) -> Result<(f64,
 }
 
 fn table1(opts: &BenchOpts) -> Result<()> {
-    println!("=== Figure 7 / Table 1: effect of s (linreg, N=50, exp speeds) ===");
+    log_info!("=== Figure 7 / Table 1: effect of s (linreg, N=50, exp speeds) ===");
     let n = if opts.quick { 16 } else { 50 };
     let svals = if opts.quick { vec![20, 200] } else { vec![20, 200, 2000] };
-    println!("  {:>6} {:>14} {:>14} {:>10}", "s", "T_FLANP", "T_FedGATE", "ratio");
+    log_info!("  {:>6} {:>14} {:>14} {:>10}", "s", "T_FLANP", "T_FedGATE", "ratio");
     let mut ratios = Vec::new();
     for s in svals {
         let (tf, tg) = runtime_pair(opts, n, s, "table1")?;
         let ratio = tf / tg;
         ratios.push(ratio);
-        println!("  {s:>6} {tf:>14.1} {tg:>14.1} {ratio:>10.2}");
+        log_info!("  {s:>6} {tf:>14.1} {tg:>14.1} {ratio:>10.2}");
     }
     // paper's shape: ratio decreases as s grows (0.74 -> 0.43 -> 0.35)
     let monotone = ratios.windows(2).all(|w| w[1] <= w[0] * 1.15);
-    println!(
+    log_info!(
         "  ratio trend with s: {:?} — {}",
         ratios.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>(),
         if monotone { "decreasing (matches Table 1)" } else { "NOT decreasing" }
@@ -566,18 +665,18 @@ fn table1(opts: &BenchOpts) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn table2(opts: &BenchOpts) -> Result<()> {
-    println!("=== Figure 8 / Table 2: effect of N (linreg, s=100, exp speeds) ===");
+    log_info!("=== Figure 8 / Table 2: effect of N (linreg, s=100, exp speeds) ===");
     let nvals = if opts.quick { vec![8, 64] } else { vec![10, 100, 1000] };
-    println!("  {:>6} {:>14} {:>14} {:>10}", "N", "T_FLANP", "T_FedGATE", "ratio");
+    log_info!("  {:>6} {:>14} {:>14} {:>10}", "N", "T_FLANP", "T_FedGATE", "ratio");
     let mut ratios = Vec::new();
     for n in nvals {
         let (tf, tg) = runtime_pair(opts, n, 100, "table2")?;
         let ratio = tf / tg;
         ratios.push(ratio);
-        println!("  {n:>6} {tf:>14.1} {tg:>14.1} {ratio:>10.2}");
+        log_info!("  {n:>6} {tf:>14.1} {tg:>14.1} {ratio:>10.2}");
     }
     let monotone = ratios.windows(2).all(|w| w[1] <= w[0] * 1.15);
-    println!(
+    log_info!(
         "  ratio trend with N: {:?} — {}",
         ratios.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>(),
         if monotone { "decreasing (matches Table 2)" } else { "NOT decreasing" }
@@ -590,7 +689,7 @@ fn table2(opts: &BenchOpts) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn fig9(opts: &BenchOpts) -> Result<()> {
-    println!("=== Figure 9: FLANP with heuristic parameter tuning (MLP, N=20) ===");
+    log_info!("=== Figure 9: FLANP with heuristic parameter tuning (MLP, N=20) ===");
     let (n, s, rounds) = if opts.quick { (8, 100, 15) } else { (20, 500, 60) };
     let mut traces = Vec::new();
     for solver in [SolverKind::Flanp, SolverKind::FlanpHeuristic, SolverKind::FedGate] {
@@ -610,7 +709,7 @@ fn fig9(opts: &BenchOpts) -> Result<()> {
     // heuristic should track oracle: final losses within a factor
     let oracle = traces[0].1.last().unwrap().loss_full;
     let heur = traces[1].1.last().unwrap().loss_full;
-    println!(
+    log_info!(
         "  heuristic final loss {heur:.6} vs oracle {oracle:.6} \
          (ratio {:.2} — {})",
         heur / oracle,
@@ -631,7 +730,7 @@ fn scenarios(opts: &BenchOpts) -> Result<()> {
         opts.system.is_none(),
         "--speed conflicts with the scenarios sweep (it runs a fixed scenario grid)"
     );
-    println!("=== Scenarios: FLANP (online estimation) vs FedGATE under drift ===");
+    log_info!("=== Scenarios: FLANP (online estimation) vs FedGATE under drift ===");
     let (n, s, rounds) = if opts.quick { (12, 50, 800) } else { (32, 100, 3000) };
     let specs = [
         ("static", "uniform:50:500"),
@@ -639,7 +738,7 @@ fn scenarios(opts: &BenchOpts) -> Result<()> {
         ("markov", "markov:4:0.1:0.5:uniform:50:500"),
         ("markov+drop", "drop:0.05:markov:4:0.1:0.5:uniform:50:500"),
     ];
-    println!(
+    log_info!(
         "  {:>14} {:>14} {:>14} {:>10} {:>15}",
         "scenario", "T_FLANP", "T_FedGATE", "ratio", "dropped(f/g)"
     );
@@ -671,7 +770,7 @@ fn scenarios(opts: &BenchOpts) -> Result<()> {
             times[slot] = trace.total_time;
             dropped[slot] = trace.rounds.iter().map(|r| r.dropped).sum::<usize>();
         }
-        println!(
+        log_info!(
             "  {label:>14} {:>14.1} {:>14.1} {:>10.2} {:>15}",
             times[0],
             times[1],
@@ -694,7 +793,7 @@ fn async_sweep(opts: &BenchOpts) -> Result<()> {
         opts.system.is_none(),
         "--speed conflicts with the async sweep (it runs a fixed scenario grid)"
     );
-    println!(
+    log_info!(
         "=== Async/semi-sync: FLANP vs FedGATE vs FedBuff vs deadline variants ==="
     );
     let (n, s, rounds) = if opts.quick { (12, 50, 1200) } else { (32, 100, 4000) };
@@ -730,7 +829,7 @@ fn async_sweep(opts: &BenchOpts) -> Result<()> {
     ];
     for (label, spec) in specs {
         let system = SystemModel::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
-        println!("  -- scenario {label} ({spec}) --");
+        log_info!("  -- scenario {label} ({spec}) --");
         let mut sync_time = None;
         for (name, solver, ddl) in &variants {
             let mut cfg = ExperimentConfig::new(solver.clone(), "linreg_d25", n, s);
@@ -761,7 +860,7 @@ fn async_sweep(opts: &BenchOpts) -> Result<()> {
             let speedup = sync_time
                 .map(|t0| format!("{:>5.2}x vs flanp-sync", t0 / trace.total_time))
                 .unwrap_or_default();
-            println!(
+            log_info!(
                 "  {name:<14} time={:<12.1} rounds={:<5} missed={missed:<5} \
                  dropped={dropped:<5} finished={} {speedup}",
                 trace.total_time,
@@ -785,7 +884,7 @@ fn tiers_sweep(opts: &BenchOpts) -> Result<()> {
         opts.system.is_none(),
         "--speed conflicts with the tiers sweep (it runs a fixed scenario grid)"
     );
-    println!("=== Tiers: cached tier scheduling vs re-ranking cadences ===");
+    log_info!("=== Tiers: cached tier scheduling vs re-ranking cadences ===");
     let (n, s, rounds) = if opts.quick { (12, 50, 800) } else { (32, 100, 3000) };
     let policy = TierPolicy::parse("tiers:4").map_err(|e| anyhow::anyhow!(e))?;
     let specs = [
@@ -806,7 +905,7 @@ fn tiers_sweep(opts: &BenchOpts) -> Result<()> {
     ];
     for (label, spec) in specs {
         let system = SystemModel::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
-        println!("  -- scenario {label} ({spec}) --");
+        log_info!("  -- scenario {label} ({spec}) --");
         let mut perround_time = None;
         for (name, solver, tiered, perround, estimated) in &variants {
             let mut cfg = ExperimentConfig::new(solver.clone(), "linreg_d25", n, s);
@@ -834,7 +933,7 @@ fn tiers_sweep(opts: &BenchOpts) -> Result<()> {
             let vs = perround_time
                 .map(|t0| format!("{:>5.2}x vs perround", t0 / trace.total_time))
                 .unwrap_or_default();
-            println!(
+            log_info!(
                 "  {name:<15} time={:<12.1} rounds={:<5} reranks={:<5} \
                  finished={} {vs}",
                 trace.total_time,
@@ -859,7 +958,7 @@ fn avail_sweep(opts: &BenchOpts) -> Result<()> {
         opts.system.is_none(),
         "--speed conflicts with the avail sweep (it runs a fixed scenario grid)"
     );
-    println!(
+    log_info!(
         "=== Avail: correlated availability vs the uncorrelated control ==="
     );
     let (n, s, rounds) = if opts.quick { (12, 50, 1500) } else { (32, 100, 6000) };
@@ -892,7 +991,7 @@ fn avail_sweep(opts: &BenchOpts) -> Result<()> {
         fleet
             .write_recorded_trace(&recorded)
             .map_err(|e| anyhow::anyhow!(e))?;
-        println!(
+        log_info!(
             "  recorded {} realized rounds to {}",
             fleet.recorded_trace().map_or(0, |d| d.num_rounds()),
             recorded.display()
@@ -919,7 +1018,7 @@ fn avail_sweep(opts: &BenchOpts) -> Result<()> {
     for (label, spec) in &specs {
         let system =
             SystemModel::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
-        println!("  -- scenario {label} ({spec}) --");
+        log_info!("  -- scenario {label} ({spec}) --");
         for (name, solver, tiered) in &variants {
             let mut cfg =
                 ExperimentConfig::new(solver.clone(), "linreg_d25", n, s);
@@ -943,7 +1042,7 @@ fn avail_sweep(opts: &BenchOpts) -> Result<()> {
             cfg.eval_rows = 500;
             let trace = run_one(opts, &cfg, &format!("avail_{label}_{name}"))?;
             let min_avail = trace.min_available().unwrap_or(0);
-            println!(
+            log_info!(
                 "  {name:<14} time={:<12.1} rounds={:<5} min-avail={min_avail:<3} \
                  finished={}",
                 trace.total_time,
@@ -952,7 +1051,7 @@ fn avail_sweep(opts: &BenchOpts) -> Result<()> {
             );
         }
     }
-    println!(
+    log_info!(
         "  (the ranking under diurnal vs iid is the Hard-et-al. effect: \
          correlated availability changes the winner)"
     );
@@ -972,7 +1071,7 @@ fn select_sweep(opts: &BenchOpts) -> Result<()> {
         opts.system.is_none(),
         "--speed conflicts with the select sweep (it runs a fixed scenario grid)"
     );
-    println!(
+    log_info!(
         "=== Select: over-selection + availability forecasting vs plain \
          quantile-deadline FLANP ==="
     );
@@ -1007,7 +1106,7 @@ fn select_sweep(opts: &BenchOpts) -> Result<()> {
         fleet
             .write_recorded_trace(&recorded)
             .map_err(|e| anyhow::anyhow!(e))?;
-        println!(
+        log_info!(
             "  recorded {} realized rounds to {}",
             fleet.recorded_trace().map_or(0, |d| d.num_rounds()),
             recorded.display()
@@ -1036,7 +1135,7 @@ fn select_sweep(opts: &BenchOpts) -> Result<()> {
     for (label, spec) in &specs {
         let system =
             SystemModel::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
-        println!("  -- scenario {label} ({spec}) --");
+        log_info!("  -- scenario {label} ({spec}) --");
         let mut plain_time = None;
         for (name, overselect, forecast) in &variants {
             let mut cfg =
@@ -1061,7 +1160,7 @@ fn select_sweep(opts: &BenchOpts) -> Result<()> {
             let vs = plain_time
                 .map(|t0| format!("{:>5.2}x vs plain", t0 / trace.total_time))
                 .unwrap_or_default();
-            println!(
+            log_info!(
                 "  {name:<14} time={:<12.1} rounds={:<5} cancelled={:<5} \
                  missed={:<5} finished={} {vs}",
                 trace.total_time,
@@ -1072,7 +1171,7 @@ fn select_sweep(opts: &BenchOpts) -> Result<()> {
             );
         }
     }
-    println!(
+    log_info!(
         "  (over-selection trades cancelled work for wall-clock; the \
          cancelled column is the price — see docs/scenarios.md §8)"
     );
@@ -1098,7 +1197,7 @@ fn noniid_sweep(opts: &BenchOpts) -> Result<()> {
         opts.system.is_none(),
         "--speed conflicts with the noniid sweep (it runs a fixed scenario grid)"
     );
-    println!(
+    log_info!(
         "=== Non-IID: FedAvg vs FLANP vs ditto under diurnal availability \
          + speed-correlated skew ==="
     );
@@ -1119,7 +1218,7 @@ fn noniid_sweep(opts: &BenchOpts) -> Result<()> {
         SolverKind::Ditto { lambda: 1.0 },
     ];
     for (label, data) in &scenarios {
-        println!("  -- scenario {label} ({}) --", data.spec());
+        log_info!("  -- scenario {label} ({}) --", data.spec());
         let mut worst: Vec<(String, f64)> = Vec::new();
         for solver in &solvers {
             let mut cfg =
@@ -1146,7 +1245,7 @@ fn noniid_sweep(opts: &BenchOpts) -> Result<()> {
             worst.iter().find(|(n2, _)| n2 == name).map(|(_, a)| *a).unwrap()
         };
         let (fa, fl, di) = (by("fedavg"), by("flanp"), by("ditto:1"));
-        println!(
+        log_info!(
             "  worst-decile acc: fedavg={fa:.3} flanp={fl:.3} ditto={di:.3} \
              — {}",
             if *label == "skewed" {
@@ -1187,9 +1286,10 @@ fn run_noniid_one(
         fleet.set_holdout(engine.meta().batch);
     }
     let t0 = std::time::Instant::now();
-    let trace = run_solver(engine.as_ref(), &mut fleet, cfg)?;
+    let stem = file_stem(tag, &cfg.solver.name());
+    let trace = run_observed(opts, engine.as_ref(), &mut fleet, cfg, &stem)?;
     let last = trace.last().context("empty trace")?;
-    println!(
+    log_info!(
         "  {:<12} rounds={:<5} time={:<12.1} loss={:<10.6} acc(mean)={:<7.4} \
          acc(wd)={:<7.4} finished={} [{:.2?}]",
         trace.algo,
@@ -1241,7 +1341,7 @@ fn scale_sweep(opts: &BenchOpts) -> Result<()> {
     };
     let (cohort_size, tau, s, d, batch) = (256usize, 10usize, 64usize, 32usize, 16usize);
     let eta = 0.01f32;
-    println!(
+    log_info!(
         "=== Scale: O(cohort) rounds over lazy populations \
          (cohort={cohort_size}, rounds={rounds}) ==="
     );
@@ -1249,8 +1349,26 @@ fn scale_sweep(opts: &BenchOpts) -> Result<()> {
     let ddl = DeadlineController::new(
         DeadlinePolicy::parse("quantile:0.9").map_err(|e| anyhow::anyhow!(e))?,
     );
+    // host-side span profiler: the per-phase breakdown lands in
+    // scale.json's "spans" object (run-wide, summed over populations)
+    observe::reset_spans();
+    observe::enable_profiling(true);
+    // --events: one sidecar for the whole sweep, lazy_round events
+    // sampled every LAZY_EVENT_SAMPLE rounds (stage = population index)
+    let mut obs = if opts.events {
+        let p = opts.out.join("scale.events.jsonl");
+        Observe::new(
+            Box::new(JsonlObserver::create(&p).with_context(|| {
+                format!("creating event log {}", p.display())
+            })?),
+            false,
+        )
+    } else {
+        Observe::off()
+    };
     let mut rows = Vec::new();
-    for &n in populations {
+    for (pi, &n) in populations.iter().enumerate() {
+        obs.set_stage(pi);
         let spec = PopulationSpec::parse(&format!(
             "pop:{n}:avail:diurnal:40000:0.25:1:jitter:0.2:uniform:50:500"
         ))
@@ -1267,10 +1385,17 @@ fn scale_sweep(opts: &BenchOpts) -> Result<()> {
         let mut yb = vec![0.0f32; batch];
         let mut per_round = StreamingStats::new();
         let mut waits = 0usize;
-        for _ in 0..rounds {
+        for r in 0..rounds {
             let r0 = std::time::Instant::now();
-            let cohort = fleet.cohort(cohort_size);
-            let cond = fleet.realize_cohort(&cohort, clock.now());
+            let cond = {
+                let _sp = Span::enter(Phase::Select);
+                let cohort = fleet.cohort(cohort_size);
+                fleet.realize_cohort(&cohort, clock.now())
+            };
+            obs.set_round(r);
+            if obs.enabled() && r % LAZY_EVENT_SAMPLE == 0 {
+                obs.emit(EventKind::LazyRound, None, cond.event_detail());
+            }
             let present = cond.online_positions();
             if present.is_empty() {
                 // mirror deadline_round: diurnal outages wake at the
@@ -1295,6 +1420,7 @@ fn scale_sweep(opts: &BenchOpts) -> Result<()> {
                 per_round.push(r0.elapsed().as_secs_f64() * 1e6);
                 continue;
             }
+            let sp_agg = Span::enter(Phase::Aggregate);
             let deadline = ddl.round_deadline_sketch(fleet.speed_sketch(), tau);
             let mut ids = Vec::with_capacity(present.len());
             let mut times = Vec::with_capacity(present.len());
@@ -1319,7 +1445,9 @@ fn scale_sweep(opts: &BenchOpts) -> Result<()> {
                 dropped,
                 late.len(),
             );
+            drop(sp_agg);
             if !arrived.is_empty() {
+                let _sp = Span::enter(Phase::LocalRounds);
                 grad.iter_mut().for_each(|g| *g = 0.0);
                 for &k in &arrived {
                     shards.fill_minibatch(cond.ids[k], batch, &mut xb, &mut yb);
@@ -1341,11 +1469,14 @@ fn scale_sweep(opts: &BenchOpts) -> Result<()> {
                     *wi -= scale * g;
                 }
             }
-            for &k in &arrived {
-                fleet.observe(cond.ids[k], cond.times[k]);
-            }
-            for &k in &late {
-                fleet.observe_censored(cond.ids[k], deadline / tau as f64);
+            {
+                let _sp = Span::enter(Phase::Bookkeeping);
+                for &k in &arrived {
+                    fleet.observe(cond.ids[k], cond.times[k]);
+                }
+                for &k in &late {
+                    fleet.observe_censored(cond.ids[k], deadline / tau as f64);
+                }
             }
             per_round.push(r0.elapsed().as_secs_f64() * 1e6);
         }
@@ -1355,7 +1486,7 @@ fn scale_sweep(opts: &BenchOpts) -> Result<()> {
             .map(|(a, b)| ((a - b) as f64).powi(2))
             .sum::<f64>()
             .sqrt();
-        println!(
+        log_info!(
             "  n={n:<9} setup={setup_ms:>8.1}ms round_us mean={:<8.1} \
              min={:<8.1} max={:<8.1} waits={waits:<4} vtime={:<12.1} \
              dist={dist:.4}",
@@ -1373,7 +1504,7 @@ fn scale_sweep(opts: &BenchOpts) -> Result<()> {
     let ratio = means.iter().fold(f64::MIN, |a, &b| a.max(b))
         / means.iter().fold(f64::MAX, |a, &b| a.min(b));
     let flat = ratio <= 2.0;
-    println!(
+    log_info!(
         "  round cost {} -> {} clients: {ratio:.2}x {}",
         populations.first().unwrap(),
         populations.last().unwrap(),
@@ -1390,6 +1521,16 @@ fn scale_sweep(opts: &BenchOpts) -> Result<()> {
     json.push_str(&format!("  \"cohort\": {cohort_size},\n"));
     json.push_str(&format!("  \"flat_within_2x\": {flat},\n"));
     json.push_str(&format!("  \"ratio\": {ratio},\n"));
+    // host-side per-phase breakdown, summed across all populations
+    json.push_str("  \"spans\": {\n");
+    let report = observe::span_report();
+    for (j, (name, total_us, count)) in report.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{name}\": {{\"total_us\": {total_us}, \"count\": {count}}}{}\n",
+            if j + 1 < report.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  },\n");
     json.push_str("  \"populations\": [\n");
     for (j, (n, setup_ms, st, waits, vtime, dist)) in rows.iter().enumerate() {
         json.push_str(&format!(
@@ -1406,7 +1547,10 @@ fn scale_sweep(opts: &BenchOpts) -> Result<()> {
     json.push_str("  ]\n}\n");
     let path = opts.out.join("scale.json");
     std::fs::write(&path, json)?;
-    println!("  wrote {}", path.display());
+    log_info!("  wrote {}", path.display());
+    if opts.events {
+        log_info!("  wrote {}", opts.out.join("scale.events.jsonl").display());
+    }
     Ok(())
 }
 
@@ -1415,7 +1559,7 @@ fn scale_sweep(opts: &BenchOpts) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn ablate(opts: &BenchOpts) -> Result<()> {
-    println!("=== Ablations: warm start / growth factor / subroutine (linreg, N=64) ===");
+    log_info!("=== Ablations: warm start / growth factor / subroutine (linreg, N=64) ===");
     let n = if opts.quick { 16 } else { 64 };
     let s = 100;
     let base = || {
@@ -1463,9 +1607,12 @@ fn ablate(opts: &BenchOpts) -> Result<()> {
         let engine = setup::build_engine(
             &opts.engine, &cfg.model, &setup::default_artifacts_dir())?;
         let mut fleet = setup::build_fleet(engine.meta(), &cfg, 0.1, 0.0)?;
-        let trace = run_solver(engine.as_ref(), &mut fleet, &cfg)?;
+        let stem =
+            format!("ablate_{}", label.replace([' ', ',', '(', ')'], "_"));
+        let trace =
+            run_observed(opts, engine.as_ref(), &mut fleet, &cfg, &stem)?;
         let last = trace.last().context("empty trace")?;
-        println!(
+        log_info!(
             "  {label:<24} stages={:<2} rounds={:<5} time={:<12.1} dist={:<9.4} finished={}",
             trace.stage_transitions.len().max(1),
             last.round,
@@ -1480,4 +1627,60 @@ fn ablate(opts: &BenchOpts) -> Result<()> {
         trace.write_csv(&path)?;
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Help snapshot — pins the per-subcommand flag enumeration in USAGE
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::USAGE;
+    use std::path::PathBuf;
+
+    /// Byte-compare (or bless) the USAGE text against the committed
+    /// snapshot, so the per-subcommand `flags:` enumeration cannot
+    /// silently drift from the options a subcommand actually honors.
+    /// Same blessing protocol as `tests/golden.rs`: a missing fixture
+    /// self-blesses, `FLANP_BLESS=1` regenerates after an intended
+    /// help-text change.
+    #[test]
+    fn usage_snapshot() {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/fixtures/help/flanp_bench_usage.txt");
+        let bless = std::env::var("FLANP_BLESS").is_ok_and(|v| v == "1");
+        if bless || !path.exists() {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, USAGE).unwrap();
+            if !bless {
+                eprintln!(
+                    "help snapshot: blessed missing fixture {} — commit it",
+                    path.display()
+                );
+            }
+            return;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        if USAGE != want {
+            let (mut line, mut a, mut b) = (0usize, "", "");
+            for (i, (g, w)) in USAGE.lines().zip(want.lines()).enumerate() {
+                if g != w {
+                    (line, a, b) = (i + 1, g, w);
+                    break;
+                }
+            }
+            if line == 0 {
+                line = USAGE.lines().count().min(want.lines().count()) + 1;
+                (a, b) = ("<end>", "<end>");
+            }
+            panic!(
+                "flanp-bench USAGE drifted from its snapshot at line \
+                 {line}:\n  got:  {a}\n  want: {b}\nIf the help-text \
+                 change is intended (e.g. a subcommand gained a flag), \
+                 regenerate with FLANP_BLESS=1 and commit the fixture \
+                 diff — and keep the per-subcommand flags: rows in sync \
+                 with what each experiment parses."
+            );
+        }
+    }
 }

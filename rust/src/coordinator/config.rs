@@ -186,6 +186,19 @@ pub struct ExperimentConfig {
     /// `ClientFleet::write_recorded_trace` / `flanp run --record-trace`
     /// turn the run into a CSV replayable via `--speed trace:FILE`.
     pub record_trace: bool,
+    /// Structured event-log destination (`fed::observe`, schema
+    /// `flanp-events/v1`): `flanp run --events PATH`. `None` (the
+    /// default) keeps every run bit-identical to the pre-observability
+    /// behavior — the hot path takes a single disabled-observer branch.
+    pub events: Option<String>,
+    /// Run-summary destination (`fed::observe`, schema
+    /// `flanp-summary/v1`): `flanp run --summary PATH`. Enables the
+    /// metrics registry and the host-side span profiler.
+    pub summary: Option<String>,
+    /// Bin log verbosity (`util::log`; `--log-level` /
+    /// `FLANP_LOG`). [`crate::util::log::Level::Info`] reproduces the
+    /// historical stdout byte-for-byte.
+    pub log_level: crate::util::log::Level,
     pub seed: u64,
     pub max_rounds: usize,
     /// virtual-time budget (0 = unlimited)
@@ -246,6 +259,9 @@ impl ExperimentConfig {
             forecast: None,
             ewma_alpha: crate::fed::DEFAULT_EWMA_ALPHA,
             record_trace: false,
+            events: None,
+            summary: None,
+            log_level: crate::util::log::Level::Info,
             seed: 1,
             max_rounds: 400,
             max_time: 0.0,

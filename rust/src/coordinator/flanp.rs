@@ -44,20 +44,35 @@ use super::gate::{
     RoundBuffers, TauSpec,
 };
 use super::solvers::{
-    deadline_round, deadline_round_overselect, init_params, RunContext,
+    deadline_round, deadline_round_overselect, emit_cohort_events,
+    init_params, refresh_tiers_observed, RunContext,
 };
 use crate::util::linalg;
 use super::stopping::{HeuristicStop, OracleStop, StageStop};
 use crate::engine::Engine;
+use crate::fed::observe::num as json_num;
 use crate::fed::{
-    overselect_target, ClientFleet, DeadlineController, Trace, OVERSELECT_OFF,
+    overselect_target, ClientFleet, DeadlineController, EventKind, Observe,
+    Phase, Span, Trace, OVERSELECT_OFF,
 };
+use crate::util::json::obj;
 use anyhow::Result;
 
+/// [`run_flanp_with`] with observability fully off (the plain API every
+/// test and pre-observability caller uses).
 pub fn run_flanp(
     engine: &dyn Engine,
     fleet: &mut ClientFleet,
     cfg: &ExperimentConfig,
+) -> Result<Trace> {
+    run_flanp_with(engine, fleet, cfg, &mut Observe::off())
+}
+
+pub fn run_flanp_with(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    cfg: &ExperimentConfig,
+    obs: &mut Observe,
 ) -> Result<Trace> {
     let heuristic = cfg.solver == SolverKind::FlanpHeuristic;
     let mut oracle = OracleStop::from_config(cfg);
@@ -83,17 +98,26 @@ pub fn run_flanp(
         // estimates at every stage boundary — or read from the cached
         // tier membership, snapping the stage to whole tiers — unless
         // the oracle ranking is forced), fresh tracking, stage stepsizes
+        obs.set_stage(stage);
+        obs.set_round(ctx.rounds_done());
         let mut pending_reranks = 0usize;
-        let mut active = if tiered {
-            pending_reranks += fleet.refresh_tiers() as usize;
+        let base = if tiered {
+            pending_reranks += refresh_tiers_observed(fleet, obs) as usize;
             fleet.tiered_prefix(n)
         } else {
             if cfg.estimate_speeds {
                 pending_reranks += 1;
+                if obs.enabled() {
+                    obs.emit(
+                        EventKind::Rerank,
+                        None,
+                        obj(vec![("count", 1usize.into())]),
+                    );
+                }
             }
             fleet.active_prefix(n, cfg.estimate_speeds)
         };
-        n = active.len(); // tier-granular stages admit whole tiers
+        n = base.len(); // tier-granular stages admit whole tiers
         // predictive selection layer (fed::selection): over-select
         // ceil(F * n) candidates and swap predicted-offline picks for
         // forecast-approved alternates. n stays the STATISTICAL stage
@@ -101,8 +125,11 @@ pub fn run_flanp(
         // all key off n, never off the padded cohort. With overselect
         // off and no forecaster this is the identity on `active`.
         let overselecting = cfg.overselect > OVERSELECT_OFF;
-        active = fleet
-            .select_cohort(&active, overselect_target(n, cfg.overselect, n_total));
+        let mut active = fleet
+            .select_cohort(&base, overselect_target(n, cfg.overselect, n_total));
+        if obs.enabled() {
+            emit_cohort_events(obs, fleet, &base, &active, cfg.overselect);
+        }
         state.reset_tracking();
         if !cfg.warm_start && stage > 0 {
             // ablation: discard the previous stage's model (Prop. 1 off)
@@ -114,6 +141,21 @@ pub fn run_flanp(
         // needs boundary drift, not just membership churn) retunes the
         // stepsizes below but is not a stage transition
         ctx.trace.stage_transitions.push((ctx.rounds_done(), n));
+        if obs.enabled() {
+            // the stopping-rule inputs this stage starts from: its
+            // statistical size, the last recorded gradient norm and the
+            // oracle threshold `2 mu V_ns` the stage must reach
+            let gsq = ctx.trace.last().map_or(f64::NAN, |r| r.grad_norm_sq);
+            obs.emit(
+                EventKind::Stage,
+                None,
+                obj(vec![
+                    ("n", n.into()),
+                    ("grad_norm_sq", json_num(gsq)),
+                    ("threshold", json_num(cfg.grad_threshold(n))),
+                ]),
+            );
+        }
 
         // initial stats (first stage only: later stages start from the
         // model the previous round already recorded at this same clock
@@ -147,65 +189,84 @@ pub fn run_flanp(
         // the active set changes.
         let mut stats: Option<(f64, f64)> = None;
         loop {
-            // between-round ranking maintenance (the stage setup above
-            // already ranked the first round): tiered runs ride the
-            // cached membership and only react when the hysteresis band
-            // trips; the per-round baseline re-ranks every round
-            if !std::mem::take(&mut first_round_of_stage) {
-                if tiered {
-                    if fleet.refresh_tiers() {
-                        let base = fleet.tiered_prefix(n);
-                        if base.len() != n {
-                            // new boundaries grew the snapped cohort:
-                            // retune the stage stepsizes so eta/gamma and
-                            // the stopping threshold track the same n
-                            n = base.len();
-                            (eta, gamma) = cfg.stage_stepsizes(n);
+            obs.set_round(ctx.rounds_done());
+            // SELECT phase: between-round ranking maintenance (the stage
+            // setup above already ranked the first round) — tiered runs
+            // ride the cached membership and only react when the
+            // hysteresis band trips; the per-round baseline re-ranks
+            // every round — then realize this round's system conditions
+            // (event-driven: the process advances for every client,
+            // active or not) and split the cohort into arrivals vs
+            // offline clients vs dropouts.
+            let (cond, participants) = {
+                let _sp = Span::enter(Phase::Select);
+                if !std::mem::take(&mut first_round_of_stage) {
+                    if tiered {
+                        if refresh_tiers_observed(fleet, obs) {
+                            let tier_base = fleet.tiered_prefix(n);
+                            if tier_base.len() != n {
+                                // new boundaries grew the snapped cohort:
+                                // retune the stage stepsizes so eta/gamma
+                                // and the stopping threshold track the
+                                // same n
+                                n = tier_base.len();
+                                (eta, gamma) = cfg.stage_stepsizes(n);
+                            }
+                            active = fleet.select_cohort(
+                                &tier_base,
+                                overselect_target(n, cfg.overselect, n_total),
+                            );
+                            pending_reranks += 1;
+                            stats = None; // active changed
                         }
+                    } else if cfg.rerank_per_round {
                         active = fleet.select_cohort(
-                            &base,
+                            &fleet.active_prefix(n, true),
                             overselect_target(n, cfg.overselect, n_total),
                         );
                         pending_reranks += 1;
                         stats = None; // active changed
+                        if obs.enabled() {
+                            obs.emit(
+                                EventKind::Rerank,
+                                None,
+                                obj(vec![("count", 1usize.into())]),
+                            );
+                        }
                     }
-                } else if cfg.rerank_per_round {
-                    active = fleet.select_cohort(
-                        &fleet.active_prefix(n, true),
-                        overselect_target(n, cfg.overselect, n_total),
-                    );
-                    pending_reranks += 1;
-                    stats = None; // active changed
                 }
-            }
-            // realize this round's system conditions (event-driven: the
-            // process advances for every client, active or not), split
-            // the cohort into arrivals vs offline clients vs dropouts vs
-            // deadline misses, charge the clock and update the speed
-            // estimates. Offline prefix members are SKIPPED, not waited
-            // for (deadline_round charges only the online cohort; a
-            // fully-offline prefix waits for its next availability
-            // window). Only the arrived clients' updates are aggregated;
-            // under the Sync policy with everyone online this is the
-            // whole available cohort, bit-identically to the seed's
-            // synchronous rounds.
-            let (cond, participants) =
-                fleet.realize_round(&active, ctx.clock.now());
-            // over-selection closes the round at the n-th arrival (the
-            // statistical requirement) and cancels the padded tail;
-            // without it the plain deadline path runs byte-for-byte
-            let (arrived, ev) = if overselecting {
-                deadline_round_overselect(
-                    &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
-                    cfg.tau, n,
-                )
-            } else {
-                deadline_round(
-                    &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
-                    cfg.tau,
-                )
+                // offline prefix members are SKIPPED, not waited for
+                // (deadline_round charges only the online cohort; a
+                // fully-offline prefix waits for its next availability
+                // window). Only the arrived clients' updates are
+                // aggregated; under the Sync policy with everyone online
+                // this is the whole available cohort, bit-identically to
+                // the seed's synchronous rounds.
+                fleet.realize_round(&active, ctx.clock.now())
             };
+            // AGGREGATE phase: over-selection closes the round at the
+            // n-th arrival (the statistical requirement) and cancels the
+            // padded tail; without it the plain deadline path runs
+            // byte-for-byte
+            let (arrived, ev) = {
+                let _sp = Span::enter(Phase::Aggregate);
+                if overselecting {
+                    deadline_round_overselect(
+                        &mut ctx, fleet, &mut ddl, &active, &cond,
+                        &participants, cfg.tau, n, obs,
+                    )
+                } else {
+                    deadline_round(
+                        &mut ctx, fleet, &mut ddl, &active, &cond,
+                        &participants, cfg.tau, obs,
+                    )
+                }
+            };
+            // LOCAL-ROUNDS phase: the subroutine's fan-out (its inner
+            // `engine::kernels` share is attributed separately by the
+            // `kernels` span inside `coordinator::gate`)
             if !arrived.is_empty() {
+                let _sp = Span::enter(Phase::LocalRounds);
                 match cfg.subroutine {
                     Subroutine::Gate => fedgate_round(
                         engine, fleet, &mut state, &arrived, cfg.tau,
@@ -235,15 +296,21 @@ pub fn run_flanp(
                     }
                 }
             }
-            // the statistical-accuracy rule thresholds the gradient of
-            // the STATISTICAL cohort's ERM (the n clients the stage
-            // needs — active[..n]); over-selection's padding is a
-            // systems-level spare pool, not extra statistical accuracy
+            // EVAL phase: the statistical-accuracy rule thresholds the
+            // gradient of the STATISTICAL cohort's ERM (the n clients
+            // the stage needs — active[..n]); over-selection's padding
+            // is a systems-level spare pool, not extra statistical
+            // accuracy
             let (loss, gsq) = match stats {
                 Some(s) if arrived.is_empty() => s,
-                _ => active_loss_gradsq(engine, fleet, &active[..n], &state.w)?,
+                _ => {
+                    let _sp = Span::enter(Phase::Eval);
+                    active_loss_gradsq(engine, fleet, &active[..n], &state.w)?
+                }
             };
             stats = Some((loss, gsq));
+            // BOOKKEEPING phase: trace row + stopping decision
+            let _sp = Span::enter(Phase::Bookkeeping);
             ctx.record(
                 &state.w,
                 n,

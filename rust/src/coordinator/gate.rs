@@ -13,7 +13,7 @@
 //! local-round helper with their own aggregation (solvers.rs).
 
 use crate::engine::{full_loss_grad, Engine};
-use crate::fed::ClientFleet;
+use crate::fed::{ClientFleet, Phase, Span};
 use crate::util::{linalg, par};
 use anyhow::Result;
 
@@ -186,6 +186,7 @@ pub(crate) fn local_rounds(
     let fused_ok = engine.round_tau_flexible()
         || active.iter().all(|&i| taus.of(i) == m.tau);
     if active.len() < 2 || !fused_ok {
+        let _sp = Span::enter(Phase::Kernels);
         return active
             .iter()
             .map(|&i| {
@@ -222,7 +223,9 @@ pub(crate) fn local_rounds(
     // phase 2: the clients' local compute — parallel across cores when
     // the engine is Sync and each worker amortizes its spawn cost, else
     // a single batch call that shares the per-round literals (HLO path,
-    // §Perf)
+    // §Perf). The `kernels` span isolates this engine-bound share from
+    // the host-side LocalRounds phase that wraps the whole fan-out.
+    let _sp = Span::enter(Phase::Kernels);
     match engine.as_sync().filter(|e| e.round_tau_flexible()) {
         Some(es) => {
             let avg_tau = active.iter().map(|&i| taus.of(i)).sum::<usize>() / n;
@@ -353,6 +356,7 @@ pub fn active_loss_gradsq(
         / active.len().max(1);
     let min_chunk =
         par::min_chunk_for_work(6 * avg_s * engine.meta().param_count);
+    let _sp = Span::enter(Phase::Kernels);
     let locals: Vec<(f64, Vec<f32>)> = match engine.as_sync() {
         Some(es) if active.len() >= 2 => {
             par::par_map_min_chunk(active.len(), min_chunk, |k| {

@@ -23,5 +23,5 @@ pub mod theory;
 
 pub use config::{ExperimentConfig, SolverKind, StepsizeSchedule};
 pub use eval::EvalData;
-pub use flanp::run_flanp;
-pub use solvers::run_solver;
+pub use flanp::{run_flanp, run_flanp_with};
+pub use solvers::{run_solver, run_solver_with};

@@ -13,9 +13,11 @@ use super::gate::{
 use crate::engine::{Engine, ModelKind};
 use crate::fed::{
     overselect_target, ClientFleet, DeadlineController, DeadlinePolicy,
-    RoundConditions, RoundEvent, RoundRecord, Trace, VirtualClock,
-    OVERSELECT_OFF,
+    EventKind, Observe, RoundConditions, RoundEvent, RoundRecord, Trace,
+    VirtualClock, OVERSELECT_OFF,
 };
+use crate::fed::observe::num as json_num;
+use crate::util::json::obj;
 use crate::util::{linalg, Rng};
 use anyhow::Result;
 
@@ -262,6 +264,7 @@ impl<'a> RunContext<'a> {
 /// the deadline is `+inf`: every available client arrives, no censored
 /// observations are made and the charged cost is bit-identical to the
 /// synchronous path.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn deadline_round(
     ctx: &mut RunContext,
     fleet: &mut ClientFleet,
@@ -270,6 +273,7 @@ pub(crate) fn deadline_round(
     cond: &RoundConditions,
     participants: &[usize],
     updates: usize,
+    obs: &mut Observe,
 ) -> (Vec<usize>, RoundEvent) {
     deadline_round_impl(
         ctx,
@@ -281,6 +285,7 @@ pub(crate) fn deadline_round(
         updates,
         None,
         None,
+        obs,
     )
 }
 
@@ -307,6 +312,7 @@ pub(crate) fn deadline_round_overselect(
     participants: &[usize],
     updates: usize,
     target: usize,
+    obs: &mut Observe,
 ) -> (Vec<usize>, RoundEvent) {
     deadline_round_impl(
         ctx,
@@ -318,6 +324,7 @@ pub(crate) fn deadline_round_overselect(
         updates,
         None,
         Some(target),
+        obs,
     )
 }
 
@@ -337,6 +344,7 @@ pub(crate) fn deadline_round_hetero(
     participants: &[usize],
     updates: usize,
     taus: &[usize],
+    obs: &mut Observe,
 ) -> (Vec<usize>, RoundEvent) {
     deadline_round_impl(
         ctx,
@@ -348,6 +356,7 @@ pub(crate) fn deadline_round_hetero(
         updates,
         Some(taus),
         None,
+        obs,
     )
 }
 
@@ -362,6 +371,7 @@ fn deadline_round_impl(
     updates: usize,
     taus: Option<&[usize]>,
     target: Option<usize>,
+    obs: &mut Observe,
 ) -> (Vec<usize>, RoundEvent) {
     // over-selection only combines with homogeneous local steps (the
     // overselecting solvers — FLANP, TiFL — are uniform-tau)
@@ -390,6 +400,13 @@ fn deadline_round_impl(
                     .fold(0.0, f64::max);
                 now + updates as f64 * est_max
             });
+        if obs.enabled() {
+            obs.emit(
+                EventKind::Wait,
+                None,
+                obj(vec![("now", now.into()), ("wake", wake.into())]),
+            );
+        }
         let ev = ctx.clock.charge_wait(wake);
         return (Vec::new(), ev);
     }
@@ -420,6 +437,36 @@ fn deadline_round_impl(
         participants.iter().copied().partition(|&i| total(i) <= deadline);
     let times: Vec<f64> = present.iter().map(|&i| cond.times[i]).collect();
     let dropped = present.len() - participants.len();
+    // observability: one `deadline` event prices the round, one
+    // `offline` event for every cohort member that could never arrive
+    // (observably offline OR a silent dropout). Together with the
+    // per-client arrived/missed/cancelled events emitted below they
+    // satisfy `arrived + missed + cancelled + offline == cohort`, the
+    // accounting invariant `ci/check_events.py` enforces per round.
+    if obs.enabled() {
+        obs.emit(
+            EventKind::Deadline,
+            None,
+            obj(vec![
+                ("deadline", json_num(deadline)),
+                ("updates", updates.into()),
+                ("cohort", active.len().into()),
+                ("present", present.len().into()),
+            ]),
+        );
+        for &i in active {
+            if !participants.contains(&i) {
+                obs.emit(
+                    EventKind::Offline,
+                    Some(i),
+                    obj(vec![
+                        ("online", cond.online[i].into()),
+                        ("available", cond.available[i].into()),
+                    ]),
+                );
+            }
+        }
+    }
     // over-selection (`fed::selection`): close the round at the
     // `target`-th arrival. Every other in-flight client — surplus
     // arrival-to-be and would-be deadline miss alike — is CANCELLED at
@@ -451,11 +498,47 @@ fn deadline_round_impl(
         let ev = ctx.clock.charge_round_cancel(
             &present, &times, updates, cutoff, dropped, cancelled,
         );
+        // estimator errors are read BEFORE observe_round folds this
+        // round's realizations back into the estimates
+        if obs.enabled() {
+            for &i in &kept {
+                let t = cond.times[i];
+                obs.observe_estimate_error(
+                    (fleet.estimates.estimate(i) - t).abs() / t,
+                );
+                obs.emit(
+                    EventKind::Arrived,
+                    Some(i),
+                    obj(vec![
+                        ("total", json_num(total(i))),
+                        ("time", json_num(t)),
+                    ]),
+                );
+            }
+        }
         fleet.observe_round(&kept, cond);
         // a cancelled client's only information is that it was still
         // running when the server hung up: times[i] > cutoff / updates
         for &i in participants {
             if !by_arrival.contains(&i) {
+                if obs.enabled() {
+                    obs.emit(
+                        EventKind::Cancelled,
+                        Some(i),
+                        obj(vec![
+                            ("total", json_num(total(i))),
+                            ("cutoff", json_num(cutoff)),
+                        ]),
+                    );
+                    obs.emit(
+                        EventKind::Censored,
+                        Some(i),
+                        obj(vec![(
+                            "floor",
+                            json_num(cutoff / updates as f64),
+                        )]),
+                    );
+                }
                 fleet.observe_censored(&[i], cutoff / updates as f64);
             }
         }
@@ -483,6 +566,22 @@ fn deadline_round_impl(
             )
         }
     };
+    if obs.enabled() {
+        for &i in &arrived {
+            let t = cond.times[i];
+            obs.observe_estimate_error(
+                (fleet.estimates.estimate(i) - t).abs() / t,
+            );
+            obs.emit(
+                EventKind::Arrived,
+                Some(i),
+                obj(vec![
+                    ("total", json_num(total(i))),
+                    ("time", json_num(t)),
+                ]),
+            );
+        }
+    }
     fleet.observe_round(&arrived, cond);
     // a late client's only information is `times[i] > deadline / (ITS
     // OWN local-update count)`: under heterogeneous taus the nominal
@@ -493,6 +592,21 @@ fn deadline_round_impl(
             Some(t) => t[i],
             None => updates,
         };
+        if obs.enabled() {
+            obs.emit(
+                EventKind::Missed,
+                Some(i),
+                obj(vec![
+                    ("total", json_num(total(i))),
+                    ("deadline", json_num(deadline)),
+                ]),
+            );
+            obs.emit(
+                EventKind::Censored,
+                Some(i),
+                obj(vec![("floor", json_num(deadline / u as f64))]),
+            );
+        }
         fleet.observe_censored(&[i], deadline / u as f64);
     }
     // the adaptive policy tunes on the deadline-CONTROLLABLE outcome:
@@ -523,31 +637,138 @@ fn round_stats(
     }
 }
 
-/// Entry point: dispatch a config to its solver. FLANP variants live in
-/// `flanp.rs` but are reachable from here too.
+/// Hysteresis-gated re-tier with observability: snapshot the tier
+/// assignments and frozen bands, refresh, and — iff a re-tier fired —
+/// emit one `rerank` event plus one promote/demote event per moved
+/// client carrying the band of its FORMER tier (the band it breached to
+/// trigger the move). With `obs` disabled this is exactly
+/// [`ClientFleet::refresh_tiers`]: no snapshot, no diff.
+pub(crate) fn refresh_tiers_observed(
+    fleet: &mut ClientFleet,
+    obs: &mut Observe,
+) -> bool {
+    if !obs.enabled() {
+        return fleet.refresh_tiers();
+    }
+    let before = fleet.tier_assignments();
+    let bands = fleet.tier_bands();
+    let retiered = fleet.refresh_tiers();
+    if retiered {
+        obs.emit(EventKind::Rerank, None, obj(vec![("count", 1usize.into())]));
+        let after = fleet.tier_assignments();
+        for (i, (&b, &a)) in before.iter().zip(after.iter()).enumerate() {
+            if a == b {
+                continue;
+            }
+            // tier 0 is the fastest: moving DOWN the index is a promotion
+            let kind = if a < b {
+                EventKind::TierPromote
+            } else {
+                EventKind::TierDemote
+            };
+            let (lo, hi) =
+                bands.get(b).copied().unwrap_or((f64::NAN, f64::NAN));
+            obs.emit(
+                kind,
+                Some(i),
+                obj(vec![
+                    ("from", b.into()),
+                    ("to", a.into()),
+                    ("band", [lo, hi].into_iter().map(json_num).collect()),
+                ]),
+            );
+        }
+    }
+    retiered
+}
+
+/// Emit the cohort-selection events (`fed::selection`) for one round:
+/// the ranked/scheduled `base`, the over-selection padding past it
+/// (when `active` outgrew `base`), and the forecaster's reordering of
+/// the final pick (when a forecaster is learned). Call only under
+/// `obs.enabled()`.
+pub(crate) fn emit_cohort_events(
+    obs: &mut Observe,
+    fleet: &ClientFleet,
+    base: &[usize],
+    active: &[usize],
+    overselect: f64,
+) {
+    obs.emit(
+        EventKind::CohortSelected,
+        None,
+        obj(vec![
+            ("n", base.len().into()),
+            ("ids", base.iter().copied().collect()),
+        ]),
+    );
+    if active.len() > base.len() {
+        obs.emit(
+            EventKind::CohortPadded,
+            None,
+            obj(vec![
+                ("base", base.len().into()),
+                ("padded", active.len().into()),
+                ("factor", overselect.into()),
+            ]),
+        );
+    }
+    if fleet.forecast.is_some() {
+        obs.emit(
+            EventKind::CohortReordered,
+            None,
+            obj(vec![("ids", active.iter().copied().collect())]),
+        );
+    }
+}
+
+/// Entry point: dispatch a config to its solver with observability
+/// fully off. Kept as THE plain API — every existing caller and test
+/// goes through here, and [`Observe::off`] guarantees the run is
+/// bit-identical to the pre-observability code path.
 pub fn run_solver(
     engine: &dyn Engine,
     fleet: &mut ClientFleet,
     cfg: &ExperimentConfig,
 ) -> Result<Trace> {
+    run_solver_with(engine, fleet, cfg, &mut Observe::off())
+}
+
+/// [`run_solver`] with an observability bundle (`fed::observe`): the
+/// event sink and metrics registry in `obs` receive one typed event per
+/// round-loop decision. With `obs` disabled every emission site
+/// short-circuits on a single branch. FLANP variants live in `flanp.rs`
+/// but are reachable from here too.
+pub fn run_solver_with(
+    engine: &dyn Engine,
+    fleet: &mut ClientFleet,
+    cfg: &ExperimentConfig,
+    obs: &mut Observe,
+) -> Result<Trace> {
     cfg.validate(engine.meta().batch).map_err(|e| anyhow::anyhow!(e))?;
     match cfg.solver {
         SolverKind::Flanp | SolverKind::FlanpHeuristic => {
-            super::flanp::run_flanp(engine, fleet, cfg)
+            super::flanp::run_flanp_with(engine, fleet, cfg, obs)
         }
-        SolverKind::FedGate => run_fedgate_full(engine, fleet, cfg),
-        SolverKind::FedAvg => run_model_average(engine, fleet, cfg, Local::Sgd),
-        SolverKind::FedProx => run_model_average(engine, fleet, cfg, Local::Prox),
-        SolverKind::FedNova => run_fednova(engine, fleet, cfg),
+        SolverKind::FedGate => run_fedgate_full(engine, fleet, cfg, obs),
+        SolverKind::FedAvg => {
+            run_model_average(engine, fleet, cfg, Local::Sgd, obs)
+        }
+        SolverKind::FedProx => {
+            run_model_average(engine, fleet, cfg, Local::Prox, obs)
+        }
+        SolverKind::FedNova => run_fednova(engine, fleet, cfg, obs),
         SolverKind::FedGatePartialRandom { k } => {
-            run_fedgate_partial(engine, fleet, cfg, k, false)
+            run_fedgate_partial(engine, fleet, cfg, k, false, obs)
         }
         SolverKind::FedGatePartialFastest { k } => {
-            run_fedgate_partial(engine, fleet, cfg, k, true)
+            run_fedgate_partial(engine, fleet, cfg, k, true, obs)
         }
-        SolverKind::FedBuff { k } => run_fedbuff(engine, fleet, cfg, k),
-        SolverKind::Tifl => run_tifl(engine, fleet, cfg),
-        SolverKind::Ditto { lambda } => run_ditto(engine, fleet, cfg, lambda),
+        SolverKind::FedBuff { k } => run_fedbuff(engine, fleet, cfg, k, obs),
+        SolverKind::Tifl => run_tifl(engine, fleet, cfg, obs),
+        SolverKind::Ditto { lambda } => {
+            run_ditto(engine, fleet, cfg, lambda, obs)
+        }
     }
 }
 
@@ -559,6 +780,7 @@ fn run_fedgate_full(
     engine: &dyn Engine,
     fleet: &mut ClientFleet,
     cfg: &ExperimentConfig,
+    obs: &mut Observe,
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
@@ -576,10 +798,12 @@ fn run_fedgate_full(
     // round leaves w unchanged, so the objective need not be recomputed
     let mut stats = (l0, g0);
     loop {
+        obs.set_round(ctx.rounds_done());
         let (cond, participants) =
             fleet.realize_round(&active, ctx.clock.now());
         let (arrived, ev) = deadline_round(
             &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
+            obs,
         );
         if !arrived.is_empty() {
             fedgate_round(
@@ -630,6 +854,7 @@ fn run_model_average(
     fleet: &mut ClientFleet,
     cfg: &ExperimentConfig,
     local: Local,
+    obs: &mut Observe,
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
@@ -649,10 +874,12 @@ fn run_model_average(
     // round leaves w unchanged, so the objective need not be recomputed
     let mut stats = (l0, g0);
     loop {
+        obs.set_round(ctx.rounds_done());
         let (cond, participants) =
             fleet.realize_round(&active, ctx.clock.now());
         let (arrived, ev) = deadline_round(
             &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
+            obs,
         );
         // shared fan-out (gate::local_rounds): parallel local compute
         // with serially pre-sampled batches — results identical to the
@@ -728,6 +955,7 @@ fn run_ditto(
     fleet: &mut ClientFleet,
     cfg: &ExperimentConfig,
     lambda: f64,
+    obs: &mut Observe,
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
@@ -753,10 +981,12 @@ fn run_ditto(
     ctx.record_personal(&w, &heads, n, 0, l0, g0, 0, 0, 0, n, 0)?;
     let mut stats = (l0, g0);
     loop {
+        obs.set_round(ctx.rounds_done());
         let (cond, participants) =
             fleet.realize_round(&active, ctx.clock.now());
         let (arrived, ev) = deadline_round(
             &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
+            obs,
         );
         let wis = local_rounds(
             engine,
@@ -855,6 +1085,7 @@ fn run_fednova(
     engine: &dyn Engine,
     fleet: &mut ClientFleet,
     cfg: &ExperimentConfig,
+    obs: &mut Observe,
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
@@ -885,6 +1116,7 @@ fn run_fednova(
         // mild, so an uncapped window would overstate FedNova
         // (DESIGN.md §6). Under a static scenario every round derives
         // the seed's original constants.
+        obs.set_round(ctx.rounds_done());
         let (cond, participants) =
             fleet.realize_round(&active, ctx.clock.now());
         let present = cond.online_of(&active);
@@ -900,7 +1132,7 @@ fn run_fednova(
             .collect();
         let (arrived, ev) = deadline_round_hetero(
             &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
-            cfg.tau, &taus,
+            cfg.tau, &taus, obs,
         );
 
         if !arrived.is_empty() {
@@ -965,6 +1197,7 @@ fn run_fedgate_partial(
     cfg: &ExperimentConfig,
     k: usize,
     fastest: bool,
+    obs: &mut Observe,
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
@@ -995,10 +1228,22 @@ fn run_fedgate_partial(
         } else {
             rng.sample_indices(n, k)
         };
+        obs.set_round(ctx.rounds_done());
+        if obs.enabled() {
+            obs.emit(
+                EventKind::CohortSelected,
+                None,
+                obj(vec![
+                    ("n", active.len().into()),
+                    ("ids", active.iter().copied().collect()),
+                ]),
+            );
+        }
         let (cond, participants) =
             fleet.realize_round(&active, ctx.clock.now());
         let (arrived, ev) = deadline_round(
             &mut ctx, fleet, &mut ddl, &active, &cond, &participants, cfg.tau,
+            obs,
         );
         if !arrived.is_empty() {
             fedgate_round(
@@ -1055,6 +1300,7 @@ fn run_tifl(
     engine: &dyn Engine,
     fleet: &mut ClientFleet,
     cfg: &ExperimentConfig,
+    obs: &mut Observe,
 ) -> Result<Trace> {
     let policy = cfg
         .tiers
@@ -1082,7 +1328,8 @@ fn run_tifl(
         // one whole tier is this round's cohort. A fully-offline tier
         // becomes a wait/idle round in deadline_round (its online
         // members are the only ones trained or charged).
-        let reranks = fleet.refresh_tiers() as usize;
+        obs.set_round(ctx.rounds_done());
+        let reranks = refresh_tiers_observed(fleet, obs) as usize;
         let base = {
             let tiers =
                 fleet.tiers.as_mut().expect("tifl scheduler enabled above");
@@ -1098,17 +1345,20 @@ fn run_tifl(
         let overselecting = cfg.overselect > OVERSELECT_OFF;
         let active = fleet
             .select_cohort(&base, overselect_target(m, cfg.overselect, n));
+        if obs.enabled() {
+            emit_cohort_events(obs, fleet, &base, &active, cfg.overselect);
+        }
         let (cond, participants) =
             fleet.realize_round(&active, ctx.clock.now());
         let (arrived, ev) = if overselecting {
             deadline_round_overselect(
                 &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
-                cfg.tau, m,
+                cfg.tau, m, obs,
             )
         } else {
             deadline_round(
                 &mut ctx, fleet, &mut ddl, &active, &cond, &participants,
-                cfg.tau,
+                cfg.tau, obs,
             )
         };
         if !arrived.is_empty() {
@@ -1173,6 +1423,7 @@ fn run_fedbuff(
     fleet: &mut ClientFleet,
     cfg: &ExperimentConfig,
     k: usize,
+    obs: &mut Observe,
 ) -> Result<Trace> {
     let eval = EvalData::build(engine, fleet, cfg.eval_rows, cfg.seed)?;
     let mut ctx = RunContext::new(engine, cfg, &eval);
@@ -1250,6 +1501,9 @@ fn run_fedbuff(
             linalg::axpy(-(cfg.eta * cfg.gamma), &d_avg, &mut w);
             version += 1;
             let dropped = dropped_since_flush.iter().filter(|&&d| d).count();
+            // async path: one `deadline`-free event per flush (FedBuff
+            // has no round deadline; the flush time IS the boundary)
+            obs.set_round(ctx.rounds_done());
             let ev = ctx.clock.charge_until(t_i, k, dropped, 0);
             let (loss, gsq) = active_loss_gradsq(engine, fleet, &all, &w)?;
             ctx.record(

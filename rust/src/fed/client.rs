@@ -300,6 +300,21 @@ impl ClientFleet {
         self.tiers.as_ref().map_or(0, |t| t.retier_events())
     }
 
+    /// Snapshot of the tier assignments (client id -> tier index, 0 =
+    /// fastest; empty when tiers are off). The observability layer
+    /// (`fed::observe`) diffs two snapshots around
+    /// [`ClientFleet::refresh_tiers`] to report per-client
+    /// promotions/demotions — only taken when an observer is enabled.
+    pub fn tier_assignments(&self) -> Vec<usize> {
+        self.tiers.as_ref().map_or_else(Vec::new, |t| t.assignments().to_vec())
+    }
+
+    /// Frozen per-tier estimate bands `[min, max]` from the last tiering
+    /// (empty when tiers are off).
+    pub fn tier_bands(&self) -> Vec<(f64, f64)> {
+        self.tiers.as_ref().map_or_else(Vec::new, |t| t.bands().to_vec())
+    }
+
     /// Feed the round's observed upload timings back into the estimator
     /// (only clients whose upload arrived can be measured).
     pub fn observe_round(&mut self, participants: &[usize], cond: &RoundConditions) {

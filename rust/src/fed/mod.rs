@@ -10,6 +10,7 @@ pub mod aggregation;
 pub mod client;
 pub mod clock;
 pub mod metrics;
+pub mod observe;
 pub mod population;
 pub mod selection;
 pub mod sketch;
@@ -22,9 +23,13 @@ pub use aggregation::{DeadlineController, DeadlinePolicy};
 pub use client::{ClientFleet, DEFAULT_EWMA_ALPHA};
 pub use clock::{RoundEvent, VirtualClock};
 pub use metrics::{RoundRecord, StreamingStats, Trace};
+pub use observe::{
+    Event, EventKind, JsonlObserver, NoopObserver, Observe, Observer, Phase,
+    Span, EVENTS_SCHEMA, SUMMARY_SCHEMA,
+};
 pub use population::{
     CohortConditions, LazyFleet, LazyShards, PopulationFleet, PopulationSpec,
-    DEFAULT_EXACT_THRESHOLD, DEFAULT_FRONTIER,
+    DEFAULT_EXACT_THRESHOLD, DEFAULT_FRONTIER, LAZY_EVENT_SAMPLE,
 };
 pub use selection::{
     overselect_target, parse_overselect, validate_overselect,

@@ -1,0 +1,634 @@
+//! Structured observability for the round loop (`fed::observe`).
+//!
+//! Three layers, all inert by default:
+//!
+//! * the **event log** — an [`Observer`] sink receiving one typed
+//!   [`Event`] per decision the stack makes: cohort selection and
+//!   padding (`fed::selection`), deadline pricing and the per-client
+//!   arrived / missed / cancelled / offline split
+//!   (`fed::aggregation`, `fed::clock`), re-ranks and tier
+//!   promotions/demotions (`fed::tiers`), stage transitions with their
+//!   stopping-rule inputs (`coordinator::flanp`) and sampled lazy-fleet
+//!   realizations (`fed::population`). [`NoopObserver`] is the
+//!   zero-cost default; [`JsonlObserver`] appends one JSON object per
+//!   line (schema `flanp-events/v1`).
+//! * the **metrics registry** — per-kind event counters plus an
+//!   estimator-error histogram ([`StreamingStats`] +
+//!   [`QuantileSketch`]), rolled into a machine-readable run summary
+//!   (schema `flanp-summary/v1`, [`Observe::summary_json`]).
+//! * the **span profiler** — RAII [`Span`] timers around the five
+//!   round-loop phases (select / local-rounds / aggregate / eval /
+//!   bookkeeping) and the `engine::kernels` fan-out, aggregated into a
+//!   per-phase host-µs breakdown in the same summary. Timers are global
+//!   atomics so deep call sites (`coordinator::gate`) need no plumbing;
+//!   when profiling is off a span is one relaxed atomic load.
+//!
+//! The hot-path contract: every emission site is guarded by a single
+//! `if obs.enabled()` branch, and [`Observe::off`] keeps that branch
+//! false — with observability disabled the solver byte-stream
+//! (RNG consumption, clock arithmetic, trace rows) is untouched, which
+//! `tests/observe.rs` pins against the golden fixtures.
+
+use crate::fed::metrics::{StreamingStats, Trace};
+use crate::fed::sketch::QuantileSketch;
+use crate::util::json::{obj, Json};
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Event-log schema identifier: the first line of every JSONL sink.
+pub const EVENTS_SCHEMA: &str = "flanp-events/v1";
+/// Run-summary schema identifier ([`Observe::summary_json`]).
+pub const SUMMARY_SCHEMA: &str = "flanp-summary/v1";
+
+/// Every decision the stack can report. The wire name
+/// ([`EventKind::as_str`]) is the `kind` field of the JSONL line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum EventKind {
+    /// a ranked cohort was selected (detail: `n`, `ids`)
+    CohortSelected,
+    /// over-selection padded the cohort past its statistical target
+    /// (detail: `base`, `padded`, `factor`)
+    CohortPadded,
+    /// the availability forecaster reordered the ranked prefix
+    /// (detail: `ids`)
+    CohortReordered,
+    /// a round deadline was priced (detail: `deadline`, `updates`,
+    /// `cohort`, `present`)
+    Deadline,
+    /// an all-offline cohort held the round open; the wait was charged
+    /// (detail: `now`, `wake`)
+    Wait,
+    /// a client's update arrived before the deadline (detail: `total`,
+    /// `time`)
+    Arrived,
+    /// a client was computing but missed the deadline (detail: `total`,
+    /// `deadline`)
+    Missed,
+    /// over-selection actively cancelled a client's in-flight work at
+    /// the k-th arrival (detail: `total`, `cutoff`)
+    Cancelled,
+    /// a cohort member contributed nothing: observably offline or a
+    /// silent dropout (detail: `online`, `available`)
+    Offline,
+    /// a censored estimator observation was fed back for a missed or
+    /// cancelled client (detail: `floor`)
+    Censored,
+    /// the speed ranking was recomputed (detail: `count`)
+    Rerank,
+    /// a tier-cache refresh moved a client to a FASTER tier (detail:
+    /// `from`, `to`, `band` — the breached `[lo, hi]` estimate band)
+    TierPromote,
+    /// a tier-cache refresh moved a client to a SLOWER tier (same
+    /// detail as [`EventKind::TierPromote`])
+    TierDemote,
+    /// a FLANP stage transition with its stopping-rule inputs (detail:
+    /// `n`, `grad_norm_sq`, `threshold`)
+    Stage,
+    /// a sampled lazy-fleet cohort realization (`fed::population`;
+    /// detail: `cohort`, `online`, `available`)
+    LazyRound,
+}
+
+/// Number of event kinds (the size of the per-kind counter registry).
+pub const NUM_KINDS: usize = 15;
+
+impl EventKind {
+    /// Every kind, in wire order.
+    pub const ALL: [EventKind; NUM_KINDS] = [
+        EventKind::CohortSelected,
+        EventKind::CohortPadded,
+        EventKind::CohortReordered,
+        EventKind::Deadline,
+        EventKind::Wait,
+        EventKind::Arrived,
+        EventKind::Missed,
+        EventKind::Cancelled,
+        EventKind::Offline,
+        EventKind::Censored,
+        EventKind::Rerank,
+        EventKind::TierPromote,
+        EventKind::TierDemote,
+        EventKind::Stage,
+        EventKind::LazyRound,
+    ];
+
+    /// The wire name used in the JSONL `kind` field.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::CohortSelected => "cohort_selected",
+            EventKind::CohortPadded => "cohort_padded",
+            EventKind::CohortReordered => "cohort_reordered",
+            EventKind::Deadline => "deadline",
+            EventKind::Wait => "wait",
+            EventKind::Arrived => "arrived",
+            EventKind::Missed => "missed",
+            EventKind::Cancelled => "cancelled",
+            EventKind::Offline => "offline",
+            EventKind::Censored => "censored",
+            EventKind::Rerank => "rerank",
+            EventKind::TierPromote => "tier_promote",
+            EventKind::TierDemote => "tier_demote",
+            EventKind::Stage => "stage",
+            EventKind::LazyRound => "lazy_round",
+        }
+    }
+
+    /// Inverse of [`EventKind::as_str`].
+    pub fn parse(s: &str) -> Option<EventKind> {
+        EventKind::ALL.iter().copied().find(|k| k.as_str() == s)
+    }
+}
+
+/// One structured event: the JSONL line is
+/// `{"round":R,"stage":S,"kind":"...","client":C|null,"detail":{...}}`.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// round the event belongs to (trace-row numbering: the first
+    /// charged round is 1; selection events for it carry the same
+    /// index)
+    pub round: usize,
+    /// FLANP stage index (0 for non-staged solvers)
+    pub stage: usize,
+    pub kind: EventKind,
+    /// client id, when the event is about one client
+    pub client: Option<usize>,
+    /// kind-specific payload (see [`EventKind`])
+    pub detail: Json,
+}
+
+impl Event {
+    /// The event as a JSON object (one JSONL line, sans newline).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("round", self.round.into()),
+            ("stage", self.stage.into()),
+            ("kind", self.kind.as_str().into()),
+            (
+                "client",
+                match self.client {
+                    Some(c) => c.into(),
+                    None => Json::Null,
+                },
+            ),
+            ("detail", self.detail.clone()),
+        ])
+    }
+
+    /// Parse one JSONL line back into an [`Event`] (used by the schema
+    /// roundtrip test; `ci/check_events.py` is the python twin).
+    pub fn from_json(j: &Json) -> Result<Event, String> {
+        let kind_s = j.req_str("kind").map_err(|e| e.to_string())?;
+        let kind = EventKind::parse(kind_s)
+            .ok_or_else(|| format!("unknown event kind '{kind_s}'"))?;
+        let client = match j.req("client").map_err(|e| e.to_string())? {
+            Json::Null => None,
+            c => Some(
+                c.as_usize()
+                    .ok_or_else(|| "field 'client' not a usize".to_string())?,
+            ),
+        };
+        Ok(Event {
+            round: j.req_usize("round").map_err(|e| e.to_string())?,
+            stage: j.req_usize("stage").map_err(|e| e.to_string())?,
+            kind,
+            client,
+            detail: j.req("detail").map_err(|e| e.to_string())?.clone(),
+        })
+    }
+}
+
+/// An event sink. The default methods make `impl Observer for T {}` a
+/// disabled observer; [`Observe`] only forwards to an enabled sink.
+pub trait Observer {
+    /// Whether [`Observer::emit`] does anything — the one branch the
+    /// hot path takes.
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn emit(&mut self, _ev: &Event) {}
+}
+
+/// The zero-cost default sink: never enabled, emits nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopObserver;
+
+impl Observer for NoopObserver {}
+
+/// Appends events to a file, one JSON object per line. The first line
+/// is the schema header `{"schema":"flanp-events/v1"}`.
+#[derive(Debug)]
+pub struct JsonlObserver {
+    out: BufWriter<File>,
+}
+
+impl JsonlObserver {
+    /// Create (truncate) `path` and write the schema header.
+    pub fn create(path: &Path) -> std::io::Result<JsonlObserver> {
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{{\"schema\":\"{EVENTS_SCHEMA}\"}}")?;
+        Ok(JsonlObserver { out })
+    }
+}
+
+impl Observer for JsonlObserver {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn emit(&mut self, ev: &Event) {
+        // best-effort: a full disk should not abort a simulation
+        let _ = writeln!(self.out, "{}", ev.to_json().to_string());
+    }
+}
+
+impl Drop for JsonlObserver {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+/// The observability bundle threaded through
+/// [`crate::coordinator::run_solver_with`]: an event sink plus the
+/// metrics registry (per-kind counters, estimator-error histogram) and
+/// the round/stage cursors events are stamped with.
+pub struct Observe {
+    sink: Box<dyn Observer>,
+    /// collect registry state even without an event sink (a summary
+    /// was requested)
+    collect: bool,
+    counts: [u64; NUM_KINDS],
+    est_err: StreamingStats,
+    est_err_sketch: QuantileSketch,
+    round: usize,
+    stage: usize,
+}
+
+impl Observe {
+    /// Fully disabled: [`Observe::enabled`] is false, every emission
+    /// site short-circuits. This is what [`crate::coordinator::run_solver`]
+    /// threads through, keeping the default path bit-identical.
+    pub fn off() -> Observe {
+        Observe::new(Box::new(NoopObserver), false)
+    }
+
+    /// Build from a sink; `collect` additionally enables the registry
+    /// (pass true when a run summary was requested).
+    pub fn new(sink: Box<dyn Observer>, collect: bool) -> Observe {
+        Observe {
+            sink,
+            collect,
+            counts: [0; NUM_KINDS],
+            est_err: StreamingStats::new(),
+            est_err_sketch: QuantileSketch::new(
+                QuantileSketch::DEFAULT_CAPACITY,
+            ),
+            round: 0,
+            stage: 0,
+        }
+    }
+
+    /// THE hot-path branch: every emission site is
+    /// `if obs.enabled() { ... }` and nothing else.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.collect || self.sink.enabled()
+    }
+
+    /// Stamp subsequent events with trace-row round `r`.
+    pub fn set_round(&mut self, r: usize) {
+        self.round = r;
+    }
+
+    /// Stamp subsequent events with FLANP stage index `s`.
+    pub fn set_stage(&mut self, s: usize) {
+        self.stage = s;
+    }
+
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Count the event and forward it to the sink (if any). Callers
+    /// guard with [`Observe::enabled`]; calling unguarded is correct
+    /// but pays the detail construction.
+    pub fn emit(&mut self, kind: EventKind, client: Option<usize>, detail: Json) {
+        self.counts[kind as usize] += 1;
+        if self.sink.enabled() {
+            let ev = Event {
+                round: self.round,
+                stage: self.stage,
+                kind,
+                client,
+                detail,
+            };
+            self.sink.emit(&ev);
+        }
+    }
+
+    /// Events of `kind` seen so far.
+    pub fn count(&self, kind: EventKind) -> u64 {
+        self.counts[kind as usize]
+    }
+
+    /// Fold one relative speed-estimator error `|est - realized| /
+    /// realized` into the registry histogram (fed by
+    /// `coordinator::solvers::deadline_round` for every arrived
+    /// client).
+    pub fn observe_estimate_error(&mut self, rel: f64) {
+        if rel.is_finite() {
+            self.est_err.push(rel);
+            self.est_err_sketch.push(rel);
+        }
+    }
+
+    /// The machine-readable run summary (schema `flanp-summary/v1`):
+    /// final statistics from the trace, per-kind event counts, the
+    /// estimator-error quantiles and the per-phase host-time breakdown
+    /// of the span profiler.
+    pub fn summary_json(&self, trace: &Trace, wall_ms: f64) -> Json {
+        let last = trace.rounds.last();
+        let f = |g: fn(&crate::fed::metrics::RoundRecord) -> f64| {
+            num(last.map_or(f64::NAN, g))
+        };
+        let events = Json::Obj(
+            EventKind::ALL
+                .iter()
+                .map(|k| {
+                    (k.as_str().to_string(), Json::from(self.counts[*k as usize] as f64))
+                })
+                .collect(),
+        );
+        let est = if self.est_err.count() > 0 {
+            obj(vec![
+                ("count", (self.est_err.count() as usize).into()),
+                ("mean", num(self.est_err.mean())),
+                ("p50", num(self.est_err_sketch.query(0.5))),
+                ("p90", num(self.est_err_sketch.query(0.9))),
+                ("p99", num(self.est_err_sketch.query(0.99))),
+                ("max", num(self.est_err.max())),
+            ])
+        } else {
+            obj(vec![("count", 0usize.into())])
+        };
+        let spans = Json::Obj(
+            span_report()
+                .into_iter()
+                .map(|(name, total_us, count)| {
+                    (
+                        name.to_string(),
+                        obj(vec![
+                            ("total_us", (total_us as f64).into()),
+                            ("count", (count as f64).into()),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("schema", SUMMARY_SCHEMA.into()),
+            ("algo", trace.algo.as_str().into()),
+            ("rounds", trace.rounds.len().saturating_sub(1).into()),
+            ("virtual_time", num(trace.total_time)),
+            ("finished", trace.finished.into()),
+            ("final_loss", f(|r| r.loss_full)),
+            ("final_acc", f(|r| r.accuracy)),
+            ("final_dist", f(|r| r.dist_to_opt)),
+            ("wall_ms", num(wall_ms)),
+            (
+                "totals",
+                obj(vec![
+                    ("missed", trace.total_missed().into()),
+                    ("cancelled", trace.total_cancelled().into()),
+                    (
+                        "dropped",
+                        trace
+                            .rounds
+                            .iter()
+                            .map(|r| r.dropped)
+                            .sum::<usize>()
+                            .into(),
+                    ),
+                    ("reranks", trace.total_reranks().into()),
+                    (
+                        "min_available",
+                        match trace.min_available() {
+                            Some(m) => m.into(),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ),
+            ("events", events),
+            ("estimator_error", est),
+            ("spans", spans),
+        ])
+    }
+}
+
+impl std::fmt::Debug for Observe {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Observe")
+            .field("enabled", &self.enabled())
+            .field("round", &self.round)
+            .field("stage", &self.stage)
+            .finish()
+    }
+}
+
+/// A finite number as [`Json::Num`], anything else (NaN, the `+inf`
+/// deadline of [`crate::fed::DeadlinePolicy::Sync`]) as [`Json::Null`]
+/// — JSON has no spelling for non-finite floats. Shared by every
+/// event-detail construction site.
+pub fn num(n: f64) -> Json {
+    if n.is_finite() {
+        Json::Num(n)
+    } else {
+        Json::Null
+    }
+}
+
+// ---------------------------------------------------------------------------
+// span profiler
+// ---------------------------------------------------------------------------
+
+/// The instrumented phases of the round loop. `Kernels` nests inside
+/// `LocalRounds` (the `engine::kernels` fan-out measured from
+/// `coordinator::gate`), so the five top-level phases partition the
+/// loop and `kernels` attributes the compute share separately.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Phase {
+    Select,
+    LocalRounds,
+    Aggregate,
+    Eval,
+    Bookkeeping,
+    Kernels,
+}
+
+/// Number of profiled phases.
+pub const NUM_PHASES: usize = 6;
+
+/// Phase wire names, indexed by `Phase as usize`.
+pub const PHASE_NAMES: [&str; NUM_PHASES] =
+    ["select", "local_rounds", "aggregate", "eval", "bookkeeping", "kernels"];
+
+static PROFILING: AtomicBool = AtomicBool::new(false);
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static SPAN_US: [AtomicU64; NUM_PHASES] = [ZERO; NUM_PHASES];
+static SPAN_N: [AtomicU64; NUM_PHASES] = [ZERO; NUM_PHASES];
+
+/// Turn the span profiler on or off process-wide. Off (the default)
+/// reduces every [`Span::enter`] to one relaxed atomic load.
+pub fn enable_profiling(on: bool) {
+    PROFILING.store(on, Ordering::Relaxed);
+}
+
+/// Whether the span profiler is currently recording.
+pub fn profiling_enabled() -> bool {
+    PROFILING.load(Ordering::Relaxed)
+}
+
+/// Zero all accumulated span totals (call before a profiled run).
+pub fn reset_spans() {
+    for i in 0..NUM_PHASES {
+        SPAN_US[i].store(0, Ordering::Relaxed);
+        SPAN_N[i].store(0, Ordering::Relaxed);
+    }
+}
+
+/// `(phase name, total host µs, times entered)` for every phase.
+pub fn span_report() -> Vec<(&'static str, u64, u64)> {
+    (0..NUM_PHASES)
+        .map(|i| {
+            (
+                PHASE_NAMES[i],
+                SPAN_US[i].load(Ordering::Relaxed),
+                SPAN_N[i].load(Ordering::Relaxed),
+            )
+        })
+        .collect()
+}
+
+/// RAII phase timer: construction snapshots `Instant::now`, drop adds
+/// the elapsed µs to the phase's global total. When profiling is off,
+/// construction is one atomic load and drop does nothing — safe to
+/// leave in release hot paths.
+#[must_use = "a span measures the scope it lives in"]
+pub struct Span {
+    phase: usize,
+    start: Option<Instant>,
+}
+
+impl Span {
+    #[inline]
+    pub fn enter(phase: Phase) -> Span {
+        let start = if PROFILING.load(Ordering::Relaxed) {
+            Some(Instant::now())
+        } else {
+            None
+        };
+        Span { phase: phase as usize, start }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let us = t0.elapsed().as_micros() as u64;
+            SPAN_US[self.phase].fetch_add(us, Ordering::Relaxed);
+            SPAN_N[self.phase].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(EventKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn event_json_roundtrip() {
+        let ev = Event {
+            round: 3,
+            stage: 1,
+            kind: EventKind::Missed,
+            client: Some(7),
+            detail: obj(vec![("total", 410.0.into())]),
+        };
+        let line = ev.to_json().to_string();
+        let back = Event::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.round, 3);
+        assert_eq!(back.stage, 1);
+        assert_eq!(back.kind, EventKind::Missed);
+        assert_eq!(back.client, Some(7));
+        assert_eq!(back.detail.req_f64("total").unwrap(), 410.0);
+    }
+
+    #[test]
+    fn off_is_disabled_and_noop() {
+        let mut o = Observe::off();
+        assert!(!o.enabled());
+        // unguarded emit still counts (callers guard; this is the
+        // registry contract, not the hot path)
+        o.emit(EventKind::Arrived, Some(0), Json::Null);
+        assert_eq!(o.count(EventKind::Arrived), 1);
+    }
+
+    #[test]
+    fn collect_only_is_enabled() {
+        let o = Observe::new(Box::new(NoopObserver), true);
+        assert!(o.enabled());
+    }
+
+    #[test]
+    fn spans_accumulate_only_when_profiling() {
+        reset_spans();
+        enable_profiling(false);
+        {
+            let _s = Span::enter(Phase::Eval);
+        }
+        assert_eq!(span_report()[Phase::Eval as usize].2, 0);
+        enable_profiling(true);
+        {
+            let _s = Span::enter(Phase::Eval);
+        }
+        enable_profiling(false);
+        let (name, _us, n) = span_report()[Phase::Eval as usize];
+        assert_eq!(name, "eval");
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn summary_schema_fields() {
+        let mut o = Observe::new(Box::new(NoopObserver), true);
+        o.observe_estimate_error(0.25);
+        let t = Trace::new("flanp");
+        let s = o.summary_json(&t, 12.5);
+        assert_eq!(s.req_str("schema").unwrap(), SUMMARY_SCHEMA);
+        assert_eq!(s.req("events").unwrap().req_usize("arrived").unwrap(), 0);
+        assert_eq!(
+            s.req("estimator_error").unwrap().req_usize("count").unwrap(),
+            1
+        );
+        for p in PHASE_NAMES {
+            assert!(s.req("spans").unwrap().get(p).is_some(), "missing {p}");
+        }
+        // roundtrips through the parser
+        let back = Json::parse(&s.to_string()).unwrap();
+        assert_eq!(back.req_str("schema").unwrap(), SUMMARY_SCHEMA);
+    }
+}

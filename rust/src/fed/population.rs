@@ -78,6 +78,14 @@ pub const DEFAULT_EXACT_THRESHOLD: usize = 4096;
 /// frontier, TiFL-cache style).
 pub const DEFAULT_FRONTIER: usize = 1024;
 
+/// Event-stream sampling stride for population-scale loops: a lazy run
+/// charges thousands of O(cohort) rounds, so `flanp-bench scale` emits a
+/// [`crate::fed::EventKind::LazyRound`] event for every
+/// `LAZY_EVENT_SAMPLE`-th round rather than all of them — the event log
+/// stays O(rounds / stride) while still pinning the realized
+/// online/available mix across the run.
+pub const LAZY_EVENT_SAMPLE: usize = 16;
+
 /// Per-client stream components. Client `i` owns streams
 /// `i * STREAM_COMPONENTS + comp`; reserved global streams sit at the
 /// top of the id space, unreachable for any realizable population.
@@ -223,6 +231,21 @@ impl CohortConditions {
     /// Number of observably-online cohort members.
     pub fn online_count(&self) -> usize {
         self.online.iter().filter(|&&o| o).count()
+    }
+
+    /// The round's realized mix as a [`crate::fed::EventKind::LazyRound`]
+    /// event detail: cohort size, observably-online count and silent
+    /// availability count (O(cohort) to compute, O(1) to store — ids are
+    /// deliberately omitted at population scale).
+    pub fn event_detail(&self) -> crate::util::json::Json {
+        crate::util::json::obj(vec![
+            ("cohort", self.ids.len().into()),
+            ("online", self.online_count().into()),
+            (
+                "available",
+                self.available.iter().filter(|&&a| a).count().into(),
+            ),
+        ])
     }
 }
 

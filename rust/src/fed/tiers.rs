@@ -302,6 +302,21 @@ impl TierScheduler {
         self.retier_events
     }
 
+    /// The full client-id -> tier-index map (0 = fastest tier). Used by
+    /// the observability layer (`fed::observe`) to diff assignments
+    /// around a [`TierScheduler::refresh`] and report per-client
+    /// promotions/demotions.
+    pub fn assignments(&self) -> &[usize] {
+        &self.tier_of
+    }
+
+    /// The frozen per-tier estimate bands `[min, max]` from the last
+    /// tiering, indexed by tier. A promotion/demotion event reports the
+    /// band the moved client breached.
+    pub fn bands(&self) -> &[(f64, f64)] {
+        &self.bands
+    }
+
     /// Recompute ranking, membership, boundaries and bands from the
     /// current estimates: a quantile split of the estimate ranking into
     /// `num_tiers` near-equal rank ranges, or a 1-D k-means split whose

@@ -7,12 +7,17 @@
 //!   flanp list-artifacts
 
 use anyhow::{Context, Result};
-use flanp::coordinator::{run_solver, ExperimentConfig, SolverKind};
+use flanp::coordinator::{run_solver_with, ExperimentConfig, SolverKind};
 use flanp::data::DataSpec;
 use flanp::engine::Manifest;
-use flanp::fed::{DeadlinePolicy, SystemModel, TierPolicy};
+use flanp::fed::{
+    DeadlinePolicy, JsonlObserver, NoopObserver, Observe, Observer,
+    SystemModel, TierPolicy,
+};
 use flanp::setup;
 use flanp::util::cli::Args;
+use flanp::util::log;
+use flanp::{log_error, log_info};
 use std::path::Path;
 
 const USAGE: &str = "\
@@ -142,14 +147,30 @@ OPTIONS (run):
   --record-trace P  record the realized per-client latency/availability
                     trace (round 0 = the profiling probe) and write it to
                     P — replayable via --speed trace:P
+  --events PATH     write the structured event log (JSONL, schema
+                    flanp-events/v1): one typed event per round-loop
+                    decision — cohort selection/padding/reordering,
+                    deadlines, arrivals, misses, cancellations, offline
+                    skips, censored estimates, re-ranks, tier moves and
+                    stage transitions. Off by default; when off the run
+                    is bit-identical to the pre-observability behavior
+  --summary PATH    write the run summary (JSON, schema flanp-summary/v1):
+                    final statistics, per-kind event totals, estimator-
+                    error quantiles and the host-side per-phase span
+                    profile (select/local_rounds/aggregate/eval/
+                    bookkeeping/kernels)
+  --log-level L     error | warn | info | debug        [info]
+                    (FLANP_LOG env var is the fallback; the flag wins.
+                    info reproduces the historical output exactly)
   --noise F         linreg label noise                 [0.1]
   --separation F    mixture class separation (classification data)
   --quiet           suppress the configuration line
 ";
 
 fn main() {
+    log::init_from_env();
     if let Err(e) = real_main() {
-        eprintln!("error: {e:#}");
+        log_error!("error: {e:#}");
         std::process::exit(1);
     }
 }
@@ -157,6 +178,9 @@ fn main() {
 fn real_main() -> Result<()> {
     let mut args = Args::from_env(&["run", "list-artifacts", "help"])
         .map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(l) = args.flag_opt("log-level") {
+        log::set_level(log::Level::parse(&l).map_err(|e| anyhow::anyhow!(e))?);
+    }
     // `flanp run --help` (and `--help` anywhere) prints the same usage
     // text as the `help` subcommand
     if args.switch("help") {
@@ -175,11 +199,11 @@ fn real_main() -> Result<()> {
             );
             args.finish().map_err(|e| anyhow::anyhow!(e))?;
             let manifest = Manifest::load(Path::new(&dir))?;
-            println!("{} artifacts in {dir}:", manifest.artifacts.len());
+            log_info!("{} artifacts in {dir}:", manifest.artifacts.len());
             for a in &manifest.artifacts {
                 let ins: Vec<String> =
                     a.inputs.iter().map(|(n, s)| format!("{n}{s:?}")).collect();
-                println!("  {:<44} {}", a.name, ins.join(" "));
+                log_info!("  {:<44} {}", a.name, ins.join(" "));
             }
             Ok(())
         }
@@ -237,6 +261,8 @@ fn cmd_run(args: &mut Args) -> Result<()> {
         args.flag_usize("eval-rows", 2000).map_err(|e| anyhow::anyhow!(e))?;
     let trace_path = args.flag_opt("trace");
     let record_trace = args.flag_opt("record-trace");
+    let events_path = args.flag_opt("events");
+    let summary_path = args.flag_opt("summary");
     let noise = args.flag_f64("noise", 0.1).map_err(|e| anyhow::anyhow!(e))?;
     let separation =
         args.flag_f64("separation", 0.0).map_err(|e| anyhow::anyhow!(e))?;
@@ -266,6 +292,9 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     cfg.max_rounds = max_rounds;
     cfg.eval_rows = eval_rows;
     cfg.record_trace = record_trace.is_some();
+    cfg.events = events_path;
+    cfg.summary = summary_path;
+    cfg.log_level = log::level();
     // validate before the fleet is built: bad flags (e.g. --ewma 0) must
     // surface as config errors, not construction-time assertions
     cfg.validate(meta.batch).map_err(|e| anyhow::anyhow!(e))?;
@@ -273,7 +302,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     let mut fleet = setup::build_fleet(&meta, &cfg, noise, separation)?;
 
     if !quiet {
-        println!(
+        log_info!(
             "flanp run: solver={} model={} engine={} N={} s={} tau={} eta={} \
              gamma={} system={} data={} deadline={} tiers={} overselect={} \
              forecast={} ranking={}",
@@ -301,12 +330,32 @@ fn cmd_run(args: &mut Args) -> Result<()> {
             },
         );
     }
+    // observability: a JSONL sink when --events was given, the metrics
+    // registry + span profiler when --summary was. With neither, the
+    // disabled observer keeps the run bit-identical to the historical
+    // behavior (one branch per decision point).
+    let mut obs = if cfg.events.is_none() && cfg.summary.is_none() {
+        Observe::off()
+    } else {
+        let sink: Box<dyn Observer> = match &cfg.events {
+            Some(p) => Box::new(
+                JsonlObserver::create(Path::new(p))
+                    .with_context(|| format!("creating event log {p}"))?,
+            ),
+            None => Box::new(NoopObserver),
+        };
+        if cfg.summary.is_some() {
+            flanp::fed::observe::reset_spans();
+            flanp::fed::observe::enable_profiling(true);
+        }
+        Observe::new(sink, cfg.summary.is_some())
+    };
     let t0 = std::time::Instant::now();
-    let trace = run_solver(engine.as_ref(), &mut fleet, &cfg)?;
+    let trace = run_solver_with(engine.as_ref(), &mut fleet, &cfg, &mut obs)?;
     let wall = t0.elapsed();
 
     let last = trace.last().context("empty trace")?;
-    println!(
+    log_info!(
         "done: rounds={} virtual_time={:.1} loss_full={:.6} grad^2={:.3e} \
          dist={:.4} acc={:.4} finished={} ({} stages, {} reranks, \
          {} cancelled) [{:.2?} real]",
@@ -323,7 +372,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
         wall
     );
     if !trace.client_acc.is_empty() {
-        println!(
+        log_info!(
             "client holdout acc: mean={:.4} worst-decile={:.4} (N={})",
             trace.mean_client_acc(),
             trace.worst_decile_acc(),
@@ -332,15 +381,24 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     }
     if let Some(p) = trace_path {
         trace.write_csv(Path::new(&p))?;
-        println!("trace written to {p}");
+        log_info!("trace written to {p}");
     }
     if let Some(p) = record_trace {
         fleet
             .write_recorded_trace(Path::new(&p))
             .map_err(|e| anyhow::anyhow!(e))?;
-        println!(
+        log_info!(
             "realized system trace written to {p} (replay with --speed trace:{p})"
         );
+    }
+    if let Some(p) = &cfg.summary {
+        let json = obs.summary_json(&trace, wall.as_secs_f64() * 1e3);
+        std::fs::write(p, json.to_string() + "\n")
+            .with_context(|| format!("writing run summary {p}"))?;
+        log_info!("run summary written to {p}");
+    }
+    if let Some(p) = &cfg.events {
+        log_info!("event log written to {p}");
     }
     Ok(())
 }

@@ -1,0 +1,156 @@
+//! Tiny leveled logger for the bins (`util::log`).
+//!
+//! Four levels — `error < warn < info < debug` — stored in a process
+//! global. The default is [`Level::Info`], which keeps the bins' stdout
+//! byte-identical to the historical `println!` output; `--log-level` or
+//! the `FLANP_LOG` environment variable (flag wins) raise or lower it.
+//! `info`/`debug` write to stdout, `error`/`warn` to stderr, exactly
+//! like the `println!`/`eprintln!` calls they replace.
+//!
+//! Use through the crate-root macros:
+//!
+//! ```
+//! flanp::util::log::set_level(flanp::util::log::Level::Warn);
+//! flanp::log_info!("suppressed at warn level");
+//! flanp::log_error!("still printed (stderr)");
+//! flanp::util::log::set_level(flanp::util::log::Level::Info);
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Log verbosity, ordered: a message prints when its level is at or
+/// below the current one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(usize)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    /// Parse a level name (the `--log-level` / `FLANP_LOG` grammar).
+    pub fn parse(s: &str) -> Result<Level, String> {
+        match s {
+            "error" => Ok(Level::Error),
+            "warn" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            other => Err(format!(
+                "unknown log level '{other}' (expected error|warn|info|debug)"
+            )),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+static LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
+
+/// Set the process-wide log level.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as usize, Ordering::Relaxed);
+}
+
+/// The current log level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        3 => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
+/// Whether a message at `l` would print.
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    (l as usize) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Initialize from the `FLANP_LOG` environment variable, if set and
+/// valid (an invalid value is ignored — the bins' `--log-level` flag
+/// reports bad names loudly instead). Returns the resulting level.
+pub fn init_from_env() -> Level {
+    if let Ok(v) = std::env::var("FLANP_LOG") {
+        if let Ok(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+    level()
+}
+
+/// `println!` gated at [`Level::Info`] (stdout).
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            println!($($t)*);
+        }
+    };
+}
+
+/// `println!` gated at [`Level::Debug`] (stdout).
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            println!($($t)*);
+        }
+    };
+}
+
+/// `eprintln!` gated at [`Level::Warn`] (stderr).
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Warn) {
+            eprintln!($($t)*);
+        }
+    };
+}
+
+/// `eprintln!` gated at [`Level::Error`] (stderr).
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Error) {
+            eprintln!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_order() {
+        assert!(Level::parse("nope").is_err());
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(l.as_str()).unwrap(), l);
+        }
+        assert!(Level::Error < Level::Debug);
+    }
+
+    #[test]
+    fn gating() {
+        // NOTE: process-global — keep this the only test that mutates
+        // the level, and restore the default before returning
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

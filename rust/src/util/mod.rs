@@ -7,6 +7,7 @@
 pub mod cli;
 pub mod json;
 pub mod linalg;
+pub mod log;
 pub mod par;
 pub mod prop;
 pub mod rng;

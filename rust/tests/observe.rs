@@ -1,0 +1,262 @@
+//! Observability integration tests (`fed::observe`).
+//!
+//! Four properties, end-to-end through `run_solver_with`:
+//!
+//! * **inertness** — an ENABLED collect-only observer leaves the
+//!   solver byte-stream untouched: the trace CSV is byte-identical to
+//!   the plain `run_solver` path (which `tests/golden.rs` pins against
+//!   the committed fixtures). Observability may read the round loop,
+//!   never steer it.
+//! * **schema** — every line a [`JsonlObserver`] writes parses back
+//!   through [`Event::from_json`] (the Rust twin of
+//!   `ci/check_events.py`), after a `flanp-events/v1` header.
+//! * **accounting** — per deadline round, the per-client events
+//!   partition the cohort: `arrived + missed + cancelled + offline ==
+//!   cohort`, and the per-round missed/cancelled event counts equal the
+//!   trace CSV's columns row by row.
+//! * **summary** — the `flanp-summary/v1` totals agree with the trace
+//!   sums, and the event counters agree with the event log.
+//!
+//! The scenario is the golden diurnal+jitter rotation with the full
+//! selection stack on top (overselect:1.3, tiers:3, quantile deadline)
+//! so cancellations, misses, offline skips and tier churn all occur.
+
+use flanp::coordinator::{
+    run_solver, run_solver_with, ExperimentConfig, SolverKind,
+};
+use flanp::fed::{
+    DeadlinePolicy, Event, EventKind, JsonlObserver, NoopObserver, Observe,
+    SystemModel, TierPolicy, EVENTS_SCHEMA,
+};
+use flanp::setup;
+use flanp::util::json::Json;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// The golden scenario (`tests/golden.rs`): diurnal availability
+/// rotation + log-normal speed jitter.
+const SCENARIO: &str = "avail:diurnal:20000:0.5:1:jitter:0.2:uniform:50:500";
+
+/// The golden FLANP config, byte-comparable to the committed fixture.
+fn golden_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(SolverKind::Flanp, "linreg_d25", 16, 50);
+    cfg.eta = 0.05;
+    cfg.tau = 10;
+    cfg.n0 = 2;
+    cfg.mu = 0.5;
+    cfg.c_stat = 0.5;
+    cfg.system = SystemModel::parse(SCENARIO).unwrap();
+    cfg.seed = 7;
+    cfg.max_rounds = 120;
+    cfg.eval_every = 5;
+    cfg.eval_rows = 500;
+    cfg
+}
+
+/// The golden config with the full selection stack on top — the
+/// ISSUE's acceptance scenario: every per-client outcome kind occurs.
+fn rich_cfg() -> ExperimentConfig {
+    let mut cfg = golden_cfg();
+    cfg.tiers = Some(TierPolicy::parse("tiers:3").unwrap());
+    cfg.overselect = 1.3;
+    cfg.deadline = DeadlinePolicy::parse("quantile:0.9").unwrap();
+    cfg
+}
+
+fn run_with(cfg: &ExperimentConfig, obs: &mut Observe) -> flanp::fed::Trace {
+    let engine = setup::native_from_name(&cfg.model).unwrap();
+    let mut fleet = setup::build_fleet(engine.meta(), cfg, 0.1, 0.0).unwrap();
+    run_solver_with(&engine, &mut fleet, cfg, obs).unwrap()
+}
+
+/// Run `cfg` with a JSONL sink + registry, returning the parsed events
+/// and the trace. The sidecar lives in the target tmp dir.
+fn run_logged(cfg: &ExperimentConfig, tag: &str) -> (Vec<Event>, flanp::fed::Trace) {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target/tmp");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("observe_{tag}_{}.events.jsonl", std::process::id()));
+    let mut obs = Observe::new(
+        Box::new(JsonlObserver::create(&path).unwrap()),
+        true,
+    );
+    let trace = run_with(cfg, &mut obs);
+    drop(obs); // flush the sink
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let mut lines = text.lines();
+    let header = Json::parse(lines.next().expect("empty event log")).unwrap();
+    assert_eq!(header.req_str("schema").unwrap(), EVENTS_SCHEMA);
+    let events: Vec<Event> = lines
+        .map(|l| {
+            Event::from_json(&Json::parse(l).unwrap())
+                .unwrap_or_else(|e| panic!("bad event line '{l}': {e}"))
+        })
+        .collect();
+    assert!(!events.is_empty(), "rich run emitted no events");
+    (events, trace)
+}
+
+/// An enabled (collect-only) observer must not perturb the solver:
+/// same RNG consumption, same clock arithmetic, same trace bytes as
+/// the plain path the golden fixtures pin.
+#[test]
+fn enabled_observer_is_inert() {
+    for cfg in [golden_cfg(), rich_cfg()] {
+        let engine = setup::native_from_name(&cfg.model).unwrap();
+        let mut fleet =
+            setup::build_fleet(engine.meta(), &cfg, 0.1, 0.0).unwrap();
+        let plain = run_solver(&engine, &mut fleet, &cfg).unwrap().to_csv();
+
+        let mut obs = Observe::new(Box::new(NoopObserver), true);
+        assert!(obs.enabled());
+        let mut fleet2 =
+            setup::build_fleet(engine.meta(), &cfg, 0.1, 0.0).unwrap();
+        let observed =
+            run_solver_with(&engine, &mut fleet2, &cfg, &mut obs).unwrap();
+        assert_eq!(
+            plain,
+            observed.to_csv(),
+            "collect-only observer changed the trace byte-stream"
+        );
+    }
+}
+
+/// Every JSONL line roundtrips through the schema; the kinds seen
+/// cover the full per-client outcome space of the rich scenario.
+#[test]
+fn jsonl_schema_roundtrip() {
+    let (events, _) = run_logged(&rich_cfg(), "schema");
+    let mut seen = [false; flanp::fed::observe::NUM_KINDS];
+    for ev in &events {
+        seen[ev.kind as usize] = true;
+        // per-client kinds carry a client id; round-level kinds don't
+        match ev.kind {
+            EventKind::Arrived
+            | EventKind::Missed
+            | EventKind::Cancelled
+            | EventKind::Offline
+            | EventKind::Censored => {
+                assert!(ev.client.is_some(), "{:?} without client", ev.kind)
+            }
+            EventKind::Deadline | EventKind::Wait | EventKind::Stage => {
+                assert!(ev.client.is_none(), "{:?} with client", ev.kind)
+            }
+            _ => {}
+        }
+    }
+    // Rerank/TierPromote/TierDemote/Missed/Wait depend on whether the
+    // jitter actually breaches the hysteresis band (resp. on wait
+    // rounds occurring), so only the kinds the scenario guarantees:
+    for kind in [
+        EventKind::CohortSelected,
+        EventKind::CohortPadded,
+        EventKind::Deadline,
+        EventKind::Arrived,
+        EventKind::Cancelled,
+        EventKind::Offline,
+        EventKind::Censored,
+        EventKind::Stage,
+    ] {
+        assert!(seen[kind as usize], "rich scenario never emitted {kind:?}");
+    }
+}
+
+/// THE accounting invariant: in every round that priced a deadline,
+/// the per-client events partition the cohort, and the missed /
+/// cancelled counts match the trace CSV row for that round.
+#[test]
+fn per_round_accounting_matches_trace() {
+    let (events, trace) = run_logged(&rich_cfg(), "accounting");
+    #[derive(Default)]
+    struct Tally {
+        cohort: Option<usize>,
+        arrived: usize,
+        missed: usize,
+        cancelled: usize,
+        offline: usize,
+    }
+    let mut rounds: HashMap<usize, Tally> = HashMap::new();
+    for ev in &events {
+        let t = rounds.entry(ev.round).or_default();
+        match ev.kind {
+            EventKind::Deadline => {
+                assert!(
+                    t.cohort.is_none(),
+                    "two deadline events in round {}",
+                    ev.round
+                );
+                t.cohort = Some(ev.detail.req_usize("cohort").unwrap());
+            }
+            EventKind::Arrived => t.arrived += 1,
+            EventKind::Missed => t.missed += 1,
+            EventKind::Cancelled => t.cancelled += 1,
+            EventKind::Offline => t.offline += 1,
+            _ => {}
+        }
+    }
+    let rows: HashMap<usize, &flanp::fed::RoundRecord> =
+        trace.rounds.iter().map(|r| (r.round, r)).collect();
+    let mut deadline_rounds = 0usize;
+    for (r, t) in &rounds {
+        let Some(cohort) = t.cohort else {
+            // wait rounds price no deadline and train nobody
+            assert_eq!(
+                (t.arrived, t.missed, t.cancelled, t.offline),
+                (0, 0, 0, 0),
+                "per-client events in deadline-less round {r}"
+            );
+            continue;
+        };
+        deadline_rounds += 1;
+        assert_eq!(
+            t.arrived + t.missed + t.cancelled + t.offline,
+            cohort,
+            "round {r}: events do not partition the cohort"
+        );
+        let row = rows
+            .get(r)
+            .unwrap_or_else(|| panic!("no trace row for event round {r}"));
+        assert_eq!(t.missed, row.missed, "round {r}: missed != trace");
+        assert_eq!(t.cancelled, row.cancelled, "round {r}: cancelled != trace");
+    }
+    assert!(deadline_rounds > 0, "no deadline rounds observed");
+}
+
+/// The run summary's totals block equals the trace sums and its event
+/// counters equal the event log.
+#[test]
+fn summary_totals_match_trace() {
+    let cfg = rich_cfg();
+    let engine = setup::native_from_name(&cfg.model).unwrap();
+    let mut fleet = setup::build_fleet(engine.meta(), &cfg, 0.1, 0.0).unwrap();
+    let mut obs = Observe::new(Box::new(NoopObserver), true);
+    let trace = run_solver_with(&engine, &mut fleet, &cfg, &mut obs).unwrap();
+
+    let s = obs.summary_json(&trace, 1.0);
+    assert_eq!(s.req_str("schema").unwrap(), "flanp-summary/v1");
+    let totals = s.req("totals").unwrap();
+    assert_eq!(totals.req_usize("missed").unwrap(), trace.total_missed());
+    assert_eq!(
+        totals.req_usize("cancelled").unwrap(),
+        trace.total_cancelled()
+    );
+    assert_eq!(
+        totals.req("min_available").unwrap().as_usize(),
+        trace.min_available(),
+        "summary min_available != trace"
+    );
+    // two independent accounting paths agree: the per-kind event
+    // counters vs the trace columns deadline_round filled in
+    let ev = s.req("events").unwrap();
+    assert_eq!(ev.req_usize("missed").unwrap(), trace.total_missed());
+    assert_eq!(ev.req_usize("cancelled").unwrap(), trace.total_cancelled());
+    assert_eq!(
+        s.req("rounds").unwrap().as_usize().unwrap(),
+        trace.rounds.len() - 1
+    );
+    // the registry saw estimator errors for every arrived client
+    assert!(
+        s.req("estimator_error").unwrap().req_usize("count").unwrap() > 0,
+        "no estimator-error observations collected"
+    );
+}
